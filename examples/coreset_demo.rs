@@ -1,0 +1,151 @@
+//! Cluster-Coreset vs V-coreset (paper §5.3, Fig. 6 in miniature).
+//!
+//!     cargo run --release --example coreset_demo
+//!
+//! Builds both coresets at matched sizes on a classification and a
+//! regression workload, trains the downstream model on each, and compares
+//! test quality — plus the reduction/weight statistics the paper reports.
+
+use treecss::bench::Table;
+use treecss::coreset::cluster_coreset::{self, ClusterCoresetConfig};
+use treecss::coreset::vcoreset;
+use treecss::data::synth::PaperDataset;
+use treecss::data::{Matrix, VerticalPartition};
+use treecss::ml::kmeans::NativeAssign;
+use treecss::net::{Meter, NetConfig};
+use treecss::psi::common::HeContext;
+use treecss::splitnn::native::NativePhases;
+use treecss::splitnn::trainer::{self, ModelKind, TrainConfig};
+use treecss::util::rng::Rng;
+
+fn train_quality(
+    slices: &[Matrix],
+    y: &[f32],
+    w: &[f32],
+    task: treecss::data::Task,
+    model: ModelKind,
+    test_slices: &[Matrix],
+    test_y: &[f32],
+) -> f64 {
+    let phases = NativePhases::default();
+    let meter = Meter::new(NetConfig::lan_10gbps());
+    let mut cfg = TrainConfig::new(model);
+    cfg.lr = 0.05;
+    cfg.max_epochs = 80;
+    let (m, _) = trainer::train(&phases, slices, y, w, task, &cfg, &meter).unwrap();
+    m.evaluate(&phases, test_slices, test_y, task).unwrap()
+}
+
+fn main() -> treecss::Result<()> {
+    let mut rng = Rng::new(31);
+    let mut table = Table::new(
+        "Cluster-Coreset vs V-coreset at matched size",
+        &["task", "coreset", "size", "quality"],
+    );
+
+    // ---------------- classification (MU-shaped, LR head) ----------------
+    {
+        let mut ds = PaperDataset::Mu.generate(0.1, &mut rng);
+        ds.standardize();
+        let (tr, te) = ds.split(0.7, &mut rng);
+        let part = VerticalPartition::even(tr.d(), 3);
+        let slices: Vec<Matrix> = (0..3).map(|c| part.slice(&tr.x, c)).collect();
+        let test_slices: Vec<Matrix> = (0..3).map(|c| part.slice(&te.x, c)).collect();
+
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let he = HeContext::generate(&mut Rng::new(7), 512);
+        let cc = cluster_coreset::run(
+            &slices,
+            &tr.y,
+            true,
+            &ClusterCoresetConfig { clusters_per_client: 8, ..Default::default() },
+            &mut NativeAssign,
+            &meter,
+            &he,
+        )?;
+        let cc_slices: Vec<Matrix> =
+            slices.iter().map(|s| s.select_rows(&cc.indices)).collect();
+        let cc_y: Vec<f32> = cc.indices.iter().map(|&i| tr.y[i]).collect();
+        let q_cc = train_quality(
+            &cc_slices, &cc_y, &cc.weights, tr.task, ModelKind::Lr, &test_slices, &te.y,
+        );
+        table.row(vec![
+            "classification (MU)".into(),
+            "Cluster-Coreset".into(),
+            cc.indices.len().to_string(),
+            format!("{:.2}% acc", q_cc * 100.0),
+        ]);
+
+        // V-coreset (k-means sensitivity flavour) at the SAME size.
+        let vc = vcoreset::for_kmeans(&slices, 8, cc.indices.len(), 17);
+        let vc_slices: Vec<Matrix> =
+            slices.iter().map(|s| s.select_rows(&vc.indices)).collect();
+        let vc_y: Vec<f32> = vc.indices.iter().map(|&i| tr.y[i]).collect();
+        // Normalize V-coreset weights to mean 1 for a fair lr setting.
+        let mean_w: f32 = vc.weights.iter().sum::<f32>() / vc.weights.len() as f32;
+        let vc_w: Vec<f32> = vc.weights.iter().map(|w| w / mean_w).collect();
+        let q_vc = train_quality(
+            &vc_slices, &vc_y, &vc_w, tr.task, ModelKind::Lr, &test_slices, &te.y,
+        );
+        table.row(vec![
+            "classification (MU)".into(),
+            "V-coreset".into(),
+            vc.indices.len().to_string(),
+            format!("{:.2}% acc", q_vc * 100.0),
+        ]);
+    }
+
+    // ---------------- regression (YP-shaped, LinReg head) ----------------
+    {
+        let mut ds = PaperDataset::Yp.generate(0.004, &mut rng); // ~2k rows
+        ds.standardize();
+        let (tr, te) = ds.split(0.9, &mut rng);
+        let part = VerticalPartition::even(tr.d(), 3);
+        let slices: Vec<Matrix> = (0..3).map(|c| part.slice(&tr.x, c)).collect();
+        let test_slices: Vec<Matrix> = (0..3).map(|c| part.slice(&te.x, c)).collect();
+
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let he = HeContext::generate(&mut Rng::new(8), 512);
+        let cc = cluster_coreset::run(
+            &slices,
+            &tr.y,
+            false,
+            &ClusterCoresetConfig { clusters_per_client: 16, ..Default::default() },
+            &mut NativeAssign,
+            &meter,
+            &he,
+        )?;
+        let cc_slices: Vec<Matrix> =
+            slices.iter().map(|s| s.select_rows(&cc.indices)).collect();
+        let cc_y: Vec<f32> = cc.indices.iter().map(|&i| tr.y[i]).collect();
+        let q_cc = train_quality(
+            &cc_slices, &cc_y, &cc.weights, tr.task, ModelKind::LinReg, &test_slices, &te.y,
+        );
+        table.row(vec![
+            "regression (YP)".into(),
+            "Cluster-Coreset".into(),
+            cc.indices.len().to_string(),
+            format!("{q_cc:.4} MSE"),
+        ]);
+
+        let vc = vcoreset::for_regression(&slices, cc.indices.len(), 23);
+        let vc_slices: Vec<Matrix> =
+            slices.iter().map(|s| s.select_rows(&vc.indices)).collect();
+        let vc_y: Vec<f32> = vc.indices.iter().map(|&i| tr.y[i]).collect();
+        let mean_w: f32 = vc.weights.iter().sum::<f32>() / vc.weights.len() as f32;
+        let vc_w: Vec<f32> = vc.weights.iter().map(|w| w / mean_w).collect();
+        let q_vc = train_quality(
+            &vc_slices, &vc_y, &vc_w, tr.task, ModelKind::LinReg, &test_slices, &te.y,
+        );
+        table.row(vec![
+            "regression (YP)".into(),
+            "V-coreset".into(),
+            vc.indices.len().to_string(),
+            format!("{q_vc:.4} MSE"),
+        ]);
+    }
+
+    table.print();
+    println!("(expect: Cluster-Coreset ≥ V-coreset quality at equal size — Fig. 6's shape)");
+    Ok(())
+}

@@ -1,0 +1,225 @@
+"""AOT driver: lower every L2 phase to HLO text + a manifest for Rust.
+
+Interchange format is HLO *text*, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`). The text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/gen_hlo.py).
+
+Usage:
+  python -m compile.aot --out-dir ../artifacts            # all artifacts
+  python -m compile.aot --out-dir ../artifacts --only top_bce_step
+  python -m compile.aot --fixtures ../artifacts/fixtures.json  # rust parity
+
+Every artifact is lowered with return_tuple=True; the Rust runtime unwraps
+the tuple. Shapes are static; the manifest records them so Rust can build
+literals without guessing.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Static shape configuration (mirrored in rust/src/runtime/manifest.rs)
+# ---------------------------------------------------------------------------
+
+BATCH = 64          # training/eval micro-batch (padding rows carry weight 0)
+H_BOTTOM = 16       # MLP bottom-model output width per client
+N_CLIENTS = 3       # paper protocol: three feature-holding clients
+H_TOP_IN = H_BOTTOM * N_CLIENTS
+H_TOP = 32          # top-model hidden width
+KMEANS_ROWS = 256   # rows per kmeans assign/update call
+K_MAX = 32          # static centroid count; unused rows masked to CENTROID_INF
+KNN_REF_ROWS = 1024  # coreset reference rows per pairwise call
+DMS = (8, 16, 32)   # padded per-client feature widths
+CLASSES = (2, 4)    # classification heads (binary + BodyPerformance-like)
+
+F32 = jnp.float32
+
+
+def _s(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def build_entries():
+    """(name, fn, [ShapeDtypeStruct...], meta) for every artifact."""
+    entries = []
+    for dm in DMS:
+        entries += [
+            (f"bottom_mlp_fwd_dm{dm}", model.bottom_mlp_fwd,
+             [_s(BATCH, dm), _s(dm, H_BOTTOM), _s(H_BOTTOM)],
+             {"kind": "bottom_mlp_fwd", "dm": dm}),
+            (f"bottom_mlp_bwd_dm{dm}", model.bottom_mlp_bwd,
+             [_s(BATCH, dm), _s(dm, H_BOTTOM), _s(H_BOTTOM), _s(BATCH, H_BOTTOM)],
+             {"kind": "bottom_mlp_bwd", "dm": dm}),
+            (f"bottom_lin_fwd_dm{dm}", model.bottom_lin_fwd,
+             [_s(BATCH, dm), _s(dm, 1), _s(1)],
+             {"kind": "bottom_lin_fwd", "dm": dm}),
+            (f"bottom_lin_bwd_dm{dm}", model.bottom_lin_bwd,
+             [_s(BATCH, dm), _s(BATCH, 1)],
+             {"kind": "bottom_lin_bwd", "dm": dm}),
+            (f"kmeans_assign_dm{dm}", model.kmeans_assign_step,
+             [_s(KMEANS_ROWS, dm), _s(K_MAX, dm)],
+             {"kind": "kmeans_assign", "dm": dm}),
+            (f"kmeans_update_dm{dm}", model.kmeans_update_step,
+             [_s(KMEANS_ROWS, dm), _s(KMEANS_ROWS, K_MAX)],
+             {"kind": "kmeans_update", "dm": dm}),
+            (f"pairwise_dm{dm}", model.pairwise_dist_step,
+             [_s(BATCH, dm), _s(KNN_REF_ROWS, dm)],
+             {"kind": "pairwise", "dm": dm}),
+        ]
+    for nc in CLASSES:
+        entries += [
+            (f"top_mlp_step_l{nc}", model.top_mlp_step,
+             [_s(BATCH, H_TOP_IN), _s(BATCH, nc), _s(BATCH),
+              _s(H_TOP_IN, H_TOP), _s(H_TOP), _s(H_TOP, nc), _s(nc)],
+             {"kind": "top_mlp_step", "classes": nc}),
+            (f"top_mlp_pred_l{nc}", model.top_mlp_pred,
+             [_s(BATCH, H_TOP_IN), _s(H_TOP_IN, H_TOP), _s(H_TOP),
+              _s(H_TOP, nc), _s(nc)],
+             {"kind": "top_mlp_pred", "classes": nc}),
+        ]
+    entries += [
+        ("top_bce_step", model.top_bce_step, [_s(BATCH), _s(BATCH), _s(BATCH)],
+         {"kind": "top_bce_step"}),
+        ("top_mse_step", model.top_mse_step, [_s(BATCH), _s(BATCH), _s(BATCH)],
+         {"kind": "top_mse_step"}),
+    ]
+    return entries
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name, fn, specs):
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def shape_list(specs):
+    return [list(s.shape) for s in specs]
+
+
+def dtype_list(vals):
+    out = []
+    for v in vals:
+        d = str(v.dtype)
+        out.append({"float32": "f32", "int32": "i32"}[d])
+    return out
+
+
+def write_artifacts(out_dir, only=None):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "batch": BATCH,
+        "h_bottom": H_BOTTOM,
+        "n_clients": N_CLIENTS,
+        "h_top_in": H_TOP_IN,
+        "h_top": H_TOP,
+        "kmeans_rows": KMEANS_ROWS,
+        "k_max": K_MAX,
+        "knn_ref_rows": KNN_REF_ROWS,
+        "dms": list(DMS),
+        "classes": list(CLASSES),
+        "artifacts": [],
+    }
+    for name, fn, specs, meta in build_entries():
+        if only and name not in only:
+            continue
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = lower_entry(name, fn, specs)
+        with open(path, "w") as f:
+            f.write(text)
+        # Evaluate once on zeros to capture output shapes/dtypes.
+        outs = jax.eval_shape(fn, *specs)
+        outs = list(outs) if isinstance(outs, (tuple, list)) else [outs]
+        manifest["artifacts"].append({
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "inputs": shape_list(specs),
+            "in_dtypes": dtype_list(specs),
+            "outputs": [list(o.shape) for o in outs],
+            "out_dtypes": dtype_list(outs),
+            "meta": meta,
+        })
+        print(f"  lowered {name}: {len(text)} chars, "
+              f"{len(specs)} in -> {len(outs)} out", file=sys.stderr)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest to {out_dir}",
+          file=sys.stderr)
+
+
+def write_fixtures(path):
+    """Deterministic input/output pairs for Rust parity tests.
+
+    Small shapes, evaluated through the *reference* (pure-jnp) functions so
+    the Rust fallback implementations can be checked bit-for-shape without
+    a Python runtime dependency at test time.
+    """
+    from .kernels import ref
+
+    rng = np.random.default_rng(20240707)
+
+    def arr(*shape):
+        return rng.standard_normal(shape).astype(np.float32)
+
+    fx = {}
+    x, w, b = arr(6, 5), arr(5, 4), arr(4)
+    fx["linear_relu"] = {
+        "x": x.tolist(), "w": w.tolist(), "b": b.tolist(),
+        "out": np.asarray(ref.linear_act(x, w, b, "relu")).tolist(),
+    }
+    q, c = arr(7, 5), arr(3, 5)
+    a, d = ref.kmeans_assign(q, c)
+    fx["kmeans_assign"] = {
+        "x": q.tolist(), "c": c.tolist(),
+        "assign": np.asarray(a).tolist(), "dist": np.asarray(d).tolist(),
+    }
+    z, y, wgt = arr(8), (rng.random(8) > 0.5).astype(np.float32), rng.random(8).astype(np.float32)
+    l, g = ref.weighted_bce(z, y, wgt)
+    fx["weighted_bce"] = {
+        "z": z.tolist(), "y": y.tolist(), "w": wgt.tolist(),
+        "loss": np.asarray(l).tolist(), "grad": np.asarray(g).tolist(),
+    }
+    logits = arr(6, 4)
+    y1h = np.eye(4, dtype=np.float32)[rng.integers(0, 4, 6)]
+    wg = rng.random(6).astype(np.float32)
+    l, g = ref.weighted_softmax_ce(logits, y1h, wg)
+    fx["weighted_softmax_ce"] = {
+        "logits": logits.tolist(), "y1h": y1h.tolist(), "w": wg.tolist(),
+        "loss": np.asarray(l).tolist(), "grad": np.asarray(g).tolist(),
+    }
+    with open(path, "w") as f:
+        json.dump(fx, f, indent=1)
+    print(f"wrote fixtures to {path}", file=sys.stderr)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    ap.add_argument("--fixtures", help="write rust parity fixtures to PATH and exit")
+    args = ap.parse_args()
+    if args.fixtures:
+        write_fixtures(args.fixtures)
+        return
+    write_artifacts(args.out_dir, only=set(args.only) if args.only else None)
+
+
+if __name__ == "__main__":
+    main()

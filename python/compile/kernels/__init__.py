@@ -1,0 +1,11 @@
+"""L1 Pallas kernels for TreeCSS (build-time only; never on the request path)."""
+
+from . import ref  # noqa: F401
+from .kmeans import (  # noqa: F401
+    CENTROID_INF,
+    kmeans_assign,
+    kmeans_update,
+    pairwise_dist,
+)
+from .losses import weighted_bce, weighted_mse, weighted_softmax_ce  # noqa: F401
+from .matmul_fused import ACTIVATIONS, linear_act, matmul_at_b  # noqa: F401

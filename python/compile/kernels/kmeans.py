@@ -1,0 +1,151 @@
+"""L1 Pallas kernels for Cluster-Coreset's K-Means (the coreset hot-spot).
+
+Step 1 of Cluster-Coreset clusters every client's local features with
+K-Means. For N_align samples per client this is the dominant compute of the
+coreset phase, so both halves of a Lloyd iteration are Pallas kernels:
+
+  * assign:  per-row nearest centroid + Euclidean distance (used again by
+    Step 2's weight computation, which needs the distances).
+  * update:  per-cluster feature sums and member counts (the new centroids
+    are sums / counts, a trivial divide done in the L2 graph).
+
+The centroid count K is a *static* shape. TreeCSS sweeps clusters-per-client
+(Fig. 4/5), so artifacts are built with K = K_MAX and callers mask unused
+clusters by setting their centroids to CENTROID_INF (distance ~1e31 beats
+any real data, so argmin never selects them).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rust fills unused centroid rows with this; (1e15)^2 * D stays < f32 max.
+CENTROID_INF = 1.0e15
+
+
+def _assign_kernel(x_ref, c_ref, a_ref, d_ref):
+    x = x_ref[...]  # (block_m, D)
+    c = c_ref[...]  # (K, D) — centroids stay VMEM-resident for every tile
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=1)[None, :]
+    # Squared distances via the MXU: |x|^2 + |c|^2 - 2 x.c
+    d2 = x2 + c2 - 2.0 * jnp.dot(x, c.T, preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(d2, 0.0)  # numerical floor
+    a_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    d_ref[...] = jnp.sqrt(jnp.min(d2, axis=1))
+
+
+def kmeans_assign(x, centroids, *, block_m: int = 64, interpret: bool = True):
+    """(assign[int32 N], dist[f32 N]) of each row to its nearest centroid."""
+    n, d = x.shape
+    k, d2 = centroids.shape
+    assert d == d2, (x.shape, centroids.shape)
+    block_m = min(block_m, n)
+    grid = (pl.cdiv(n, block_m),)
+    return pl.pallas_call(
+        _assign_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+        ),
+        interpret=interpret,
+    )(x, centroids)
+
+
+def _update_kernel(x_ref, h_ref, s_ref, n_ref):
+    """Accumulate cluster sums/counts across row tiles (sequential grid)."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+
+    x = x_ref[...]  # (block_m, D)
+    h = h_ref[...]  # (block_m, K) one-hot assignment
+    s_ref[...] += jnp.dot(h.T, x, preferred_element_type=jnp.float32)
+    n_ref[...] += jnp.sum(h, axis=0)
+
+
+def kmeans_update(x, onehot, *, block_m: int = 64, interpret: bool = True):
+    """Per-cluster (sums[K, D], counts[K]) from one-hot assignments.
+
+    The kernel ACCUMULATES across row tiles, so a partial final tile would
+    fold undefined out-of-bounds padding into the sums — inputs are
+    zero-padded to a tile multiple here (zero rows are additive no-ops).
+    """
+    n, d = x.shape
+    n2, k = onehot.shape
+    assert n == n2, (x.shape, onehot.shape)
+    block_m = min(block_m, n)
+    rem = n % block_m
+    if rem != 0:
+        pad = block_m - rem
+        x = jnp.concatenate([x, jnp.zeros((pad, d), x.dtype)], axis=0)
+        onehot = jnp.concatenate([onehot, jnp.zeros((pad, k), onehot.dtype)], axis=0)
+        n += pad
+    grid = (pl.cdiv(n, block_m),)
+    return pl.pallas_call(
+        _update_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, k), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ),
+        interpret=interpret,
+    )(x, onehot)
+
+
+def _pairwise_kernel(q_ref, r_ref, o_ref):
+    q = q_ref[...]  # (block_q, D)
+    r = r_ref[...]  # (block_r, D)
+    q2 = jnp.sum(q * q, axis=1, keepdims=True)
+    r2 = jnp.sum(r * r, axis=1)[None, :]
+    d2 = q2 + r2 - 2.0 * jnp.dot(q, r.T, preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.maximum(d2, 0.0)
+
+
+def pairwise_dist(q, r, *, block_q: int = 64, block_r: int = 256,
+                  interpret: bool = True):
+    """Full *squared* Euclidean distance matrix (|Q| x |R|) — the KNN hot-spot.
+
+    Squared (not sqrt'd) on purpose: VFL-KNN sums per-client squared
+    distances across clients to get the global distance, and argsort is
+    monotonic in the square. KNN in Table 2 classifies test rows against the
+    (weighted) coreset; reference rows are padded with CENTROID_INF so
+    padding never wins.
+    """
+    nq, d = q.shape
+    nr, d2 = r.shape
+    assert d == d2, (q.shape, r.shape)
+    block_q = min(block_q, nq)
+    block_r = min(block_r, nr)
+    grid = (pl.cdiv(nq, block_q), pl.cdiv(nr, block_r))
+    return pl.pallas_call(
+        _pairwise_kernel,
+        out_shape=jax.ShapeDtypeStruct((nq, nr), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_r, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_r), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(q, r)

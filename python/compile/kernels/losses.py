@@ -1,0 +1,89 @@
+"""L1 Pallas kernels: weighted loss heads (TreeCSS Eq. 2).
+
+Cluster-Coreset re-weights each coreset sample by the sum of its per-client
+weights, and the training loss becomes L = sum_i w_i * L(x_i; theta). These
+kernels compute the per-sample weighted loss AND its gradient w.r.t. the
+pre-loss quantity in one fused pass, so the coordinator gets both from a
+single artifact execution. Padding rows carry w_i = 0, which zeroes both
+their loss and their gradient — partial batches need no special casing.
+
+Gradients are scaled by 1/B (mean-style) to keep learning-rate tuning
+comparable with the paper's batch-mean training.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bce_kernel(z_ref, y_ref, w_ref, l_ref, g_ref, *, inv_b: float):
+    z = z_ref[...]
+    y = y_ref[...]
+    w = w_ref[...]
+    # Numerically stable BCE-with-logits: max(z,0) - z*y + log1p(exp(-|z|))
+    l_ref[...] = w * (jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+    g_ref[...] = w * (jax.nn.sigmoid(z) - y) * inv_b
+
+
+def weighted_bce(z, y, w, *, interpret: bool = True):
+    """(per-sample weighted BCE loss[B], dL/dz[B]) for logits z, labels y."""
+    (b,) = z.shape
+    import functools
+    return pl.pallas_call(
+        functools.partial(_bce_kernel, inv_b=1.0 / b),
+        out_shape=(
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ),
+        interpret=interpret,
+    )(z, y, w)
+
+
+def _mse_kernel(z_ref, y_ref, w_ref, l_ref, g_ref, *, inv_b: float):
+    z = z_ref[...]
+    y = y_ref[...]
+    w = w_ref[...]
+    e = z - y
+    l_ref[...] = w * e * e
+    g_ref[...] = 2.0 * w * e * inv_b
+
+
+def weighted_mse(z, y, w, *, interpret: bool = True):
+    """(per-sample weighted squared error[B], dL/dz[B])."""
+    (b,) = z.shape
+    import functools
+    return pl.pallas_call(
+        functools.partial(_mse_kernel, inv_b=1.0 / b),
+        out_shape=(
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ),
+        interpret=interpret,
+    )(z, y, w)
+
+
+def _softmax_ce_kernel(l_ref, y_ref, w_ref, loss_ref, g_ref, *, inv_b: float):
+    logits = l_ref[...]  # (B, L)
+    y1h = y_ref[...]     # (B, L) one-hot
+    w = w_ref[...]       # (B,)
+    m = jnp.max(logits, axis=1, keepdims=True)
+    ez = jnp.exp(logits - m)
+    lse = m[:, 0] + jnp.log(jnp.sum(ez, axis=1))
+    p = ez / jnp.sum(ez, axis=1, keepdims=True)
+    loss_ref[...] = w * (lse - jnp.sum(y1h * logits, axis=1))
+    g_ref[...] = w[:, None] * (p - y1h) * inv_b
+
+
+def weighted_softmax_ce(logits, y1h, w, *, interpret: bool = True):
+    """(per-sample weighted cross-entropy[B], dL/dlogits[B, L])."""
+    b, l = logits.shape
+    assert y1h.shape == (b, l)
+    import functools
+    return pl.pallas_call(
+        functools.partial(_softmax_ce_kernel, inv_b=1.0 / b),
+        out_shape=(
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b, l), jnp.float32),
+        ),
+        interpret=interpret,
+    )(logits, y1h, w)

@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: fused tiled linear layer (matmul + bias + activation).
+
+This is the compute hot-spot of every SplitNN phase in TreeCSS: the bottom
+models on each client (X_m @ W_m + b_m with ReLU for MLP, identity for
+LR/LinReg partial logits) and both layers of the top model on the
+aggregation server.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid tiles the output
+into (block_m, block_n) blocks staged through VMEM by BlockSpec; the inner
+contraction runs on the MXU via jnp.dot with f32 accumulation. The K
+dimension (per-client feature width, <= 48 in every TreeCSS config) fits a
+single VMEM block, so no K-loop is needed.
+
+Kernels MUST be lowered with interpret=True on this image: the CPU PJRT
+plugin cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Activations supported by the fused kernel.
+ACTIVATIONS = ("none", "relu", "tanh", "sigmoid")
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, act: str):
+    """One (block_m, block_n) output tile: o = act(x @ w + b)."""
+    x = x_ref[...]  # (block_m, K)
+    w = w_ref[...]  # (K, block_n)
+    b = b_ref[...]  # (block_n,)
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "tanh":
+        y = jnp.tanh(y)
+    elif act == "sigmoid":
+        y = jax.nn.sigmoid(y)
+    elif act != "none":
+        raise ValueError(f"unknown activation {act!r}")
+    o_ref[...] = y
+
+
+def linear_act(x, w, b, act: str = "none", *, block_m: int = 32,
+               block_n: int = 16, interpret: bool = True):
+    """Fused y = act(x @ w + b) as a Pallas call.
+
+    Args:
+      x: (M, K) f32 input rows.
+      w: (K, N) f32 weights.
+      b: (N,) f32 bias.
+      act: one of ACTIVATIONS.
+      block_m/block_n: output tile shape. VMEM footprint per step is
+        block_m*K + K*block_n + block_n + block_m*block_n floats.
+    """
+    if act not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}")
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert b.shape == (n,), (b.shape, n)
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    grid = (pl.cdiv(m, block_m), pl.cdiv(n, block_n))
+    return pl.pallas_call(
+        functools.partial(_linear_kernel, act=act),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(x, w, b)
+
+
+def _matmul_at_b_kernel(a_ref, b_ref, o_ref):
+    """o = a.T @ b for one full block (gradient contraction dW = X^T dPre)."""
+    a = a_ref[...]
+    b = b_ref[...]
+    o_ref[...] = jnp.dot(a.T, b, preferred_element_type=jnp.float32)
+
+
+def matmul_at_b(a, b, *, interpret: bool = True):
+    """a.T @ b as a single-block Pallas call: (M, K).T @ (M, N) -> (K, N).
+
+    Used in the backward pass: dW = X^T @ dPre. TreeCSS shapes keep
+    K, N <= 64, so a single VMEM-resident block suffices.
+    """
+    m, k = a.shape
+    m2, n = b.shape
+    assert m == m2, (a.shape, b.shape)
+    return pl.pallas_call(
+        _matmul_at_b_kernel,
+        out_shape=jax.ShapeDtypeStruct((k, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracle implementations for every Pallas kernel.
+
+pytest (python/tests/) asserts allclose between each kernel and its oracle
+over hypothesis-driven shape/value sweeps. These are also the ground truth
+the Rust-side fallback models are validated against (rust/tests parity
+fixtures are generated from these functions by aot.py --fixtures).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_act(x, w, b, act="none"):
+    y = x @ w + b[None, :]
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "tanh":
+        return jnp.tanh(y)
+    if act == "sigmoid":
+        return jax.nn.sigmoid(y)
+    return y
+
+
+def matmul_at_b(a, b):
+    return a.T @ b
+
+
+def kmeans_assign(x, c):
+    d2 = (
+        jnp.sum(x * x, axis=1, keepdims=True)
+        + jnp.sum(c * c, axis=1)[None, :]
+        - 2.0 * x @ c.T
+    )
+    d2 = jnp.maximum(d2, 0.0)
+    return jnp.argmin(d2, axis=1).astype(jnp.int32), jnp.sqrt(jnp.min(d2, axis=1))
+
+
+def kmeans_update(x, onehot):
+    return onehot.T @ x, jnp.sum(onehot, axis=0)
+
+
+def pairwise_dist(q, r):
+    """Squared Euclidean distances (matches kernels.pairwise_dist)."""
+    d2 = (
+        jnp.sum(q * q, axis=1, keepdims=True)
+        + jnp.sum(r * r, axis=1)[None, :]
+        - 2.0 * q @ r.T
+    )
+    return jnp.maximum(d2, 0.0)
+
+
+def weighted_bce(z, y, w):
+    b = z.shape[0]
+    loss = w * (jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+    grad = w * (jax.nn.sigmoid(z) - y) / b
+    return loss, grad
+
+
+def weighted_mse(z, y, w):
+    b = z.shape[0]
+    e = z - y
+    return w * e * e, 2.0 * w * e / b
+
+
+def weighted_softmax_ce(logits, y1h, w):
+    b = logits.shape[0]
+    lse = jax.scipy.special.logsumexp(logits, axis=1)
+    p = jax.nn.softmax(logits, axis=1)
+    loss = w * (lse - jnp.sum(y1h * logits, axis=1))
+    grad = w[:, None] * (p - y1h) / b
+    return loss, grad

@@ -1,0 +1,125 @@
+"""L2: SplitNN compute graphs for TreeCSS, built on the L1 Pallas kernels.
+
+Every function here is a *phase* of the paper's SplitNN training procedure
+(Section 3) with static shapes, AOT-lowered by aot.py to one HLO artifact
+each. The Rust coordinator (L3) wires the phases together across parties:
+
+  clients   : bottom_{mlp,lin}_fwd  -> intermediate activations  (step 1)
+  aggregator: top_{mlp,bce,mse}_step -> loss + gradients          (steps 2-3)
+  clients   : bottom_{mlp,lin}_bwd  -> local parameter gradients (step 4)
+  clients   : kmeans_{assign,update}_step  (Cluster-Coreset step 1)
+  aggregator: pairwise_dist                 (KNN on the coreset)
+
+Backward passes are hand-derived (Pallas calls are not auto-differentiable)
+and verified against jax.grad of the pure-jnp reference in python/tests.
+Adam runs in Rust — elementwise updates are not a hot-spot and keeping them
+in L3 avoids one artifact per parameter shape.
+"""
+
+import jax.numpy as jnp
+
+from . import kernels
+
+# ---------------------------------------------------------------------------
+# Bottom models (run on each client)
+# ---------------------------------------------------------------------------
+
+
+def bottom_mlp_fwd(x, w, b):
+    """Client bottom model, MLP flavour: A = relu(X W + b). (B,Dm)->(B,H)."""
+    return (kernels.linear_act(x, w, b, act="relu"),)
+
+
+def bottom_mlp_bwd(x, w, b, da):
+    """Gradients of the MLP bottom given upstream dA.
+
+    Recomputes the pre-activation (cheap: one fused tile) instead of
+    persisting it across the client<->server round-trip.
+    Returns (dW[Dm,H], db[H]).
+    """
+    pre = kernels.linear_act(x, w, b, act="none")
+    dpre = da * (pre > 0.0).astype(jnp.float32)
+    dw = kernels.matmul_at_b(x, dpre)
+    db = jnp.sum(dpre, axis=0)
+    return dw, db
+
+
+def bottom_lin_fwd(x, w, b):
+    """Client bottom model, linear flavour (LR / LinReg partial logits)."""
+    return (kernels.linear_act(x, w, b, act="none"),)
+
+
+def bottom_lin_bwd(x, dz):
+    """Gradients of the linear bottom: dW = X^T dz, db = sum dz."""
+    dw = kernels.matmul_at_b(x, dz)
+    db = jnp.sum(dz, axis=0)
+    return dw, db
+
+
+# ---------------------------------------------------------------------------
+# Top models (run on the aggregation server; loss on the label owner)
+# ---------------------------------------------------------------------------
+
+
+def top_mlp_step(hcat, y1h, w, w1, b1, w2, b2):
+    """Top MLP forward + weighted softmax-CE loss + full backward.
+
+    hcat: (B, Ht) concatenated client activations; y1h one-hot labels;
+    w per-sample coreset weights (0 for padding rows).
+    Returns (loss, dHcat, dW1, db1, dW2, db2).
+    """
+    h1 = kernels.linear_act(hcat, w1, b1, act="relu")
+    logits = kernels.linear_act(h1, w2, b2, act="none")
+    loss_vec, dlogits = kernels.weighted_softmax_ce(logits, y1h, w)
+    loss = jnp.sum(loss_vec) / hcat.shape[0]
+    dw2 = kernels.matmul_at_b(h1, dlogits)
+    db2 = jnp.sum(dlogits, axis=0)
+    dh1 = dlogits @ w2.T
+    dpre1 = dh1 * (h1 > 0.0).astype(jnp.float32)
+    dw1 = kernels.matmul_at_b(hcat, dpre1)
+    db1 = jnp.sum(dpre1, axis=0)
+    dhcat = dpre1 @ w1.T
+    return loss, dhcat, dw1, db1, dw2, db2
+
+
+def top_mlp_pred(hcat, w1, b1, w2, b2):
+    """Top MLP inference: logits only (evaluation path)."""
+    h1 = kernels.linear_act(hcat, w1, b1, act="relu")
+    return (kernels.linear_act(h1, w2, b2, act="none"),)
+
+
+def top_bce_step(z, y, w):
+    """LR head: z = sum of client partial logits (+ server bias, added in L3).
+
+    Returns (loss, dz[B]); clients turn dz into dW via bottom_lin_bwd.
+    """
+    loss_vec, dz = kernels.weighted_bce(z, y, w)
+    return jnp.sum(loss_vec) / z.shape[0], dz
+
+
+def top_mse_step(z, y, w):
+    """LinReg head: weighted MSE. Returns (loss, dz[B])."""
+    loss_vec, dz = kernels.weighted_mse(z, y, w)
+    return jnp.sum(loss_vec) / z.shape[0], dz
+
+
+# ---------------------------------------------------------------------------
+# Cluster-Coreset compute (run on each client)
+# ---------------------------------------------------------------------------
+
+
+def kmeans_assign_step(x, centroids):
+    """(assign[N], dist[N]): nearest masked centroid per local feature row."""
+    a, d = kernels.kmeans_assign(x, centroids)
+    return a, d
+
+
+def kmeans_update_step(x, onehot):
+    """(sums[K,D], counts[K]) for the Lloyd centroid update."""
+    s, n = kernels.kmeans_update(x, onehot)
+    return s, n
+
+
+def pairwise_dist_step(q, r):
+    """Distance matrix for KNN over the coreset (padding rows = +inf-ish)."""
+    return (kernels.pairwise_dist(q, r),)

@@ -1,0 +1,69 @@
+//! Fig. 4: effect of clusters-per-client and re-weighting on model
+//! quality (MU, HI, BP, YP — the paper's four representative datasets).
+//!
+//!     cargo bench --bench fig4_quality [-- --full]
+//!
+//! Expected shape: more clusters → larger coreset → better test quality;
+//! re-weighting helps most at small cluster counts.
+
+use treecss::bench::Table;
+use treecss::coordinator::pipeline::{Backend, Downstream, PipelineConfig};
+use treecss::coordinator::{run_pipeline, FrameworkVariant};
+use treecss::data::synth::PaperDataset;
+use treecss::net::{Meter, NetConfig};
+use treecss::splitnn::trainer::ModelKind;
+use treecss::util::rng::Rng;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let ks: &[usize] = if full { &[2, 4, 8, 16, 32] } else { &[2, 4, 8, 16] };
+    let cases: Vec<(PaperDataset, Downstream, f64)> = vec![
+        (PaperDataset::Mu, Downstream::Train(ModelKind::Mlp), if full { 1.0 } else { 0.05 }),
+        (PaperDataset::Hi, Downstream::Train(ModelKind::Mlp), if full { 1.0 } else { 0.008 }),
+        (PaperDataset::Bp, Downstream::Train(ModelKind::Mlp), if full { 1.0 } else { 0.04 }),
+        (PaperDataset::Yp, Downstream::Train(ModelKind::LinReg), if full { 1.0 } else { 0.003 }),
+    ];
+    let backend = Backend::xla_default().unwrap_or(Backend::Native);
+    eprintln!("backend: {}", backend.name());
+
+    let mut table = Table::new(
+        "Fig. 4 — test quality vs clusters/client, with and without re-weighting",
+        &["dataset", "k/client", "weighted", "quality", "coreset size"],
+    );
+
+    for (ds_kind, down, scale) in cases {
+        let mut rng = Rng::new(44);
+        let mut ds = ds_kind.generate(scale, &mut rng);
+        ds.standardize();
+        let (tr, te) = ds.split(0.7, &mut rng);
+        for &k in ks {
+            for reweight in [true, false] {
+                let meter = Meter::new(NetConfig::lan_10gbps());
+                let mut cfg = PipelineConfig::new(FrameworkVariant::TreeCss, down);
+                cfg.coreset.clusters_per_client = k;
+                cfg.coreset.reweight = reweight;
+                cfg.train.lr = if matches!(down, Downstream::Train(ModelKind::LinReg)) {
+                    0.05
+                } else {
+                    0.02
+                };
+                cfg.train.max_epochs = if full { 200 } else { 50 };
+                let rep = run_pipeline(&tr, &te, &cfg, &backend, &meter).expect("pipeline");
+                let quality = if matches!(down, Downstream::Train(ModelKind::LinReg)) {
+                    format!("{:.4} MSE", rep.quality)
+                } else {
+                    format!("{:.2}%", rep.quality * 100.0)
+                };
+                table.row(vec![
+                    ds_kind.name().into(),
+                    k.to_string(),
+                    reweight.to_string(),
+                    quality,
+                    rep.coreset.as_ref().unwrap().indices.len().to_string(),
+                ]);
+            }
+        }
+        eprintln!("  done {}", ds_kind.name());
+    }
+    table.print();
+}

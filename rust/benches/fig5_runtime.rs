@@ -1,0 +1,63 @@
+//! Fig. 5: effect of clusters-per-client and re-weighting on *runtime*
+//! (coreset construction + downstream training), MU/HI/BP/YP.
+//!
+//!     cargo bench --bench fig5_runtime [-- --full]
+//!
+//! Expected shape: runtime grows with clusters/client (bigger coreset);
+//! re-weighting adds a small constant overhead.
+
+use treecss::bench::Table;
+use treecss::coordinator::pipeline::{Backend, Downstream, PipelineConfig};
+use treecss::coordinator::{run_pipeline, FrameworkVariant};
+use treecss::data::synth::PaperDataset;
+use treecss::net::{Meter, NetConfig};
+use treecss::splitnn::trainer::ModelKind;
+use treecss::util::rng::Rng;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let ks: &[usize] = if full { &[2, 4, 8, 16, 32] } else { &[2, 8, 16] };
+    let cases: Vec<(PaperDataset, Downstream, f64)> = vec![
+        (PaperDataset::Mu, Downstream::Train(ModelKind::Mlp), if full { 1.0 } else { 0.05 }),
+        (PaperDataset::Hi, Downstream::Train(ModelKind::Mlp), if full { 1.0 } else { 0.008 }),
+        (PaperDataset::Bp, Downstream::Train(ModelKind::Mlp), if full { 1.0 } else { 0.04 }),
+        (PaperDataset::Yp, Downstream::Train(ModelKind::LinReg), if full { 1.0 } else { 0.003 }),
+    ];
+    let backend = Backend::xla_default().unwrap_or(Backend::Native);
+    eprintln!("backend: {}", backend.name());
+
+    let mut table = Table::new(
+        "Fig. 5 — runtime vs clusters/client, with and without re-weighting",
+        &["dataset", "k/client", "weighted", "coreset(s)", "train(s)", "total(s)", "coreset size"],
+    );
+
+    for (ds_kind, down, scale) in cases {
+        let mut rng = Rng::new(55);
+        let mut ds = ds_kind.generate(scale, &mut rng);
+        ds.standardize();
+        let (tr, te) = ds.split(0.7, &mut rng);
+        for &k in ks {
+            for reweight in [true, false] {
+                let meter = Meter::new(NetConfig::lan_10gbps());
+                let mut cfg = PipelineConfig::new(FrameworkVariant::TreeCss, down);
+                cfg.coreset.clusters_per_client = k;
+                cfg.coreset.reweight = reweight;
+                cfg.train.max_epochs = if full { 200 } else { 50 };
+                let rep = run_pipeline(&tr, &te, &cfg, &backend, &meter).expect("pipeline");
+                let cs = rep.coreset.as_ref().unwrap();
+                let train_s = rep.train.as_ref().map_or(0.0, |t| t.wall_s + t.sim_comm_s);
+                table.row(vec![
+                    ds_kind.name().into(),
+                    k.to_string(),
+                    reweight.to_string(),
+                    format!("{:.3}", cs.wall_s + cs.sim_s),
+                    format!("{:.3}", train_s),
+                    format!("{:.3}", rep.total_time_s()),
+                    cs.indices.len().to_string(),
+                ]);
+            }
+        }
+        eprintln!("  done {}", ds_kind.name());
+    }
+    table.print();
+}

@@ -1,0 +1,143 @@
+//! Fig. 6: Cluster-Coreset vs V-coreset model quality at matched coreset
+//! sizes, sweeping the size via clusters/client.
+//!
+//!     cargo bench --bench fig6_vcoreset [-- --full]
+//!
+//! Expected shape: Cluster-Coreset ≥ V-coreset test quality at every
+//! matched size, on both classification and regression.
+
+use treecss::bench::Table;
+use treecss::coreset::cluster_coreset::{self, ClusterCoresetConfig};
+use treecss::coreset::vcoreset;
+use treecss::data::synth::PaperDataset;
+use treecss::data::{Matrix, VerticalPartition};
+use treecss::ml::kmeans::NativeAssign;
+use treecss::net::{Meter, NetConfig};
+use treecss::psi::common::HeContext;
+use treecss::splitnn::native::NativePhases;
+use treecss::splitnn::trainer::{self, ModelKind, TrainConfig};
+use treecss::util::rng::Rng;
+
+#[allow(clippy::too_many_arguments)]
+fn quality(
+    slices: &[Matrix],
+    idx: &[usize],
+    w: &[f32],
+    tr_y: &[f32],
+    task: treecss::data::Task,
+    model: ModelKind,
+    test_slices: &[Matrix],
+    te_y: &[f32],
+    epochs: usize,
+) -> f64 {
+    let sub: Vec<Matrix> = slices.iter().map(|s| s.select_rows(idx)).collect();
+    let y: Vec<f32> = idx.iter().map(|&i| tr_y[i]).collect();
+    let phases = NativePhases::default();
+    let meter = Meter::new(NetConfig::lan_10gbps());
+    let mut cfg = TrainConfig::new(model);
+    cfg.lr = 0.05;
+    cfg.max_epochs = epochs;
+    let (m, _) = trainer::train(&phases, &sub, &y, w, task, &cfg, &meter).unwrap();
+    m.evaluate(&phases, test_slices, te_y, task).unwrap()
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let ks: &[usize] = if full { &[2, 4, 8, 16, 32] } else { &[2, 4, 8, 16] };
+    let epochs = if full { 200 } else { 60 };
+
+    let mut table = Table::new(
+        "Fig. 6 — Cluster-Coreset vs V-coreset at matched sizes",
+        &["task", "k/client", "size", "Cluster-Coreset", "V-coreset"],
+    );
+
+    // Classification (MU-shaped, LR head).
+    {
+        let mut rng = Rng::new(66);
+        let mut ds = PaperDataset::Mu.generate(if full { 1.0 } else { 0.08 }, &mut rng);
+        ds.standardize();
+        let (tr, te) = ds.split(0.7, &mut rng);
+        let part = VerticalPartition::even(tr.d(), 3);
+        let slices: Vec<Matrix> = (0..3).map(|c| part.slice(&tr.x, c)).collect();
+        let test_slices: Vec<Matrix> = (0..3).map(|c| part.slice(&te.x, c)).collect();
+        let he = HeContext::generate(&mut Rng::new(1), 512);
+        for &k in ks {
+            let meter = Meter::new(NetConfig::lan_10gbps());
+            let cc = cluster_coreset::run(
+                &slices,
+                &tr.y,
+                true,
+                &ClusterCoresetConfig { clusters_per_client: k, ..Default::default() },
+                &mut NativeAssign,
+                &meter,
+                &he,
+            )
+            .unwrap();
+            let q_cc = quality(
+                &slices, &cc.indices, &cc.weights, &tr.y, tr.task, ModelKind::Lr,
+                &test_slices, &te.y, epochs,
+            );
+            let vc = vcoreset::for_kmeans(&slices, k, cc.indices.len(), 17 + k as u64);
+            let mean_w: f32 = vc.weights.iter().sum::<f32>() / vc.weights.len().max(1) as f32;
+            let vw: Vec<f32> = vc.weights.iter().map(|w| w / mean_w).collect();
+            let q_vc = quality(
+                &slices, &vc.indices, &vw, &tr.y, tr.task, ModelKind::Lr,
+                &test_slices, &te.y, epochs,
+            );
+            table.row(vec![
+                "classification (MU, LR)".into(),
+                k.to_string(),
+                cc.indices.len().to_string(),
+                format!("{:.2}%", q_cc * 100.0),
+                format!("{:.2}%", q_vc * 100.0),
+            ]);
+        }
+        eprintln!("  done classification");
+    }
+
+    // Regression (YP-shaped, LinReg head).
+    {
+        let mut rng = Rng::new(67);
+        let mut ds = PaperDataset::Yp.generate(if full { 0.05 } else { 0.004 }, &mut rng);
+        ds.standardize();
+        let (tr, te) = ds.split(0.9, &mut rng);
+        let part = VerticalPartition::even(tr.d(), 3);
+        let slices: Vec<Matrix> = (0..3).map(|c| part.slice(&tr.x, c)).collect();
+        let test_slices: Vec<Matrix> = (0..3).map(|c| part.slice(&te.x, c)).collect();
+        let he = HeContext::generate(&mut Rng::new(2), 512);
+        for &k in ks {
+            let meter = Meter::new(NetConfig::lan_10gbps());
+            let cc = cluster_coreset::run(
+                &slices,
+                &tr.y,
+                false,
+                &ClusterCoresetConfig { clusters_per_client: k, ..Default::default() },
+                &mut NativeAssign,
+                &meter,
+                &he,
+            )
+            .unwrap();
+            let q_cc = quality(
+                &slices, &cc.indices, &cc.weights, &tr.y, tr.task, ModelKind::LinReg,
+                &test_slices, &te.y, epochs,
+            );
+            let vc = vcoreset::for_regression(&slices, cc.indices.len(), 29 + k as u64);
+            let mean_w: f32 = vc.weights.iter().sum::<f32>() / vc.weights.len().max(1) as f32;
+            let vw: Vec<f32> = vc.weights.iter().map(|w| w / mean_w).collect();
+            let q_vc = quality(
+                &slices, &vc.indices, &vw, &tr.y, tr.task, ModelKind::LinReg,
+                &test_slices, &te.y, epochs,
+            );
+            table.row(vec![
+                "regression (YP, LinReg)".into(),
+                k.to_string(),
+                cc.indices.len().to_string(),
+                format!("{q_cc:.4} MSE"),
+                format!("{q_vc:.4} MSE"),
+            ]);
+        }
+        eprintln!("  done regression");
+    }
+
+    table.print();
+}

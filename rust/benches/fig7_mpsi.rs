@@ -1,0 +1,149 @@
+//! Fig. 7: Tree-MPSI evaluation.
+//!   (a) RSA-based TPSI: Tree vs Path vs Star, 10 clients, sweeping the
+//!       per-client set size (70% overlap);
+//!   (b) the same with the OT/OPRF-based TPSI;
+//!   (c) volume-aware vs request-order scheduling with client i holding
+//!       size·(i+1) items, sweeping the client count.
+//!
+//!     cargo bench --bench fig7_mpsi [-- rsa|ot|sched] [-- --full]
+//!
+//! Expected shape: Tree ≳ 2× faster than Path/Star, growing with set
+//! size; volume-aware scheduling's win grows with the client count.
+
+use treecss::bench::{fmt_bytes, fmt_secs, Table};
+use treecss::data::synth;
+use treecss::net::{Meter, NetConfig};
+use treecss::psi::common::HeContext;
+use treecss::psi::rsa_psi::RsaPsiConfig;
+use treecss::psi::sched::Pairing;
+use treecss::psi::tree::{run_tree, TreeMpsiConfig};
+use treecss::psi::{oracle_intersection, path::run_path, star::run_star, TpsiProtocol};
+use treecss::util::pool::ThreadPool;
+use treecss::util::rng::Rng;
+
+fn proto_rsa(full: bool) -> TpsiProtocol {
+    // Fast mode halves the modulus: turnaround matters more than absolute
+    // crypto cost, and the topology comparison is modulus-invariant.
+    TpsiProtocol::Rsa(RsaPsiConfig {
+        modulus_bits: if full { 1024 } else { 512 },
+        domain: "fig7".into(),
+    })
+}
+
+fn run_topo(
+    topo: &str,
+    sets: &[Vec<u64>],
+    protocol: &TpsiProtocol,
+    pairing: Pairing,
+    pool: &ThreadPool,
+    he: &HeContext,
+) -> (treecss::psi::MpsiReport, Meter) {
+    let meter = Meter::new(NetConfig::lan_10gbps());
+    let rep = match topo {
+        "tree" => run_tree(
+            sets,
+            &TreeMpsiConfig { protocol: protocol.clone(), pairing, seed: 77 },
+            &meter,
+            pool,
+            he,
+        ),
+        "path" => run_path(sets, protocol, 77, &meter, he),
+        "star" => run_star(sets, protocol, 0, 77, &meter, he),
+        _ => unreachable!(),
+    };
+    (rep, meter)
+}
+
+fn sweep_sizes(name: &str, protocol: &TpsiProtocol, sizes: &[usize], clients: usize) {
+    let pool = ThreadPool::for_host();
+    let he = HeContext::generate(&mut Rng::new(3), 512);
+    let mut table = Table::new(
+        &format!("Fig. 7{name} — Tree vs Path vs Star, {clients} clients, 70% overlap"),
+        &["per-client size", "topology", "rounds", "wall", "sim net", "total bytes", "correct"],
+    );
+    for &n in sizes {
+        let mut rng = Rng::new(7_000 + n as u64);
+        let sets = synth::mpsi_indicator_sets(clients, n, 0.7, &mut rng);
+        let oracle = oracle_intersection(&sets);
+        for topo in ["tree", "path", "star"] {
+            let (rep, _meter) = run_topo(topo, &sets, protocol, Pairing::VolumeAware, &pool, &he);
+            table.row(vec![
+                n.to_string(),
+                topo.into(),
+                rep.num_rounds().to_string(),
+                fmt_secs(rep.wall_s),
+                fmt_secs(rep.sim_s),
+                fmt_bytes(rep.total_bytes),
+                (rep.intersection == oracle).to_string(),
+            ]);
+        }
+        eprintln!("  done n={n}");
+    }
+    table.print();
+}
+
+fn sweep_sched(full: bool) {
+    // Fig. 7(c): client i holds base·(i+1) items; the paper uses base=10k.
+    let base = if full { 10_000 } else { 400 };
+    let client_counts: &[usize] = if full { &[4, 6, 8, 10, 12, 16] } else { &[4, 6, 8, 10] };
+    let pool = ThreadPool::for_host();
+    let he = HeContext::generate(&mut Rng::new(4), 512);
+    let protocol = proto_rsa(full);
+    let mut table = Table::new(
+        &format!("Fig. 7c — volume-aware vs request-order pairing (client i holds {base}·(i+1))"),
+        &["clients", "pairing", "wall", "sim net", "total bytes", "saving"],
+    );
+    for &m in client_counts {
+        let sizes: Vec<usize> = (0..m).map(|i| base * (i + 1)).collect();
+        let mut rng = Rng::new(9_000 + m as u64);
+        let sets = synth::mpsi_indicator_sets_sized(&sizes, 0.7, &mut rng);
+        let mut bytes = std::collections::HashMap::new();
+        for pairing in [Pairing::VolumeAware, Pairing::RequestOrder] {
+            let (rep, _meter) = run_topo("tree", &sets, &protocol, pairing, &pool, &he);
+            bytes.insert(format!("{pairing:?}"), rep.total_bytes);
+            let saving = match pairing {
+                Pairing::RequestOrder => {
+                    let va = bytes["VolumeAware"] as f64;
+                    format!("{:.1}%", 100.0 * (1.0 - va / rep.total_bytes as f64))
+                }
+                _ => "-".into(),
+            };
+            table.row(vec![
+                m.to_string(),
+                format!("{pairing:?}"),
+                fmt_secs(rep.wall_s),
+                fmt_secs(rep.sim_s),
+                fmt_bytes(rep.total_bytes),
+                saving,
+            ]);
+        }
+        eprintln!("  done m={m}");
+    }
+    table.print();
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let full = args.iter().any(|a| a == "--full");
+    let which: Vec<&str> = args
+        .iter()
+        .filter(|a| ["rsa", "ot", "sched"].contains(&a.as_str()))
+        .map(|s| s.as_str())
+        .collect();
+    let all = which.is_empty();
+    let sizes: Vec<usize> = if full {
+        vec![2_000, 4_000, 6_000, 8_000, 10_000]
+    } else {
+        vec![250, 500, 1_000]
+    };
+
+    if all || which.contains(&"rsa") {
+        sweep_sizes("a (RSA)", &proto_rsa(full), &sizes, 10);
+    }
+    if all || which.contains(&"ot") {
+        sweep_sizes("b (OT/OPRF)", &TpsiProtocol::ot(), &sizes, 10);
+    }
+    if all || which.contains(&"sched") {
+        sweep_sched(full);
+    }
+}

@@ -1,0 +1,109 @@
+//! Table 2: framework comparison — accuracy/MSE, end-to-end time, and
+//! training-data size for STARALL / TREEALL / STARCSS / TREECSS across the
+//! six paper-shaped datasets × {LR, MLP, KNN, LinReg}.
+//!
+//!     cargo bench --bench table2_e2e            # fast mode (scaled data)
+//!     cargo bench --bench table2_e2e -- --full  # paper-size datasets
+//!
+//! Expected shape vs the paper: CSS quality ≈ ALL quality (±2%); TREECSS
+//! fastest of the four variants (up to ~3× over STARALL on RI); CSS train
+//! sizes a small fraction of ALL.
+
+use treecss::bench::{fmt_bytes, Table};
+use treecss::coordinator::pipeline::{Backend, Downstream, PipelineConfig};
+use treecss::coordinator::{run_pipeline, FrameworkVariant};
+use treecss::data::synth::PaperDataset;
+use treecss::net::{Meter, NetConfig};
+use treecss::splitnn::trainer::ModelKind;
+use treecss::util::rng::Rng;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    // Fast mode: ~3% of paper sizes (HI/YP smaller still) so the whole
+    // table regenerates in a few minutes on 8 cores.
+    let scale = |ds: PaperDataset| -> f64 {
+        match (full, ds) {
+            (true, _) => 1.0,
+            (false, PaperDataset::Hi) => 0.01,
+            (false, PaperDataset::Yp) => 0.004,
+            (false, _) => 0.04,
+        }
+    };
+    // (dataset, downstream, lr, clusters) — the paper's Table 2 cells.
+    let cells: Vec<(PaperDataset, Downstream, f32, usize)> = vec![
+        (PaperDataset::Ba, Downstream::Train(ModelKind::Lr), 0.05, 12),
+        (PaperDataset::Ba, Downstream::Train(ModelKind::Mlp), 0.02, 12),
+        (PaperDataset::Mu, Downstream::Train(ModelKind::Lr), 0.05, 8),
+        (PaperDataset::Mu, Downstream::Train(ModelKind::Mlp), 0.02, 8),
+        (PaperDataset::Ri, Downstream::Train(ModelKind::Lr), 0.05, 8),
+        (PaperDataset::Ri, Downstream::Train(ModelKind::Mlp), 0.02, 8),
+        (PaperDataset::Ri, Downstream::Knn(5), 0.0, 8),
+        (PaperDataset::Hi, Downstream::Train(ModelKind::Lr), 0.05, 12),
+        (PaperDataset::Hi, Downstream::Train(ModelKind::Mlp), 0.02, 12),
+        (PaperDataset::Hi, Downstream::Knn(5), 0.0, 12),
+        (PaperDataset::Bp, Downstream::Train(ModelKind::Mlp), 0.02, 16),
+        (PaperDataset::Yp, Downstream::Train(ModelKind::LinReg), 0.05, 16),
+    ];
+
+    let backend = Backend::xla_default().unwrap_or_else(|e| {
+        eprintln!("[warn] no artifacts ({e}); native backend");
+        Backend::Native
+    });
+    eprintln!("backend: {} | mode: {}", backend.name(), if full { "FULL" } else { "fast" });
+
+    let mut table = Table::new(
+        "Table 2 — framework comparison (quality / time / train size)",
+        &["dataset", "model", "variant", "quality", "time(s)", "train data", "bytes"],
+    );
+
+    for (ds_kind, down, lr, clusters) in cells {
+        let mut rng = Rng::new(0xBEEF ^ ds_kind.name().len() as u64);
+        let mut ds = ds_kind.generate(scale(ds_kind), &mut rng);
+        ds.standardize();
+        let (tr, te) = ds.split(0.7, &mut rng);
+        let model_name = match down {
+            Downstream::Train(ModelKind::Lr) => "LR",
+            Downstream::Train(ModelKind::Mlp) => "MLP",
+            Downstream::Train(ModelKind::LinReg) => "LinearReg",
+            Downstream::Knn(_) => "KNN",
+        };
+        for variant in FrameworkVariant::ALL {
+            let meter = Meter::new(NetConfig::lan_10gbps());
+            let mut cfg = PipelineConfig::new(variant, down);
+            cfg.train.lr = lr;
+            cfg.train.max_epochs = if full { 200 } else { 60 };
+            cfg.coreset.clusters_per_client = clusters;
+            match run_pipeline(&tr, &te, &cfg, &backend, &meter) {
+                Ok(rep) => {
+                    let quality = if matches!(down, Downstream::Train(ModelKind::LinReg)) {
+                        format!("{:.4} MSE", rep.quality)
+                    } else {
+                        format!("{:.2}%", rep.quality * 100.0)
+                    };
+                    table.row(vec![
+                        ds_kind.name().into(),
+                        model_name.into(),
+                        variant.name().into(),
+                        quality,
+                        format!("{:.2}", rep.total_time_s()),
+                        rep.train_size.to_string(),
+                        fmt_bytes(rep.total_bytes),
+                    ]);
+                }
+                Err(e) => {
+                    table.row(vec![
+                        ds_kind.name().into(),
+                        model_name.into(),
+                        variant.name().into(),
+                        format!("ERROR: {e}"),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]);
+                }
+            }
+        }
+        eprintln!("  done {} {}", ds_kind.name(), model_name);
+    }
+    table.print();
+}

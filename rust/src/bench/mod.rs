@@ -1,0 +1,181 @@
+//! Micro/e2e benchmark harness (criterion is unavailable offline).
+//!
+//! `Bencher` runs warmup + timed repetitions and reports mean ± std;
+//! `Table` collects labelled rows and renders GitHub-flavoured markdown —
+//! the format every `benches/*.rs` target prints so EXPERIMENTS.md can
+//! quote results directly.
+
+use crate::util::stats;
+use crate::util::timer::Stopwatch;
+
+/// Timing result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub reps: usize,
+}
+
+impl Sample {
+    pub fn pretty(&self) -> String {
+        format!("{}: {:.4}s ± {:.4}s (n={})", self.name, self.mean_s, self.std_s, self.reps)
+    }
+}
+
+/// Repetition-based timer.
+pub struct Bencher {
+    pub warmup: usize,
+    pub reps: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 1, reps: 3 }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, reps: usize) -> Self {
+        Bencher { warmup, reps }
+    }
+
+    /// Quick mode for CI (`TREECSS_BENCH_REPS` overrides).
+    pub fn from_env() -> Self {
+        let reps = std::env::var("TREECSS_BENCH_REPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(3);
+        Bencher { warmup: 1, reps }
+    }
+
+    /// Time `f` (which returns an observation to keep the optimizer
+    /// honest); returns the timing sample.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Sample {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps {
+            let sw = Stopwatch::start();
+            std::hint::black_box(f());
+            times.push(sw.elapsed_secs());
+        }
+        Sample {
+            name: name.to_string(),
+            mean_s: stats::mean(&times),
+            std_s: stats::std_dev(&times),
+            reps: self.reps,
+        }
+    }
+}
+
+/// Markdown table builder for bench reports.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "column count");
+        self.rows.push(cells);
+    }
+
+    /// Render GitHub-flavoured markdown.
+    pub fn markdown(&self) -> String {
+        let mut s = format!("\n### {}\n\n", self.title);
+        s.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        s.push_str(&format!("|{}\n", "---|".repeat(self.header.len())));
+        for r in &self.rows {
+            s.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        s
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.markdown());
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// Format seconds adaptively.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+/// Format bytes adaptively.
+pub fn fmt_bytes(b: u64) -> String {
+    const KB: f64 = 1024.0;
+    let b = b as f64;
+    if b >= KB * KB * KB {
+        format!("{:.2}GiB", b / KB / KB / KB)
+    } else if b >= KB * KB {
+        format!("{:.2}MiB", b / KB / KB)
+    } else if b >= KB {
+        format!("{:.1}KiB", b / KB)
+    } else {
+        format!("{b:.0}B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_produces_positive_times() {
+        let s = Bencher::new(0, 3).run("spin", || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(s.mean_s > 0.0);
+        assert_eq!(s.reps, 3);
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.markdown();
+        assert!(md.contains("### demo"));
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_secs(2.5), "2.50s");
+        assert_eq!(fmt_secs(0.0025), "2.50ms");
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2048), "2.0KiB");
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn table_checks_columns() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,105 @@
+//! CLI argument parsing (clap is unavailable offline) and run-level
+//! configuration for the `treecss` binary.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line: subcommand, positionals, `--key value` /
+/// `--flag` options.
+#[derive(Debug, Default)]
+pub struct Cli {
+    pub command: String,
+    pub positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: std::collections::BTreeSet<String>,
+}
+
+impl Cli {
+    /// Parse from an iterator of args (without argv[0]).
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Cli> {
+        let mut cli = Cli::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(cmd) = it.next() {
+            cli.command = cmd;
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare `--flag`.
+                if let Some((k, v)) = key.split_once('=') {
+                    cli.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    cli.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    cli.flags.insert(key.to_string());
+                }
+            } else {
+                cli.positionals.push(a);
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn from_env() -> Result<Cli> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.contains(name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name}: cannot parse {s:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Cli {
+        Cli::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        // NB: a bare `--flag` followed by a non-dashed token would consume
+        // it as a value (ambiguity inherent to `--key value` grammars), so
+        // flags go last.
+        let c = parse(&["run", "--dataset", "RI", "--scale=0.1", "extra", "--verbose"]);
+        assert_eq!(c.command, "run");
+        assert_eq!(c.opt("dataset"), Some("RI"));
+        assert_eq!(c.opt("scale"), Some("0.1"));
+        assert!(c.flag("verbose"));
+        assert_eq!(c.positionals, vec!["extra"]);
+    }
+
+    #[test]
+    fn typed_option_parse() {
+        let c = parse(&["x", "--k", "12"]);
+        assert_eq!(c.opt_parse("k", 0usize).unwrap(), 12);
+        assert_eq!(c.opt_parse("missing", 7usize).unwrap(), 7);
+        let bad = parse(&["x", "--k", "abc"]);
+        assert!(bad.opt_parse("k", 0usize).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let c = parse(&["x", "--a", "--b", "v"]);
+        assert!(c.flag("a"));
+        assert_eq!(c.opt("b"), Some("v"));
+    }
+}

@@ -1,0 +1,9 @@
+//! The TreeCSS lifecycle coordinator: **align → coreset → train**
+//! (paper §4, Fig. 1), plus the framework variants of Table 2:
+//! STARALL, TREEALL, STARCSS, TREECSS.
+
+pub mod pipeline;
+
+pub use pipeline::{
+    run_pipeline, FrameworkVariant, MpsiTopology, PipelineConfig, PipelineReport,
+};

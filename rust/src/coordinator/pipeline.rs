@@ -1,0 +1,425 @@
+//! End-to-end pipeline: deal parties → MPSI alignment → (optional)
+//! Cluster-Coreset → weighted SplitNN training → test evaluation.
+//!
+//! This is the code path behind every Table 2 cell and the e2e examples.
+//! Reported time separates real compute wall-clock from simulated network
+//! transfer time; their sum is the comparable "Time (s)" figure (the
+//! paper's testbed folded both into one wall clock).
+
+use std::sync::Arc;
+
+use crate::coreset::cluster_coreset::{self, ClusterCoresetConfig, CoresetResult};
+use crate::data::{Dataset, Matrix};
+use crate::error::Result;
+use crate::ml::kmeans::{AssignBackend, NativeAssign};
+use crate::ml::knn::{self, Knn, NativePairwise, PairwiseBackend};
+use crate::net::Meter;
+use crate::parties::{deal, KeyServerNode};
+use crate::psi::sched::Pairing;
+use crate::psi::tree::{run_tree, TreeMpsiConfig};
+use crate::psi::{path::run_path, star::run_star, MpsiReport, TpsiProtocol};
+use crate::runtime::phases::XlaPhases;
+use crate::splitnn::native::NativePhases;
+use crate::splitnn::trainer::{self, ModelKind, TrainConfig, TrainReport};
+use crate::splitnn::ModelPhases;
+use crate::util::pool::ThreadPool;
+use crate::util::rng::Rng;
+
+/// MPSI topology choice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MpsiTopology {
+    Star,
+    Tree,
+    Path,
+}
+
+/// Table 2 framework variants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameworkVariant {
+    StarAll,
+    TreeAll,
+    StarCss,
+    TreeCss,
+}
+
+impl FrameworkVariant {
+    pub const ALL: [FrameworkVariant; 4] = [
+        FrameworkVariant::StarAll,
+        FrameworkVariant::TreeAll,
+        FrameworkVariant::StarCss,
+        FrameworkVariant::TreeCss,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FrameworkVariant::StarAll => "STARALL",
+            FrameworkVariant::TreeAll => "TREEALL",
+            FrameworkVariant::StarCss => "STARCSS",
+            FrameworkVariant::TreeCss => "TREECSS",
+        }
+    }
+
+    pub fn topology(&self) -> MpsiTopology {
+        match self {
+            FrameworkVariant::StarAll | FrameworkVariant::StarCss => MpsiTopology::Star,
+            FrameworkVariant::TreeAll | FrameworkVariant::TreeCss => MpsiTopology::Tree,
+        }
+    }
+
+    pub fn uses_coreset(&self) -> bool {
+        matches!(self, FrameworkVariant::StarCss | FrameworkVariant::TreeCss)
+    }
+}
+
+/// Downstream evaluator: trained model or KNN over the (core)set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Downstream {
+    Train(ModelKind),
+    /// KNN with k neighbors (no training).
+    Knn(usize),
+}
+
+/// Phase-execution backend.
+pub enum Backend {
+    /// XLA artifacts over PJRT (the production path).
+    Xla(Arc<XlaPhases>),
+    /// Pure-Rust parity fallback.
+    Native,
+}
+
+impl Backend {
+    pub fn xla_default() -> Result<Backend> {
+        let engine = crate::runtime::Engine::from_default_dir()?;
+        Ok(Backend::Xla(Arc::new(XlaPhases::new(Arc::new(engine)))))
+    }
+
+    fn phases(&self) -> Box<dyn ModelPhases + '_> {
+        match self {
+            Backend::Xla(p) => Box::new(p.as_ref().clone()),
+            Backend::Native => Box::new(NativePhases::default()),
+        }
+    }
+
+    fn assign_backend(&self) -> Box<dyn AssignBackendDyn + '_> {
+        match self {
+            Backend::Xla(p) => Box::new(p.as_ref().clone()),
+            Backend::Native => Box::new(NativeAssign),
+        }
+    }
+
+    fn pairwise_backend(&self) -> Box<dyn PairwiseBackendDyn + '_> {
+        match self {
+            Backend::Xla(p) => Box::new(p.as_ref().clone()),
+            Backend::Native => Box::new(NativePairwise),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Xla(_) => "xla",
+            Backend::Native => "native",
+        }
+    }
+}
+
+// Object-safe adapters (the ml traits take `&mut impl`, we need dyn here).
+trait AssignBackendDyn {
+    fn assign_dyn(&mut self, x: &Matrix, c: &Matrix) -> (Vec<u32>, Vec<f32>);
+}
+impl<T: AssignBackend> AssignBackendDyn for T {
+    fn assign_dyn(&mut self, x: &Matrix, c: &Matrix) -> (Vec<u32>, Vec<f32>) {
+        self.assign(x, c)
+    }
+}
+struct DynAssign<'a>(&'a mut dyn AssignBackendDyn);
+impl AssignBackend for DynAssign<'_> {
+    fn assign(&mut self, x: &Matrix, c: &Matrix) -> (Vec<u32>, Vec<f32>) {
+        self.0.assign_dyn(x, c)
+    }
+}
+trait PairwiseBackendDyn {
+    fn pairwise_dyn(&mut self, q: &Matrix, r: &Matrix) -> Matrix;
+}
+impl<T: PairwiseBackend> PairwiseBackendDyn for T {
+    fn pairwise_dyn(&mut self, q: &Matrix, r: &Matrix) -> Matrix {
+        self.pairwise_sq(q, r)
+    }
+}
+
+/// Full pipeline configuration.
+pub struct PipelineConfig {
+    pub variant: FrameworkVariant,
+    pub downstream: Downstream,
+    pub protocol: TpsiProtocol,
+    /// Volume-aware pairing for Tree-MPSI (the paper's default).
+    pub pairing: Pairing,
+    pub n_clients: usize,
+    pub coreset: ClusterCoresetConfig,
+    pub train: TrainConfig,
+    pub seed: u64,
+    /// Paillier modulus bits for the HE envelope.
+    pub he_bits: usize,
+}
+
+impl PipelineConfig {
+    pub fn new(variant: FrameworkVariant, downstream: Downstream) -> Self {
+        let model = match downstream {
+            Downstream::Train(k) => k,
+            Downstream::Knn(_) => ModelKind::Lr, // unused
+        };
+        PipelineConfig {
+            variant,
+            downstream,
+            protocol: TpsiProtocol::rsa(),
+            pairing: Pairing::VolumeAware,
+            n_clients: 3,
+            coreset: ClusterCoresetConfig::default(),
+            train: TrainConfig::new(model),
+            seed: 2024,
+            he_bits: 512,
+        }
+    }
+}
+
+/// End-to-end report (one Table 2 cell).
+pub struct PipelineReport {
+    pub variant: FrameworkVariant,
+    pub align: MpsiReport,
+    pub coreset: Option<CoresetResult>,
+    pub train: Option<TrainReport>,
+    /// Accuracy (classification) or MSE (regression).
+    pub quality: f64,
+    /// Samples actually used for training (Table 2 "Train Data").
+    pub train_size: usize,
+    pub n_aligned: usize,
+    /// Real compute wall-clock of all phases.
+    pub wall_s: f64,
+    /// Simulated network time of all phases.
+    pub sim_s: f64,
+    pub total_bytes: u64,
+}
+
+impl PipelineReport {
+    /// The comparable "Time (s)": compute + simulated wire.
+    pub fn total_time_s(&self) -> f64 {
+        self.wall_s + self.sim_s
+    }
+}
+
+/// Run the full lifecycle on a train/test split.
+pub fn run_pipeline(
+    train_ds: &Dataset,
+    test_ds: &Dataset,
+    cfg: &PipelineConfig,
+    backend: &Backend,
+    meter: &Meter,
+) -> Result<PipelineReport> {
+    let sw = crate::util::timer::Stopwatch::start();
+    let mut rng = Rng::new(cfg.seed);
+    let m = cfg.n_clients;
+
+    // ---- parties ----------------------------------------------------------
+    let (clients, label_owner) = deal(train_ds, m, &mut rng);
+    let key_server = KeyServerNode::new(&mut rng, cfg.he_bits);
+    let he = key_server.he();
+
+    // ---- phase 1: alignment (MPSI over the clients' indicator sets) -------
+    let sets: Vec<Vec<u64>> = clients.iter().map(|c| c.ids.clone()).collect();
+    let align = match cfg.variant.topology() {
+        MpsiTopology::Tree => {
+            let pool = ThreadPool::for_host();
+            let tcfg = TreeMpsiConfig {
+                protocol: cfg.protocol.clone(),
+                pairing: cfg.pairing,
+                seed: cfg.seed,
+            };
+            run_tree(&sets, &tcfg, meter, &pool, he)
+        }
+        MpsiTopology::Star => run_star(&sets, &cfg.protocol, 0, cfg.seed, meter, he),
+        MpsiTopology::Path => run_path(&sets, &cfg.protocol, cfg.seed, meter, he),
+    };
+    let aligned = align.intersection.clone();
+    let n_aligned = aligned.len();
+
+    // Aligned views.
+    let slices: Vec<Matrix> = clients
+        .iter()
+        .map(|c| c.aligned_slice(&aligned))
+        .collect::<Result<_>>()?;
+    let y = label_owner.aligned_labels(&aligned)?;
+
+    // ---- phase 2: coreset (CSS variants) -----------------------------------
+    let phases = backend.phases();
+    let (coreset, train_slices, train_y, train_w) = if cfg.variant.uses_coreset() {
+        let mut ab = backend.assign_backend();
+        let mut dyn_ab = DynAssign(ab.as_mut());
+        let cs = cluster_coreset::run(
+            &slices,
+            &y,
+            train_ds.task.is_classification(),
+            &cfg.coreset,
+            &mut dyn_ab,
+            meter,
+            he,
+        )?;
+        let sl: Vec<Matrix> = slices.iter().map(|s| s.select_rows(&cs.indices)).collect();
+        let sy: Vec<f32> = cs.indices.iter().map(|&i| y[i]).collect();
+        let wts = cs.weights.clone();
+        (Some(cs), sl, sy, wts)
+    } else {
+        let w = vec![1.0f32; n_aligned];
+        (None, slices.clone(), y.clone(), w)
+    };
+    let train_size = train_y.len();
+
+    // ---- phase 3: downstream ------------------------------------------------
+    // Test-side party views (aligned trivially: test ids are shared).
+    let part = crate::data::VerticalPartition::even(test_ds.d(), m);
+    let test_slices: Vec<Matrix> = (0..m).map(|c| part.slice(&test_ds.x, c)).collect();
+
+    let (train_report, quality) = match cfg.downstream {
+        Downstream::Train(_) => {
+            let (model, rep) = trainer::train(
+                phases.as_ref(),
+                &train_slices,
+                &train_y,
+                &train_w,
+                train_ds.task,
+                &cfg.train,
+                meter,
+            )?;
+            let q = model.evaluate(phases.as_ref(), &test_slices, &test_ds.y, test_ds.task)?;
+            (Some(rep), q)
+        }
+        Downstream::Knn(k) => {
+            // VFL-KNN: per-client squared distances, summed at the
+            // aggregator; coreset weights join the vote.
+            let mut pw = backend.pairwise_backend();
+            let parts: Vec<Matrix> = train_slices
+                .iter()
+                .zip(&test_slices)
+                .map(|(r, q)| pw.pairwise_dyn(q, r))
+                .collect();
+            // Charge per-client distance uploads.
+            for (c, p) in parts.iter().enumerate() {
+                meter.charge(
+                    crate::net::PartyId::Client(c as u32),
+                    crate::net::PartyId::Aggregator,
+                    "knn/dist",
+                    crate::net::msg::TensorMsg::wire_bytes(p.rows(), p.cols()),
+                );
+            }
+            let dists = knn::sum_client_dists(&parts);
+            let n_classes = train_ds.task.n_classes();
+            let preds = Knn::new(k, n_classes).classify_from_dists(&dists, &train_y, &train_w);
+            let correct = preds
+                .iter()
+                .zip(&test_ds.y)
+                .filter(|(&p, &t)| p == t as usize)
+                .count();
+            (None, correct as f64 / test_ds.n().max(1) as f64)
+        }
+    };
+
+    let sim_s = align.sim_s
+        + coreset.as_ref().map_or(0.0, |c| c.sim_s)
+        + train_report.as_ref().map_or(0.0, |t| t.sim_comm_s);
+
+    Ok(PipelineReport {
+        variant: cfg.variant,
+        align,
+        coreset,
+        train: train_report,
+        quality,
+        train_size,
+        n_aligned,
+        wall_s: sw.elapsed_secs(),
+        sim_s,
+        total_bytes: meter.total_bytes(""),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::PaperDataset;
+    use crate::net::NetConfig;
+    use crate::psi::rsa_psi::RsaPsiConfig;
+
+    fn fast_cfg(variant: FrameworkVariant, down: Downstream) -> PipelineConfig {
+        let mut cfg = PipelineConfig::new(variant, down);
+        cfg.protocol = TpsiProtocol::Rsa(RsaPsiConfig { modulus_bits: 256, domain: "t".into() });
+        cfg.he_bits = 256;
+        cfg.train.max_epochs = 30;
+        cfg.train.lr = 0.05;
+        cfg
+    }
+
+    #[test]
+    fn treecss_end_to_end_on_ri_shape() {
+        let mut rng = Rng::new(1);
+        let ds = PaperDataset::Ri.generate(0.03, &mut rng); // ~540 samples
+        let (tr, te) = ds.split(0.7, &mut rng);
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let cfg = fast_cfg(FrameworkVariant::TreeCss, Downstream::Train(ModelKind::Lr));
+        let rep = run_pipeline(&tr, &te, &cfg, &Backend::Native, &meter).unwrap();
+        assert_eq!(rep.n_aligned, tr.n(), "identical shuffled sets intersect fully");
+        let cs = rep.coreset.as_ref().unwrap();
+        assert!(cs.reduction(rep.n_aligned) > 0.5, "RI-like compresses well");
+        assert!(rep.quality > 0.9, "LR on near-separable: {}", rep.quality);
+        assert!(rep.total_time_s() > 0.0);
+    }
+
+    #[test]
+    fn all_variant_trains_on_everything() {
+        let mut rng = Rng::new(2);
+        let ds = PaperDataset::Ba.generate(0.02, &mut rng);
+        let (tr, te) = ds.split(0.7, &mut rng);
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let cfg = fast_cfg(FrameworkVariant::TreeAll, Downstream::Train(ModelKind::Lr));
+        let rep = run_pipeline(&tr, &te, &cfg, &Backend::Native, &meter).unwrap();
+        assert!(rep.coreset.is_none());
+        assert_eq!(rep.train_size, tr.n());
+    }
+
+    #[test]
+    fn css_trains_on_fewer_samples_than_all() {
+        let mut rng = Rng::new(3);
+        let ds = PaperDataset::Mu.generate(0.05, &mut rng);
+        let (tr, te) = ds.split(0.7, &mut rng);
+        let mk = |variant| {
+            let meter = Meter::new(NetConfig::lan_10gbps());
+            let cfg = fast_cfg(variant, Downstream::Train(ModelKind::Lr));
+            run_pipeline(&tr, &te, &cfg, &Backend::Native, &meter).unwrap()
+        };
+        let all = mk(FrameworkVariant::StarAll);
+        let css = mk(FrameworkVariant::StarCss);
+        assert!(css.train_size < all.train_size);
+        assert!(css.quality > all.quality - 0.08, "css {} vs all {}", css.quality, all.quality);
+    }
+
+    #[test]
+    fn knn_downstream_works() {
+        let mut rng = Rng::new(4);
+        let ds = PaperDataset::Ri.generate(0.02, &mut rng);
+        let (tr, te) = ds.split(0.7, &mut rng);
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let cfg = fast_cfg(FrameworkVariant::TreeCss, Downstream::Knn(5));
+        let rep = run_pipeline(&tr, &te, &cfg, &Backend::Native, &meter).unwrap();
+        assert!(rep.quality > 0.9, "knn acc {}", rep.quality);
+        assert!(rep.train.is_none());
+    }
+
+    #[test]
+    fn regression_pipeline_reports_mse() {
+        let mut rng = Rng::new(5);
+        let ds = PaperDataset::Yp.generate(0.001, &mut rng); // ~510 rows
+        let (tr, te) = ds.split(0.9, &mut rng);
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let mut cfg = fast_cfg(FrameworkVariant::TreeCss, Downstream::Train(ModelKind::LinReg));
+        cfg.coreset.clusters_per_client = 16;
+        cfg.train.max_epochs = 60;
+        let rep = run_pipeline(&tr, &te, &cfg, &Backend::Native, &meter).unwrap();
+        assert!(rep.quality < 2.0, "mse {}", rep.quality); // var(y) ≈ 1.3
+    }
+}

@@ -1,0 +1,265 @@
+//! The full five-step Cluster-Coreset protocol (paper §4.2, Fig. 3),
+//! executed across clients, aggregation server and label owner with every
+//! message HE-enveloped and charged to the meter.
+//!
+//!   1. each client K-Means-clusters its local feature slice;
+//!   2. each client computes rank-based local weights;
+//!   3. clients send (weight, cluster, distance) per sample to the label
+//!      owner *via the aggregation server*, sealed under HE — the server
+//!      routes ciphertext it cannot open;
+//!   4. the label owner groups by (CT, label) and selects the minimal-
+//!      aggregated-distance representative per group;
+//!   5. selected indicators go back to all clients (HE again); weights are
+//!      the per-client sums.
+
+use crate::data::Matrix;
+use crate::error::Result;
+use crate::ml::kmeans::{AssignBackend, KMeans};
+use crate::net::msg::{self, CtMessage, HybridEnvelope};
+use crate::net::{Meter, PartyId};
+use crate::psi::common::HeContext;
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+use super::ct::{self, ClientCtData};
+use super::weights::local_weights;
+
+/// Cluster-Coreset parameters.
+#[derive(Clone, Debug)]
+pub struct ClusterCoresetConfig {
+    /// Clusters per client (paper sweeps 2..32 in Fig. 4/5).
+    pub clusters_per_client: usize,
+    /// Apply the rank-based re-weighting (Fig. 4/5 ablation switch).
+    /// When false, selected samples get weight 1.
+    pub reweight: bool,
+    pub kmeans_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for ClusterCoresetConfig {
+    fn default() -> Self {
+        ClusterCoresetConfig {
+            clusters_per_client: 8,
+            reweight: true,
+            kmeans_iters: 25,
+            seed: 99,
+        }
+    }
+}
+
+/// Output of the protocol.
+#[derive(Clone, Debug)]
+pub struct CoresetResult {
+    /// Positions of coreset samples in the aligned order, ascending.
+    pub indices: Vec<usize>,
+    /// Training weights (summed local weights, or 1.0 if !reweight).
+    pub weights: Vec<f32>,
+    pub distinct_cts: usize,
+    pub wall_s: f64,
+    /// Simulated communication time of the protocol's messages.
+    pub sim_s: f64,
+    pub bytes: u64,
+}
+
+impl CoresetResult {
+    /// Fraction of training data removed (the paper reports up to 98.4%).
+    pub fn reduction(&self, n_aligned: usize) -> f64 {
+        1.0 - self.indices.len() as f64 / n_aligned.max(1) as f64
+    }
+}
+
+/// Run Cluster-Coreset over aligned client slices.
+///
+/// `slices[m]`: client m's aligned feature matrix; `y`: label owner's
+/// aligned labels; `is_classification` controls the per-label split.
+pub fn run(
+    slices: &[Matrix],
+    y: &[f32],
+    is_classification: bool,
+    cfg: &ClusterCoresetConfig,
+    backend: &mut impl AssignBackend,
+    meter: &Meter,
+    he: &HeContext,
+) -> Result<CoresetResult> {
+    let sw = Stopwatch::start();
+    let mut sim_s = 0.0f64;
+    let mut rng = Rng::new(cfg.seed ^ 0xC0E5E7);
+    let n = y.len();
+
+    // Steps 1–3 per client: cluster, weight, send CT message.
+    let mut client_data = Vec::with_capacity(slices.len());
+    for (m, x) in slices.iter().enumerate() {
+        assert_eq!(x.rows(), n, "client {m} misaligned");
+        let mut km = KMeans::new(cfg.clusters_per_client);
+        km.max_iters = cfg.kmeans_iters;
+        km.seed = cfg.seed ^ (m as u64) << 8;
+        let fit = km.fit(x, backend);
+        let w = local_weights(&fit.assign, &fit.dist, fit.k);
+
+        // Step 3: seal (w, c, ed) per sample; client → aggregator → label
+        // owner. The aggregator concatenates messages so the label owner
+        // cannot attribute sources; we charge both hops.
+        let ct_msg = CtMessage {
+            client: m as u32,
+            weights: w.clone(),
+            clusters: fit.assign.clone(),
+            dists: fit.dist.clone(),
+        };
+        let sealed = HybridEnvelope::seal(&mut rng, &he.pk, &ct_msg.encode())?;
+        let wire = sealed.encode().len() as u64;
+        sim_s += meter.charge(PartyId::Client(m as u32), PartyId::Aggregator, "coreset/ct", wire);
+        sim_s += meter.charge(PartyId::Aggregator, PartyId::LabelOwner, "coreset/ct", wire);
+        // Label owner decrypts.
+        let opened = sealed.open(he.private())?;
+        let decoded = CtMessage::decode(&opened)?;
+        client_data.push(ClientCtData {
+            weights: decoded.weights,
+            clusters: decoded.clusters,
+            dists: decoded.dists,
+        });
+    }
+
+    // Step 4: label owner selects representatives.
+    let selection = ct::select(&client_data, y, is_classification);
+
+    // Step 5: broadcast selected indicators (sealed) to all clients.
+    let payload = msg::encode_index_list(
+        &selection.indices.iter().map(|&i| i as u64).collect::<Vec<_>>(),
+    );
+    let sealed = HybridEnvelope::seal(&mut rng, &he.pk, &payload)?;
+    let wire = sealed.encode().len() as u64;
+    sim_s += meter.charge(PartyId::LabelOwner, PartyId::Aggregator, "coreset/sel", wire);
+    for c in 0..slices.len() {
+        sim_s += meter.charge(PartyId::Aggregator, PartyId::Client(c as u32), "coreset/sel", wire);
+    }
+
+    let weights = if cfg.reweight {
+        selection.weights
+    } else {
+        vec![1.0; selection.indices.len()]
+    };
+
+    Ok(CoresetResult {
+        indices: selection.indices,
+        weights,
+        distinct_cts: selection.distinct_cts,
+        wall_s: sw.elapsed_secs(),
+        sim_s,
+        bytes: meter.total_bytes("coreset/"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth, VerticalPartition};
+    use crate::ml::kmeans::NativeAssign;
+    use crate::net::NetConfig;
+
+    fn run_on(
+        ds: &crate::data::Dataset,
+        k: usize,
+        reweight: bool,
+    ) -> (CoresetResult, usize) {
+        let part = VerticalPartition::even(ds.d(), 3);
+        let slices: Vec<Matrix> = (0..3).map(|c| part.slice(&ds.x, c)).collect();
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let he = HeContext::for_tests();
+        let cfg = ClusterCoresetConfig {
+            clusters_per_client: k,
+            reweight,
+            ..Default::default()
+        };
+        let r = run(
+            &slices,
+            &ds.y,
+            ds.task.is_classification(),
+            &cfg,
+            &mut NativeAssign,
+            &meter,
+            &he,
+        )
+        .unwrap();
+        (r, ds.n())
+    }
+
+    #[test]
+    fn compresses_redundant_data_hard() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        // RI-like: 2 tight modes per class → tiny coreset.
+        let ds = synth::blobs("t", 1000, 8, 2, 2, 6.0, 0.4, &mut rng);
+        let (r, n) = run_on(&ds, 4, true);
+        assert!(r.reduction(n) > 0.9, "reduction {}", r.reduction(n));
+        assert!(!r.indices.is_empty());
+    }
+
+    #[test]
+    fn coreset_grows_with_clusters_per_client() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        let ds = synth::blobs("t", 800, 8, 2, 4, 2.5, 1.0, &mut rng);
+        let (r2, _) = run_on(&ds, 2, true);
+        let (r16, _) = run_on(&ds, 16, true);
+        assert!(
+            r16.indices.len() > r2.indices.len(),
+            "{} > {}",
+            r16.indices.len(),
+            r2.indices.len()
+        );
+    }
+
+    #[test]
+    fn weights_sum_of_clients_bounded_by_m() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let ds = synth::blobs("t", 300, 9, 2, 2, 3.0, 1.0, &mut rng);
+        let (r, _) = run_on(&ds, 4, true);
+        for &w in &r.weights {
+            assert!(w > 0.0 && w <= 3.0 + 1e-5, "w={w} with 3 clients");
+        }
+    }
+
+    #[test]
+    fn no_reweight_gives_unit_weights() {
+        let mut rng = crate::util::rng::Rng::new(4);
+        let ds = synth::blobs("t", 200, 6, 2, 2, 3.0, 1.0, &mut rng);
+        let (r, _) = run_on(&ds, 4, false);
+        assert!(r.weights.iter().all(|&w| w == 1.0));
+    }
+
+    #[test]
+    fn every_class_represented() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let ds = synth::blobs("t", 400, 8, 4, 2, 4.0, 0.8, &mut rng);
+        let (r, _) = run_on(&ds, 4, true);
+        let classes: std::collections::HashSet<i64> =
+            r.indices.iter().map(|&i| ds.y[i] as i64).collect();
+        assert_eq!(classes.len(), 4);
+    }
+
+    #[test]
+    fn aggregator_routes_but_cannot_open() {
+        // Structural privacy check: all coreset traffic flows through the
+        // aggregator and the envelope body differs from the plaintext.
+        let mut rng = crate::util::rng::Rng::new(6);
+        let ds = synth::blobs("t", 100, 6, 2, 1, 3.0, 1.0, &mut rng);
+        let part = VerticalPartition::even(6, 3);
+        let slices: Vec<Matrix> = (0..3).map(|c| part.slice(&ds.x, c)).collect();
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let he = HeContext::for_tests();
+        run(
+            &slices,
+            &ds.y,
+            true,
+            &ClusterCoresetConfig::default(),
+            &mut NativeAssign,
+            &meter,
+            &he,
+        )
+        .unwrap();
+        let agg_bytes = meter.party_bytes(PartyId::Aggregator, "coreset/");
+        assert_eq!(
+            agg_bytes,
+            meter.total_bytes("coreset/"),
+            "every coreset byte transits the aggregator"
+        );
+    }
+}

@@ -1,0 +1,172 @@
+//! Steps 3–4 of Cluster-Coreset: cluster tuples and representative
+//! selection (label-owner side).
+//!
+//! For each aligned sample i the label owner assembles
+//! `CT_i = (c_i^1, …, c_i^M)` from the clients' messages, groups samples by
+//! (CT value, label), and keeps from each group the sample with minimal
+//! aggregated distance Σ_m ed_i^m. The coreset weight of a selected sample
+//! is the sum of its local weights, w_i = Σ_m w_i^m (step 5).
+//!
+//! Regression has no label classes; each CT group yields one
+//! representative (documented deviation — the paper only defines the split
+//! "based on their labels" for classification).
+
+use std::collections::HashMap;
+
+/// Per-client per-sample message content after decryption (step 3).
+#[derive(Clone, Debug)]
+pub struct ClientCtData {
+    /// Local weights w_i^m.
+    pub weights: Vec<f32>,
+    /// Local cluster index c_i^m.
+    pub clusters: Vec<u32>,
+    /// Local centroid distance ed_i^m.
+    pub dists: Vec<f32>,
+}
+
+/// Label key for grouping: class index, or a single bucket for regression.
+fn label_key(y: f32, is_classification: bool) -> i64 {
+    if is_classification {
+        y as i64
+    } else {
+        0
+    }
+}
+
+/// Selection output: positions (into the aligned order) + summed weights.
+#[derive(Clone, Debug)]
+pub struct Selection {
+    /// Indices of selected samples, ascending.
+    pub indices: Vec<usize>,
+    /// w_i = Σ_m w_i^m for each selected sample (parallel to `indices`).
+    pub weights: Vec<f32>,
+    /// Number of distinct CT values observed.
+    pub distinct_cts: usize,
+}
+
+/// Run steps 4–5 at the label owner.
+///
+/// `clients[m]` carries client m's weights/clusters/distances for the same
+/// aligned sample order; `y` are the label owner's labels.
+pub fn select(clients: &[ClientCtData], y: &[f32], is_classification: bool) -> Selection {
+    assert!(!clients.is_empty());
+    let n = y.len();
+    for c in clients {
+        assert_eq!(c.weights.len(), n);
+        assert_eq!(c.clusters.len(), n);
+        assert_eq!(c.dists.len(), n);
+    }
+    // Group by (CT, label); track the argmin of aggregated distance.
+    // Key: (label, CT as Vec<u32>). Value: (best index, best agg dist).
+    let mut groups: HashMap<(i64, Vec<u32>), (usize, f32)> = HashMap::new();
+    let mut distinct: std::collections::HashSet<Vec<u32>> = std::collections::HashSet::new();
+    for i in 0..n {
+        let ct: Vec<u32> = clients.iter().map(|c| c.clusters[i]).collect();
+        let agg: f32 = clients.iter().map(|c| c.dists[i]).sum();
+        distinct.insert(ct.clone());
+        let key = (label_key(y[i], is_classification), ct);
+        groups
+            .entry(key)
+            .and_modify(|best| {
+                if agg < best.1 {
+                    *best = (i, agg);
+                }
+            })
+            .or_insert((i, agg));
+    }
+    let mut indices: Vec<usize> = groups.values().map(|&(i, _)| i).collect();
+    indices.sort_unstable();
+    let weights = indices
+        .iter()
+        .map(|&i| clients.iter().map(|c| c.weights[i]).sum())
+        .collect();
+    Selection { indices, weights, distinct_cts: distinct.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn client(clusters: Vec<u32>, dists: Vec<f32>) -> ClientCtData {
+        let weights = vec![0.5; clusters.len()];
+        ClientCtData { weights, clusters, dists }
+    }
+
+    #[test]
+    fn identical_cts_same_label_collapse_to_argmin() {
+        // Samples 0,1,2 share CT (0,0); sample 1 has min aggregated dist.
+        let c1 = client(vec![0, 0, 0], vec![3.0, 1.0, 2.0]);
+        let c2 = client(vec![0, 0, 0], vec![3.0, 0.5, 2.0]);
+        let y = vec![1.0, 1.0, 1.0];
+        let s = select(&[c1, c2], &y, true);
+        assert_eq!(s.indices, vec![1]);
+        assert_eq!(s.weights, vec![1.0]); // 0.5 + 0.5
+        assert_eq!(s.distinct_cts, 1);
+    }
+
+    #[test]
+    fn label_split_keeps_one_per_class() {
+        // Same CT but two labels → two representatives.
+        let c1 = client(vec![0, 0, 0, 0], vec![1.0, 2.0, 3.0, 0.5]);
+        let y = vec![0.0, 0.0, 1.0, 1.0];
+        let s = select(&[c1], &y, true);
+        assert_eq!(s.indices, vec![0, 3]); // argmin within each class
+    }
+
+    #[test]
+    fn different_cts_all_kept() {
+        let c1 = client(vec![0, 1, 2], vec![1.0, 1.0, 1.0]);
+        let c2 = client(vec![0, 0, 0], vec![1.0, 1.0, 1.0]);
+        let y = vec![0.0, 0.0, 0.0];
+        let s = select(&[c1, c2], &y, true);
+        assert_eq!(s.indices, vec![0, 1, 2]);
+        assert_eq!(s.distinct_cts, 3);
+    }
+
+    #[test]
+    fn regression_ignores_label_values() {
+        // Identical CTs, distinct continuous labels → ONE representative.
+        let c1 = client(vec![0, 0], vec![2.0, 1.0]);
+        let y = vec![10.5, -3.25];
+        let s = select(&[c1], &y, false);
+        assert_eq!(s.indices, vec![1]);
+    }
+
+    #[test]
+    fn coreset_never_larger_than_input() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        let n = 200;
+        let mk = |rng: &mut crate::util::rng::Rng| ClientCtData {
+            weights: (0..n).map(|_| rng.f32()).collect(),
+            clusters: (0..n).map(|_| rng.below(4) as u32).collect(),
+            dists: (0..n).map(|_| rng.f32() * 3.0).collect(),
+        };
+        let clients = vec![mk(&mut rng), mk(&mut rng), mk(&mut rng)];
+        let y: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+        let s = select(&clients, &y, true);
+        assert!(s.indices.len() <= n);
+        // At most distinct_cts × classes representatives.
+        assert!(s.indices.len() <= s.distinct_cts * 2);
+        // Indices are unique + sorted.
+        let mut dedup = s.indices.clone();
+        dedup.dedup();
+        assert_eq!(dedup, s.indices);
+    }
+
+    #[test]
+    fn selected_weights_are_sums_of_local_weights() {
+        let c1 = ClientCtData {
+            weights: vec![0.25, 1.0],
+            clusters: vec![0, 1],
+            dists: vec![1.0, 1.0],
+        };
+        let c2 = ClientCtData {
+            weights: vec![0.75, 0.5],
+            clusters: vec![0, 0],
+            dists: vec![1.0, 1.0],
+        };
+        let s = select(&[c1, c2], &[0.0, 0.0], true);
+        assert_eq!(s.indices, vec![0, 1]);
+        assert_eq!(s.weights, vec![1.0, 1.5]);
+    }
+}

@@ -1,0 +1,16 @@
+//! Coreset construction (paper §4.2).
+//!
+//! * [`weights`] — step 2: rank-based local sample weights.
+//! * [`ct`] — steps 3–4: cluster tuples, per-(CT, label) representative
+//!   selection, weight summation.
+//! * [`cluster_coreset`] — the full five-step Cluster-Coreset protocol
+//!   across clients / aggregator / label owner with HE-enveloped messages.
+//! * [`vcoreset`] — the V-coreset baseline (leverage-score sampling for
+//!   regression, sensitivity sampling for clustering/classification).
+
+pub mod cluster_coreset;
+pub mod ct;
+pub mod vcoreset;
+pub mod weights;
+
+pub use cluster_coreset::{ClusterCoresetConfig, CoresetResult};

@@ -1,0 +1,171 @@
+//! V-coreset baseline (Huang et al., NeurIPS 2022) — the comparison in
+//! Fig. 6.
+//!
+//! V-coreset builds task-specific coresets for VFL:
+//! * **regularized linear regression** — leverage-score sampling: clients
+//!   exchange projections onto an orthonormal basis of their local
+//!   features (which is exactly the label/feature leakage the paper
+//!   criticizes), sample ∝ leverage, weight 1/(s·p_i);
+//! * **k-means** — sensitivity sampling: s_i ∝ dist_i²/Σdist² + 1/n.
+//!
+//! It supports only these two tasks (no classification heads) — we follow
+//! the original and, like the paper's Fig. 6, evaluate it by training the
+//! downstream model on its (sample, weight) output at a matched size.
+
+use crate::data::Matrix;
+use crate::ml::kmeans::{KMeans, NativeAssign};
+use crate::util::rng::Rng;
+
+/// A sampled coreset: indices + importance weights.
+#[derive(Clone, Debug)]
+pub struct VCoreset {
+    pub indices: Vec<usize>,
+    pub weights: Vec<f32>,
+}
+
+/// Leverage scores of the rows of X via Gram–Schmidt on columns.
+/// ℓ_i = |Q_i,:|² where Q is an orthonormal basis of the column space.
+pub fn leverage_scores(x: &Matrix) -> Vec<f32> {
+    let (n, d) = x.shape();
+    // Modified Gram–Schmidt over columns.
+    let mut q: Vec<Vec<f32>> = Vec::with_capacity(d);
+    for j in 0..d {
+        let mut col: Vec<f32> = (0..n).map(|r| x.get(r, j)).collect();
+        let orig_norm: f32 = col.iter().map(|v| v * v).sum::<f32>().sqrt();
+        for prev in &q {
+            let dot: f32 = col.iter().zip(prev).map(|(a, b)| a * b).sum();
+            for (c, p) in col.iter_mut().zip(prev) {
+                *c -= dot * p;
+            }
+        }
+        let norm: f32 = col.iter().map(|v| v * v).sum::<f32>().sqrt();
+        // Relative threshold: f32 Gram–Schmidt leaves ~1e-4·|col| residue
+        // on exactly dependent columns.
+        if norm > 1e-4 * orig_norm.max(1e-12) {
+            for c in &mut col {
+                *c /= norm;
+            }
+            q.push(col);
+        }
+    }
+    let mut lev = vec![0.0f32; n];
+    for col in &q {
+        for (l, v) in lev.iter_mut().zip(col) {
+            *l += v * v;
+        }
+    }
+    lev
+}
+
+/// Importance-sample `size` rows with probabilities ∝ score (+uniform
+/// smoothing), weights 1/(size·p_i).
+fn importance_sample(scores: &[f32], size: usize, rng: &mut Rng) -> VCoreset {
+    let n = scores.len();
+    let size = size.min(n);
+    let total: f64 = scores.iter().map(|&s| s as f64).sum();
+    // Smooth with a uniform component (standard sensitivity bound).
+    let probs: Vec<f64> = scores
+        .iter()
+        .map(|&s| 0.5 * (s as f64 / total.max(1e-12)) + 0.5 / n as f64)
+        .collect();
+    // Sample WITH replacement (the theory's regime), dedup to an index set
+    // accumulating weight per repeat.
+    let mut acc: std::collections::HashMap<usize, f64> = std::collections::HashMap::new();
+    let cum: Vec<f64> = probs
+        .iter()
+        .scan(0.0, |a, &p| {
+            *a += p;
+            Some(*a)
+        })
+        .collect();
+    let norm = *cum.last().unwrap();
+    for _ in 0..size {
+        let t = rng.f64() * norm;
+        let idx = cum.partition_point(|&c| c < t).min(n - 1);
+        *acc.entry(idx).or_insert(0.0) += 1.0 / (size as f64 * probs[idx]);
+    }
+    let mut indices: Vec<usize> = acc.keys().copied().collect();
+    indices.sort_unstable();
+    let weights = indices.iter().map(|i| acc[i] as f32).collect();
+    VCoreset { indices, weights }
+}
+
+/// V-coreset for (regularized) linear regression: leverage sampling over
+/// the concatenated client projections. `slices` are per-client feature
+/// matrices (the exchange of projections is V-coreset's privacy leak).
+pub fn for_regression(slices: &[Matrix], size: usize, seed: u64) -> VCoreset {
+    let refs: Vec<&Matrix> = slices.iter().collect();
+    let x = Matrix::hcat(&refs).expect("aligned slices");
+    let lev = leverage_scores(&x);
+    importance_sample(&lev, size, &mut Rng::new(seed))
+}
+
+/// V-coreset for k-means (used for classification comparisons in Fig. 6):
+/// sensitivity sampling from a pilot clustering.
+pub fn for_kmeans(slices: &[Matrix], k: usize, size: usize, seed: u64) -> VCoreset {
+    let refs: Vec<&Matrix> = slices.iter().collect();
+    let x = Matrix::hcat(&refs).expect("aligned slices");
+    let mut km = KMeans::new(k);
+    km.seed = seed;
+    let fit = km.fit(&x, &mut NativeAssign);
+    let sens: Vec<f32> = fit.dist.iter().map(|&d| d * d).collect();
+    importance_sample(&sens, size, &mut Rng::new(seed ^ 0x5EED))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn leverage_scores_sum_to_rank() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::from_fn(50, 4, |_, _| rng.gaussian_f32());
+        let lev = leverage_scores(&x);
+        let sum: f32 = lev.iter().sum();
+        assert!((sum - 4.0).abs() < 1e-2, "Σℓ = rank: {sum}");
+        assert!(lev.iter().all(|&l| (0.0..=1.0 + 1e-4).contains(&l)));
+    }
+
+    #[test]
+    fn rank_deficient_handled() {
+        // Column 1 = 2 × column 0 → rank 1.
+        let x = Matrix::from_fn(20, 2, |r, c| (r as f32 + 1.0) * (c as f32 + 1.0));
+        let lev = leverage_scores(&x);
+        let sum: f32 = lev.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-2, "{sum}");
+    }
+
+    #[test]
+    fn sampling_respects_size_and_weights_positive() {
+        let mut rng = Rng::new(2);
+        let ds = synth::regression("t", 300, 6, &mut rng);
+        let v = for_regression(&[ds.x.clone()], 50, 3);
+        assert!(v.indices.len() <= 50);
+        assert!(!v.indices.is_empty());
+        assert!(v.weights.iter().all(|&w| w > 0.0));
+        assert!(v.indices.windows(2).all(|p| p[0] < p[1]));
+    }
+
+    #[test]
+    fn weights_estimate_total_mass() {
+        // E[Σ w_i] = n for importance sampling with weight 1/(s·p).
+        let mut rng = Rng::new(3);
+        let ds = synth::regression("t", 400, 5, &mut rng);
+        let v = for_regression(&[ds.x.clone()], 200, 4);
+        let total: f32 = v.weights.iter().sum();
+        assert!(
+            (total - 400.0).abs() / 400.0 < 0.35,
+            "Σw = {total}, expect ≈ 400"
+        );
+    }
+
+    #[test]
+    fn kmeans_variant_prefers_far_points() {
+        let mut rng = Rng::new(4);
+        let ds = synth::blobs("t", 500, 6, 2, 2, 4.0, 0.8, &mut rng);
+        let v = for_kmeans(&[ds.x.clone()], 4, 100, 5);
+        assert!(!v.indices.is_empty());
+        assert!(v.indices.len() <= 100);
+    }
+}

@@ -1,0 +1,105 @@
+//! Step 2 of Cluster-Coreset: local per-sample weights.
+//!
+//! Paper formula for sample i in cluster c on client m:
+//!
+//! ```text
+//!   w_i^m = (1 / |S_m^c|) · pos(ed_i^m, DeSort({ed_j^m : j ∈ S_m^c}))
+//! ```
+//!
+//! `DeSort` sorts the cluster's members by distance *descending*; `pos` is
+//! the 1-based position. The farthest member gets weight 1/|S|, the member
+//! nearest the centroid gets |S|/|S| = 1 — "those closer to the centroids
+//! are more representative".
+
+/// Compute local weights from cluster assignments + centroid distances.
+/// Returns one weight per sample, in input order.
+pub fn local_weights(assign: &[u32], dist: &[f32], k: usize) -> Vec<f32> {
+    assert_eq!(assign.len(), dist.len());
+    let n = assign.len();
+    let mut weights = vec![0.0f32; n];
+    // Bucket samples per cluster.
+    let mut clusters: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for (i, &c) in assign.iter().enumerate() {
+        clusters[c as usize].push(i);
+    }
+    for members in clusters {
+        if members.is_empty() {
+            continue;
+        }
+        let s = members.len() as f32;
+        // DeSort by distance descending; ties broken by index so the
+        // ranking is deterministic.
+        let mut sorted = members.clone();
+        sorted.sort_by(|&a, &b| {
+            dist[b]
+                .partial_cmp(&dist[a])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        for (pos0, &i) in sorted.iter().enumerate() {
+            let pos = (pos0 + 1) as f32; // 1-based
+            weights[i] = pos / s;
+        }
+    }
+    weights
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_gets_weight_one_farthest_gets_1_over_s() {
+        // One cluster of 4, distances 4 > 3 > 2 > 1.
+        let assign = [0u32, 0, 0, 0];
+        let dist = [4.0f32, 3.0, 2.0, 1.0];
+        let w = local_weights(&assign, &dist, 1);
+        assert_eq!(w, vec![0.25, 0.5, 0.75, 1.0]);
+    }
+
+    #[test]
+    fn weights_computed_per_cluster() {
+        // Cluster 0: {0,1}; cluster 1: {2}.
+        let assign = [0u32, 0, 1];
+        let dist = [1.0f32, 2.0, 5.0];
+        let w = local_weights(&assign, &dist, 2);
+        assert_eq!(w[0], 1.0); // nearest of two
+        assert_eq!(w[1], 0.5); // farthest of two
+        assert_eq!(w[2], 1.0); // singleton: pos 1 / size 1
+    }
+
+    #[test]
+    fn all_weights_in_unit_interval() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let n = 500;
+        let k = 7;
+        let assign: Vec<u32> = (0..n).map(|_| rng.below(k as u64) as u32).collect();
+        let dist: Vec<f32> = (0..n).map(|_| rng.f32() * 10.0).collect();
+        let w = local_weights(&assign, &dist, k);
+        for (i, &wi) in w.iter().enumerate() {
+            assert!(wi > 0.0 && wi <= 1.0, "w[{i}] = {wi}");
+        }
+    }
+
+    #[test]
+    fn ties_are_deterministic() {
+        let assign = [0u32, 0, 0];
+        let dist = [2.0f32, 2.0, 2.0];
+        let a = local_weights(&assign, &dist, 1);
+        let b = local_weights(&assign, &dist, 1);
+        assert_eq!(a, b);
+        // Tie ranks are a permutation of {1/3, 2/3, 1}.
+        let mut sorted = a.clone();
+        sorted.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert_eq!(sorted, vec![1.0 / 3.0, 2.0 / 3.0, 1.0]);
+    }
+
+    #[test]
+    fn empty_clusters_ok() {
+        let assign = [2u32, 2];
+        let dist = [1.0f32, 2.0];
+        let w = local_weights(&assign, &dist, 5);
+        assert_eq!(w.len(), 2);
+        assert!(w.iter().all(|&x| x > 0.0));
+    }
+}

@@ -1,0 +1,214 @@
+//! Paillier additively homomorphic encryption (from scratch).
+//!
+//! Stands in for the paper's TenSEAL envelope: the key server generates the
+//! pair, clients/label owner encrypt, and the aggregation server only ever
+//! routes ciphertexts (it never holds the private key — the paper's privacy
+//! argument in §4.2 "Privacy analysis").
+//!
+//! Uses the standard g = n + 1 simplification:
+//!   Enc(m) = (1 + m·n) · r^n  mod n²
+//!   Dec(c) = L(c^λ mod n²) · μ mod n, with L(u) = (u-1)/n, μ = λ⁻¹ mod n.
+//!
+//! Plaintext domain is Z_n; fixed-point helpers encode f32 vectors with a
+//! configurable scale for the weight/distance messages of Cluster-Coreset.
+
+use crate::crypto::BigUint;
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Paillier public key.
+#[derive(Clone, Debug)]
+pub struct PaillierPublic {
+    pub n: BigUint,
+    pub n2: BigUint,
+}
+
+/// Paillier private key.
+#[derive(Clone, Debug)]
+pub struct PaillierPrivate {
+    lambda: BigUint,
+    mu: BigUint,
+    public: PaillierPublic,
+}
+
+/// A Paillier ciphertext (element of Z_{n²}).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Ciphertext(pub BigUint);
+
+impl Ciphertext {
+    /// Wire encoding (big-endian bytes).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.0.to_bytes_be()
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Self {
+        Ciphertext(BigUint::from_bytes_be(b))
+    }
+}
+
+/// Generate a key pair with an `bits`-bit modulus.
+pub fn keygen(rng: &mut Rng, bits: usize) -> Result<(PaillierPublic, PaillierPrivate)> {
+    loop {
+        let p = BigUint::gen_prime(rng, bits / 2);
+        let q = BigUint::gen_prime(rng, bits - bits / 2);
+        if p == q {
+            continue;
+        }
+        let n = p.mul(&q);
+        let one = BigUint::one();
+        let lambda = p.sub(&one).lcm(&q.sub(&one));
+        // gcd(n, lambda) must be 1 for mu to exist (true for distinct primes
+        // of similar size, but check anyway).
+        let Some(mu) = lambda.mod_inverse(&n) else { continue };
+        let n2 = n.mul(&n);
+        let public = PaillierPublic { n: n.clone(), n2 };
+        let private = PaillierPrivate { lambda, mu, public: public.clone() };
+        return Ok((public, private));
+    }
+}
+
+impl PaillierPublic {
+    /// Encrypt m in Z_n.
+    pub fn encrypt(&self, rng: &mut Rng, m: &BigUint) -> Result<Ciphertext> {
+        if !m.lt(&self.n) {
+            return Err(Error::Crypto("plaintext out of range".into()));
+        }
+        // (1 + m n) mod n²
+        let gm = BigUint::one().add(&m.mul(&self.n)).rem(&self.n2);
+        // random r in Z_n^*
+        let r = loop {
+            let r = BigUint::random_below(rng, &self.n);
+            if !r.is_zero() && r.gcd(&self.n).is_one() {
+                break r;
+            }
+        };
+        let rn = r.mod_pow(&self.n, &self.n2);
+        Ok(Ciphertext(gm.mul_mod(&rn, &self.n2)))
+    }
+
+    /// Encrypt a u64.
+    pub fn encrypt_u64(&self, rng: &mut Rng, m: u64) -> Result<Ciphertext> {
+        self.encrypt(rng, &BigUint::from_u64(m))
+    }
+
+    /// Homomorphic addition: Enc(a) ⊕ Enc(b) = Enc(a + b mod n).
+    pub fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        Ciphertext(a.0.mul_mod(&b.0, &self.n2))
+    }
+
+    /// Homomorphic scalar multiply: Enc(a)^k = Enc(k·a mod n).
+    pub fn mul_scalar(&self, a: &Ciphertext, k: u64) -> Ciphertext {
+        Ciphertext(a.0.mod_pow(&BigUint::from_u64(k), &self.n2))
+    }
+
+    /// Ciphertext size in bytes (for comm accounting).
+    pub fn ciphertext_bytes(&self) -> usize {
+        self.n2.bit_len().div_ceil(8)
+    }
+}
+
+impl PaillierPrivate {
+    /// Decrypt to Z_n.
+    pub fn decrypt(&self, c: &Ciphertext) -> BigUint {
+        let pk = &self.public;
+        let u = c.0.mod_pow(&self.lambda, &pk.n2);
+        // L(u) = (u - 1) / n
+        let l = u.sub(&BigUint::one()).div_rem(&pk.n).0;
+        l.mul_mod(&self.mu, &pk.n)
+    }
+
+    pub fn decrypt_u64(&self, c: &Ciphertext) -> Option<u64> {
+        self.decrypt(c).to_u64()
+    }
+
+    pub fn public(&self) -> &PaillierPublic {
+        &self.public
+    }
+}
+
+/// Fixed-point encoding of f32 values into Z_n (non-negative range).
+///
+/// Cluster-Coreset ships weights/distances (all >= 0) through HE; scale 1e6
+/// keeps 6 decimal digits, plenty for ranking-derived weights.
+pub const FIXED_SCALE: f64 = 1e6;
+
+pub fn encode_fixed(x: f32) -> u64 {
+    debug_assert!(x >= 0.0, "fixed-point domain is non-negative");
+    (x as f64 * FIXED_SCALE).round() as u64
+}
+
+pub fn decode_fixed(v: u64) -> f32 {
+    (v as f64 / FIXED_SCALE) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(seed: u64) -> (PaillierPublic, PaillierPrivate) {
+        let mut r = Rng::new(seed);
+        keygen(&mut r, 256).unwrap()
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let (pk, sk) = keys(1);
+        let mut r = Rng::new(2);
+        for m in [0u64, 1, 42, 1_000_000, u32::MAX as u64] {
+            let c = pk.encrypt_u64(&mut r, m).unwrap();
+            assert_eq!(sk.decrypt_u64(&c), Some(m), "m={m}");
+        }
+    }
+
+    #[test]
+    fn homomorphic_add() {
+        let (pk, sk) = keys(3);
+        let mut r = Rng::new(4);
+        let a = pk.encrypt_u64(&mut r, 1234).unwrap();
+        let b = pk.encrypt_u64(&mut r, 8766).unwrap();
+        let sum = pk.add(&a, &b);
+        assert_eq!(sk.decrypt_u64(&sum), Some(10_000));
+    }
+
+    #[test]
+    fn homomorphic_scalar_mul() {
+        let (pk, sk) = keys(5);
+        let mut r = Rng::new(6);
+        let a = pk.encrypt_u64(&mut r, 111).unwrap();
+        let c = pk.mul_scalar(&a, 9);
+        assert_eq!(sk.decrypt_u64(&c), Some(999));
+    }
+
+    #[test]
+    fn ciphertexts_randomized() {
+        let (pk, _) = keys(7);
+        let mut r = Rng::new(8);
+        let a = pk.encrypt_u64(&mut r, 5).unwrap();
+        let b = pk.encrypt_u64(&mut r, 5).unwrap();
+        assert_ne!(a, b, "semantic security: same plaintext, fresh randomness");
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let (pk, sk) = keys(9);
+        let mut r = Rng::new(10);
+        let c = pk.encrypt_u64(&mut r, 777).unwrap();
+        let c2 = Ciphertext::from_bytes(&c.to_bytes());
+        assert_eq!(sk.decrypt_u64(&c2), Some(777));
+    }
+
+    #[test]
+    fn fixed_point_roundtrip() {
+        for x in [0.0f32, 0.5, 1.25, 123.456] {
+            let d = decode_fixed(encode_fixed(x));
+            assert!((d - x).abs() < 2e-6, "{x} -> {d}");
+        }
+    }
+
+    #[test]
+    fn plaintext_range_enforced() {
+        let (pk, _) = keys(11);
+        let mut r = Rng::new(12);
+        assert!(pk.encrypt(&mut r, &pk.n).is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! RSA blind signatures — the primitive under RSA-based two-party PSI.
+//!
+//! Protocol roles (paper §4.1, "Two-party PSI primitive"):
+//!   * the **sender** holds the RSA key pair and signs,
+//!   * the **receiver** blinds its hashed indicators, obtains blind
+//!     signatures, unblinds, and intersects.
+//!
+//! Security relies on standard RSA-FDH blind-signature unlinkability: the
+//! sender sees only `H(x)·r^e`, uniformly random in `Z_n^*`.
+
+use crate::crypto::{hash_to_zn, sha256, BigUint};
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// RSA public key (n, e).
+#[derive(Clone, Debug)]
+pub struct RsaPublic {
+    pub n: BigUint,
+    pub e: BigUint,
+}
+
+/// RSA key pair. `d` is the signing exponent.
+#[derive(Clone, Debug)]
+pub struct RsaKeyPair {
+    pub public: RsaPublic,
+    d: BigUint,
+}
+
+impl RsaKeyPair {
+    /// Generate a key pair with an `bits`-bit modulus (e = 65537).
+    pub fn generate(rng: &mut Rng, bits: usize) -> Result<RsaKeyPair> {
+        assert!(bits >= 128, "modulus too small to be meaningful");
+        let e = BigUint::from_u64(65537);
+        loop {
+            let p = BigUint::gen_prime(rng, bits / 2);
+            let q = BigUint::gen_prime(rng, bits - bits / 2);
+            if p == q {
+                continue;
+            }
+            let n = p.mul(&q);
+            let one = BigUint::one();
+            let phi = p.sub(&one).mul(&q.sub(&one));
+            if !phi.gcd(&e).is_one() {
+                continue;
+            }
+            let d = e
+                .mod_inverse(&phi)
+                .ok_or_else(|| Error::Crypto("e not invertible".into()))?;
+            return Ok(RsaKeyPair { public: RsaPublic { n, e }, d });
+        }
+    }
+
+    /// Sign a raw group element: `m^d mod n`.
+    pub fn sign_raw(&self, m: &BigUint) -> BigUint {
+        m.mod_pow(&self.d, &self.public.n)
+    }
+
+    /// Hash-then-sign an indicator (the sender's own elements).
+    pub fn sign_indicator(&self, domain: &str, x: u64) -> BigUint {
+        let h = crate::crypto::hash_indicator(domain, x);
+        let m = hash_to_zn(&h, &self.public.n);
+        self.sign_raw(&m)
+    }
+}
+
+/// A blinded indicator awaiting a blind signature.
+#[derive(Clone, Debug)]
+pub struct Blinded {
+    /// `H(x) * r^e mod n` — what the receiver sends to the sender.
+    pub value: BigUint,
+    /// Blinding factor `r` (kept by the receiver).
+    r: BigUint,
+}
+
+impl RsaPublic {
+    /// Receiver side: blind the hash of indicator `x` with fresh `r`.
+    pub fn blind(&self, rng: &mut Rng, domain: &str, x: u64) -> Blinded {
+        let h = crate::crypto::hash_indicator(domain, x);
+        let m = hash_to_zn(&h, &self.n);
+        // r must be invertible mod n; with n = pq this fails with
+        // negligible probability, so we just resample.
+        loop {
+            let r = BigUint::random_below(rng, &self.n);
+            if r.is_zero() {
+                continue;
+            }
+            if r.gcd(&self.n).is_one() {
+                let re = r.mod_pow(&self.e, &self.n);
+                return Blinded { value: m.mul_mod(&re, &self.n), r };
+            }
+        }
+    }
+
+    /// Receiver side: unblind a blind signature `s = (H(x) r^e)^d`.
+    /// Returns `H(x)^d mod n`.
+    pub fn unblind(&self, blinded: &Blinded, blind_sig: &BigUint) -> Result<BigUint> {
+        let r_inv = blinded
+            .r
+            .mod_inverse(&self.n)
+            .ok_or_else(|| Error::Crypto("blinding factor not invertible".into()))?;
+        Ok(blind_sig.mul_mod(&r_inv, &self.n))
+    }
+
+    /// Batch unblind (Montgomery's inversion trick): one extended Euclid
+    /// for the whole batch instead of one per element.
+    pub fn unblind_batch(
+        &self,
+        blinded: &[Blinded],
+        blind_sigs: &[BigUint],
+    ) -> Result<Vec<BigUint>> {
+        assert_eq!(blinded.len(), blind_sigs.len());
+        let rs: Vec<BigUint> = blinded.iter().map(|b| b.r.clone()).collect();
+        let invs = BigUint::batch_mod_inverse(&rs, &self.n)
+            .ok_or_else(|| Error::Crypto("blinding factor not invertible".into()))?;
+        Ok(blind_sigs
+            .iter()
+            .zip(&invs)
+            .map(|(sig, inv)| sig.mul_mod(inv, &self.n))
+            .collect())
+    }
+
+    /// Verify `sig^e == H(x)` (not needed by PSI, used in tests).
+    pub fn verify_indicator(&self, domain: &str, x: u64, sig: &BigUint) -> bool {
+        let h = crate::crypto::hash_indicator(domain, x);
+        let m = hash_to_zn(&h, &self.n);
+        sig.mod_pow(&self.e, &self.n) == m
+    }
+
+    /// Serialized size in bytes of one group element (for comm accounting).
+    pub fn element_bytes(&self) -> usize {
+        self.n.bit_len().div_ceil(8)
+    }
+}
+
+/// Compact comparison key for a signature: SHA-256 of its byte encoding.
+/// Both sides exchange/compare these 32-byte digests, not full signatures.
+pub fn signature_key(sig: &BigUint) -> [u8; 32] {
+    sha256(&sig.to_bytes_be())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_key(seed: u64) -> RsaKeyPair {
+        let mut r = Rng::new(seed);
+        RsaKeyPair::generate(&mut r, 256).unwrap()
+    }
+
+    #[test]
+    fn sign_verify_roundtrip() {
+        let kp = small_key(1);
+        let sig = kp.sign_indicator("t", 42);
+        assert!(kp.public.verify_indicator("t", 42, &sig));
+        assert!(!kp.public.verify_indicator("t", 43, &sig));
+    }
+
+    #[test]
+    fn blind_signature_equals_direct_signature() {
+        let kp = small_key(2);
+        let mut r = Rng::new(99);
+        for x in [0u64, 7, 123456789] {
+            let blinded = kp.public.blind(&mut r, "d", x);
+            let blind_sig = kp.sign_raw(&blinded.value);
+            let sig = kp.public.unblind(&blinded, &blind_sig).unwrap();
+            assert_eq!(sig, kp.sign_indicator("d", x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn signature_keys_collide_iff_same_indicator() {
+        let kp = small_key(3);
+        let mut r = Rng::new(4);
+        let b1 = kp.public.blind(&mut r, "d", 10);
+        let s1 = kp.public.unblind(&b1, &kp.sign_raw(&b1.value)).unwrap();
+        let b2 = kp.public.blind(&mut r, "d", 10); // different blinding
+        let s2 = kp.public.unblind(&b2, &kp.sign_raw(&b2.value)).unwrap();
+        assert_eq!(signature_key(&s1), signature_key(&s2));
+        assert_ne!(
+            signature_key(&s1),
+            signature_key(&kp.sign_indicator("d", 11))
+        );
+    }
+
+    #[test]
+    fn blinded_value_hides_message() {
+        // Two blindings of the same message must differ (unlinkability).
+        let kp = small_key(5);
+        let mut r = Rng::new(6);
+        let b1 = kp.public.blind(&mut r, "d", 5);
+        let b2 = kp.public.blind(&mut r, "d", 5);
+        assert_ne!(b1.value, b2.value);
+    }
+
+    #[test]
+    fn element_bytes_tracks_modulus() {
+        let kp = small_key(7);
+        assert_eq!(kp.public.element_bytes(), 32); // 256-bit n
+    }
+}

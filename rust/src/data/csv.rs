@@ -1,0 +1,152 @@
+//! Minimal CSV reader/writer.
+//!
+//! Lets users point the CLI at their own numeric CSVs (last column =
+//! label), and lets benches dump series for plotting. Handles quoted
+//! fields and CRLF; numeric parsing is strict.
+
+use std::io::{BufRead, BufReader, Read, Write};
+
+use crate::data::{Dataset, Matrix, Task};
+use crate::error::{Error, Result};
+
+/// Parse one CSV record honoring double quotes.
+pub fn parse_line(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes && chars.peek() == Some(&'"') => {
+                cur.push('"');
+                chars.next();
+            }
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => out.push(std::mem::take(&mut cur)),
+            '\r' => {}
+            c => cur.push(c),
+        }
+    }
+    out.push(cur);
+    out
+}
+
+/// Read a numeric CSV into (header, rows).
+pub fn read_numeric(reader: impl Read, has_header: bool) -> Result<(Vec<String>, Vec<Vec<f32>>)> {
+    let buf = BufReader::new(reader);
+    let mut header = Vec::new();
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    for (i, line) in buf.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fields = parse_line(&line);
+        if i == 0 && has_header {
+            header = fields;
+            continue;
+        }
+        let row = fields
+            .iter()
+            .map(|f| {
+                f.trim()
+                    .parse::<f32>()
+                    .map_err(|_| Error::Data(format!("line {}: bad number {f:?}", i + 1)))
+            })
+            .collect::<Result<Vec<f32>>>()?;
+        if let Some(first) = rows.first() {
+            if first.len() != row.len() {
+                return Err(Error::Data(format!(
+                    "line {}: {} fields, expected {}",
+                    i + 1,
+                    row.len(),
+                    first.len()
+                )));
+            }
+        }
+        rows.push(row);
+    }
+    Ok((header, rows))
+}
+
+/// Load a dataset from CSV: all columns but the last are features, the
+/// last column is the label.
+pub fn load_dataset(reader: impl Read, name: &str, task: Task, has_header: bool) -> Result<Dataset> {
+    let (_, rows) = read_numeric(reader, has_header)?;
+    if rows.is_empty() {
+        return Err(Error::Data("empty csv".into()));
+    }
+    let d = rows[0].len() - 1;
+    if d == 0 {
+        return Err(Error::Data("csv needs >= 2 columns".into()));
+    }
+    let mut x = Vec::with_capacity(rows.len() * d);
+    let mut y = Vec::with_capacity(rows.len());
+    for r in &rows {
+        x.extend_from_slice(&r[..d]);
+        y.push(r[d]);
+    }
+    Dataset::new(name, Matrix::from_vec(rows.len(), d, x)?, y, task)
+}
+
+/// Write rows of f64 (benches dump series with this).
+pub fn write_rows(w: &mut impl Write, header: &[&str], rows: &[Vec<f64>]) -> Result<()> {
+    writeln!(w, "{}", header.join(","))?;
+    for r in rows {
+        let line: Vec<String> = r.iter().map(|v| format!("{v}")).collect();
+        writeln!(w, "{}", line.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_quotes_and_commas() {
+        assert_eq!(parse_line(r#"a,"b,c",d"#), vec!["a", "b,c", "d"]);
+        assert_eq!(parse_line(r#""he said ""hi""",2"#), vec![r#"he said "hi""#, "2"]);
+    }
+
+    #[test]
+    fn reads_numeric_with_header() {
+        let csv = "a,b,label\n1,2,0\n3,4,1\n";
+        let (h, rows) = read_numeric(csv.as_bytes(), true).unwrap();
+        assert_eq!(h, vec!["a", "b", "label"]);
+        assert_eq!(rows, vec![vec![1.0, 2.0, 0.0], vec![3.0, 4.0, 1.0]]);
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        let csv = "1,2\n3\n";
+        assert!(read_numeric(csv.as_bytes(), false).is_err());
+    }
+
+    #[test]
+    fn rejects_non_numeric() {
+        assert!(read_numeric("1,x\n".as_bytes(), false).is_err());
+    }
+
+    #[test]
+    fn dataset_roundtrip() {
+        let csv = "1,2,0\n3,4,1\n5,6,0\n";
+        let d = load_dataset(
+            csv.as_bytes(),
+            "t",
+            Task::Classification { n_classes: 2 },
+            false,
+        )
+        .unwrap();
+        assert_eq!(d.n(), 3);
+        assert_eq!(d.d(), 2);
+        assert_eq!(d.y, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn writes_rows() {
+        let mut out = Vec::new();
+        write_rows(&mut out, &["x", "y"], &[vec![1.0, 2.5]]).unwrap();
+        assert_eq!(String::from_utf8(out).unwrap(), "x,y\n1,2.5\n");
+    }
+}

@@ -1,0 +1,242 @@
+//! Dataset container and vertical partitioning.
+//!
+//! A [`Dataset`] is the *logical* global table (features + labels + global
+//! sample indicators). [`VerticalPartition`] splits its feature columns
+//! across M clients — the VFL data layout of the paper, where every client
+//! sees all samples but only its own feature slice, and only the label
+//! owner sees labels.
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+use super::matrix::Matrix;
+
+/// Learning task kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// Classification with `n_classes` classes (labels 0..n).
+    Classification { n_classes: usize },
+    /// Scalar regression.
+    Regression,
+}
+
+impl Task {
+    pub fn n_classes(&self) -> usize {
+        match self {
+            Task::Classification { n_classes } => *n_classes,
+            Task::Regression => 0,
+        }
+    }
+
+    pub fn is_classification(&self) -> bool {
+        matches!(self, Task::Classification { .. })
+    }
+}
+
+/// A supervised dataset with global sample indicators.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// N × d feature matrix.
+    pub x: Matrix,
+    /// N labels (class index as f32, or regression target).
+    pub y: Vec<f32>,
+    /// Global sample indicators (what PSI aligns on).
+    pub ids: Vec<u64>,
+    pub task: Task,
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn new(name: &str, x: Matrix, y: Vec<f32>, task: Task) -> Result<Self> {
+        if x.rows() != y.len() {
+            return Err(Error::Data(format!(
+                "{name}: {} rows vs {} labels",
+                x.rows(),
+                y.len()
+            )));
+        }
+        let ids = (0..x.rows() as u64).collect();
+        Ok(Dataset { x, y, ids, task, name: name.into() })
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Train/test split by shuffled index (fraction in (0,1)).
+    pub fn split(&self, train_frac: f64, rng: &mut Rng) -> (Dataset, Dataset) {
+        let n = self.n();
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let n_train = ((n as f64) * train_frac).round() as usize;
+        let (tr, te) = idx.split_at(n_train.clamp(1, n - 1));
+        (self.subset(tr), self.subset(te))
+    }
+
+    /// Row subset (keeps global ids).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            x: self.x.select_rows(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+            ids: idx.iter().map(|&i| self.ids[i]).collect(),
+            task: self.task,
+            name: self.name.clone(),
+        }
+    }
+
+    /// Subset by global indicator list (the PSI result).
+    pub fn subset_by_ids(&self, ids: &[u64]) -> Dataset {
+        let pos: std::collections::HashMap<u64, usize> =
+            self.ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+        let idx: Vec<usize> = ids.iter().filter_map(|id| pos.get(id).copied()).collect();
+        self.subset(&idx)
+    }
+
+    /// Standardize features in place (per column).
+    pub fn standardize(&mut self) {
+        self.x.standardize();
+    }
+
+    /// One-hot encode labels (classification only).
+    pub fn one_hot(&self) -> Result<Matrix> {
+        let k = self.task.n_classes();
+        if k == 0 {
+            return Err(Error::Data("one_hot on regression task".into()));
+        }
+        let mut m = Matrix::zeros(self.n(), k);
+        for (r, &y) in self.y.iter().enumerate() {
+            let c = y as usize;
+            if c >= k {
+                return Err(Error::Data(format!("label {c} out of range {k}")));
+            }
+            m.set(r, c, 1.0);
+        }
+        Ok(m)
+    }
+}
+
+/// Feature columns split across M clients.
+#[derive(Clone, Debug)]
+pub struct VerticalPartition {
+    /// Per-client column ranges [lo, hi) into the global feature matrix.
+    pub ranges: Vec<(usize, usize)>,
+}
+
+impl VerticalPartition {
+    /// Split `d` columns as evenly as possible across `m` clients
+    /// (the paper's protocol: "equally partitioned into three portions").
+    pub fn even(d: usize, m: usize) -> Self {
+        assert!(m >= 1 && d >= m, "need at least one column per client");
+        let base = d / m;
+        let extra = d % m;
+        let mut ranges = Vec::with_capacity(m);
+        let mut lo = 0;
+        for i in 0..m {
+            let w = base + usize::from(i < extra);
+            ranges.push((lo, lo + w));
+            lo += w;
+        }
+        Self { ranges }
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Client m's feature slice of `x`.
+    pub fn slice(&self, x: &Matrix, client: usize) -> Matrix {
+        let (lo, hi) = self.ranges[client];
+        x.select_cols(lo, hi)
+    }
+
+    /// Width of client m's slice.
+    pub fn width(&self, client: usize) -> usize {
+        let (lo, hi) = self.ranges[client];
+        hi - lo
+    }
+
+    /// Max client width (drives artifact Dm selection).
+    pub fn max_width(&self) -> usize {
+        (0..self.num_clients()).map(|c| self.width(c)).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let x = Matrix::from_fn(10, 7, |r, c| (r * 7 + c) as f32);
+        let y = (0..10).map(|i| (i % 2) as f32).collect();
+        Dataset::new("toy", x, y, Task::Classification { n_classes: 2 }).unwrap()
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let d = toy();
+        let mut rng = Rng::new(1);
+        let (tr, te) = d.split(0.7, &mut rng);
+        assert_eq!(tr.n() + te.n(), 10);
+        assert_eq!(tr.n(), 7);
+        let mut ids: Vec<u64> = tr.ids.iter().chain(&te.ids).copied().collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..10).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn subset_by_ids_aligns() {
+        let d = toy();
+        let s = d.subset_by_ids(&[3, 7, 1]);
+        assert_eq!(s.ids, vec![3, 7, 1]);
+        assert_eq!(s.x.get(0, 0), d.x.get(3, 0));
+        assert_eq!(s.y[2], d.y[1]);
+    }
+
+    #[test]
+    fn one_hot_valid() {
+        let d = toy();
+        let oh = d.one_hot().unwrap();
+        assert_eq!(oh.shape(), (10, 2));
+        for r in 0..10 {
+            assert_eq!(oh.row(r).iter().sum::<f32>(), 1.0);
+            assert_eq!(oh.get(r, d.y[r] as usize), 1.0);
+        }
+    }
+
+    #[test]
+    fn even_partition_covers_all_columns() {
+        for (d, m) in [(7usize, 3usize), (11, 3), (12, 4), (5, 5), (90, 3)] {
+            let p = VerticalPartition::even(d, m);
+            assert_eq!(p.num_clients(), m);
+            assert_eq!(p.ranges[0].0, 0);
+            assert_eq!(p.ranges[m - 1].1, d);
+            for w in 0..m - 1 {
+                assert_eq!(p.ranges[w].1, p.ranges[w + 1].0, "contiguous");
+            }
+            // widths differ by at most 1
+            let ws: Vec<usize> = (0..m).map(|c| p.width(c)).collect();
+            assert!(ws.iter().max().unwrap() - ws.iter().min().unwrap() <= 1);
+        }
+    }
+
+    #[test]
+    fn slice_extracts_right_columns() {
+        let d = toy();
+        let p = VerticalPartition::even(7, 3); // widths 3,2,2
+        let s1 = p.slice(&d.x, 1);
+        assert_eq!(s1.shape(), (10, 2));
+        assert_eq!(s1.get(0, 0), d.x.get(0, 3));
+    }
+
+    #[test]
+    fn label_out_of_range_rejected() {
+        let x = Matrix::zeros(2, 2);
+        let d = Dataset::new("bad", x, vec![0.0, 5.0], Task::Classification { n_classes: 2 })
+            .unwrap();
+        assert!(d.one_hot().is_err());
+    }
+}

@@ -1,0 +1,397 @@
+//! Dense row-major f32 matrix.
+//!
+//! The XLA artifacts carry the heavy matmuls on the training path; this
+//! type exists for data plumbing, the pure-Rust reference models (used in
+//! parity tests and as a no-artifact fallback), K-Means bookkeeping, and
+//! the V-coreset baseline. The matmul is cache-blocked since the fallback
+//! path uses it in inner loops.
+
+use crate::error::{Error, Result};
+
+/// Row-major dense matrix of f32.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl std::fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Data(format!(
+                "shape {rows}x{cols} needs {} values, got {}",
+                rows * cols,
+                data.len()
+            )));
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Build from a row-generator closure.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Select a subset of rows (gather).
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut data = Vec::with_capacity(idx.len() * self.cols);
+        for &r in idx {
+            data.extend_from_slice(self.row(r));
+        }
+        Matrix { rows: idx.len(), cols: self.cols, data }
+    }
+
+    /// Select a contiguous column range [lo, hi).
+    pub fn select_cols(&self, lo: usize, hi: usize) -> Matrix {
+        assert!(lo <= hi && hi <= self.cols);
+        let w = hi - lo;
+        let mut data = Vec::with_capacity(self.rows * w);
+        for r in 0..self.rows {
+            data.extend_from_slice(&self.row(r)[lo..hi]);
+        }
+        Matrix { rows: self.rows, cols: w, data }
+    }
+
+    /// Horizontal concatenation.
+    pub fn hcat(parts: &[&Matrix]) -> Result<Matrix> {
+        if parts.is_empty() {
+            return Err(Error::Data("hcat of nothing".into()));
+        }
+        let rows = parts[0].rows;
+        if parts.iter().any(|p| p.rows != rows) {
+            return Err(Error::Data("hcat row mismatch".into()));
+        }
+        let cols: usize = parts.iter().map(|p| p.cols).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for p in parts {
+                data.extend_from_slice(p.row(r));
+            }
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Pad with zero columns on the right to reach `cols` (XLA artifacts
+    /// have static widths; padded weight columns provably get zero grads).
+    pub fn pad_cols(&self, cols: usize) -> Matrix {
+        assert!(cols >= self.cols);
+        let mut out = Matrix::zeros(self.rows, cols);
+        for r in 0..self.rows {
+            out.row_mut(r)[..self.cols].copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Pad with zero rows at the bottom to reach `rows`.
+    pub fn pad_rows(&self, rows: usize) -> Matrix {
+        assert!(rows >= self.rows);
+        let mut data = self.data.clone();
+        data.resize(rows * self.cols, 0.0);
+        Matrix { rows, cols: self.cols, data }
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Cache-blocked matmul: C = A · B.
+    pub fn matmul(&self, b: &Matrix) -> Result<Matrix> {
+        if self.cols != b.rows {
+            return Err(Error::Data(format!(
+                "matmul {}x{} · {}x{}",
+                self.rows, self.cols, b.rows, b.cols
+            )));
+        }
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut c = vec![0.0f32; m * n];
+        const BK: usize = 64;
+        for kb in (0..k).step_by(BK) {
+            let kend = (kb + BK).min(k);
+            for i in 0..m {
+                let arow = &self.data[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for kk in kb..kend {
+                    let a = arow[kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        crow[j] += a * brow[j];
+                    }
+                }
+            }
+        }
+        Ok(Matrix { rows: m, cols: n, data: c })
+    }
+
+    /// C = Aᵀ · B without materializing Aᵀ (gradient contraction).
+    pub fn matmul_at_b(&self, b: &Matrix) -> Result<Matrix> {
+        if self.rows != b.rows {
+            return Err(Error::Data("matmul_at_b row mismatch".into()));
+        }
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut c = vec![0.0f32; k * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let brow = &b.data[i * n..(i + 1) * n];
+            for kk in 0..k {
+                let a = arow[kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let crow = &mut c[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    crow[j] += a * brow[j];
+                }
+            }
+        }
+        Ok(Matrix { rows: k, cols: n, data: c })
+    }
+
+    /// Elementwise in-place map.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    /// Elementwise binary combine into a new matrix.
+    pub fn zip(&self, other: &Matrix, f: impl Fn(f32, f32) -> f32) -> Result<Matrix> {
+        if self.shape() != other.shape() {
+            return Err(Error::Data("zip shape mismatch".into()));
+        }
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| f(a, b))
+            .collect();
+        Ok(Matrix { rows: self.rows, cols: self.cols, data })
+    }
+
+    /// Add a row-vector bias to every row.
+    pub fn add_bias(&self, bias: &[f32]) -> Result<Matrix> {
+        if bias.len() != self.cols {
+            return Err(Error::Data("bias width mismatch".into()));
+        }
+        let mut out = self.clone();
+        for r in 0..out.rows {
+            for (v, b) in out.row_mut(r).iter_mut().zip(bias) {
+                *v += b;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Column sums (db = Σ rows).
+    pub fn col_sums(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            for (o, v) in out.iter_mut().zip(self.row(r)) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    /// Max |a-b| against another matrix.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Z-score normalize columns in place; returns (means, stds).
+    pub fn standardize(&mut self) -> (Vec<f32>, Vec<f32>) {
+        let n = self.rows.max(1) as f32;
+        let mut means = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            for (m, v) in means.iter_mut().zip(self.row(r)) {
+                *m += v;
+            }
+        }
+        for m in &mut means {
+            *m /= n;
+        }
+        let mut stds = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let d = self.get(r, c) - means[c];
+                stds[c] += d * d;
+            }
+        }
+        for s in &mut stds {
+            *s = (*s / n).sqrt().max(1e-6);
+        }
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let v = (self.get(r, c) - means[c]) / stds[c];
+                self.set(r, c, v);
+            }
+        }
+        (means, stds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(rows: usize, cols: usize, v: &[f32]) -> Matrix {
+        Matrix::from_vec(rows, cols, v.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = m(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = m(3, 2, &[7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn matmul_shape_checked() {
+        let a = m(2, 3, &[0.0; 6]);
+        assert!(a.matmul(&m(2, 2, &[0.0; 4])).is_err());
+    }
+
+    #[test]
+    fn at_b_matches_explicit_transpose() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let a = Matrix::from_fn(5, 4, |_, _| rng.gaussian_f32());
+        let b = Matrix::from_fn(5, 3, |_, _| rng.gaussian_f32());
+        let fast = a.matmul_at_b(&b).unwrap();
+        let slow = a.transpose().matmul(&b).unwrap();
+        assert!(fast.max_abs_diff(&slow) < 1e-5);
+    }
+
+    #[test]
+    fn hcat_and_select() {
+        let a = m(2, 2, &[1.0, 2.0, 5.0, 6.0]);
+        let b = m(2, 1, &[3.0, 7.0]);
+        let c = Matrix::hcat(&[&a, &b]).unwrap();
+        assert_eq!(c.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(c.row(1), &[5.0, 6.0, 7.0]);
+        assert_eq!(c.select_cols(1, 3).row(0), &[2.0, 3.0]);
+        assert_eq!(c.select_rows(&[1]).row(0), &[5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn padding() {
+        let a = m(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let p = a.pad_cols(4);
+        assert_eq!(p.row(0), &[1.0, 2.0, 0.0, 0.0]);
+        let q = a.pad_rows(3);
+        assert_eq!(q.row(2), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn bias_and_sums() {
+        let a = m(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let c = a.add_bias(&[10.0, 20.0]).unwrap();
+        assert_eq!(c.data(), &[11.0, 22.0, 13.0, 24.0]);
+        assert_eq!(a.col_sums(), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        let mut a = Matrix::from_fn(200, 3, |_, c| 5.0 * rng.gaussian_f32() + c as f32);
+        a.standardize();
+        let means = {
+            let mut v = vec![0.0f32; 3];
+            for r in 0..200 {
+                for c in 0..3 {
+                    v[c] += a.get(r, c);
+                }
+            }
+            v.iter().map(|x| x / 200.0).collect::<Vec<_>>()
+        };
+        for c in 0..3 {
+            assert!(means[c].abs() < 1e-4, "col {c} mean {}", means[c]);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let a = Matrix::from_fn(4, 7, |_, _| rng.gaussian_f32());
+        assert_eq!(a.transpose().transpose(), a);
+    }
+}

@@ -1,0 +1,11 @@
+//! Data substrate: dense matrices, datasets, vertical partitioning, CSV
+//! I/O, and the synthetic generators standing in for the paper's six
+//! Kaggle/UCI datasets (no network on this image — see DESIGN.md).
+
+pub mod csv;
+pub mod dataset;
+pub mod matrix;
+pub mod synth;
+
+pub use dataset::{Dataset, Task, VerticalPartition};
+pub use matrix::Matrix;

@@ -1,0 +1,51 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for every TreeCSS subsystem.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Artifact manifest / HLO loading problems.
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    /// XLA / PJRT failures surfaced by the `xla` crate.
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// Transport-level failures (closed channel, unknown party, ...).
+    #[error("net: {0}")]
+    Net(String),
+
+    /// PSI protocol violations (role mismatch, malformed message, ...).
+    #[error("psi: {0}")]
+    Psi(String),
+
+    /// Cryptographic failures (no modular inverse, bad key sizes, ...).
+    #[error("crypto: {0}")]
+    Crypto(String),
+
+    /// Data/shape problems (dimension mismatch, empty dataset, ...).
+    #[error("data: {0}")]
+    Data(String),
+
+    /// Configuration / CLI parsing problems.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// JSON parse errors from the mini parser.
+    #[error("json: {0}")]
+    Json(String),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,34 @@
+//! # TreeCSS — an efficient framework for vertical federated learning
+//!
+//! Rust + JAX + Pallas reproduction of *TreeCSS: An Efficient Framework for
+//! Vertical Federated Learning* (Zhang et al., 2024). The crate is the L3
+//! coordinator of a three-layer stack (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — parties, transport, Tree/Path/Star-MPSI,
+//!   RSA/OT two-party PSI, Paillier HE, Cluster-Coreset orchestration and
+//!   the SplitNN training loop. Python never runs on this path.
+//! * **L2** — JAX compute graphs (`python/compile/model.py`), AOT-lowered
+//!   to `artifacts/*.hlo.txt`.
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) inside those graphs.
+//!
+//! The end-to-end lifecycle mirrors the paper: **align** (Tree-MPSI over the
+//! clients' sample indicators) → **coreset** (per-client K-Means, cluster
+//! tuples, per-(CT,label) selection, re-weighting) → **train** (weighted
+//! SplitNN on the coreset, executed through PJRT-compiled XLA artifacts).
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod coreset;
+pub mod crypto;
+pub mod data;
+pub mod error;
+pub mod ml;
+pub mod net;
+pub mod parties;
+pub mod psi;
+pub mod runtime;
+pub mod splitnn;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,292 @@
+//! `treecss` — leader binary for the TreeCSS VFL framework.
+//!
+//! Subcommands:
+//!   run      — full lifecycle (align → coreset → train) on a paper-shaped
+//!              synthetic dataset. `--variant treecss|treeall|starcss|starall`
+//!   mpsi     — multi-party PSI only, comparing topologies.
+//!   coreset  — Cluster-Coreset only, reporting reduction + weights.
+//!   info     — artifact/runtime diagnostics.
+//!
+//! Examples:
+//!   treecss run --dataset RI --scale 0.1 --model mlp --variant treecss
+//!   treecss mpsi --clients 10 --n 2000 --protocol ot --topology tree
+//!   treecss info
+
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use treecss::config::Cli;
+use treecss::coordinator::pipeline::{Backend, Downstream, PipelineConfig};
+use treecss::coordinator::FrameworkVariant;
+use treecss::coreset::cluster_coreset;
+use treecss::data::synth::{self, PaperDataset};
+use treecss::data::VerticalPartition;
+use treecss::ml::kmeans::NativeAssign;
+use treecss::net::{Meter, NetConfig};
+use treecss::psi::common::HeContext;
+use treecss::psi::sched::Pairing;
+use treecss::psi::tree::{run_tree, TreeMpsiConfig};
+use treecss::psi::{path::run_path, star::run_star, TpsiProtocol};
+use treecss::splitnn::trainer::ModelKind;
+use treecss::util::pool::ThreadPool;
+use treecss::util::rng::Rng;
+use treecss::{bench, Result};
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn real_main() -> Result<()> {
+    let cli = Cli::from_env()?;
+    match cli.command.as_str() {
+        "run" => cmd_run(&cli),
+        "mpsi" => cmd_mpsi(&cli),
+        "coreset" => cmd_coreset(&cli),
+        "info" => cmd_info(),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+treecss — TreeCSS vertical federated learning framework
+
+USAGE: treecss <run|mpsi|coreset|info> [--options]
+
+run options:
+  --dataset BA|MU|RI|HI|BP|YP   (default RI)
+  --scale <f64>                 fraction of paper size (default 0.05)
+  --model lr|mlp|linreg|knn     (default lr)
+  --variant treecss|treeall|starcss|starall  (default treecss)
+  --clusters <k per client>     (default 8)
+  --lr <f32>  --epochs <n>      training hyper-parameters
+  --backend xla|native          phase backend (default xla)
+  --seed <u64>
+
+mpsi options:
+  --clients <m>  --n <per-client size>  --overlap <frac>
+  --protocol rsa|ot  --topology tree|path|star
+  --pairing volume|order  --rsa-bits <n>
+
+coreset options:
+  --dataset ... --scale ... --clusters <k> --no-reweight
+";
+
+fn parse_dataset(s: &str) -> Result<PaperDataset> {
+    PaperDataset::ALL
+        .into_iter()
+        .find(|d| d.name().eq_ignore_ascii_case(s))
+        .ok_or_else(|| treecss::Error::Config(format!("unknown dataset {s:?}")))
+}
+
+fn cmd_run(cli: &Cli) -> Result<()> {
+    let ds_kind = parse_dataset(&cli.opt_or("dataset", "RI"))?;
+    let scale: f64 = cli.opt_parse("scale", 0.05)?;
+    let seed: u64 = cli.opt_parse("seed", 2024)?;
+    let model = cli.opt_or("model", "lr");
+    let variant = match cli.opt_or("variant", "treecss").to_lowercase().as_str() {
+        "treecss" => FrameworkVariant::TreeCss,
+        "treeall" => FrameworkVariant::TreeAll,
+        "starcss" => FrameworkVariant::StarCss,
+        "starall" => FrameworkVariant::StarAll,
+        v => return Err(treecss::Error::Config(format!("unknown variant {v:?}"))),
+    };
+    let downstream = match model.as_str() {
+        "lr" => Downstream::Train(ModelKind::Lr),
+        "mlp" => Downstream::Train(ModelKind::Mlp),
+        "linreg" => Downstream::Train(ModelKind::LinReg),
+        "knn" => Downstream::Knn(cli.opt_parse("k", 5)?),
+        other => return Err(treecss::Error::Config(format!("unknown model {other:?}"))),
+    };
+
+    let mut rng = Rng::new(seed);
+    let mut ds = ds_kind.generate(scale, &mut rng);
+    ds.standardize();
+    let (tr, te) = ds.split(0.7, &mut rng);
+    println!(
+        "dataset {} scale {scale}: {} train / {} test rows, {} features",
+        ds_kind.name(),
+        tr.n(),
+        te.n(),
+        tr.d()
+    );
+
+    let mut cfg = PipelineConfig::new(variant, downstream);
+    cfg.seed = seed;
+    cfg.coreset.clusters_per_client = cli.opt_parse("clusters", 8)?;
+    cfg.train.lr = cli.opt_parse("lr", 0.05)?;
+    cfg.train.max_epochs = cli.opt_parse("epochs", 100)?;
+    let backend = match cli.opt_or("backend", "xla").as_str() {
+        "xla" => Backend::xla_default()?,
+        "native" => Backend::Native,
+        b => return Err(treecss::Error::Config(format!("unknown backend {b:?}"))),
+    };
+    let meter = Meter::new(NetConfig::lan_10gbps());
+
+    let rep = treecss::coordinator::run_pipeline(&tr, &te, &cfg, &backend, &meter)?;
+    println!("\n== {} ({} backend) ==", variant.name(), backend.name());
+    println!("aligned samples : {}", rep.n_aligned);
+    if let Some(cs) = &rep.coreset {
+        println!(
+            "coreset         : {} samples ({:.1}% reduction), {} distinct CTs",
+            cs.indices.len(),
+            100.0 * cs.reduction(rep.n_aligned),
+            cs.distinct_cts
+        );
+    }
+    println!("train size      : {}", rep.train_size);
+    if let Some(t) = &rep.train {
+        println!(
+            "training        : {} epochs (converged={}), final loss {:.5}",
+            t.epochs,
+            t.converged,
+            t.epoch_losses.last().unwrap_or(&f64::NAN)
+        );
+    }
+    let quality_name = if matches!(downstream, Downstream::Train(ModelKind::LinReg)) {
+        "test MSE"
+    } else {
+        "test accuracy"
+    };
+    println!("{quality_name:<16}: {:.4}", rep.quality);
+    println!(
+        "time            : {:.2}s wall + {:.2}s simulated wire = {:.2}s",
+        rep.wall_s,
+        rep.sim_s,
+        rep.total_time_s()
+    );
+    println!("bytes on wire   : {}", bench::fmt_bytes(rep.total_bytes));
+    Ok(())
+}
+
+fn cmd_mpsi(cli: &Cli) -> Result<()> {
+    let m: usize = cli.opt_parse("clients", 10)?;
+    let n: usize = cli.opt_parse("n", 1000)?;
+    let overlap: f64 = cli.opt_parse("overlap", 0.7)?;
+    let seed: u64 = cli.opt_parse("seed", 7)?;
+    let rsa_bits: usize = cli.opt_parse("rsa-bits", 512)?;
+    let protocol = match cli.opt_or("protocol", "rsa").as_str() {
+        "rsa" => TpsiProtocol::Rsa(treecss::psi::rsa_psi::RsaPsiConfig {
+            modulus_bits: rsa_bits,
+            domain: "treecss-cli".into(),
+        }),
+        "ot" => TpsiProtocol::ot(),
+        p => return Err(treecss::Error::Config(format!("unknown protocol {p:?}"))),
+    };
+    let pairing = match cli.opt_or("pairing", "volume").as_str() {
+        "volume" => Pairing::VolumeAware,
+        "order" => Pairing::RequestOrder,
+        p => return Err(treecss::Error::Config(format!("unknown pairing {p:?}"))),
+    };
+
+    let mut rng = Rng::new(seed);
+    let sets = synth::mpsi_indicator_sets(m, n, overlap, &mut rng);
+    let meter = Meter::new(NetConfig::lan_10gbps());
+    let he = HeContext::generate(&mut Rng::new(seed ^ 1), 512);
+    let topo = cli.opt_or("topology", "tree");
+    let report = match topo.as_str() {
+        "tree" => {
+            let pool = ThreadPool::for_host();
+            run_tree(
+                &sets,
+                &TreeMpsiConfig { protocol, pairing, seed },
+                &meter,
+                &pool,
+                &he,
+            )
+        }
+        "path" => run_path(&sets, &protocol, seed, &meter, &he),
+        "star" => run_star(&sets, &protocol, 0, seed, &meter, &he),
+        t => return Err(treecss::Error::Config(format!("unknown topology {t:?}"))),
+    };
+    println!("{topo}-MPSI over {m} clients × {n} items (overlap {overlap}):");
+    println!("  intersection : {} items", report.intersection.len());
+    println!("  rounds       : {}", report.num_rounds());
+    println!("  wall         : {:.3}s", report.wall_s);
+    println!("  simulated net: {:.4}s", report.sim_s);
+    println!("  bytes        : {}", bench::fmt_bytes(report.total_bytes));
+    Ok(())
+}
+
+fn cmd_coreset(cli: &Cli) -> Result<()> {
+    let ds_kind = parse_dataset(&cli.opt_or("dataset", "RI"))?;
+    let scale: f64 = cli.opt_parse("scale", 0.05)?;
+    let k: usize = cli.opt_parse("clusters", 8)?;
+    let seed: u64 = cli.opt_parse("seed", 11)?;
+    let mut rng = Rng::new(seed);
+    let mut ds = ds_kind.generate(scale, &mut rng);
+    ds.standardize();
+    let part = VerticalPartition::even(ds.d(), 3);
+    let slices: Vec<_> = (0..3).map(|c| part.slice(&ds.x, c)).collect();
+    let meter = Meter::new(NetConfig::lan_10gbps());
+    let he = HeContext::generate(&mut rng, 512);
+    let cfg = cluster_coreset::ClusterCoresetConfig {
+        clusters_per_client: k,
+        reweight: !cli.flag("no-reweight"),
+        ..Default::default()
+    };
+    let r = cluster_coreset::run(
+        &slices,
+        &ds.y,
+        ds.task.is_classification(),
+        &cfg,
+        &mut NativeAssign,
+        &meter,
+        &he,
+    )?;
+    println!(
+        "Cluster-Coreset on {} ({} rows, k={k}): {} samples kept ({:.1}% reduction), {} CTs, {:.3}s wall, {} wire",
+        ds_kind.name(),
+        ds.n(),
+        r.indices.len(),
+        100.0 * r.reduction(ds.n()),
+        r.distinct_cts,
+        r.wall_s,
+        bench::fmt_bytes(r.bytes)
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    match treecss::runtime::find_artifact_dir() {
+        None => println!("artifacts: NOT FOUND (run `make artifacts`)"),
+        Some(dir) => {
+            println!("artifacts: {}", dir.display());
+            let engine = treecss::runtime::Engine::new(&dir)?;
+            let m = engine.manifest();
+            println!("platform : {}", engine.platform());
+            println!(
+                "manifest : {} artifacts, batch={}, clients={}, dms={:?}, classes={:?}",
+                m.len(),
+                m.batch,
+                m.n_clients,
+                m.dms,
+                m.classes
+            );
+            // Smoke-run one artifact.
+            let eng = Arc::new(engine);
+            let phases = treecss::runtime::phases::XlaPhases::new(eng);
+            use treecss::splitnn::{ModelPhases, ScalarLoss};
+            let (loss, _) = phases.top_scalar_step(
+                ScalarLoss::Mse,
+                &[1.0, 2.0],
+                &[1.0, 1.0],
+                &[1.0, 1.0],
+            )?;
+            println!("smoke    : top_mse_step OK (loss {loss:.4})");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Adam optimizer (Kingma & Ba) — the paper's §5.1 choice for all tasks.
+//!
+//! Runs in Rust (L3): parameter updates are elementwise and tiny next to
+//! the matmuls, and keeping them here avoids one XLA artifact per
+//! parameter shape. One `Adam` instance tracks one parameter tensor.
+
+/// Adam state for a single flat parameter tensor.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(len: usize, lr: f32) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; len],
+            v: vec![0.0; len],
+            t: 0,
+        }
+    }
+
+    /// One update: `param -= lr * m̂ / (√v̂ + ε)`.
+    pub fn step(&mut self, param: &mut [f32], grad: &[f32]) {
+        assert_eq!(param.len(), self.m.len());
+        assert_eq!(grad.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..param.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            let mh = self.m[i] / b1t;
+            let vh = self.v[i] / b2t;
+            param[i] -= self.lr * mh / (vh.sqrt() + self.eps);
+        }
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f(x) = (x-3)², ∇ = 2(x-3)
+        let mut x = vec![0.0f32];
+        let mut opt = Adam::new(1, 0.1);
+        for _ in 0..500 {
+            let g = vec![2.0 * (x[0] - 3.0)];
+            opt.step(&mut x, &g);
+        }
+        assert!((x[0] - 3.0).abs() < 1e-2, "x={}", x[0]);
+    }
+
+    #[test]
+    fn first_step_magnitude_close_to_lr() {
+        // Adam's bias correction makes step 1 ≈ lr × sign(grad).
+        let mut x = vec![0.0f32];
+        let mut opt = Adam::new(1, 0.01);
+        opt.step(&mut x, &[5.0]);
+        assert!((x[0] + 0.01).abs() < 1e-4, "x={}", x[0]);
+    }
+
+    #[test]
+    fn zero_grad_no_move() {
+        let mut x = vec![1.5f32, -2.0];
+        let mut opt = Adam::new(2, 0.1);
+        opt.step(&mut x, &[0.0, 0.0]);
+        assert_eq!(x, vec![1.5, -2.0]);
+    }
+
+    #[test]
+    fn minimizes_2d_rosenbrock_ish() {
+        let mut p = vec![-1.0f32, 1.5];
+        let mut opt = Adam::new(2, 0.02);
+        for _ in 0..4000 {
+            let (x, y) = (p[0], p[1]);
+            let g = vec![
+                -2.0 * (1.0 - x) - 40.0 * x * (y - x * x),
+                20.0 * (y - x * x),
+            ];
+            opt.step(&mut p, &g);
+        }
+        assert!((p[0] - 1.0).abs() < 0.15 && (p[1] - 1.0).abs() < 0.25, "{p:?}");
+    }
+}

@@ -1,0 +1,253 @@
+//! K-Means (k-means++ init, Lloyd iterations) — Cluster-Coreset step 1.
+//!
+//! Each client clusters its local feature slice with this. The
+//! distance/assign inner loop can execute through the XLA
+//! `kmeans_assign_*` artifact (Pallas kernel, see `runtime::kmeans`) or
+//! natively; this module is the native engine and the shared orchestration.
+
+use crate::data::Matrix;
+use crate::util::rng::Rng;
+
+/// Assignment backend: given rows and centroids, return (assign, dist).
+/// `dist` is the Euclidean distance of each row to its centroid.
+pub trait AssignBackend {
+    fn assign(&mut self, x: &Matrix, centroids: &Matrix) -> (Vec<u32>, Vec<f32>);
+}
+
+/// Pure-Rust assignment (used in tests and when artifacts are absent).
+pub struct NativeAssign;
+
+impl AssignBackend for NativeAssign {
+    fn assign(&mut self, x: &Matrix, centroids: &Matrix) -> (Vec<u32>, Vec<f32>) {
+        let k = centroids.rows();
+        let mut assign = Vec::with_capacity(x.rows());
+        let mut dist = Vec::with_capacity(x.rows());
+        // |x-c|² = |x|² + |c|² − 2x·c; precompute |c|².
+        let c2: Vec<f32> = (0..k)
+            .map(|c| centroids.row(c).iter().map(|v| v * v).sum())
+            .collect();
+        for r in 0..x.rows() {
+            let row = x.row(r);
+            let x2: f32 = row.iter().map(|v| v * v).sum();
+            let mut best = 0u32;
+            let mut best_d = f32::INFINITY;
+            for c in 0..k {
+                let dot: f32 = row.iter().zip(centroids.row(c)).map(|(a, b)| a * b).sum();
+                let d = x2 + c2[c] - 2.0 * dot;
+                if d < best_d {
+                    best_d = d;
+                    best = c as u32;
+                }
+            }
+            assign.push(best);
+            dist.push(best_d.max(0.0).sqrt());
+        }
+        (assign, dist)
+    }
+}
+
+/// K-Means configuration.
+#[derive(Clone, Debug)]
+pub struct KMeans {
+    pub k: usize,
+    pub max_iters: usize,
+    /// Stop when total centroid movement drops below this.
+    pub tol: f32,
+    pub seed: u64,
+}
+
+impl KMeans {
+    pub fn new(k: usize) -> Self {
+        KMeans { k, max_iters: 50, tol: 1e-4, seed: 42 }
+    }
+
+    /// Run Lloyd's algorithm with k-means++ seeding.
+    pub fn fit(&self, x: &Matrix, backend: &mut impl AssignBackend) -> KMeansResult {
+        assert!(x.rows() > 0, "empty input");
+        let k = self.k.min(x.rows());
+        let mut rng = Rng::new(self.seed);
+        let mut centroids = kmeanspp_init(x, k, &mut rng);
+        let mut assign = vec![0u32; x.rows()];
+        let mut dist = vec![0.0f32; x.rows()];
+        let mut iters = 0;
+        for it in 0..self.max_iters {
+            iters = it + 1;
+            let (a, d) = backend.assign(x, &centroids);
+            assign = a;
+            dist = d;
+            // Update step: mean of members; empty clusters respawn on the
+            // farthest point (standard fix).
+            let mut sums = Matrix::zeros(k, x.cols());
+            let mut counts = vec![0usize; k];
+            for (r, &c) in assign.iter().enumerate() {
+                counts[c as usize] += 1;
+                for (s, v) in sums.row_mut(c as usize).iter_mut().zip(x.row(r)) {
+                    *s += v;
+                }
+            }
+            let mut movement = 0.0f32;
+            for c in 0..k {
+                if counts[c] == 0 {
+                    let far = crate::util::stats::argmax_f32(&dist);
+                    sums.row_mut(c).copy_from_slice(x.row(far));
+                    counts[c] = 1;
+                }
+                let inv = 1.0 / counts[c] as f32;
+                for (j, s) in sums.row_mut(c).iter_mut().enumerate() {
+                    *s *= inv;
+                    movement += (*s - centroids.get(c, j)).abs();
+                }
+            }
+            centroids = sums;
+            if movement < self.tol {
+                break;
+            }
+        }
+        // Final assignment against the converged centroids.
+        let (a, d) = backend.assign(x, &centroids);
+        assign = a;
+        dist = d;
+        let _ = iters;
+        KMeansResult { centroids, assign, dist, k }
+    }
+}
+
+/// k-means++ seeding: probability ∝ squared distance to nearest center.
+fn kmeanspp_init(x: &Matrix, k: usize, rng: &mut Rng) -> Matrix {
+    let n = x.rows();
+    let mut centroids = Matrix::zeros(k, x.cols());
+    let first = rng.below_usize(n);
+    centroids.row_mut(0).copy_from_slice(x.row(first));
+    let mut d2 = vec![f32::INFINITY; n];
+    for c in 1..k {
+        // Update d² against the newest center.
+        let new_c = centroids.row(c - 1).to_vec();
+        for r in 0..n {
+            let d: f32 = x
+                .row(r)
+                .iter()
+                .zip(&new_c)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            d2[r] = d2[r].min(d);
+        }
+        let total: f64 = d2.iter().map(|&v| v as f64).sum();
+        let pick = if total <= 0.0 {
+            rng.below_usize(n)
+        } else {
+            let mut t = rng.f64() * total;
+            let mut idx = n - 1;
+            for (r, &v) in d2.iter().enumerate() {
+                t -= v as f64;
+                if t <= 0.0 {
+                    idx = r;
+                    break;
+                }
+            }
+            idx
+        };
+        centroids.row_mut(c).copy_from_slice(x.row(pick));
+    }
+    centroids
+}
+
+/// Fit result.
+#[derive(Clone, Debug)]
+pub struct KMeansResult {
+    pub centroids: Matrix,
+    /// Cluster index per row.
+    pub assign: Vec<u32>,
+    /// Euclidean distance of each row to its centroid.
+    pub dist: Vec<f32>,
+    pub k: usize,
+}
+
+impl KMeansResult {
+    /// Sum of squared distances (inertia).
+    pub fn inertia(&self) -> f64 {
+        self.dist.iter().map(|&d| (d as f64) * (d as f64)).sum()
+    }
+
+    /// Members of cluster c.
+    pub fn members(&self, c: u32) -> Vec<usize> {
+        self.assign
+            .iter()
+            .enumerate()
+            .filter(|(_, &a)| a == c)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let mut rng = Rng::new(1);
+        let ds = synth::blobs("t", 300, 4, 3, 1, 8.0, 0.3, &mut rng);
+        let r = KMeans::new(3).fit(&ds.x, &mut NativeAssign);
+        // Every cluster should be label-pure for well-separated blobs.
+        for c in 0..3u32 {
+            let mem = r.members(c);
+            assert!(!mem.is_empty());
+            let first = ds.y[mem[0]];
+            let pure = mem.iter().all(|&i| ds.y[i] == first);
+            assert!(pure, "cluster {c} mixes labels");
+        }
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let mut rng = Rng::new(2);
+        let ds = synth::blobs("t", 400, 5, 2, 4, 3.0, 1.0, &mut rng);
+        let i2 = KMeans::new(2).fit(&ds.x, &mut NativeAssign).inertia();
+        let i8 = KMeans::new(8).fit(&ds.x, &mut NativeAssign).inertia();
+        assert!(i8 < i2, "inertia k=8 {i8} < k=2 {i2}");
+    }
+
+    #[test]
+    fn k_capped_at_n() {
+        let mut rng = Rng::new(3);
+        let ds = synth::blobs("t", 5, 3, 2, 1, 4.0, 0.5, &mut rng);
+        let r = KMeans::new(10).fit(&ds.x, &mut NativeAssign);
+        assert_eq!(r.k, 5);
+        assert_eq!(r.centroids.rows(), 5);
+    }
+
+    #[test]
+    fn assignments_minimize_distance() {
+        let mut rng = Rng::new(4);
+        let ds = synth::blobs("t", 100, 3, 2, 2, 3.0, 1.0, &mut rng);
+        let r = KMeans::new(4).fit(&ds.x, &mut NativeAssign);
+        for i in 0..ds.n() {
+            let assigned = r.assign[i] as usize;
+            for c in 0..r.k {
+                let d: f32 = ds.x
+                    .row(i)
+                    .iter()
+                    .zip(r.centroids.row(c))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                let da: f32 = ds.x
+                    .row(i)
+                    .iter()
+                    .zip(r.centroids.row(assigned))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                assert!(da <= d + 1e-4, "row {i}: {assigned} not nearest");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(5);
+        let ds = synth::blobs("t", 120, 4, 2, 2, 3.0, 1.0, &mut rng);
+        let a = KMeans::new(3).fit(&ds.x, &mut NativeAssign);
+        let b = KMeans::new(3).fit(&ds.x, &mut NativeAssign);
+        assert_eq!(a.assign, b.assign);
+    }
+}

@@ -1,0 +1,172 @@
+//! Weighted K-nearest-neighbors over the coreset (Table 2's KNN column).
+//!
+//! VFL-KNN: each client computes *squared* distances between the query's
+//! local feature slice and its slice of the reference (coreset) rows; the
+//! aggregator sums the per-client squared distances to get global
+//! distances. Coreset sample weights enter the vote (paper §4.2 step 5:
+//! "coreset-based similarity calculations").
+//!
+//! The pairwise-distance hot-spot can run through the `pairwise_*` XLA
+//! artifact (Pallas kernel) or natively; both produce squared distances.
+
+use crate::data::Matrix;
+use crate::ml::metrics::majority_vote;
+
+/// Pairwise squared-distance backend.
+pub trait PairwiseBackend {
+    /// (|Q| × |R|) squared Euclidean distances.
+    fn pairwise_sq(&mut self, q: &Matrix, r: &Matrix) -> Matrix;
+}
+
+/// Pure-Rust pairwise distances.
+pub struct NativePairwise;
+
+impl PairwiseBackend for NativePairwise {
+    fn pairwise_sq(&mut self, q: &Matrix, r: &Matrix) -> Matrix {
+        assert_eq!(q.cols(), r.cols());
+        let mut out = Matrix::zeros(q.rows(), r.rows());
+        let r2: Vec<f32> = (0..r.rows())
+            .map(|i| r.row(i).iter().map(|v| v * v).sum())
+            .collect();
+        for qi in 0..q.rows() {
+            let qrow = q.row(qi);
+            let q2: f32 = qrow.iter().map(|v| v * v).sum();
+            for ri in 0..r.rows() {
+                let dot: f32 = qrow.iter().zip(r.row(ri)).map(|(a, b)| a * b).sum();
+                out.set(qi, ri, (q2 + r2[ri] - 2.0 * dot).max(0.0));
+            }
+        }
+        out
+    }
+}
+
+/// KNN classifier state: reference rows + labels + per-sample weights.
+pub struct Knn {
+    pub k: usize,
+    pub n_classes: usize,
+}
+
+impl Knn {
+    pub fn new(k: usize, n_classes: usize) -> Self {
+        Knn { k, n_classes }
+    }
+
+    /// Classify each query row given a precomputed global squared-distance
+    /// matrix (|Q| × |R|), reference labels, and reference weights.
+    pub fn classify_from_dists(
+        &self,
+        dists: &Matrix,
+        ref_y: &[f32],
+        ref_w: &[f32],
+    ) -> Vec<usize> {
+        assert_eq!(dists.cols(), ref_y.len());
+        assert_eq!(ref_y.len(), ref_w.len());
+        let k = self.k.min(ref_y.len());
+        let mut preds = Vec::with_capacity(dists.rows());
+        let mut idx: Vec<usize> = (0..ref_y.len()).collect();
+        for q in 0..dists.rows() {
+            let row = dists.row(q);
+            // Partial selection of the k nearest.
+            idx.sort_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap());
+            let votes: Vec<(usize, f32)> = idx[..k]
+                .iter()
+                .map(|&i| (ref_y[i] as usize, ref_w[i].max(1e-6)))
+                .collect();
+            preds.push(majority_vote(&votes, self.n_classes));
+            // restore for next row (sort handles it; idx stays a permutation)
+        }
+        preds
+    }
+
+    /// End-to-end helper with a backend: distances then vote.
+    pub fn classify(
+        &self,
+        backend: &mut impl PairwiseBackend,
+        queries: &Matrix,
+        refs: &Matrix,
+        ref_y: &[f32],
+        ref_w: &[f32],
+    ) -> Vec<usize> {
+        let d = backend.pairwise_sq(queries, refs);
+        self.classify_from_dists(&d, ref_y, ref_w)
+    }
+}
+
+/// Sum per-client squared-distance matrices into global distances
+/// (the aggregator's VFL-KNN step).
+pub fn sum_client_dists(parts: &[Matrix]) -> Matrix {
+    assert!(!parts.is_empty());
+    let mut total = parts[0].clone();
+    for p in &parts[1..] {
+        total = total.zip(p, |a, b| a + b).expect("same shape");
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::data::VerticalPartition;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn classifies_separated_blobs() {
+        let mut rng = Rng::new(1);
+        let ds = synth::blobs("t", 300, 5, 2, 1, 8.0, 0.4, &mut rng);
+        let (tr, te) = ds.split(0.7, &mut rng);
+        let knn = Knn::new(5, 2);
+        let w = vec![1.0; tr.n()];
+        let preds = knn.classify(&mut NativePairwise, &te.x, &tr.x, &tr.y, &w);
+        let acc = preds
+            .iter()
+            .zip(&te.y)
+            .filter(|(&p, &y)| p == y as usize)
+            .count() as f64
+            / te.n() as f64;
+        assert!(acc > 0.95, "acc {acc}");
+    }
+
+    #[test]
+    fn client_distance_sum_equals_global() {
+        let mut rng = Rng::new(2);
+        let ds = synth::blobs("t", 40, 9, 2, 1, 4.0, 1.0, &mut rng);
+        let part = VerticalPartition::even(9, 3);
+        let q = ds.subset(&(0..10).collect::<Vec<_>>());
+        let r = ds.subset(&(10..40).collect::<Vec<_>>());
+        let mut nb = NativePairwise;
+        let global = nb.pairwise_sq(&q.x, &r.x);
+        let parts: Vec<Matrix> = (0..3)
+            .map(|c| nb.pairwise_sq(&part.slice(&q.x, c), &part.slice(&r.x, c)))
+            .collect();
+        let summed = sum_client_dists(&parts);
+        assert!(global.max_abs_diff(&summed) < 1e-3);
+    }
+
+    #[test]
+    fn weights_can_flip_votes() {
+        // 1 near neighbor of class 1 with huge weight vs 2 of class 0.
+        let refs = Matrix::from_vec(3, 1, vec![0.0, 0.1, 0.2]).unwrap();
+        let q = Matrix::from_vec(1, 1, vec![0.05]).unwrap();
+        let y = vec![0.0, 1.0, 0.0];
+        let knn = Knn::new(3, 2);
+        let unweighted = knn.classify(&mut NativePairwise, &q, &refs, &y, &[1.0, 1.0, 1.0]);
+        assert_eq!(unweighted, vec![0]);
+        let weighted = knn.classify(&mut NativePairwise, &q, &refs, &y, &[1.0, 5.0, 1.0]);
+        assert_eq!(weighted, vec![1]);
+    }
+
+    #[test]
+    fn k_capped_by_refs() {
+        let refs = Matrix::from_vec(2, 1, vec![0.0, 1.0]).unwrap();
+        let q = Matrix::from_vec(1, 1, vec![0.1]).unwrap();
+        let preds = Knn::new(10, 2).classify(
+            &mut NativePairwise,
+            &q,
+            &refs,
+            &[0.0, 1.0],
+            &[1.0, 1.0],
+        );
+        assert_eq!(preds.len(), 1);
+    }
+}

@@ -1,0 +1,83 @@
+//! Evaluation metrics: accuracy (classification) and MSE (regression) —
+//! the two quantities Table 2 reports.
+
+use crate::data::Matrix;
+use crate::util::stats::argmax_f32;
+
+/// Classification accuracy from logits (rows = samples).
+pub fn accuracy_from_logits(logits: &Matrix, y: &[f32]) -> f64 {
+    assert_eq!(logits.rows(), y.len());
+    let mut correct = 0usize;
+    for (r, &label) in y.iter().enumerate() {
+        if argmax_f32(logits.row(r)) == label as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / y.len().max(1) as f64
+}
+
+/// Binary accuracy from scalar logits (sigmoid threshold at 0).
+pub fn binary_accuracy_from_scores(scores: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(scores.len(), y.len());
+    let correct = scores
+        .iter()
+        .zip(y)
+        .filter(|(&s, &label)| (s > 0.0) == (label > 0.5))
+        .count();
+    correct as f64 / y.len().max(1) as f64
+}
+
+/// Mean squared error.
+pub fn mse(pred: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(pred.len(), y.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter()
+        .zip(y)
+        .map(|(&p, &t)| ((p - t) as f64).powi(2))
+        .sum::<f64>()
+        / pred.len() as f64
+}
+
+/// Per-class predictions from votes (KNN): majority with weight ties → min
+/// class index.
+pub fn majority_vote(votes: &[(usize, f32)], n_classes: usize) -> usize {
+    let mut tally = vec![0.0f32; n_classes];
+    for &(c, w) in votes {
+        tally[c] += w;
+    }
+    argmax_f32(&tally)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_argmax() {
+        let logits = Matrix::from_vec(3, 2, vec![2.0, 1.0, 0.0, 3.0, 1.0, 1.5]).unwrap();
+        let y = vec![0.0, 1.0, 0.0];
+        assert!((accuracy_from_logits(&logits, &y) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn binary_accuracy_thresholds_at_zero() {
+        let s = vec![-1.0, 0.5, 3.0, -0.2];
+        let y = vec![0.0, 1.0, 1.0, 1.0];
+        assert!((binary_accuracy_from_scores(&s, &y) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mse_known() {
+        assert!((mse(&[1.0, 2.0], &[0.0, 4.0]) - 2.5).abs() < 1e-12);
+        assert_eq!(mse(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn vote_weighted() {
+        // class 1 has more weight despite fewer votes
+        let votes = [(0usize, 1.0f32), (0, 1.0), (1, 3.0)];
+        assert_eq!(majority_vote(&votes, 2), 1);
+    }
+}

@@ -1,0 +1,13 @@
+//! Machine-learning substrate: K-Means, Adam, KNN, and evaluation metrics.
+//!
+//! The SplitNN model phases themselves live in [`crate::splitnn`] (they
+//! execute through XLA artifacts with a native parity fallback); this
+//! module holds everything else the paper's pipeline needs.
+
+pub mod adam;
+pub mod kmeans;
+pub mod knn;
+pub mod metrics;
+
+pub use adam::Adam;
+pub use kmeans::{KMeans, KMeansResult};

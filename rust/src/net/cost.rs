@@ -1,0 +1,68 @@
+//! Latency/bandwidth cost model for the simulated wire.
+
+/// Link parameters applied uniformly to every party pair (the paper's
+/// cluster is a single symmetric 10 Gbps LAN).
+#[derive(Clone, Copy, Debug)]
+pub struct NetConfig {
+    /// One-way message latency in seconds (per logical message).
+    pub latency_s: f64,
+    /// Link bandwidth in bytes/second.
+    pub bandwidth_bps: f64,
+}
+
+impl NetConfig {
+    /// The paper's testbed: 10 Gbps, sub-millisecond LAN RTT.
+    pub fn lan_10gbps() -> Self {
+        NetConfig { latency_s: 0.25e-3, bandwidth_bps: 10e9 / 8.0 }
+    }
+
+    /// A slower WAN-ish profile for sensitivity studies.
+    pub fn wan_100mbps() -> Self {
+        NetConfig { latency_s: 20e-3, bandwidth_bps: 100e6 / 8.0 }
+    }
+
+    /// Free wire (isolate compute costs in ablations).
+    pub fn zero() -> Self {
+        NetConfig { latency_s: 0.0, bandwidth_bps: f64::INFINITY }
+    }
+
+    /// Simulated time to push one message of `bytes` across the link.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self::lan_10gbps()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_monotone_in_bytes() {
+        let c = NetConfig::lan_10gbps();
+        assert!(c.transfer_time(1_000_000) > c.transfer_time(1_000));
+    }
+
+    #[test]
+    fn latency_floor() {
+        let c = NetConfig::lan_10gbps();
+        assert!(c.transfer_time(0) >= 0.25e-3);
+    }
+
+    #[test]
+    fn zero_profile_is_free() {
+        let c = NetConfig::zero();
+        assert_eq!(c.transfer_time(1 << 30), 0.0);
+    }
+
+    #[test]
+    fn wan_slower_than_lan() {
+        let b = 10_000_000;
+        assert!(NetConfig::wan_100mbps().transfer_time(b) > NetConfig::lan_10gbps().transfer_time(b));
+    }
+}

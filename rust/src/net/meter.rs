@@ -1,0 +1,189 @@
+//! Communication meter: every logical message in the system is charged
+//! here, keyed by (from, to, phase). Thread-safe — PSI pairs run
+//! concurrently on the thread pool.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use super::cost::NetConfig;
+
+/// Identity of a protocol participant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum PartyId {
+    /// Feature-holding client m (0-based).
+    Client(u32),
+    /// Aggregation server (routes + top model).
+    Aggregator,
+    /// Label owner (also a client in the paper, but logically distinct).
+    LabelOwner,
+    /// Key server (HE key distribution only).
+    KeyServer,
+}
+
+impl std::fmt::Display for PartyId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PartyId::Client(m) => write!(f, "client{m}"),
+            PartyId::Aggregator => write!(f, "agg"),
+            PartyId::LabelOwner => write!(f, "label"),
+            PartyId::KeyServer => write!(f, "keys"),
+        }
+    }
+}
+
+/// Totals for one (from, to, phase) edge.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EdgeStats {
+    pub bytes: u64,
+    pub messages: u64,
+    /// Accumulated simulated transfer time (serialized per edge).
+    pub sim_s: f64,
+}
+
+#[derive(Default)]
+struct MeterInner {
+    edges: BTreeMap<(PartyId, PartyId, String), EdgeStats>,
+}
+
+/// Thread-safe communication meter.
+pub struct Meter {
+    cfg: NetConfig,
+    inner: Mutex<MeterInner>,
+}
+
+impl Meter {
+    pub fn new(cfg: NetConfig) -> Self {
+        Meter { cfg, inner: Mutex::new(MeterInner::default()) }
+    }
+
+    pub fn config(&self) -> NetConfig {
+        self.cfg
+    }
+
+    /// Charge one message of `bytes` from `from` to `to` under `phase`.
+    /// Returns the simulated transfer time of this message.
+    pub fn charge(&self, from: PartyId, to: PartyId, phase: &str, bytes: u64) -> f64 {
+        let t = self.cfg.transfer_time(bytes);
+        let mut g = self.inner.lock().unwrap();
+        let e = g.edges.entry((from, to, phase.to_string())).or_default();
+        e.bytes += bytes;
+        e.messages += 1;
+        e.sim_s += t;
+        t
+    }
+
+    /// Total bytes over all edges, optionally filtered by phase prefix.
+    pub fn total_bytes(&self, phase_prefix: &str) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.edges
+            .iter()
+            .filter(|((_, _, p), _)| p.starts_with(phase_prefix))
+            .map(|(_, e)| e.bytes)
+            .sum()
+    }
+
+    /// Total messages, optionally filtered by phase prefix.
+    pub fn total_messages(&self, phase_prefix: &str) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.edges
+            .iter()
+            .filter(|((_, _, p), _)| p.starts_with(phase_prefix))
+            .map(|(_, e)| e.messages)
+            .sum()
+    }
+
+    /// Sum of simulated transfer time, filtered by phase prefix. NOTE: this
+    /// is the *serialized* total; protocols that overlap transfers (Tree-MPSI
+    /// rounds) compute their own effective makespan from per-pair costs.
+    pub fn total_sim_s(&self, phase_prefix: &str) -> f64 {
+        let g = self.inner.lock().unwrap();
+        g.edges
+            .iter()
+            .filter(|((_, _, p), _)| p.starts_with(phase_prefix))
+            .map(|(_, e)| e.sim_s)
+            .sum()
+    }
+
+    /// Bytes that transited a specific party (in + out), phase-filtered.
+    /// Exposes the star topology's central-node bottleneck.
+    pub fn party_bytes(&self, party: PartyId, phase_prefix: &str) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.edges
+            .iter()
+            .filter(|((f, t, p), _)| {
+                (*f == party || *t == party) && p.starts_with(phase_prefix)
+            })
+            .map(|(_, e)| e.bytes)
+            .sum()
+    }
+
+    /// Per-edge dump for reports.
+    pub fn edges(&self) -> Vec<((PartyId, PartyId, String), EdgeStats)> {
+        let g = self.inner.lock().unwrap();
+        g.edges.iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
+    /// Reset all counters (between benchmark repetitions).
+    pub fn reset(&self) {
+        self.inner.lock().unwrap().edges.clear();
+    }
+}
+
+impl Default for Meter {
+    fn default() -> Self {
+        Self::new(NetConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charges_accumulate() {
+        let m = Meter::new(NetConfig::lan_10gbps());
+        m.charge(PartyId::Client(0), PartyId::Client(1), "psi", 100);
+        m.charge(PartyId::Client(0), PartyId::Client(1), "psi", 50);
+        m.charge(PartyId::Client(1), PartyId::Aggregator, "train", 10);
+        assert_eq!(m.total_bytes("psi"), 150);
+        assert_eq!(m.total_bytes("train"), 10);
+        assert_eq!(m.total_bytes(""), 160);
+        assert_eq!(m.total_messages("psi"), 2);
+    }
+
+    #[test]
+    fn party_bytes_counts_both_directions() {
+        let m = Meter::default();
+        m.charge(PartyId::Client(0), PartyId::Aggregator, "x", 5);
+        m.charge(PartyId::Aggregator, PartyId::Client(1), "x", 7);
+        assert_eq!(m.party_bytes(PartyId::Aggregator, "x"), 12);
+        assert_eq!(m.party_bytes(PartyId::Client(0), "x"), 5);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let m = Meter::default();
+        m.charge(PartyId::Client(0), PartyId::Client(1), "p", 9);
+        m.reset();
+        assert_eq!(m.total_bytes(""), 0);
+    }
+
+    #[test]
+    fn concurrent_charges_are_safe() {
+        let m = std::sync::Arc::new(Meter::default());
+        let hs: Vec<_> = (0..8)
+            .map(|i| {
+                let m = std::sync::Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        m.charge(PartyId::Client(i), PartyId::Aggregator, "c", 1);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.total_bytes("c"), 800);
+    }
+}

@@ -1,0 +1,17 @@
+//! Simulated network substrate.
+//!
+//! The paper's testbed is a 4-machine cluster on a 10 Gbps LAN speaking
+//! gRPC. We replace the wire with an in-process transport that (a) counts
+//! every byte each party sends/receives, (b) converts bytes to *simulated
+//! transfer time* under a configurable latency/bandwidth model, and (c)
+//! still executes all cryptography for real, so wall-clock numbers reflect
+//! the true compute cost. DESIGN.md documents why this substitution
+//! preserves the paper's measurements (they are dominated by bytes × rounds
+//! and crypto compute).
+
+pub mod cost;
+pub mod meter;
+pub mod msg;
+
+pub use cost::NetConfig;
+pub use meter::{Meter, PartyId};

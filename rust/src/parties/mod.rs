@@ -1,0 +1,150 @@
+//! Protocol participants (paper §3): feature-holding clients, the label
+//! owner, the aggregation server, and the key server.
+//!
+//! Parties are data-holding nodes; the [`crate::coordinator`] drives the
+//! protocol phases across them while charging every message to the meter.
+//! This mirrors the paper's deployment (one process per party on a LAN)
+//! with threads + the simulated wire substituting for gRPC (DESIGN.md).
+
+use crate::data::{Dataset, Matrix, Task, VerticalPartition};
+use crate::error::{Error, Result};
+use crate::psi::common::HeContext;
+use crate::util::rng::Rng;
+
+/// A feature-holding client: its vertical slice plus its (shuffled) local
+/// view of the sample indicators.
+#[derive(Clone, Debug)]
+pub struct ClientNode {
+    pub id: u32,
+    /// Local features in the client's own row order.
+    pub x: Matrix,
+    /// Sample indicators in the same (local) order.
+    pub ids: Vec<u64>,
+}
+
+impl ClientNode {
+    /// Rows re-ordered to match an aligned indicator list (the PSI result).
+    pub fn aligned_slice(&self, aligned: &[u64]) -> Result<Matrix> {
+        let pos: std::collections::HashMap<u64, usize> =
+            self.ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+        let idx = aligned
+            .iter()
+            .map(|id| {
+                pos.get(id).copied().ok_or_else(|| {
+                    Error::Data(format!("client {}: indicator {id} not held", self.id))
+                })
+            })
+            .collect::<Result<Vec<usize>>>()?;
+        Ok(self.x.select_rows(&idx))
+    }
+
+    pub fn res_len(&self) -> u64 {
+        self.ids.len() as u64
+    }
+}
+
+/// The label owner: labels keyed by indicator.
+#[derive(Clone, Debug)]
+pub struct LabelOwnerNode {
+    pub y: Vec<f32>,
+    pub ids: Vec<u64>,
+    pub task: Task,
+}
+
+impl LabelOwnerNode {
+    /// Labels re-ordered to an aligned indicator list.
+    pub fn aligned_labels(&self, aligned: &[u64]) -> Result<Vec<f32>> {
+        let pos: std::collections::HashMap<u64, usize> =
+            self.ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+        aligned
+            .iter()
+            .map(|id| {
+                pos.get(id)
+                    .map(|&i| self.y[i])
+                    .ok_or_else(|| Error::Data(format!("label owner: indicator {id} missing")))
+            })
+            .collect()
+    }
+}
+
+/// The key server: generates and distributes the HE context.
+pub struct KeyServerNode {
+    he: HeContext,
+}
+
+impl KeyServerNode {
+    pub fn new(rng: &mut Rng, bits: usize) -> Self {
+        KeyServerNode { he: HeContext::generate(rng, bits) }
+    }
+
+    pub fn he(&self) -> &HeContext {
+        &self.he
+    }
+}
+
+/// Deal a dataset into the paper's party layout: `m` clients with
+/// vertically partitioned features (each client's row order independently
+/// shuffled) plus a label owner. Every client holds all the samples — the
+/// paper's protocol — but in its own order, so alignment is still required.
+pub fn deal(ds: &Dataset, m: usize, rng: &mut Rng) -> (Vec<ClientNode>, LabelOwnerNode) {
+    let part = VerticalPartition::even(ds.d(), m);
+    let clients = (0..m)
+        .map(|c| {
+            let mut order: Vec<usize> = (0..ds.n()).collect();
+            rng.shuffle(&mut order);
+            ClientNode {
+                id: c as u32,
+                x: part.slice(&ds.x, c).select_rows(&order),
+                ids: order.iter().map(|&i| ds.ids[i]).collect(),
+            }
+        })
+        .collect();
+    let label_owner = LabelOwnerNode { y: ds.y.clone(), ids: ds.ids.clone(), task: ds.task };
+    (clients, label_owner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn deal_then_align_recovers_rows() {
+        let mut rng = Rng::new(1);
+        let ds = synth::blobs("t", 50, 9, 2, 1, 3.0, 1.0, &mut rng);
+        let (clients, lo) = deal(&ds, 3, &mut rng);
+        // Clients' local orders differ from each other.
+        assert_ne!(clients[0].ids, clients[1].ids);
+        let aligned: Vec<u64> = (0..50).collect();
+        // Global reference view in aligned-indicator order (the generator
+        // shuffles rows, so ds.ids is a permutation).
+        let global = ds.subset_by_ids(&aligned);
+        let part = VerticalPartition::even(9, 3);
+        for (c, client) in clients.iter().enumerate() {
+            let got = client.aligned_slice(&aligned).unwrap();
+            let want = part.slice(&global.x, c);
+            assert!(got.max_abs_diff(&want) < 1e-7, "client {c}");
+        }
+        assert_eq!(lo.aligned_labels(&aligned).unwrap(), global.y);
+    }
+
+    #[test]
+    fn partial_alignment_selects_subset() {
+        let mut rng = Rng::new(2);
+        let ds = synth::blobs("t", 20, 6, 2, 1, 3.0, 1.0, &mut rng);
+        let (clients, lo) = deal(&ds, 2, &mut rng);
+        let aligned = vec![5u64, 17, 3];
+        let s = clients[0].aligned_slice(&aligned).unwrap();
+        assert_eq!(s.rows(), 3);
+        let global = ds.subset_by_ids(&aligned);
+        assert_eq!(lo.aligned_labels(&aligned).unwrap(), global.y);
+    }
+
+    #[test]
+    fn missing_indicator_is_error() {
+        let mut rng = Rng::new(3);
+        let ds = synth::blobs("t", 10, 4, 2, 1, 3.0, 1.0, &mut rng);
+        let (clients, _) = deal(&ds, 2, &mut rng);
+        assert!(clients[0].aligned_slice(&[999]).is_err());
+    }
+}

@@ -1,0 +1,122 @@
+//! Shared pieces of the MPSI engines: the HE context from the key server
+//! and the result-allocation step (paper Fig. 2 steps 5–6).
+
+use std::sync::Arc;
+
+use crate::crypto::paillier::{self, PaillierPrivate, PaillierPublic};
+use crate::net::msg::{self, HybridEnvelope};
+use crate::net::{Meter, PartyId};
+use crate::util::rng::Rng;
+
+/// HE key material distributed by the key server. The aggregation server
+/// never holds `sk` — it only routes sealed envelopes.
+#[derive(Clone)]
+pub struct HeContext {
+    pub pk: PaillierPublic,
+    sk: Arc<PaillierPrivate>,
+}
+
+impl HeContext {
+    /// Generate a context (one per experiment; 512-bit default).
+    pub fn generate(rng: &mut Rng, bits: usize) -> Self {
+        let (pk, sk) = paillier::keygen(rng, bits).expect("paillier keygen");
+        HeContext { pk, sk: Arc::new(sk) }
+    }
+
+    /// Fast context for tests.
+    pub fn for_tests() -> Self {
+        Self::generate(&mut Rng::new(0xDECAF), 256)
+    }
+
+    pub fn private(&self) -> &PaillierPrivate {
+        &self.sk
+    }
+}
+
+/// Result allocation: the final holder seals the aligned, ordered indicator
+/// list under HE and ships it to every other client via the aggregation
+/// server. Returns the simulated time of the step.
+pub fn allocate_result(
+    holder: u32,
+    num_clients: u32,
+    result: &[u64],
+    he: &HeContext,
+    meter: &Meter,
+    phase: &str,
+    rng: &mut Rng,
+) -> f64 {
+    let payload = msg::encode_index_list(result);
+    let env = HybridEnvelope::seal(rng, &he.pk, &payload).expect("seal");
+    let wire = env.encode();
+    let mut sim = meter.charge(
+        PartyId::Client(holder),
+        PartyId::Aggregator,
+        phase,
+        wire.len() as u64,
+    );
+    // The aggregator forwards to every other client; its uplink serializes.
+    for c in 0..num_clients {
+        if c == holder {
+            continue;
+        }
+        sim += meter.charge(PartyId::Aggregator, PartyId::Client(c), phase, wire.len() as u64);
+    }
+    // Every client can decrypt with the key-server-provided private key.
+    let opened = env.open(he.private()).expect("open");
+    debug_assert_eq!(msg::decode_index_list(&opened).unwrap(), result);
+    sim
+}
+
+/// Per-round scheduling chatter: each active client requests (step 1),
+/// the aggregator answers with a status message (step 3). Returns sim time
+/// (serialized at the aggregator, which is the paper's design).
+pub fn charge_round_scheduling(
+    active: &[(usize, u64)],
+    round: u32,
+    meter: &Meter,
+    phase: &str,
+) -> f64 {
+    let mut sim = 0.0;
+    for &(id, res_len) in active {
+        let req = msg::PsiRequest { client: id as u32, res_len, has_result: round > 0 };
+        sim += meter.charge(
+            PartyId::Client(id as u32),
+            PartyId::Aggregator,
+            phase,
+            req.encode().len() as u64,
+        );
+        let status = msg::PsiSchedule { round, partner: Some(0), is_receiver: false };
+        sim += meter.charge(
+            PartyId::Aggregator,
+            PartyId::Client(id as u32),
+            phase,
+            status.encode().len() as u64,
+        );
+    }
+    sim
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::NetConfig;
+
+    #[test]
+    fn allocation_charges_m_minus_1_forwards() {
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let he = HeContext::for_tests();
+        let mut rng = Rng::new(5);
+        let sim = allocate_result(2, 5, &[1, 2, 3], &he, &meter, "alloc", &mut rng);
+        assert!(sim > 0.0);
+        // 1 upload + 4 forwards.
+        assert_eq!(meter.total_messages("alloc"), 5);
+    }
+
+    #[test]
+    fn scheduling_charges_two_messages_per_client() {
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let active = [(0usize, 10u64), (1, 20), (2, 30)];
+        charge_round_scheduling(&active, 0, &meter, "sched");
+        assert_eq!(meter.total_messages("sched"), 6);
+    }
+}

@@ -1,0 +1,175 @@
+//! Private set intersection: two-party primitives and multi-party engines.
+//!
+//! Paper §4.1. The two-party primitives ([`rsa_psi`], [`ot_psi`]) execute
+//! their cryptography for real and charge every message to the [`Meter`].
+//! Three MPSI engines compose them:
+//!
+//! * [`tree`] — **Tree-MPSI** (the paper's contribution): pairs active
+//!   clients each round, runs the pairs concurrently, O(log m) rounds.
+//! * [`path`] — Path-MPSI baseline: m−1 strictly sequential TPSIs.
+//! * [`star`] — Star-MPSI baseline: a central client runs TPSI with every
+//!   other client; O(1) logical rounds but the center serializes all
+//!   bandwidth and compute.
+//!
+//! [`sched`] implements the data-volume-aware pairing optimization.
+
+pub mod common;
+pub mod ot_psi;
+pub mod path;
+pub mod rsa_psi;
+pub mod sched;
+pub mod star;
+pub mod tree;
+
+use crate::net::{Meter, PartyId};
+
+/// Which two-party primitive an MPSI engine uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TpsiKind {
+    /// RSA blind signatures (receiver should be the *smaller* party).
+    Rsa,
+    /// OT/OPRF-based (receiver should be the *larger* party).
+    Ot,
+}
+
+/// Cost of one two-party PSI execution.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PairCost {
+    /// Bytes sender -> receiver.
+    pub bytes_s2r: u64,
+    /// Bytes receiver -> sender.
+    pub bytes_r2s: u64,
+    /// Simulated transfer time of all pair messages (serialized per link).
+    pub sim_s: f64,
+    /// Measured wall-clock of the pair (crypto + comparison).
+    pub wall_s: f64,
+}
+
+impl PairCost {
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_s2r + self.bytes_r2s
+    }
+}
+
+/// Result of one two-party PSI: the intersection lands at the receiver.
+#[derive(Clone, Debug)]
+pub struct TpsiOutcome {
+    pub intersection: Vec<u64>,
+    pub cost: PairCost,
+}
+
+/// Two-party PSI protocol configuration (enum-dispatched).
+#[derive(Clone, Debug)]
+pub enum TpsiProtocol {
+    Rsa(rsa_psi::RsaPsiConfig),
+    Ot(ot_psi::OtPsiConfig),
+}
+
+impl TpsiProtocol {
+    pub fn kind(&self) -> TpsiKind {
+        match self {
+            TpsiProtocol::Rsa(_) => TpsiKind::Rsa,
+            TpsiProtocol::Ot(_) => TpsiKind::Ot,
+        }
+    }
+
+    /// Default RSA config (512-bit modulus — scaled down from deployment
+    /// 2048-bit for benchmark turnaround; same asymptotics, see DESIGN.md).
+    pub fn rsa() -> Self {
+        TpsiProtocol::Rsa(rsa_psi::RsaPsiConfig::default())
+    }
+
+    pub fn ot() -> Self {
+        TpsiProtocol::Ot(ot_psi::OtPsiConfig::default())
+    }
+
+    /// Execute between `sender` and `receiver`; result at the receiver.
+    ///
+    /// `from`/`to` are the meter identities of sender/receiver; `phase`
+    /// prefixes the meter key; `seed` makes blinding deterministic per run.
+    pub fn run(
+        &self,
+        sender: &[u64],
+        receiver: &[u64],
+        meter: &Meter,
+        from: PartyId,
+        to: PartyId,
+        phase: &str,
+        seed: u64,
+    ) -> TpsiOutcome {
+        match self {
+            TpsiProtocol::Rsa(cfg) => {
+                rsa_psi::run(cfg, sender, receiver, meter, from, to, phase, seed)
+            }
+            TpsiProtocol::Ot(cfg) => {
+                ot_psi::run(cfg, sender, receiver, meter, from, to, phase, seed)
+            }
+        }
+    }
+}
+
+/// Per-round accounting from an MPSI engine.
+#[derive(Clone, Debug, Default)]
+pub struct RoundReport {
+    /// (sender, receiver, |result|) per pair in the round.
+    pub pairs: Vec<(u32, u32, usize)>,
+    /// Simulated *distributed makespan* of the round: each pair's measured
+    /// crypto compute + its wire time, combined per-topology (max over a
+    /// Tree round's concurrent pairs; sums where a party serializes). This
+    /// models the paper's testbed — one machine per party — on a
+    /// single-core host (pairs here share one CPU, so local wall-clock
+    /// cannot exhibit the parallelism the protocol creates).
+    pub sim_s: f64,
+    /// Local wall-clock of the round on this host.
+    pub wall_s: f64,
+    pub bytes: u64,
+}
+
+/// Result of a full multi-party PSI execution.
+#[derive(Clone, Debug)]
+pub struct MpsiReport {
+    /// The aligned sample indicators, ascending.
+    pub intersection: Vec<u64>,
+    pub rounds: Vec<RoundReport>,
+    /// Total local wall-clock including scheduling + result allocation.
+    pub wall_s: f64,
+    /// Simulated distributed end-to-end time (compute + wire, see
+    /// [`RoundReport::sim_s`]) — the Fig. 7 comparison metric.
+    pub sim_s: f64,
+    pub total_bytes: u64,
+}
+
+impl MpsiReport {
+    pub fn num_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+}
+
+/// Oracle intersection for tests/benches: multi-set intersection of all
+/// client sets, sorted ascending.
+pub fn oracle_intersection(sets: &[Vec<u64>]) -> Vec<u64> {
+    if sets.is_empty() {
+        return vec![];
+    }
+    let mut acc: std::collections::HashSet<u64> = sets[0].iter().copied().collect();
+    for s in &sets[1..] {
+        let next: std::collections::HashSet<u64> = s.iter().copied().collect();
+        acc = acc.intersection(&next).copied().collect();
+    }
+    let mut v: Vec<u64> = acc.into_iter().collect();
+    v.sort_unstable();
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_basics() {
+        let sets = vec![vec![1, 2, 3, 4], vec![2, 4, 6], vec![4, 2, 0]];
+        assert_eq!(oracle_intersection(&sets), vec![2, 4]);
+        assert_eq!(oracle_intersection(&[]), Vec::<u64>::new());
+        assert_eq!(oracle_intersection(&[vec![5, 1]]), vec![1, 5]);
+    }
+}

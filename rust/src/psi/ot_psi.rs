@@ -1,0 +1,182 @@
+//! OT/OPRF-based two-party PSI (paper §4.1 primitive #2, KKRT-style).
+//!
+//! Flow (costs modelled on OT-extension PSI, PRF evaluated for real):
+//!
+//! ```text
+//!   sender                                    receiver
+//!     | <-- base-OT setup + encodings --------- |   (fixed + |R|·enc bytes)
+//!     |     [receiver obliviously obtains       |
+//!     |      PRF_k(x) for its elements]         |
+//!     | --- PRF_k(y) for every own y ---------> |   (|S|·mapped bytes)
+//!     |                                          | compare
+//! ```
+//!
+//! The receiver ends holding the intersection. The sender's mapped set uses
+//! a larger per-element encoding (hash-to-bin + stash expansion in the real
+//! protocol), so the volume-aware scheduler makes the *larger* party the
+//! receiver — the opposite of the RSA rule, exactly as the paper states.
+//!
+//! The oblivious transfer itself is *simulated at the cost level*: we
+//! evaluate PRF_k directly (the functionality) and charge the bytes a
+//! KKRT-style instantiation would move. Fig. 7(b) compares topologies and
+//! scheduling, which depend on bytes × rounds — preserved by this model.
+
+use crate::crypto::prf::Prf;
+use crate::net::{msg, Meter, PartyId};
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+use super::{PairCost, TpsiOutcome};
+
+/// OT-PSI cost/shape parameters.
+#[derive(Clone, Debug)]
+pub struct OtPsiConfig {
+    /// One-time base-OT setup bytes (128 base OTs × 32 B, both directions).
+    pub base_ot_bytes: u64,
+    /// Per-receiver-element OT-extension encoding bytes (~2 × 16 B).
+    pub recv_encoding_bytes: u64,
+    /// Per-sender-element mapped-set bytes: 3 cuckoo hash functions × 16 B
+    /// digests + bin/stash framing ≈ 96 B — the "large amount of data" the
+    /// paper assigns to the sender, and why its rule makes the *larger*
+    /// party the receiver for OT-based TPSI.
+    pub send_mapped_bytes: u64,
+}
+
+impl Default for OtPsiConfig {
+    fn default() -> Self {
+        OtPsiConfig {
+            base_ot_bytes: 128 * 32 * 2,
+            recv_encoding_bytes: 32,
+            send_mapped_bytes: 96,
+        }
+    }
+}
+
+/// Execute the protocol; intersection lands at the receiver.
+#[allow(clippy::too_many_arguments)]
+pub fn run(
+    cfg: &OtPsiConfig,
+    sender: &[u64],
+    receiver: &[u64],
+    meter: &Meter,
+    sender_id: PartyId,
+    receiver_id: PartyId,
+    phase: &str,
+    seed: u64,
+) -> TpsiOutcome {
+    let sw = Stopwatch::start();
+    let mut rng = Rng::new(seed ^ 0x07A9_C3D1_55B2_E600);
+    let mut cost = PairCost::default();
+    let mut sim_s = 0.0;
+
+    // --- setup: base OTs (fixed), split across directions ----------------
+    let half = cfg.base_ot_bytes / 2;
+    sim_s += meter.charge(sender_id, receiver_id, phase, half);
+    sim_s += meter.charge(receiver_id, sender_id, phase, half);
+    cost.bytes_s2r += half;
+    cost.bytes_r2s += half;
+
+    // --- OPRF seed + receiver's oblivious evaluations --------------------
+    let prf = Prf::random(&mut rng);
+    // Receiver sends its OT-extension encodings (cost only; the
+    // functionality result is PRF_k over receiver's elements).
+    let recv_bytes = cfg.recv_encoding_bytes * receiver.len() as u64;
+    sim_s += meter.charge(receiver_id, sender_id, phase, recv_bytes);
+    cost.bytes_r2s += recv_bytes;
+    let recv_eval = prf.eval_batch(receiver);
+
+    // --- sender transmits its mapped set ---------------------------------
+    let sender_eval = prf.eval_batch(sender);
+    let mapped: Vec<Vec<u8>> = sender_eval.iter().map(|d| d.to_vec()).collect();
+    let wire = msg::encode_digest_batch(&mapped);
+    // Charge the modelled per-element expansion rather than the raw digest
+    // bytes (the real mapped set includes bin indices + stash).
+    let mapped_bytes =
+        (wire.len() as u64).max(cfg.send_mapped_bytes * sender.len() as u64);
+    sim_s += meter.charge(sender_id, receiver_id, phase, mapped_bytes);
+    cost.bytes_s2r += mapped_bytes;
+
+    // --- receiver compares ------------------------------------------------
+    let sender_set: std::collections::HashSet<[u8; 16]> =
+        sender_eval.into_iter().collect();
+    let mut intersection: Vec<u64> = receiver
+        .iter()
+        .zip(&recv_eval)
+        .filter(|(_, e)| sender_set.contains(*e))
+        .map(|(&x, _)| x)
+        .collect();
+    intersection.sort_unstable();
+
+    cost.sim_s = sim_s;
+    cost.wall_s = sw.elapsed_secs();
+    TpsiOutcome { intersection, cost }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::NetConfig;
+    use crate::psi::oracle_intersection;
+    use crate::util::check;
+
+    fn run_pair(s: &[u64], r: &[u64]) -> TpsiOutcome {
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        run(
+            &OtPsiConfig::default(),
+            s,
+            r,
+            &meter,
+            PartyId::Client(0),
+            PartyId::Client(1),
+            "psi",
+            3,
+        )
+    }
+
+    #[test]
+    fn computes_exact_intersection() {
+        let s = vec![10, 20, 30, 40];
+        let r = vec![40, 50, 10, 5];
+        assert_eq!(
+            run_pair(&s, &r).intersection,
+            oracle_intersection(&[s.clone(), r.clone()])
+        );
+    }
+
+    #[test]
+    fn property_matches_oracle() {
+        check::forall_default(
+            |rng| {
+                let n1 = 1 + rng.below_usize(60);
+                let n2 = 1 + rng.below_usize(60);
+                let a = check::gen_index_set(rng, n1, 120);
+                let b = check::gen_index_set(rng, n2, 120);
+                (a, b)
+            },
+            |(a, b)| {
+                run_pair(a, b).intersection == oracle_intersection(&[a.clone(), b.clone()])
+            },
+        );
+    }
+
+    #[test]
+    fn larger_receiver_is_cheaper() {
+        // The paper's OT role rule: the sender transmits the expensive
+        // mapped set (96 B/elem vs 32 B/elem for the receiver encodings),
+        // so designating the *larger* party as receiver lowers total bytes.
+        let big: Vec<u64> = (0..500).collect();
+        let small: Vec<u64> = (0..50).collect();
+        let big_as_sender = run_pair(&big, &small).cost.total_bytes();
+        let big_as_receiver = run_pair(&small, &big).cost.total_bytes();
+        assert!(
+            big_as_receiver < big_as_sender,
+            "{big_as_receiver} < {big_as_sender}"
+        );
+    }
+
+    #[test]
+    fn empty_sets_ok() {
+        assert!(run_pair(&[], &[1, 2]).intersection.is_empty());
+        assert!(run_pair(&[1, 2], &[]).intersection.is_empty());
+    }
+}

@@ -1,0 +1,112 @@
+//! Path-MPSI baseline: strictly sequential chain of two-party PSIs.
+//!
+//! Client 0 intersects with client 1; the running result then intersects
+//! with client 2, and so on — O(m) rounds with zero parallelism, the
+//! configuration the paper's Fig. 7 shows losing to Tree-MPSI.
+
+use crate::net::{Meter, PartyId};
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+use super::common::{allocate_result, HeContext};
+use super::tree::derive_seed;
+use super::{MpsiReport, RoundReport, TpsiProtocol};
+
+/// Run Path-MPSI. The running intersection moves down the chain; each hop
+/// makes the next client the receiver (it stores the new result), matching
+/// the paper's description of the path topology.
+pub fn run_path(
+    sets: &[Vec<u64>],
+    protocol: &TpsiProtocol,
+    seed: u64,
+    meter: &Meter,
+    he: &HeContext,
+) -> MpsiReport {
+    assert!(!sets.is_empty());
+    let total_sw = Stopwatch::start();
+    let m = sets.len();
+    let mut holder = 0usize;
+    let mut result = sets[0].clone();
+    let mut rounds = Vec::new();
+    let mut sim_total = 0.0;
+
+    for next in 1..m {
+        let sw = Stopwatch::start();
+        let phase = format!("psi/hop{next}");
+        let out = protocol.run(
+            &result,
+            &sets[next],
+            meter,
+            PartyId::Client(holder as u32),
+            PartyId::Client(next as u32),
+            &phase,
+            derive_seed(seed, next as u32, 0),
+        );
+        let inter = out.intersection;
+        // Strictly sequential chain: every hop's compute + wire adds up.
+        let hop_sim = out.cost.sim_s + out.cost.wall_s;
+        rounds.push(RoundReport {
+            pairs: vec![(holder as u32, next as u32, inter.len())],
+            sim_s: hop_sim,
+            wall_s: sw.elapsed_secs(),
+            bytes: out.cost.total_bytes(),
+        });
+        sim_total += hop_sim;
+        result = inter;
+        holder = next;
+    }
+
+    result.sort_unstable();
+    let mut rng = Rng::new(seed ^ 0xBEEF);
+    sim_total +=
+        allocate_result(holder as u32, m as u32, &result, he, meter, "psi/alloc", &mut rng);
+
+    MpsiReport {
+        intersection: result,
+        total_bytes: meter.total_bytes("psi/"),
+        rounds,
+        wall_s: total_sw.elapsed_secs(),
+        sim_s: sim_total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::NetConfig;
+    use crate::psi::oracle_intersection;
+
+    fn run(sets: &[Vec<u64>]) -> MpsiReport {
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let he = HeContext::for_tests();
+        run_path(sets, &TpsiProtocol::ot(), 5, &meter, &he)
+    }
+
+    #[test]
+    fn matches_oracle() {
+        let sets = vec![
+            vec![1, 2, 3, 4],
+            vec![2, 3, 4, 5],
+            vec![3, 4, 5, 6],
+            vec![4, 3, 0, 1],
+        ];
+        assert_eq!(run(&sets).intersection, oracle_intersection(&sets));
+    }
+
+    #[test]
+    fn rounds_are_m_minus_1() {
+        let sets: Vec<Vec<u64>> = (0..7).map(|_| (0..10).collect()).collect();
+        assert_eq!(run(&sets).num_rounds(), 6);
+    }
+
+    #[test]
+    fn sim_time_is_serialized_sum() {
+        let sets: Vec<Vec<u64>> = (0..4).map(|_| (0..100).collect()).collect();
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let he = HeContext::for_tests();
+        let r = run_path(&sets, &TpsiProtocol::ot(), 5, &meter, &he);
+        let hop_sum: f64 = r.rounds.iter().map(|x| x.sim_s).sum();
+        // Total sim = hops + allocation; hops dominate and are summed.
+        assert!(r.sim_s >= hop_sum);
+    }
+}

@@ -1,0 +1,173 @@
+//! Pairing/scheduling strategies for MPSI rounds (paper §4.1,
+//! "Scheduling optimization").
+//!
+//! Given the active clients `U` with their current result lengths
+//! (`ResLen`), produce the round's TPSI pairs and role assignment:
+//!
+//! * **RequestOrder** (baseline): pair sequentially by request order;
+//!   earlier requester = sender.
+//! * **VolumeAware** (the paper's optimization): `AsSort` ascending by
+//!   ResLen, pair `c_k` with `c_(k+⌈|U|/2⌉)`; for RSA the smaller party is
+//!   receiver, for OT the larger party is receiver. When |U| is odd the
+//!   middle client gets a bye.
+
+use super::TpsiKind;
+
+/// One scheduled TPSI pair: indices into the active-client list.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScheduledPair {
+    pub sender: usize,
+    pub receiver: usize,
+}
+
+/// Round schedule: pairs plus an optional bye (odd |U|).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RoundSchedule {
+    pub pairs: Vec<ScheduledPair>,
+    pub bye: Option<usize>,
+}
+
+/// Pairing strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pairing {
+    RequestOrder,
+    VolumeAware,
+}
+
+/// An active client as seen by the scheduler: (stable id, ResLen).
+pub type Active = (usize, u64);
+
+/// Build the round schedule. Returned indices are the stable ids from the
+/// `active` list (NOT positions), so engines can map them back to clients.
+pub fn schedule(active: &[Active], pairing: Pairing, kind: TpsiKind) -> RoundSchedule {
+    match pairing {
+        Pairing::RequestOrder => request_order(active, kind),
+        Pairing::VolumeAware => volume_aware(active, kind),
+    }
+}
+
+fn request_order(active: &[Active], _kind: TpsiKind) -> RoundSchedule {
+    let mut pairs = Vec::new();
+    let mut i = 0;
+    while i + 1 < active.len() {
+        // Paper step 2: earlier requester is the sender.
+        pairs.push(ScheduledPair { sender: active[i].0, receiver: active[i + 1].0 });
+        i += 2;
+    }
+    let bye = (active.len() % 2 == 1).then(|| active[active.len() - 1].0);
+    RoundSchedule { pairs, bye }
+}
+
+fn volume_aware(active: &[Active], kind: TpsiKind) -> RoundSchedule {
+    // AsSort: ascending by ResLen (ties broken by id for determinism).
+    let mut sorted: Vec<Active> = active.to_vec();
+    sorted.sort_by_key(|&(id, len)| (len, id));
+    let u = sorted.len();
+    let half = u.div_ceil(2); // ⌈|U|/2⌉
+    let mut pairs = Vec::new();
+    // Pair c_k with c_{k+⌈U/2⌉} for k = 1..⌊U/2⌋ (1-based in the paper).
+    for k in 0..u / 2 {
+        let small = sorted[k]; // fewer samples
+        let large = sorted[k + half]; // more samples
+        let (sender, receiver) = match kind {
+            // RSA: receiver's elements cross the wire twice → receiver = small.
+            TpsiKind::Rsa => (large.0, small.0),
+            // OT: sender ships the expensive mapped set → sender = small.
+            TpsiKind::Ot => (small.0, large.0),
+        };
+        pairs.push(ScheduledPair { sender, receiver });
+    }
+    // Odd |U|: the middle client (index ⌈U/2⌉, 1-based) pairs with itself.
+    let bye = (u % 2 == 1).then(|| sorted[half - 1].0);
+    RoundSchedule { pairs, bye }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(s: &RoundSchedule) -> Vec<usize> {
+        let mut v: Vec<usize> = s
+            .pairs
+            .iter()
+            .flat_map(|p| [p.sender, p.receiver])
+            .chain(s.bye)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn request_order_pairs_adjacent() {
+        let active = [(10, 5), (11, 50), (12, 7), (13, 9)];
+        let s = schedule(&active, Pairing::RequestOrder, TpsiKind::Rsa);
+        assert_eq!(
+            s.pairs,
+            vec![
+                ScheduledPair { sender: 10, receiver: 11 },
+                ScheduledPair { sender: 12, receiver: 13 },
+            ]
+        );
+        assert_eq!(s.bye, None);
+    }
+
+    #[test]
+    fn every_client_appears_exactly_once() {
+        for n in 1..=9usize {
+            let active: Vec<Active> = (0..n).map(|i| (i, (i * 13 % 7) as u64)).collect();
+            for pairing in [Pairing::RequestOrder, Pairing::VolumeAware] {
+                for kind in [TpsiKind::Rsa, TpsiKind::Ot] {
+                    let s = schedule(&active, pairing, kind);
+                    assert_eq!(ids(&s), (0..n).collect::<Vec<_>>(), "{pairing:?} {kind:?} n={n}");
+                    assert_eq!(s.pairs.len(), n / 2);
+                    assert_eq!(s.bye.is_some(), n % 2 == 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn volume_aware_pairs_small_with_large() {
+        // Sizes 10,20,30,40 → sorted pairs (10,30), (20,40).
+        let active = [(0, 40), (1, 10), (2, 30), (3, 20)];
+        let s = schedule(&active, Pairing::VolumeAware, TpsiKind::Rsa);
+        // RSA: small is receiver.
+        assert_eq!(
+            s.pairs,
+            vec![
+                ScheduledPair { sender: 2, receiver: 1 }, // 30 sends to 10
+                ScheduledPair { sender: 0, receiver: 3 }, // 40 sends to 20
+            ]
+        );
+    }
+
+    #[test]
+    fn ot_roles_are_flipped() {
+        let active = [(0, 40), (1, 10), (2, 30), (3, 20)];
+        let s = schedule(&active, Pairing::VolumeAware, TpsiKind::Ot);
+        // OT: large is receiver ⇒ small is sender.
+        assert_eq!(
+            s.pairs,
+            vec![
+                ScheduledPair { sender: 1, receiver: 2 },
+                ScheduledPair { sender: 3, receiver: 0 },
+            ]
+        );
+    }
+
+    #[test]
+    fn odd_count_bye_is_middle_by_volume() {
+        // Sizes 1,2,3,4,5 → half=3 → pairs (1,4),(2,5); bye = 3.
+        let active = [(0, 5), (1, 4), (2, 3), (3, 2), (4, 1)];
+        let s = schedule(&active, Pairing::VolumeAware, TpsiKind::Rsa);
+        assert_eq!(s.bye, Some(2)); // the ResLen=3 client
+        assert_eq!(s.pairs.len(), 2);
+    }
+
+    #[test]
+    fn single_client_gets_bye() {
+        let s = schedule(&[(9, 100)], Pairing::VolumeAware, TpsiKind::Rsa);
+        assert!(s.pairs.is_empty());
+        assert_eq!(s.bye, Some(9));
+    }
+}

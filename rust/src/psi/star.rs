@@ -1,0 +1,131 @@
+//! Star-MPSI baseline: a central participant runs two-party PSI with every
+//! other client and intersects the results locally.
+//!
+//! O(1) logical rounds, but the center's NIC and CPU serialize all m−1
+//! exchanges — the paper's "high communication bandwidth and computation
+//! power for the central participant ... may become the bottleneck".
+//! We model that bottleneck faithfully: spoke TPSIs run sequentially at the
+//! center, and their simulated times are summed.
+
+use crate::net::{Meter, PartyId};
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+use super::common::{allocate_result, HeContext};
+use super::tree::derive_seed;
+use super::{MpsiReport, RoundReport, TpsiProtocol};
+
+/// Run Star-MPSI with `center` as the hub (client index).
+pub fn run_star(
+    sets: &[Vec<u64>],
+    protocol: &TpsiProtocol,
+    center: usize,
+    seed: u64,
+    meter: &Meter,
+    he: &HeContext,
+) -> MpsiReport {
+    assert!(!sets.is_empty());
+    assert!(center < sets.len());
+    let total_sw = Stopwatch::start();
+    let m = sets.len();
+    let mut result = sets[center].clone();
+    let mut round = RoundReport::default();
+    let mut sim_total = 0.0;
+
+    for spoke in 0..m {
+        if spoke == center {
+            continue;
+        }
+        let phase = format!("psi/spoke{spoke}");
+        // Spoke is the sender; the center receives and keeps the running
+        // intersection (it must, to intersect across all spokes).
+        let out = protocol.run(
+            &sets[spoke],
+            &result,
+            meter,
+            PartyId::Client(spoke as u32),
+            PartyId::Client(center as u32),
+            &phase,
+            derive_seed(seed, spoke as u32, 1),
+        );
+        round.pairs.push((spoke as u32, center as u32, out.intersection.len()));
+        round.bytes += out.cost.total_bytes();
+        // The center participates in (and its running result feeds) every
+        // spoke TPSI, so compute + wire serialize at the hub: sum, not max.
+        round.sim_s += out.cost.sim_s + out.cost.wall_s;
+        result = out.intersection;
+    }
+    round.wall_s = total_sw.elapsed_secs();
+    sim_total += round.sim_s;
+
+    result.sort_unstable();
+    let mut rng = Rng::new(seed ^ 0xCAFE);
+    sim_total += allocate_result(
+        center as u32,
+        m as u32,
+        &result,
+        he,
+        meter,
+        "psi/alloc",
+        &mut rng,
+    );
+
+    MpsiReport {
+        intersection: result,
+        total_bytes: meter.total_bytes("psi/"),
+        rounds: vec![round],
+        wall_s: total_sw.elapsed_secs(),
+        sim_s: sim_total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::NetConfig;
+    use crate::psi::oracle_intersection;
+
+    fn run(sets: &[Vec<u64>], center: usize) -> MpsiReport {
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let he = HeContext::for_tests();
+        run_star(sets, &TpsiProtocol::ot(), center, 9, &meter, &he)
+    }
+
+    #[test]
+    fn matches_oracle_any_center() {
+        let sets = vec![
+            vec![1, 2, 3, 4, 9],
+            vec![2, 3, 4, 5],
+            vec![2, 4, 5, 6, 3],
+            vec![4, 3, 2, 1],
+        ];
+        for center in 0..sets.len() {
+            assert_eq!(
+                run(&sets, center).intersection,
+                oracle_intersection(&sets),
+                "center={center}"
+            );
+        }
+    }
+
+    #[test]
+    fn one_logical_round() {
+        let sets: Vec<Vec<u64>> = (0..6).map(|_| (0..10).collect()).collect();
+        let r = run(&sets, 0);
+        assert_eq!(r.num_rounds(), 1);
+        assert_eq!(r.rounds[0].pairs.len(), 5);
+    }
+
+    #[test]
+    fn center_carries_most_bytes() {
+        let sets: Vec<Vec<u64>> = (0..5).map(|_| (0..200).collect()).collect();
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let he = HeContext::for_tests();
+        run_star(&sets, &TpsiProtocol::ot(), 0, 9, &meter, &he);
+        let center_bytes = meter.party_bytes(PartyId::Client(0), "psi/spoke");
+        for spoke in 1..5u32 {
+            let b = meter.party_bytes(PartyId::Client(spoke), "psi/spoke");
+            assert!(center_bytes > b, "center {center_bytes} > spoke{spoke} {b}");
+        }
+    }
+}

@@ -1,0 +1,315 @@
+//! PJRT execution engine: CPU client + compiled-executable cache.
+//!
+//! Artifacts compile lazily on first use and stay cached for the process
+//! lifetime (one compile per model variant, as the architecture requires).
+//! The engine is `Sync`: compilation and execution are guarded per-artifact
+//! so client threads can run kernels concurrently.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::data::Matrix;
+use crate::error::{Error, Result};
+use crate::util::timer::PhaseTimer;
+
+use super::manifest::{ArtifactSpec, Dtype, Manifest};
+
+/// A tensor crossing the runtime boundary.
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            _ => Err(Error::Runtime("expected f32 tensor".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v) => Ok(v),
+            _ => Err(Error::Runtime("expected i32 tensor".into())),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            _ => Err(Error::Runtime("expected f32 tensor".into())),
+        }
+    }
+}
+
+/// PJRT engine with a per-artifact executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    timer: Mutex<PhaseTimer>,
+}
+
+// SAFETY-ADJACENT NOTE: the xla crate's client/executable wrap thread-safe
+// PJRT C-API handles; we serialize compilation through the cache mutex and
+// PJRT execution itself is internally synchronized on the CPU client.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create an engine over the given artifact directory.
+    pub fn new(dir: &std::path::Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            timer: Mutex::new(PhaseTimer::new()),
+        })
+    }
+
+    /// Engine over the auto-located artifact dir (see [`super::find_artifact_dir`]).
+    pub fn from_default_dir() -> Result<Engine> {
+        let dir = super::find_artifact_dir()
+            .ok_or_else(|| Error::Runtime("artifacts/ not found — run `make artifacts`".into()))?;
+        Self::new(&dir)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact.
+    fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(e));
+        }
+        let spec = self.manifest.spec(name)?;
+        let path = self.manifest.path_of(spec);
+        let t = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp)?);
+        self.timer.lock().unwrap().add(&format!("compile/{name}"), t.elapsed());
+        self.cache
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute an artifact with shape-checked inputs; returns the output
+    /// tuple as tensors.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self.manifest.spec(name)?.clone();
+        self.check_inputs(&spec, inputs)?;
+        let exe = self.executable(name)?;
+        let literals = inputs
+            .iter()
+            .zip(&spec.inputs)
+            .map(|(t, shape)| tensor_to_literal(t, shape))
+            .collect::<Result<Vec<_>>>()?;
+        let t = std::time::Instant::now();
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        self.timer.lock().unwrap().add(&format!("run/{name}"), t.elapsed());
+        // AOT lowering uses return_tuple=True: unwrap the tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: {} outputs, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            )));
+        }
+        parts
+            .into_iter()
+            .zip(&spec.out_dtypes)
+            .map(|(lit, dt)| literal_to_tensor(&lit, *dt))
+            .collect()
+    }
+
+    fn check_inputs(&self, spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<()> {
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: {} inputs given, expected {}",
+                spec.name,
+                inputs.len(),
+                spec.inputs.len()
+            )));
+        }
+        for (i, t) in inputs.iter().enumerate() {
+            let want = spec.input_len(i);
+            let got = match t {
+                Tensor::F32(v) => v.len(),
+                Tensor::I32(v) => v.len(),
+            };
+            if want != got {
+                return Err(Error::Runtime(format!(
+                    "{} input {i}: {got} elements, expected {want} {:?}",
+                    spec.name, spec.inputs[i]
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Aggregated compile/run timings (perf reporting).
+    pub fn timing_report(&self) -> String {
+        self.timer.lock().unwrap().report()
+    }
+
+    /// Total seconds spent inside PJRT `run/` calls.
+    pub fn total_run_secs(&self) -> f64 {
+        let t = self.timer.lock().unwrap();
+        t.phases()
+            .filter(|(k, _)| k.starts_with("run/"))
+            .map(|(_, d)| d.as_secs_f64())
+            .sum()
+    }
+}
+
+fn tensor_to_literal(t: &Tensor, shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        Tensor::F32(v) => xla::Literal::vec1(v),
+        Tensor::I32(v) => xla::Literal::vec1(v),
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+fn literal_to_tensor(lit: &xla::Literal, dt: Dtype) -> Result<Tensor> {
+    Ok(match dt {
+        Dtype::F32 => Tensor::F32(lit.to_vec::<f32>()?),
+        Dtype::I32 => Tensor::I32(lit.to_vec::<i32>()?),
+    })
+}
+
+/// Matrix -> padded flat tensor helper: pad `m` to (rows, cols) with zeros.
+pub fn matrix_to_tensor(m: &Matrix, rows: usize, cols: usize) -> Tensor {
+    debug_assert!(m.rows() <= rows && m.cols() <= cols, "{:?} -> {rows}x{cols}", m.shape());
+    if m.shape() == (rows, cols) {
+        return Tensor::F32(m.data().to_vec());
+    }
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..m.rows() {
+        out[r * cols..r * cols + m.cols()].copy_from_slice(m.row(r));
+    }
+    Tensor::F32(out)
+}
+
+/// Flat tensor -> Matrix, cropping padding.
+pub fn tensor_to_matrix(t: &Tensor, full: (usize, usize), keep: (usize, usize)) -> Result<Matrix> {
+    let v = t.as_f32()?;
+    if v.len() != full.0 * full.1 {
+        return Err(Error::Runtime(format!(
+            "tensor len {} != {}x{}",
+            v.len(),
+            full.0,
+            full.1
+        )));
+    }
+    let mut out = Matrix::zeros(keep.0, keep.1);
+    for r in 0..keep.0 {
+        out.row_mut(r)
+            .copy_from_slice(&v[r * full.1..r * full.1 + keep.1]);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use once_cell::sync::Lazy;
+
+    /// Shared engine: PJRT client construction is expensive.
+    pub static ENGINE: Lazy<Engine> =
+        Lazy::new(|| Engine::from_default_dir().expect("make artifacts first"));
+
+    #[test]
+    fn bottom_lin_fwd_matches_native() {
+        let e = &*ENGINE;
+        let b = e.manifest().batch;
+        let mut rng = crate::util::rng::Rng::new(1);
+        let x = Matrix::from_fn(b, 8, |_, _| rng.gaussian_f32());
+        let w = Matrix::from_fn(8, 1, |_, _| rng.gaussian_f32());
+        let bias = vec![0.25f32];
+        let out = e
+            .run(
+                "bottom_lin_fwd_dm8",
+                &[
+                    matrix_to_tensor(&x, b, 8),
+                    matrix_to_tensor(&w, 8, 1),
+                    Tensor::F32(bias.clone()),
+                ],
+            )
+            .unwrap();
+        let got = tensor_to_matrix(&out[0], (b, 1), (b, 1)).unwrap();
+        let want = x.matmul(&w).unwrap().add_bias(&bias).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-4, "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn kmeans_assign_artifact_matches_native() {
+        let e = &*ENGINE;
+        let rows = e.manifest().kmeans_rows;
+        let kmax = e.manifest().k_max;
+        let mut rng = crate::util::rng::Rng::new(2);
+        let x = Matrix::from_fn(rows, 8, |_, _| rng.gaussian_f32());
+        // 4 live centroids, rest masked far away.
+        let mut c = Matrix::from_fn(kmax, 8, |_, _| 1.0e15);
+        for k in 0..4 {
+            for j in 0..8 {
+                c.set(k, j, rng.gaussian_f32());
+            }
+        }
+        let out = e
+            .run(
+                "kmeans_assign_dm8",
+                &[matrix_to_tensor(&x, rows, 8), matrix_to_tensor(&c, kmax, 8)],
+            )
+            .unwrap();
+        let assign = out[0].as_i32().unwrap();
+        let dist = out[1].as_f32().unwrap();
+        use crate::ml::kmeans::{AssignBackend, NativeAssign};
+        let live = c.select_rows(&[0, 1, 2, 3]);
+        let (na, nd) = NativeAssign.assign(&x, &live);
+        for i in 0..rows {
+            assert_eq!(assign[i] as u32, na[i], "row {i}");
+            assert!((dist[i] - nd[i]).abs() < 1e-3, "row {i}: {} vs {}", dist[i], nd[i]);
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let e = &*ENGINE;
+        let err = e.run("top_bce_step", &[Tensor::F32(vec![0.0; 3])]);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        assert!(ENGINE.run("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn matrix_tensor_roundtrip_with_padding() {
+        let m = Matrix::from_fn(3, 2, |r, c| (r * 2 + c) as f32);
+        let t = matrix_to_tensor(&m, 4, 5);
+        let back = tensor_to_matrix(&t, (4, 5), (3, 2)).unwrap();
+        assert_eq!(back, m);
+        // Padding area is zero.
+        let flat = t.as_f32().unwrap();
+        assert_eq!(flat[2], 0.0); // row 0, col 2
+        assert_eq!(flat[3 * 5], 0.0); // row 3
+    }
+}

@@ -1,0 +1,207 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes it) and the Rust engine (which trusts it for literal shapes).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Element dtype of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            _ => Err(Error::Runtime(format!("unknown dtype {s:?}"))),
+        }
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file (relative to the artifact dir).
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub in_dtypes: Vec<Dtype>,
+    pub outputs: Vec<Vec<usize>>,
+    pub out_dtypes: Vec<Dtype>,
+}
+
+impl ArtifactSpec {
+    /// Number of elements of input i.
+    pub fn input_len(&self, i: usize) -> usize {
+        self.inputs[i].iter().product()
+    }
+}
+
+/// Parsed manifest: global static-shape constants + artifact specs.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub h_bottom: usize,
+    pub n_clients: usize,
+    pub h_top_in: usize,
+    pub h_top: usize,
+    pub kmeans_rows: usize,
+    pub k_max: usize,
+    pub knn_ref_rows: usize,
+    /// Supported padded per-client feature widths, ascending.
+    pub dms: Vec<usize>,
+    /// Supported classifier head sizes.
+    pub classes: Vec<usize>,
+    specs: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let j = Json::parse(&text)?;
+        let mut specs = BTreeMap::new();
+        for a in j.req("artifacts")?.as_arr()? {
+            let spec = ArtifactSpec {
+                name: a.req("name")?.as_str()?.to_string(),
+                file: a.req("file")?.as_str()?.to_string(),
+                inputs: a.req("inputs")?.as_shape_list()?,
+                in_dtypes: a
+                    .req("in_dtypes")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| Dtype::parse(d.as_str()?))
+                    .collect::<Result<_>>()?,
+                outputs: a.req("outputs")?.as_shape_list()?,
+                out_dtypes: a
+                    .req("out_dtypes")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| Dtype::parse(d.as_str()?))
+                    .collect::<Result<_>>()?,
+            };
+            specs.insert(spec.name.clone(), spec);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            batch: j.req("batch")?.as_usize()?,
+            h_bottom: j.req("h_bottom")?.as_usize()?,
+            n_clients: j.req("n_clients")?.as_usize()?,
+            h_top_in: j.req("h_top_in")?.as_usize()?,
+            h_top: j.req("h_top")?.as_usize()?,
+            kmeans_rows: j.req("kmeans_rows")?.as_usize()?,
+            k_max: j.req("k_max")?.as_usize()?,
+            knn_ref_rows: j.req("knn_ref_rows")?.as_usize()?,
+            dms: j.req("dms")?.as_arr()?.iter().map(|v| v.as_usize()).collect::<Result<_>>()?,
+            classes: j
+                .req("classes")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?,
+            specs,
+        })
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.specs
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("no artifact {name:?} in manifest")))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.specs.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Smallest supported padded width >= `w` (feature slices pad up to it).
+    pub fn dm_for_width(&self, w: usize) -> Result<usize> {
+        self.dms
+            .iter()
+            .copied()
+            .find(|&dm| dm >= w)
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "client width {w} exceeds largest artifact dm {:?}",
+                    self.dms.last()
+                ))
+            })
+    }
+
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::find_artifact_dir;
+
+    fn load() -> Manifest {
+        let dir = find_artifact_dir().expect("run `make artifacts` first");
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = load();
+        assert_eq!(m.batch, 64);
+        assert_eq!(m.n_clients, 3);
+        assert!(m.len() >= 20, "expected full artifact set, got {}", m.len());
+    }
+
+    #[test]
+    fn specs_have_consistent_arity() {
+        let m = load();
+        for name in m.names() {
+            let s = m.spec(name).unwrap();
+            assert_eq!(s.inputs.len(), s.in_dtypes.len(), "{name}");
+            assert_eq!(s.outputs.len(), s.out_dtypes.len(), "{name}");
+            assert!(m.path_of(s).exists(), "{name} file missing");
+        }
+    }
+
+    #[test]
+    fn dm_selection() {
+        let m = load();
+        assert_eq!(m.dm_for_width(4).unwrap(), 8);
+        assert_eq!(m.dm_for_width(8).unwrap(), 8);
+        assert_eq!(m.dm_for_width(11).unwrap(), 16);
+        assert_eq!(m.dm_for_width(30).unwrap(), 32);
+        assert!(m.dm_for_width(100).is_err());
+    }
+
+    #[test]
+    fn known_artifacts_present() {
+        let m = load();
+        for n in [
+            "bottom_mlp_fwd_dm8",
+            "bottom_mlp_bwd_dm16",
+            "bottom_lin_fwd_dm32",
+            "top_mlp_step_l2",
+            "top_mlp_step_l4",
+            "top_bce_step",
+            "top_mse_step",
+            "kmeans_assign_dm8",
+            "kmeans_update_dm16",
+            "pairwise_dm32",
+        ] {
+            assert!(m.spec(n).is_ok(), "{n}");
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them from the L3 hot path. Python never runs here.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (shapes/dtypes).
+//! * [`engine`] — PJRT CPU client + compiled-executable cache + typed
+//!   execution helpers (Matrix ⇄ Literal).
+//! * [`phases`] — model-phase wrappers (bottom fwd/bwd, top steps, kmeans,
+//!   pairwise) with batch padding/unpadding baked in.
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 serializes protos with 64-bit
+//! instruction ids that the bundled xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod engine;
+pub mod manifest;
+pub mod phases;
+
+pub use engine::Engine;
+pub use manifest::Manifest;
+
+/// Default artifact directory (relative to the repo root).
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$TREECSS_ARTIFACTS`, else `artifacts/`
+/// relative to the current dir, else relative to the crate root.
+pub fn find_artifact_dir() -> Option<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("TREECSS_ARTIFACTS") {
+        let p = std::path::PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    for base in [
+        std::path::PathBuf::from(DEFAULT_ARTIFACT_DIR),
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_ARTIFACT_DIR),
+    ] {
+        if base.join("manifest.json").exists() {
+            return Some(base);
+        }
+    }
+    None
+}

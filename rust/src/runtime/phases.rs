@@ -1,0 +1,448 @@
+//! XLA-backed implementation of the SplitNN phases plus K-Means / KNN
+//! backends — the production hot path. Every method pads its logical
+//! inputs to the artifact's static shapes, executes via PJRT, and crops
+//! the outputs back.
+//!
+//! Padding is semantically free by construction:
+//! * batch rows padded with weight 0 contribute zero loss and gradient;
+//! * feature columns padded with zeros on both X and W leave outputs and
+//!   real-gradient entries unchanged;
+//! * masked centroids / reference rows sit at CENTROID_INF and never win
+//!   an argmin.
+
+use std::sync::Arc;
+
+use crate::data::Matrix;
+use crate::error::{Error, Result};
+use crate::ml::kmeans::AssignBackend;
+use crate::ml::knn::PairwiseBackend;
+use crate::splitnn::{ModelPhases, ScalarLoss, TopMlpParams, TopMlpStepOut};
+
+use super::engine::{matrix_to_tensor, tensor_to_matrix, Engine, Tensor};
+
+/// Masked-row sentinel (mirrors kernels/kmeans.py CENTROID_INF).
+pub const CENTROID_INF: f32 = 1.0e15;
+
+/// XLA phases over a shared engine.
+#[derive(Clone)]
+pub struct XlaPhases {
+    engine: Arc<Engine>,
+}
+
+impl XlaPhases {
+    pub fn new(engine: Arc<Engine>) -> Self {
+        XlaPhases { engine }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    fn batch(&self) -> usize {
+        self.engine.manifest().batch
+    }
+
+    /// Pick the artifact Dm for a logical width.
+    fn dm(&self, width: usize) -> Result<usize> {
+        self.engine.manifest().dm_for_width(width)
+    }
+
+    /// Pad a batch vector (weights, labels, logits) to the artifact batch.
+    fn pad_vec(&self, v: &[f32]) -> Vec<f32> {
+        let mut out = v.to_vec();
+        out.resize(self.batch(), 0.0);
+        out
+    }
+
+    fn check_batch(&self, rows: usize) -> Result<()> {
+        if rows > self.batch() {
+            return Err(Error::Runtime(format!(
+                "batch {rows} exceeds artifact batch {}",
+                self.batch()
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl ModelPhases for XlaPhases {
+    fn bottom_mlp_fwd(&self, x: &Matrix, w: &Matrix, b: &[f32]) -> Result<Matrix> {
+        self.check_batch(x.rows())?;
+        let bsz = self.batch();
+        let dm = self.dm(x.cols())?;
+        let h = self.engine.manifest().h_bottom;
+        let out = self.engine.run(
+            &format!("bottom_mlp_fwd_dm{dm}"),
+            &[
+                matrix_to_tensor(x, bsz, dm),
+                matrix_to_tensor(w, dm, h),
+                Tensor::F32(b.to_vec()),
+            ],
+        )?;
+        tensor_to_matrix(&out[0], (bsz, h), (x.rows(), h))
+    }
+
+    fn bottom_mlp_bwd(
+        &self,
+        x: &Matrix,
+        w: &Matrix,
+        b: &[f32],
+        da: &Matrix,
+    ) -> Result<(Matrix, Vec<f32>)> {
+        self.check_batch(x.rows())?;
+        let bsz = self.batch();
+        let dm = self.dm(x.cols())?;
+        let h = self.engine.manifest().h_bottom;
+        let out = self.engine.run(
+            &format!("bottom_mlp_bwd_dm{dm}"),
+            &[
+                matrix_to_tensor(x, bsz, dm),
+                matrix_to_tensor(w, dm, h),
+                Tensor::F32(b.to_vec()),
+                matrix_to_tensor(da, bsz, h),
+            ],
+        )?;
+        let dw = tensor_to_matrix(&out[0], (dm, h), (x.cols(), h))?;
+        let db = out[1].as_f32()?.to_vec();
+        Ok((dw, db))
+    }
+
+    fn bottom_lin_fwd(&self, x: &Matrix, w: &Matrix, b: &[f32]) -> Result<Matrix> {
+        self.check_batch(x.rows())?;
+        let bsz = self.batch();
+        let dm = self.dm(x.cols())?;
+        let out = self.engine.run(
+            &format!("bottom_lin_fwd_dm{dm}"),
+            &[
+                matrix_to_tensor(x, bsz, dm),
+                matrix_to_tensor(w, dm, 1),
+                Tensor::F32(b.to_vec()),
+            ],
+        )?;
+        tensor_to_matrix(&out[0], (bsz, 1), (x.rows(), 1))
+    }
+
+    fn bottom_lin_bwd(&self, x: &Matrix, dz: &Matrix) -> Result<(Matrix, Vec<f32>)> {
+        self.check_batch(x.rows())?;
+        let bsz = self.batch();
+        let dm = self.dm(x.cols())?;
+        let out = self.engine.run(
+            &format!("bottom_lin_bwd_dm{dm}"),
+            &[matrix_to_tensor(x, bsz, dm), matrix_to_tensor(dz, bsz, 1)],
+        )?;
+        let dw = tensor_to_matrix(&out[0], (dm, 1), (x.cols(), 1))?;
+        let db = out[1].as_f32()?.to_vec();
+        Ok((dw, db))
+    }
+
+    fn top_mlp_step(
+        &self,
+        hcat: &Matrix,
+        y1h: &Matrix,
+        w: &[f32],
+        params: &TopMlpParams,
+    ) -> Result<TopMlpStepOut> {
+        self.check_batch(hcat.rows())?;
+        let m = self.engine.manifest();
+        let (bsz, ht, hh) = (m.batch, m.h_top_in, m.h_top);
+        if hcat.cols() != ht {
+            return Err(Error::Runtime(format!(
+                "top_mlp expects Ht={ht}, got {}",
+                hcat.cols()
+            )));
+        }
+        let l = y1h.cols();
+        if !m.classes.contains(&l) {
+            return Err(Error::Runtime(format!("no top_mlp artifact for L={l}")));
+        }
+        let out = self.engine.run(
+            &format!("top_mlp_step_l{l}"),
+            &[
+                matrix_to_tensor(hcat, bsz, ht),
+                matrix_to_tensor(y1h, bsz, l),
+                Tensor::F32(self.pad_vec(w)),
+                matrix_to_tensor(&params.w1, ht, hh),
+                Tensor::F32(params.b1.clone()),
+                matrix_to_tensor(&params.w2, hh, l),
+                Tensor::F32(params.b2.clone()),
+            ],
+        )?;
+        Ok(TopMlpStepOut {
+            loss: out[0].as_f32()?[0],
+            dhcat: tensor_to_matrix(&out[1], (bsz, ht), (hcat.rows(), ht))?,
+            dw1: tensor_to_matrix(&out[2], (ht, hh), (ht, hh))?,
+            db1: out[3].as_f32()?.to_vec(),
+            dw2: tensor_to_matrix(&out[4], (hh, l), (hh, l))?,
+            db2: out[5].as_f32()?.to_vec(),
+        })
+    }
+
+    fn top_mlp_pred(&self, hcat: &Matrix, params: &TopMlpParams) -> Result<Matrix> {
+        self.check_batch(hcat.rows())?;
+        let m = self.engine.manifest();
+        let (bsz, ht, hh) = (m.batch, m.h_top_in, m.h_top);
+        let l = params.w2.cols();
+        let out = self.engine.run(
+            &format!("top_mlp_pred_l{l}"),
+            &[
+                matrix_to_tensor(hcat, bsz, ht),
+                matrix_to_tensor(&params.w1, ht, hh),
+                Tensor::F32(params.b1.clone()),
+                matrix_to_tensor(&params.w2, hh, l),
+                Tensor::F32(params.b2.clone()),
+            ],
+        )?;
+        tensor_to_matrix(&out[0], (bsz, l), (hcat.rows(), l))
+    }
+
+    fn top_scalar_step(
+        &self,
+        kind: ScalarLoss,
+        z: &[f32],
+        y: &[f32],
+        w: &[f32],
+    ) -> Result<(f32, Vec<f32>)> {
+        self.check_batch(z.len())?;
+        let name = match kind {
+            ScalarLoss::Bce => "top_bce_step",
+            ScalarLoss::Mse => "top_mse_step",
+        };
+        let out = self.engine.run(
+            name,
+            &[
+                Tensor::F32(self.pad_vec(z)),
+                Tensor::F32(self.pad_vec(y)),
+                Tensor::F32(self.pad_vec(w)),
+            ],
+        )?;
+        let dz = out[1].as_f32()?[..z.len()].to_vec();
+        Ok((out[0].as_f32()?[0], dz))
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// K-Means assignment through the kmeans_assign_* artifact (chunked rows).
+// ---------------------------------------------------------------------------
+
+impl AssignBackend for XlaPhases {
+    fn assign(&mut self, x: &Matrix, centroids: &Matrix) -> (Vec<u32>, Vec<f32>) {
+        self.assign_xla(x, centroids)
+            .expect("kmeans_assign artifact execution")
+    }
+}
+
+impl XlaPhases {
+    fn assign_xla(&self, x: &Matrix, centroids: &Matrix) -> Result<(Vec<u32>, Vec<f32>)> {
+        let m = self.engine.manifest();
+        let rows_per = m.kmeans_rows;
+        let dm = self.dm(x.cols())?;
+        let kmax = m.k_max;
+        if centroids.rows() > kmax {
+            return Err(Error::Runtime(format!(
+                "k={} exceeds artifact K_MAX={kmax}",
+                centroids.rows()
+            )));
+        }
+        // Mask unused centroid rows far away; pad feature columns with 0 on
+        // both sides (distance contribution 0) and masked rows everywhere.
+        let mut c = Matrix::from_fn(kmax, dm, |_, _| CENTROID_INF);
+        for r in 0..centroids.rows() {
+            c.row_mut(r)[..centroids.cols()].copy_from_slice(centroids.row(r));
+            for j in centroids.cols()..dm {
+                c.set(r, j, 0.0);
+            }
+        }
+        let c_tensor = Tensor::F32(c.data().to_vec());
+        let mut assign = Vec::with_capacity(x.rows());
+        let mut dist = Vec::with_capacity(x.rows());
+        let mut lo = 0;
+        while lo < x.rows() {
+            let hi = (lo + rows_per).min(x.rows());
+            let chunk = x.select_rows(&(lo..hi).collect::<Vec<_>>());
+            let out = self.engine.run(
+                &format!("kmeans_assign_dm{dm}"),
+                &[matrix_to_tensor(&chunk, rows_per, dm), c_tensor.clone()],
+            )?;
+            let a = out[0].as_i32()?;
+            let d = out[1].as_f32()?;
+            for i in 0..(hi - lo) {
+                assign.push(a[i] as u32);
+                dist.push(d[i]);
+            }
+            lo = hi;
+        }
+        Ok((assign, dist))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pairwise distances through the pairwise_* artifact (query × ref tiling).
+// ---------------------------------------------------------------------------
+
+impl PairwiseBackend for XlaPhases {
+    fn pairwise_sq(&mut self, q: &Matrix, r: &Matrix) -> Matrix {
+        self.pairwise_xla(q, r).expect("pairwise artifact execution")
+    }
+}
+
+impl XlaPhases {
+    fn pairwise_xla(&self, q: &Matrix, r: &Matrix) -> Result<Matrix> {
+        let m = self.engine.manifest();
+        let (bq, nr) = (m.batch, m.knn_ref_rows);
+        let dm = self.dm(q.cols())?;
+        let mut out = Matrix::zeros(q.rows(), r.rows());
+        let mut rlo = 0;
+        while rlo < r.rows() {
+            let rhi = (rlo + nr).min(r.rows());
+            // Pad reference chunk rows with CENTROID_INF so they never win.
+            let mut rchunk = Matrix::from_fn(nr, dm, |_, _| CENTROID_INF);
+            for (dst, src) in (rlo..rhi).enumerate() {
+                rchunk.row_mut(dst)[..r.cols()].copy_from_slice(r.row(src));
+                for j in r.cols()..dm {
+                    rchunk.set(dst, j, 0.0);
+                }
+            }
+            let r_tensor = Tensor::F32(rchunk.data().to_vec());
+            let mut qlo = 0;
+            while qlo < q.rows() {
+                let qhi = (qlo + bq).min(q.rows());
+                let qchunk = q.select_rows(&(qlo..qhi).collect::<Vec<_>>());
+                let res = self.engine.run(
+                    &format!("pairwise_dm{dm}"),
+                    &[matrix_to_tensor(&qchunk, bq, dm), r_tensor.clone()],
+                )?;
+                let d = res[0].as_f32()?;
+                for qi in 0..(qhi - qlo) {
+                    for ri in 0..(rhi - rlo) {
+                        out.set(qlo + qi, rlo + ri, d[qi * nr + ri]);
+                    }
+                }
+                qlo = qhi;
+            }
+            rlo = rhi;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::splitnn::native::NativePhases;
+    use crate::util::rng::Rng;
+    use once_cell::sync::Lazy;
+
+    static PHASES: Lazy<XlaPhases> = Lazy::new(|| {
+        XlaPhases::new(Arc::new(Engine::from_default_dir().expect("make artifacts")))
+    });
+
+    fn randm(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        Matrix::from_fn(r, c, |_, _| rng.gaussian_f32() * 0.5)
+    }
+
+    #[test]
+    fn bottom_mlp_matches_native_with_padding() {
+        let xla = &*PHASES;
+        let native = NativePhases::default();
+        let mut rng = Rng::new(10);
+        // Unpadded logical width 11 → artifact dm16; partial batch of 20.
+        let x = randm(&mut rng, 20, 11);
+        let w = randm(&mut rng, 11, 16);
+        let b: Vec<f32> = (0..16).map(|_| rng.gaussian_f32() * 0.1).collect();
+        let a_x = xla.bottom_mlp_fwd(&x, &w, &b).unwrap();
+        let a_n = native.bottom_mlp_fwd(&x, &w, &b).unwrap();
+        assert_eq!(a_x.shape(), (20, 16));
+        assert!(a_x.max_abs_diff(&a_n) < 1e-4, "{}", a_x.max_abs_diff(&a_n));
+
+        let da = randm(&mut rng, 20, 16);
+        let (dw_x, db_x) = xla.bottom_mlp_bwd(&x, &w, &b, &da).unwrap();
+        let (dw_n, db_n) = native.bottom_mlp_bwd(&x, &w, &b, &da).unwrap();
+        assert_eq!(dw_x.shape(), (11, 16));
+        assert!(dw_x.max_abs_diff(&dw_n) < 1e-3);
+        for (a, b) in db_x.iter().zip(&db_n) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn top_mlp_matches_native() {
+        let xla = &*PHASES;
+        let native = NativePhases::default();
+        let m = xla.engine().manifest();
+        let mut rng = Rng::new(11);
+        let b = 37; // partial batch
+        let hcat = randm(&mut rng, b, m.h_top_in);
+        let mut y1h = Matrix::zeros(b, 2);
+        for r in 0..b {
+            y1h.set(r, r % 2, 1.0);
+        }
+        let w: Vec<f32> = (0..b).map(|_| 0.5 + rng.f32()).collect();
+        let params = TopMlpParams {
+            w1: randm(&mut rng, m.h_top_in, m.h_top),
+            b1: (0..m.h_top).map(|_| 0.01).collect(),
+            w2: randm(&mut rng, m.h_top, 2),
+            b2: vec![0.0; 2],
+        };
+        let ox = xla.top_mlp_step(&hcat, &y1h, &w, &params).unwrap();
+        let on = native.top_mlp_step(&hcat, &y1h, &w, &params).unwrap();
+        assert!((ox.loss - on.loss).abs() < 1e-4, "{} vs {}", ox.loss, on.loss);
+        assert!(ox.dhcat.max_abs_diff(&on.dhcat) < 1e-4);
+        assert!(ox.dw1.max_abs_diff(&on.dw1) < 1e-3);
+        assert!(ox.dw2.max_abs_diff(&on.dw2) < 1e-3);
+
+        let px = xla.top_mlp_pred(&hcat, &params).unwrap();
+        let pn = native.top_mlp_pred(&hcat, &params).unwrap();
+        assert!(px.max_abs_diff(&pn) < 1e-4);
+    }
+
+    #[test]
+    fn scalar_heads_match_native() {
+        let xla = &*PHASES;
+        let native = NativePhases::default();
+        let mut rng = Rng::new(12);
+        let n = 50;
+        let z: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let y: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+        let w: Vec<f32> = (0..n).map(|_| rng.f32() + 0.1).collect();
+        for kind in [ScalarLoss::Bce, ScalarLoss::Mse] {
+            let (lx, dzx) = xla.top_scalar_step(kind, &z, &y, &w).unwrap();
+            let (ln, dzn) = native.top_scalar_step(kind, &z, &y, &w).unwrap();
+            assert!((lx - ln).abs() < 1e-4, "{kind:?} {lx} vs {ln}");
+            for i in 0..n {
+                assert!((dzx[i] - dzn[i]).abs() < 1e-4, "{kind:?} dz[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn kmeans_assign_chunked_matches_native() {
+        let mut xla = PHASES.clone();
+        let mut rng = Rng::new(13);
+        // 300 rows forces two chunks (kmeans_rows=256); width 11 pads to 16.
+        let x = randm(&mut rng, 300, 11);
+        let c = randm(&mut rng, 5, 11);
+        let (ax, dx) = AssignBackend::assign(&mut xla, &x, &c);
+        let (an, dn) =
+            crate::ml::kmeans::NativeAssign.assign(&x, &c);
+        assert_eq!(ax, an);
+        for i in 0..300 {
+            assert!((dx[i] - dn[i]).abs() < 1e-3, "row {i}");
+        }
+    }
+
+    #[test]
+    fn pairwise_chunked_matches_native() {
+        let mut xla = PHASES.clone();
+        let mut rng = Rng::new(14);
+        // 70 queries × 1100 refs forces chunking both ways at dm8.
+        let q = randm(&mut rng, 70, 7);
+        let r = randm(&mut rng, 1100, 7);
+        let dx = PairwiseBackend::pairwise_sq(&mut xla, &q, &r);
+        let dn = crate::ml::knn::NativePairwise.pairwise_sq(&q, &r);
+        assert!(dx.max_abs_diff(&dn) < 1e-2, "{}", dx.max_abs_diff(&dn));
+    }
+}

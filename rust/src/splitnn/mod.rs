@@ -1,0 +1,97 @@
+//! SplitNN engine: the model-phase abstraction and the distributed
+//! weighted training loop (paper §3 procedure, §4.2 Eq. 2 weighting).
+//!
+//! A [`ModelPhases`] backend executes the five compute phases of a SplitNN
+//! step. Two implementations exist:
+//!
+//! * [`crate::runtime::phases::XlaPhases`] — the production path: each
+//!   phase is an AOT-compiled XLA artifact (Pallas kernels inside),
+//!   executed via PJRT. Static shapes; padding handled by the wrapper.
+//! * [`native::NativePhases`] — pure-Rust parity implementation, used to
+//!   cross-check the artifacts and as a fallback when `artifacts/` is
+//!   absent (CI without Python).
+//!
+//! The [`trainer`] drives the paper's message flow: clients compute bottom
+//! activations, the aggregation server concatenates and runs the top model,
+//! the label owner's loss gradient flows back, clients update bottom
+//! models — with every tensor charged to the communication meter.
+
+pub mod native;
+pub mod trainer;
+
+use crate::data::Matrix;
+use crate::error::Result;
+
+/// Top-model parameters for the MLP head (hidden layer + logits layer).
+#[derive(Clone, Debug)]
+pub struct TopMlpParams {
+    pub w1: Matrix,
+    pub b1: Vec<f32>,
+    pub w2: Matrix,
+    pub b2: Vec<f32>,
+}
+
+/// Outputs of a top-MLP training step.
+#[derive(Clone, Debug)]
+pub struct TopMlpStepOut {
+    pub loss: f32,
+    pub dhcat: Matrix,
+    pub dw1: Matrix,
+    pub db1: Vec<f32>,
+    pub dw2: Matrix,
+    pub db2: Vec<f32>,
+}
+
+/// Scalar loss head kind (LR = BCE-with-logits, LinReg = MSE).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScalarLoss {
+    Bce,
+    Mse,
+}
+
+/// The five SplitNN compute phases. Implementations must treat inputs as
+/// *logical* (unpadded) shapes; gradient scaling uses a fixed normalization
+/// constant (the artifact batch size) so backends agree bit-for-shape.
+pub trait ModelPhases: Send + Sync {
+    /// Client bottom model, MLP flavour: relu(X W + b).
+    fn bottom_mlp_fwd(&self, x: &Matrix, w: &Matrix, b: &[f32]) -> Result<Matrix>;
+
+    /// Gradients of the MLP bottom. Returns (dW, db).
+    fn bottom_mlp_bwd(
+        &self,
+        x: &Matrix,
+        w: &Matrix,
+        b: &[f32],
+        da: &Matrix,
+    ) -> Result<(Matrix, Vec<f32>)>;
+
+    /// Client bottom model, linear flavour: X w + b (partial logits).
+    fn bottom_lin_fwd(&self, x: &Matrix, w: &Matrix, b: &[f32]) -> Result<Matrix>;
+
+    /// Gradients of the linear bottom. Returns (dW, db).
+    fn bottom_lin_bwd(&self, x: &Matrix, dz: &Matrix) -> Result<(Matrix, Vec<f32>)>;
+
+    /// Top MLP forward + weighted CE + backward.
+    fn top_mlp_step(
+        &self,
+        hcat: &Matrix,
+        y1h: &Matrix,
+        w: &[f32],
+        params: &TopMlpParams,
+    ) -> Result<TopMlpStepOut>;
+
+    /// Top MLP inference (logits).
+    fn top_mlp_pred(&self, hcat: &Matrix, params: &TopMlpParams) -> Result<Matrix>;
+
+    /// Scalar head: weighted loss + dL/dz over summed partial logits.
+    fn top_scalar_step(
+        &self,
+        kind: ScalarLoss,
+        z: &[f32],
+        y: &[f32],
+        w: &[f32],
+    ) -> Result<(f32, Vec<f32>)>;
+
+    /// Human-readable backend name (reports).
+    fn backend_name(&self) -> &'static str;
+}

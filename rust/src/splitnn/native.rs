@@ -1,0 +1,274 @@
+//! Pure-Rust parity implementation of the SplitNN phases.
+//!
+//! Mirrors `python/compile/model.py` operation-for-operation (same
+//! recompute-the-preactivation backward, same 1/B normalization) so it can
+//! cross-validate the XLA artifacts and stand in when artifacts are absent.
+
+use crate::data::Matrix;
+use crate::error::{Error, Result};
+
+use super::{ModelPhases, ScalarLoss, TopMlpParams, TopMlpStepOut};
+
+/// Native backend; `batch_norm` is the artifact batch size (64) so gradient
+/// scaling matches the XLA path exactly.
+pub struct NativePhases {
+    pub batch_norm: usize,
+}
+
+impl NativePhases {
+    pub fn new(batch_norm: usize) -> Self {
+        NativePhases { batch_norm }
+    }
+}
+
+impl Default for NativePhases {
+    fn default() -> Self {
+        // Matches aot.py BATCH.
+        NativePhases::new(64)
+    }
+}
+
+fn relu_mask(pre: &Matrix, da: &Matrix) -> Result<Matrix> {
+    pre.zip(da, |p, g| if p > 0.0 { g } else { 0.0 })
+}
+
+impl ModelPhases for NativePhases {
+    fn bottom_mlp_fwd(&self, x: &Matrix, w: &Matrix, b: &[f32]) -> Result<Matrix> {
+        let mut a = x.matmul(w)?.add_bias(b)?;
+        a.map_inplace(|v| v.max(0.0));
+        Ok(a)
+    }
+
+    fn bottom_mlp_bwd(
+        &self,
+        x: &Matrix,
+        w: &Matrix,
+        b: &[f32],
+        da: &Matrix,
+    ) -> Result<(Matrix, Vec<f32>)> {
+        let pre = x.matmul(w)?.add_bias(b)?;
+        let dpre = relu_mask(&pre, da)?;
+        let dw = x.matmul_at_b(&dpre)?;
+        let db = dpre.col_sums();
+        Ok((dw, db))
+    }
+
+    fn bottom_lin_fwd(&self, x: &Matrix, w: &Matrix, b: &[f32]) -> Result<Matrix> {
+        x.matmul(w)?.add_bias(b)
+    }
+
+    fn bottom_lin_bwd(&self, x: &Matrix, dz: &Matrix) -> Result<(Matrix, Vec<f32>)> {
+        Ok((x.matmul_at_b(dz)?, dz.col_sums()))
+    }
+
+    fn top_mlp_step(
+        &self,
+        hcat: &Matrix,
+        y1h: &Matrix,
+        w: &[f32],
+        params: &TopMlpParams,
+    ) -> Result<TopMlpStepOut> {
+        let b = hcat.rows();
+        if y1h.rows() != b || w.len() != b {
+            return Err(Error::Data("top_mlp_step batch mismatch".into()));
+        }
+        let inv_b = 1.0 / self.batch_norm as f32;
+        let h1 = self.bottom_mlp_fwd(hcat, &params.w1, &params.b1)?; // relu layer
+        let logits = h1.matmul(&params.w2)?.add_bias(&params.b2)?;
+        let l = logits.cols();
+
+        // Weighted softmax cross-entropy + gradient (matches kernels/losses.py).
+        let mut loss = 0.0f64;
+        let mut dlogits = Matrix::zeros(b, l);
+        for r in 0..b {
+            let row = logits.row(r);
+            let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut se = 0.0f32;
+            for &v in row {
+                se += (v - m).exp();
+            }
+            let lse = m + se.ln();
+            let dot: f32 = row.iter().zip(y1h.row(r)).map(|(a, b)| a * b).sum();
+            loss += (w[r] * (lse - dot)) as f64;
+            for c in 0..l {
+                let p = (row[c] - lse).exp();
+                dlogits.set(r, c, w[r] * (p - y1h.get(r, c)) * inv_b);
+            }
+        }
+        let loss = (loss / self.batch_norm as f64) as f32;
+
+        let dw2 = h1.matmul_at_b(&dlogits)?;
+        let db2 = dlogits.col_sums();
+        let dh1 = dlogits.matmul(&params.w2.transpose())?;
+        let dpre1 = relu_mask(&h1, &dh1)?; // h1 > 0 ⇔ pre1 > 0 for relu
+        let dw1 = hcat.matmul_at_b(&dpre1)?;
+        let db1 = dpre1.col_sums();
+        let dhcat = dpre1.matmul(&params.w1.transpose())?;
+        Ok(TopMlpStepOut { loss, dhcat, dw1, db1, dw2, db2 })
+    }
+
+    fn top_mlp_pred(&self, hcat: &Matrix, params: &TopMlpParams) -> Result<Matrix> {
+        let h1 = self.bottom_mlp_fwd(hcat, &params.w1, &params.b1)?;
+        h1.matmul(&params.w2)?.add_bias(&params.b2)
+    }
+
+    fn top_scalar_step(
+        &self,
+        kind: ScalarLoss,
+        z: &[f32],
+        y: &[f32],
+        w: &[f32],
+    ) -> Result<(f32, Vec<f32>)> {
+        if z.len() != y.len() || z.len() != w.len() {
+            return Err(Error::Data("top_scalar_step length mismatch".into()));
+        }
+        let inv_b = 1.0 / self.batch_norm as f32;
+        let mut loss = 0.0f64;
+        let mut dz = Vec::with_capacity(z.len());
+        match kind {
+            ScalarLoss::Bce => {
+                for i in 0..z.len() {
+                    let (zi, yi, wi) = (z[i], y[i], w[i]);
+                    loss += (wi * (zi.max(0.0) - zi * yi + (-zi.abs()).exp().ln_1p())) as f64;
+                    let sig = 1.0 / (1.0 + (-zi).exp());
+                    dz.push(wi * (sig - yi) * inv_b);
+                }
+            }
+            ScalarLoss::Mse => {
+                for i in 0..z.len() {
+                    let e = z[i] - y[i];
+                    loss += (w[i] * e * e) as f64;
+                    dz.push(2.0 * w[i] * e * inv_b);
+                }
+            }
+        }
+        Ok(((loss / self.batch_norm as f64) as f32, dz))
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randm(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        Matrix::from_fn(r, c, |_, _| rng.gaussian_f32() * 0.5)
+    }
+
+    /// Finite-difference check of the top-MLP gradients.
+    #[test]
+    fn top_mlp_grads_match_finite_difference() {
+        let mut rng = Rng::new(1);
+        let (b, ht, hh, l) = (6, 5, 4, 3);
+        let hcat = randm(&mut rng, b, ht);
+        let mut y1h = Matrix::zeros(b, l);
+        for r in 0..b {
+            y1h.set(r, r % l, 1.0);
+        }
+        let w: Vec<f32> = (0..b).map(|_| 0.5 + rng.f32()).collect();
+        let params = TopMlpParams {
+            w1: randm(&mut rng, ht, hh),
+            b1: (0..hh).map(|_| rng.gaussian_f32() * 0.1).collect(),
+            w2: randm(&mut rng, hh, l),
+            b2: (0..l).map(|_| rng.gaussian_f32() * 0.1).collect(),
+        };
+        let phases = NativePhases::new(b);
+        let out = phases.top_mlp_step(&hcat, &y1h, &w, &params).unwrap();
+
+        let eps = 1e-3f32;
+        let loss_at = |params: &TopMlpParams, hcat: &Matrix| {
+            phases.top_mlp_step(hcat, &y1h, &w, params).unwrap().loss
+        };
+        // dW2 spot-checks.
+        for &(i, j) in &[(0usize, 0usize), (2, 1), (3, 2)] {
+            let mut p2 = params.clone();
+            p2.w2.set(i, j, p2.w2.get(i, j) + eps);
+            let num = (loss_at(&p2, &hcat) - out.loss) / eps;
+            let ana = out.dw2.get(i, j);
+            assert!((num - ana).abs() < 2e-2, "dW2[{i},{j}] num {num} ana {ana}");
+        }
+        // dW1 spot-checks.
+        for &(i, j) in &[(0usize, 0usize), (4, 3)] {
+            let mut p2 = params.clone();
+            p2.w1.set(i, j, p2.w1.get(i, j) + eps);
+            let num = (loss_at(&p2, &hcat) - out.loss) / eps;
+            let ana = out.dw1.get(i, j);
+            assert!((num - ana).abs() < 2e-2, "dW1[{i},{j}] num {num} ana {ana}");
+        }
+        // dHcat spot-checks.
+        for &(i, j) in &[(0usize, 0usize), (5, 4)] {
+            let mut h2 = hcat.clone();
+            h2.set(i, j, h2.get(i, j) + eps);
+            let num = (loss_at(&params, &h2) - out.loss) / eps;
+            let ana = out.dhcat.get(i, j);
+            assert!((num - ana).abs() < 2e-2, "dHcat[{i},{j}] num {num} ana {ana}");
+        }
+    }
+
+    #[test]
+    fn bce_grads_match_finite_difference() {
+        let phases = NativePhases::new(4);
+        let z = vec![0.3f32, -1.2, 2.0, 0.0];
+        let y = vec![1.0f32, 0.0, 1.0, 0.0];
+        let w = vec![1.0f32, 2.0, 0.5, 1.5];
+        let (loss, dz) = phases.top_scalar_step(ScalarLoss::Bce, &z, &y, &w).unwrap();
+        let eps = 1e-3;
+        for i in 0..4 {
+            let mut z2 = z.clone();
+            z2[i] += eps;
+            let (l2, _) = phases.top_scalar_step(ScalarLoss::Bce, &z2, &y, &w).unwrap();
+            let num = (l2 - loss) / eps;
+            assert!((num - dz[i]).abs() < 1e-2, "dz[{i}] num {num} ana {}", dz[i]);
+        }
+    }
+
+    #[test]
+    fn mse_loss_and_grad_closed_form() {
+        let phases = NativePhases::new(2);
+        let (loss, dz) = phases
+            .top_scalar_step(ScalarLoss::Mse, &[3.0, 1.0], &[1.0, 1.0], &[1.0, 1.0])
+            .unwrap();
+        assert!((loss - 2.0).abs() < 1e-6); // (4 + 0)/2
+        assert!((dz[0] - 2.0).abs() < 1e-6); // 2·1·2/2
+        assert_eq!(dz[1], 0.0);
+    }
+
+    #[test]
+    fn zero_weight_rows_contribute_nothing() {
+        let mut rng = Rng::new(2);
+        let phases = NativePhases::new(4);
+        let hcat = randm(&mut rng, 4, 5);
+        let mut y1h = Matrix::zeros(4, 2);
+        for r in 0..4 {
+            y1h.set(r, r % 2, 1.0);
+        }
+        let params = TopMlpParams {
+            w1: randm(&mut rng, 5, 3),
+            b1: vec![0.0; 3],
+            w2: randm(&mut rng, 3, 2),
+            b2: vec![0.0; 2],
+        };
+        let full = phases.top_mlp_step(&hcat, &y1h, &[1.0, 1.0, 0.0, 0.0], &params).unwrap();
+        // Rows 2,3 weight 0 ⇒ their dhcat rows are exactly zero.
+        assert_eq!(full.dhcat.row(2), &[0.0; 5]);
+        assert_eq!(full.dhcat.row(3), &[0.0; 5]);
+    }
+
+    #[test]
+    fn bottom_mlp_bwd_zeroes_dead_units() {
+        let mut rng = Rng::new(3);
+        let phases = NativePhases::new(4);
+        let x = randm(&mut rng, 4, 3);
+        // Large negative bias kills all units.
+        let w = randm(&mut rng, 3, 2);
+        let b = vec![-100.0f32; 2];
+        let da = randm(&mut rng, 4, 2);
+        let (dw, db) = phases.bottom_mlp_bwd(&x, &w, &b, &da).unwrap();
+        assert_eq!(dw.frob_norm(), 0.0);
+        assert_eq!(db, vec![0.0, 0.0]);
+    }
+}

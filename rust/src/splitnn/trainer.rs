@@ -1,0 +1,519 @@
+//! Distributed weighted SplitNN training loop (paper §3 procedure + §4.2
+//! Eq. 2 re-weighting), with per-message communication accounting.
+//!
+//! Per mini-batch, the paper's four steps:
+//!   1. each client runs its bottom model on its feature slice and ships
+//!      the intermediate activations to the aggregation server;
+//!   2. the server merges them, runs the top model, forwards outputs to the
+//!      label owner;
+//!   3. the label owner computes the (weighted) loss gradient;
+//!   4. the server backpropagates, shipping per-client activation
+//!      gradients back; clients update their bottom models (Adam in L3).
+//!
+//! Convergence rule (paper §5.1): stop when the loss change over 5 epochs
+//! drops below 1e-4 (plus an epoch cap for benches).
+
+use crate::data::{Matrix, Task};
+use crate::error::{Error, Result};
+use crate::ml::adam::Adam;
+use crate::ml::metrics;
+use crate::net::msg::TensorMsg;
+use crate::net::{Meter, PartyId};
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+use super::{ModelPhases, ScalarLoss, TopMlpParams};
+
+/// Downstream model (Table 2 columns). KNN needs no training loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Logistic regression (binary).
+    Lr,
+    /// One-hidden-layer MLP (binary or multi-class).
+    Mlp,
+    /// Linear regression.
+    LinReg,
+}
+
+/// Training hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: ModelKind,
+    pub lr: f32,
+    /// ≤ artifact batch (64).
+    pub batch_size: usize,
+    pub max_epochs: usize,
+    /// Convergence: |loss[e] − loss[e−window]| < threshold.
+    pub conv_threshold: f64,
+    pub conv_window: usize,
+    pub seed: u64,
+}
+
+impl TrainConfig {
+    pub fn new(model: ModelKind) -> Self {
+        TrainConfig {
+            model,
+            lr: 0.01,
+            batch_size: 64,
+            max_epochs: 200,
+            conv_threshold: 1e-4,
+            conv_window: 5,
+            seed: 7,
+        }
+    }
+}
+
+/// Trained VFL model: per-client bottom parameters + top parameters.
+pub struct TrainedModel {
+    pub kind: ModelKind,
+    /// (W, b) per client.
+    pub bottoms: Vec<(Matrix, Vec<f32>)>,
+    /// MLP top (None for scalar heads).
+    pub top: Option<TopMlpParams>,
+    /// Scalar-head server bias (LR / LinReg).
+    pub top_bias: f32,
+    pub n_classes: usize,
+}
+
+impl TrainedModel {
+    /// Predict logits (classification) or targets (regression) for test
+    /// feature slices (one Matrix per client, row-aligned).
+    pub fn predict(&self, phases: &dyn ModelPhases, slices: &[Matrix]) -> Result<Vec<f32>> {
+        let n = slices[0].rows();
+        let bsz = 64.min(n.max(1));
+        let mut out = Vec::with_capacity(n * self.n_classes.max(1));
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + bsz).min(n);
+            let idx: Vec<usize> = (lo..hi).collect();
+            match self.kind {
+                ModelKind::Mlp => {
+                    let acts = slices
+                        .iter()
+                        .zip(&self.bottoms)
+                        .map(|(x, (w, b))| phases.bottom_mlp_fwd(&x.select_rows(&idx), w, b))
+                        .collect::<Result<Vec<_>>>()?;
+                    let refs: Vec<&Matrix> = acts.iter().collect();
+                    let hcat = Matrix::hcat(&refs)?;
+                    let logits =
+                        phases.top_mlp_pred(&hcat, self.top.as_ref().expect("mlp top"))?;
+                    out.extend_from_slice(logits.data());
+                }
+                ModelKind::Lr | ModelKind::LinReg => {
+                    let mut z = vec![self.top_bias; hi - lo];
+                    for (x, (w, b)) in slices.iter().zip(&self.bottoms) {
+                        let part = phases.bottom_lin_fwd(&x.select_rows(&idx), w, b)?;
+                        for (zi, &p) in z.iter_mut().zip(part.data()) {
+                            *zi += p;
+                        }
+                    }
+                    out.extend_from_slice(&z);
+                }
+            }
+            lo = hi;
+        }
+        Ok(out)
+    }
+
+    /// Evaluate Table-2 quality: accuracy for classification, MSE for
+    /// regression.
+    pub fn evaluate(
+        &self,
+        phases: &dyn ModelPhases,
+        slices: &[Matrix],
+        y: &[f32],
+        task: Task,
+    ) -> Result<f64> {
+        let scores = self.predict(phases, slices)?;
+        Ok(match (self.kind, task) {
+            (ModelKind::Mlp, Task::Classification { n_classes }) => {
+                let logits = Matrix::from_vec(y.len(), n_classes, scores)?;
+                metrics::accuracy_from_logits(&logits, y)
+            }
+            (ModelKind::Lr, _) => metrics::binary_accuracy_from_scores(&scores, y),
+            (ModelKind::LinReg, _) => metrics::mse(&scores, y),
+            (k, t) => return Err(Error::Data(format!("evaluate: {k:?} on {t:?}"))),
+        })
+    }
+}
+
+/// Per-run training report.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub epoch_losses: Vec<f64>,
+    pub epochs: usize,
+    pub converged: bool,
+    pub wall_s: f64,
+    /// Simulated communication time of all instance-wise traffic.
+    pub sim_comm_s: f64,
+    pub comm_bytes: u64,
+    pub steps: u64,
+}
+
+/// Train a SplitNN model over vertically partitioned, weighted data.
+///
+/// `slices[m]` is client m's aligned feature matrix (N × d_m); `y` and
+/// `weights` live with the label owner (weights = 1.0 for ALL baselines;
+/// coreset weights for CSS). Gradient flow follows the paper's message
+/// pattern with every tensor charged to `meter`.
+pub fn train(
+    phases: &dyn ModelPhases,
+    slices: &[Matrix],
+    y: &[f32],
+    weights: &[f32],
+    task: Task,
+    cfg: &TrainConfig,
+    meter: &Meter,
+) -> Result<(TrainedModel, TrainReport)> {
+    let m = slices.len();
+    let n = slices[0].rows();
+    if n == 0 {
+        return Err(Error::Data("empty training set".into()));
+    }
+    if y.len() != n || weights.len() != n {
+        return Err(Error::Data("labels/weights misaligned with features".into()));
+    }
+    let n_classes = task.n_classes();
+    if cfg.model == ModelKind::Mlp && !task.is_classification() {
+        return Err(Error::Data("MLP head needs a classification task".into()));
+    }
+    let sw = Stopwatch::start();
+    let mut rng = Rng::new(cfg.seed);
+    let mut sim_comm = 0.0f64;
+    let h = 16usize; // bottom width (manifest h_bottom; fixed by artifacts)
+
+    // ---- parameter init (Xavier-ish) ------------------------------------
+    let bottom_out = if cfg.model == ModelKind::Mlp { h } else { 1 };
+    let mut bottoms: Vec<(Matrix, Vec<f32>)> = slices
+        .iter()
+        .map(|x| {
+            let scale = (2.0 / (x.cols() + bottom_out) as f32).sqrt();
+            let w = Matrix::from_fn(x.cols(), bottom_out, |_, _| rng.gaussian_f32() * scale);
+            (w, vec![0.0f32; bottom_out])
+        })
+        .collect();
+    let mut top = if cfg.model == ModelKind::Mlp {
+        let ht = h * m;
+        let hh = 32usize;
+        let s1 = (2.0 / (ht + hh) as f32).sqrt();
+        let s2 = (2.0 / (hh + n_classes) as f32).sqrt();
+        Some(TopMlpParams {
+            w1: Matrix::from_fn(ht, hh, |_, _| rng.gaussian_f32() * s1),
+            b1: vec![0.0; hh],
+            w2: Matrix::from_fn(hh, n_classes, |_, _| rng.gaussian_f32() * s2),
+            b2: vec![0.0; n_classes],
+        })
+    } else {
+        None
+    };
+    let mut top_bias = 0.0f32;
+
+    // ---- optimizers ------------------------------------------------------
+    let mut opt_bw: Vec<Adam> = bottoms
+        .iter()
+        .map(|(w, _)| Adam::new(w.rows() * w.cols(), cfg.lr))
+        .collect();
+    let mut opt_bb: Vec<Adam> =
+        bottoms.iter().map(|(_, b)| Adam::new(b.len(), cfg.lr)).collect();
+    let (mut opt_tw1, mut opt_tb1, mut opt_tw2, mut opt_tb2, mut opt_tbias) = match &top {
+        Some(t) => (
+            Some(Adam::new(t.w1.rows() * t.w1.cols(), cfg.lr)),
+            Some(Adam::new(t.b1.len(), cfg.lr)),
+            Some(Adam::new(t.w2.rows() * t.w2.cols(), cfg.lr)),
+            Some(Adam::new(t.b2.len(), cfg.lr)),
+            None,
+        ),
+        None => (None, None, None, None, Some(Adam::new(1, cfg.lr))),
+    };
+
+    // One-hot labels for the MLP head.
+    let y1h_full = if cfg.model == ModelKind::Mlp {
+        let mut oh = Matrix::zeros(n, n_classes);
+        for (r, &label) in y.iter().enumerate() {
+            oh.set(r, label as usize, 1.0);
+        }
+        Some(oh)
+    } else {
+        None
+    };
+
+    // ---- epochs ----------------------------------------------------------
+    let bsz = cfg.batch_size.clamp(1, 64);
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut epoch_losses: Vec<f64> = Vec::new();
+    let mut converged = false;
+    let mut steps = 0u64;
+
+    for _epoch in 0..cfg.max_epochs {
+        rng.shuffle(&mut order);
+        let mut epoch_loss = 0.0f64;
+        let mut batches = 0usize;
+        for chunk in order.chunks(bsz) {
+            let b = chunk.len();
+            let xb: Vec<Matrix> = slices.iter().map(|x| x.select_rows(chunk)).collect();
+            let yb: Vec<f32> = chunk.iter().map(|&i| y[i]).collect();
+            let wb: Vec<f32> = chunk.iter().map(|&i| weights[i]).collect();
+
+            let loss = match cfg.model {
+                ModelKind::Mlp => {
+                    // 1. bottom forward on each client; ship activations.
+                    let acts = xb
+                        .iter()
+                        .zip(&bottoms)
+                        .map(|(x, (w, bias))| phases.bottom_mlp_fwd(x, w, bias))
+                        .collect::<Result<Vec<_>>>()?;
+                    for (c, a) in acts.iter().enumerate() {
+                        sim_comm += meter.charge(
+                            PartyId::Client(c as u32),
+                            PartyId::Aggregator,
+                            "train/act",
+                            TensorMsg::wire_bytes(a.rows(), a.cols()),
+                        );
+                    }
+                    let refs: Vec<&Matrix> = acts.iter().collect();
+                    let hcat = Matrix::hcat(&refs)?;
+                    let y1h = y1h_full.as_ref().unwrap().select_rows(chunk);
+                    // 2-3. top step (loss + grads); logits/grads cross the
+                    // aggregator <-> label-owner link.
+                    sim_comm += meter.charge(
+                        PartyId::Aggregator,
+                        PartyId::LabelOwner,
+                        "train/logits",
+                        TensorMsg::wire_bytes(b, n_classes),
+                    );
+                    let out = phases.top_mlp_step(&hcat, &y1h, &wb, top.as_ref().unwrap())?;
+                    sim_comm += meter.charge(
+                        PartyId::LabelOwner,
+                        PartyId::Aggregator,
+                        "train/dlogits",
+                        TensorMsg::wire_bytes(b, n_classes),
+                    );
+                    // 4a. update top (Adam at the aggregator).
+                    let t = top.as_mut().unwrap();
+                    opt_tw1.as_mut().unwrap().step(t.w1.data_mut(), out.dw1.data());
+                    opt_tb1.as_mut().unwrap().step(&mut t.b1, &out.db1);
+                    opt_tw2.as_mut().unwrap().step(t.w2.data_mut(), out.dw2.data());
+                    opt_tb2.as_mut().unwrap().step(&mut t.b2, &out.db2);
+                    // 4b. per-client dA slices back; bottom bwd + Adam.
+                    for c in 0..m {
+                        let da = out.dhcat.select_cols(c * h, (c + 1) * h);
+                        sim_comm += meter.charge(
+                            PartyId::Aggregator,
+                            PartyId::Client(c as u32),
+                            "train/grad",
+                            TensorMsg::wire_bytes(da.rows(), da.cols()),
+                        );
+                        let (w, bias) = &mut bottoms[c];
+                        let (dw, db) = phases.bottom_mlp_bwd(&xb[c], w, bias, &da)?;
+                        opt_bw[c].step(w.data_mut(), dw.data());
+                        opt_bb[c].step(bias, &db);
+                    }
+                    out.loss
+                }
+                ModelKind::Lr | ModelKind::LinReg => {
+                    // 1. partial logits from each client.
+                    let mut z = vec![top_bias; b];
+                    for (c, (x, (w, bias))) in xb.iter().zip(&bottoms).enumerate() {
+                        let part = phases.bottom_lin_fwd(x, w, bias)?;
+                        sim_comm += meter.charge(
+                            PartyId::Client(c as u32),
+                            PartyId::Aggregator,
+                            "train/act",
+                            TensorMsg::wire_bytes(b, 1),
+                        );
+                        for (zi, &p) in z.iter_mut().zip(part.data()) {
+                            *zi += p;
+                        }
+                    }
+                    // 2-3. loss + dz at the label owner.
+                    sim_comm += meter.charge(
+                        PartyId::Aggregator,
+                        PartyId::LabelOwner,
+                        "train/logits",
+                        TensorMsg::wire_bytes(b, 1),
+                    );
+                    let kind = if cfg.model == ModelKind::Lr {
+                        ScalarLoss::Bce
+                    } else {
+                        ScalarLoss::Mse
+                    };
+                    let (loss, dz) = phases.top_scalar_step(kind, &z, &yb, &wb)?;
+                    sim_comm += meter.charge(
+                        PartyId::LabelOwner,
+                        PartyId::Aggregator,
+                        "train/dlogits",
+                        TensorMsg::wire_bytes(b, 1),
+                    );
+                    // 4. server bias + per-client bottoms.
+                    let dbias: f32 = dz.iter().sum();
+                    opt_tbias
+                        .as_mut()
+                        .unwrap()
+                        .step(std::slice::from_mut(&mut top_bias), &[dbias]);
+                    let dzm = Matrix::from_vec(b, 1, dz)?;
+                    for c in 0..m {
+                        sim_comm += meter.charge(
+                            PartyId::Aggregator,
+                            PartyId::Client(c as u32),
+                            "train/grad",
+                            TensorMsg::wire_bytes(b, 1),
+                        );
+                        let (w, bias) = &mut bottoms[c];
+                        let (dw, db) = phases.bottom_lin_bwd(&xb[c], &dzm)?;
+                        opt_bw[c].step(w.data_mut(), dw.data());
+                        opt_bb[c].step(bias, &db);
+                    }
+                    loss
+                }
+            };
+            epoch_loss += loss as f64;
+            batches += 1;
+            steps += 1;
+        }
+        epoch_losses.push(epoch_loss / batches.max(1) as f64);
+
+        // Paper's convergence rule.
+        let e = epoch_losses.len();
+        if e > cfg.conv_window {
+            let delta = (epoch_losses[e - 1] - epoch_losses[e - 1 - cfg.conv_window]).abs();
+            if delta < cfg.conv_threshold {
+                converged = true;
+                break;
+            }
+        }
+    }
+
+    let model = TrainedModel { kind: cfg.model, bottoms, top, top_bias, n_classes };
+    let report = TrainReport {
+        epochs: epoch_losses.len(),
+        epoch_losses,
+        converged,
+        wall_s: sw.elapsed_secs(),
+        sim_comm_s: sim_comm,
+        comm_bytes: meter.total_bytes("train/"),
+        steps,
+    };
+    Ok((model, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth, VerticalPartition};
+    use crate::net::NetConfig;
+    use crate::splitnn::native::NativePhases;
+
+    fn setup(ds: &crate::data::Dataset, m: usize) -> Vec<Matrix> {
+        let part = VerticalPartition::even(ds.d(), m);
+        (0..m).map(|c| part.slice(&ds.x, c)).collect()
+    }
+
+    #[test]
+    fn lr_learns_separable_blobs() {
+        let mut rng = Rng::new(1);
+        let ds = synth::blobs("t", 400, 6, 2, 1, 5.0, 0.6, &mut rng);
+        let slices = setup(&ds, 3);
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let phases = NativePhases::default();
+        let mut cfg = TrainConfig::new(ModelKind::Lr);
+        cfg.lr = 0.05;
+        cfg.max_epochs = 60;
+        let w = vec![1.0; ds.n()];
+        let (model, report) =
+            train(&phases, &slices, &ds.y, &w, ds.task, &cfg, &meter).unwrap();
+        let acc = model.evaluate(&phases, &slices, &ds.y, ds.task).unwrap();
+        assert!(acc > 0.95, "acc {acc}");
+        assert!(report.epoch_losses.first().unwrap() > report.epoch_losses.last().unwrap());
+        assert!(report.comm_bytes > 0);
+    }
+
+    #[test]
+    fn mlp_learns_multiclass() {
+        let mut rng = Rng::new(2);
+        let ds = synth::blobs("t", 600, 9, 4, 1, 6.0, 0.7, &mut rng);
+        let slices = setup(&ds, 3);
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let phases = NativePhases::default();
+        let mut cfg = TrainConfig::new(ModelKind::Mlp);
+        cfg.lr = 0.02;
+        cfg.max_epochs = 80;
+        let w = vec![1.0; ds.n()];
+        let (model, _) = train(&phases, &slices, &ds.y, &w, ds.task, &cfg, &meter).unwrap();
+        let acc = model.evaluate(&phases, &slices, &ds.y, ds.task).unwrap();
+        assert!(acc > 0.9, "acc {acc}");
+    }
+
+    #[test]
+    fn linreg_fits_linear_data() {
+        let mut rng = Rng::new(3);
+        let ds = synth::regression("t", 500, 6, &mut rng);
+        let slices = setup(&ds, 3);
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let phases = NativePhases::default();
+        let mut cfg = TrainConfig::new(ModelKind::LinReg);
+        cfg.lr = 0.05;
+        cfg.max_epochs = 120;
+        let w = vec![1.0; ds.n()];
+        let (model, _) = train(&phases, &slices, &ds.y, &w, ds.task, &cfg, &meter).unwrap();
+        let mse = model.evaluate(&phases, &slices, &ds.y, ds.task).unwrap();
+        // Irreducible noise is 0.3² ≈ 0.09 plus the interaction term.
+        assert!(mse < 0.5, "mse {mse}");
+    }
+
+    #[test]
+    fn zero_weight_samples_are_ignored() {
+        // Half the samples get corrupted labels but zero weight — the model
+        // must still learn the true boundary.
+        let mut rng = Rng::new(4);
+        let ds = synth::blobs("t", 300, 6, 2, 1, 5.0, 0.5, &mut rng);
+        let slices = setup(&ds, 3);
+        let mut y_bad = ds.y.clone();
+        let mut w = vec![1.0f32; ds.n()];
+        for i in 0..ds.n() / 2 {
+            y_bad[i] = 1.0 - y_bad[i];
+            w[i] = 0.0;
+        }
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let phases = NativePhases::default();
+        let mut cfg = TrainConfig::new(ModelKind::Lr);
+        cfg.lr = 0.05;
+        cfg.max_epochs = 60;
+        let (model, _) = train(&phases, &slices, &y_bad, &w, ds.task, &cfg, &meter).unwrap();
+        let acc = model.evaluate(&phases, &slices, &ds.y, ds.task).unwrap();
+        assert!(acc > 0.9, "masked corruption should not hurt: acc {acc}");
+    }
+
+    #[test]
+    fn convergence_rule_stops_early() {
+        let mut rng = Rng::new(5);
+        let ds = synth::blobs("t", 200, 6, 2, 1, 8.0, 0.3, &mut rng);
+        let slices = setup(&ds, 3);
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let phases = NativePhases::default();
+        let mut cfg = TrainConfig::new(ModelKind::Lr);
+        cfg.lr = 0.1;
+        cfg.max_epochs = 500;
+        let w = vec![1.0; ds.n()];
+        let (_, report) = train(&phases, &slices, &ds.y, &w, ds.task, &cfg, &meter).unwrap();
+        assert!(report.converged, "should converge well before 500 epochs");
+        assert!(report.epochs < 500);
+    }
+
+    #[test]
+    fn shape_errors_are_reported() {
+        let phases = NativePhases::default();
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let x = vec![Matrix::zeros(4, 2)];
+        let cfg = TrainConfig::new(ModelKind::Lr);
+        let err = train(
+            &phases,
+            &x,
+            &[0.0; 3],
+            &[1.0; 3],
+            Task::Classification { n_classes: 2 },
+            &cfg,
+            &meter,
+        );
+        assert!(err.is_err());
+    }
+}

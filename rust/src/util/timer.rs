@@ -1,0 +1,141 @@
+//! Wall-clock timing helpers and a hierarchical phase recorder.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Accumulates named phase durations (align / coreset / train, per-step
+/// breakdowns, ...). Cheap enough for per-batch use.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    totals: BTreeMap<String, Duration>,
+    counts: BTreeMap<String, u64>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(name, t.elapsed());
+        out
+    }
+
+    /// Record an externally measured duration.
+    pub fn add(&mut self, name: &str, d: Duration) {
+        *self.totals.entry(name.to_string()).or_default() += d;
+        *self.counts.entry(name.to_string()).or_default() += 1;
+    }
+
+    pub fn total(&self, name: &str) -> Duration {
+        self.totals.get(name).copied().unwrap_or_default()
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.counts.get(name).copied().unwrap_or_default()
+    }
+
+    /// Merge another recorder into this one.
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k.clone()).or_default() += *v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k.clone()).or_default() += *v;
+        }
+    }
+
+    /// Human-readable summary sorted by total time, descending.
+    pub fn report(&self) -> String {
+        let mut rows: Vec<_> = self.totals.iter().collect();
+        rows.sort_by(|a, b| b.1.cmp(a.1));
+        let mut s = String::new();
+        for (k, v) in rows {
+            s.push_str(&format!(
+                "{:<28} {:>10.3}s  x{}\n",
+                k,
+                v.as_secs_f64(),
+                self.counts[k]
+            ));
+        }
+        s
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&str, Duration)> {
+        self.totals.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.elapsed_ms() >= 4.0);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut pt = PhaseTimer::new();
+        pt.time("a", || std::thread::sleep(Duration::from_millis(2)));
+        pt.time("a", || std::thread::sleep(Duration::from_millis(2)));
+        pt.add("b", Duration::from_millis(10));
+        assert_eq!(pt.count("a"), 2);
+        assert!(pt.total("a") >= Duration::from_millis(3));
+        assert_eq!(pt.total("b"), Duration::from_millis(10));
+        assert!(pt.report().contains('a'));
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = PhaseTimer::new();
+        a.add("x", Duration::from_millis(1));
+        let mut b = PhaseTimer::new();
+        b.add("x", Duration::from_millis(2));
+        a.merge(&b);
+        assert_eq!(a.total("x"), Duration::from_millis(3));
+        assert_eq!(a.count("x"), 2);
+    }
+}

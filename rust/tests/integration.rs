@@ -1,0 +1,238 @@
+//! Cross-module integration tests: MPSI engines × protocols × pairings
+//! against the oracle, coreset invariants, backend parity (XLA vs native)
+//! through the full pipeline, and determinism.
+
+use treecss::coordinator::pipeline::{Backend, Downstream, PipelineConfig};
+use treecss::coordinator::{run_pipeline, FrameworkVariant};
+use treecss::data::synth::{self, PaperDataset};
+use treecss::net::{Meter, NetConfig};
+use treecss::psi::common::HeContext;
+use treecss::psi::rsa_psi::RsaPsiConfig;
+use treecss::psi::sched::Pairing;
+use treecss::psi::tree::{run_tree, TreeMpsiConfig};
+use treecss::psi::{oracle_intersection, path::run_path, star::run_star, TpsiProtocol};
+use treecss::splitnn::trainer::ModelKind;
+use treecss::util::check;
+use treecss::util::pool::ThreadPool;
+use treecss::util::rng::Rng;
+
+fn fast_rsa() -> TpsiProtocol {
+    TpsiProtocol::Rsa(RsaPsiConfig { modulus_bits: 256, domain: "it".into() })
+}
+
+/// Every MPSI engine × protocol × pairing returns the oracle intersection
+/// on randomized inputs (the system-level PSI correctness property).
+#[test]
+fn all_mpsi_engines_match_oracle_property() {
+    let he = HeContext::for_tests();
+    let pool = ThreadPool::new(4);
+    check::forall(
+        check::Config { cases: 6, seed: 42 },
+        |rng| {
+            let m = 2 + rng.below_usize(5);
+            (0..m)
+                .map(|_| {
+                    let n = 5 + rng.below_usize(40);
+                    check::gen_index_set(rng, n, 100)
+                })
+                .collect::<Vec<_>>()
+        },
+        |sets| {
+            let oracle = oracle_intersection(sets);
+            for protocol in [fast_rsa(), TpsiProtocol::ot()] {
+                for pairing in [Pairing::VolumeAware, Pairing::RequestOrder] {
+                    let meter = Meter::new(NetConfig::lan_10gbps());
+                    let cfg = TreeMpsiConfig {
+                        protocol: protocol.clone(),
+                        pairing,
+                        seed: 3,
+                    };
+                    if run_tree(sets, &cfg, &meter, &pool, &he).intersection != oracle {
+                        return false;
+                    }
+                }
+                let meter = Meter::new(NetConfig::lan_10gbps());
+                if run_path(sets, &protocol, 3, &meter, &he).intersection != oracle {
+                    return false;
+                }
+                let meter = Meter::new(NetConfig::lan_10gbps());
+                if run_star(sets, &protocol, 0, 3, &meter, &he).intersection != oracle {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Volume-aware scheduling saves bytes on skewed client sizes (Fig. 7c's
+/// claim as an invariant).
+#[test]
+fn volume_aware_scheduling_saves_bytes_on_skewed_sizes() {
+    let he = HeContext::for_tests();
+    let pool = ThreadPool::new(4);
+    let mut rng = Rng::new(11);
+    let sizes: Vec<usize> = (1..=6).map(|i| 60 * i).collect();
+    let sets = synth::mpsi_indicator_sets_sized(&sizes, 0.7, &mut rng);
+    let run_with = |pairing| {
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let cfg = TreeMpsiConfig { protocol: fast_rsa(), pairing, seed: 5 };
+        run_tree(&sets, &cfg, &meter, &pool, &he).total_bytes
+    };
+    let volume = run_with(Pairing::VolumeAware);
+    let order = run_with(Pairing::RequestOrder);
+    assert!(volume < order, "volume-aware {volume} < request-order {order}");
+}
+
+/// Coreset invariants across random datasets.
+#[test]
+fn coreset_invariants_property() {
+    use treecss::coreset::cluster_coreset::{self, ClusterCoresetConfig};
+    use treecss::data::VerticalPartition;
+    use treecss::ml::kmeans::NativeAssign;
+    let he = HeContext::for_tests();
+    check::forall(
+        check::Config { cases: 8, seed: 77 },
+        |rng| {
+            let n = 60 + rng.below_usize(200);
+            let classes = 2 + rng.below_usize(3);
+            let d = 6 + rng.below_usize(6);
+            let seed = rng.next_u64();
+            (n, classes, d, seed)
+        },
+        |&(n, classes, d, seed)| {
+            let mut rng = Rng::new(seed);
+            let ds = synth::blobs("p", n, d, classes, 2, 3.0, 1.0, &mut rng);
+            let part = VerticalPartition::even(d, 3);
+            let slices: Vec<_> = (0..3).map(|c| part.slice(&ds.x, c)).collect();
+            let meter = Meter::new(NetConfig::lan_10gbps());
+            let r = cluster_coreset::run(
+                &slices,
+                &ds.y,
+                true,
+                &ClusterCoresetConfig { clusters_per_client: 4, ..Default::default() },
+                &mut NativeAssign,
+                &meter,
+                &he,
+            )
+            .unwrap();
+            // Invariants: sorted unique in-range indices; weights in (0, 3];
+            // every index's weight parallel; coreset non-empty, ≤ n.
+            let sorted = r.indices.windows(2).all(|w| w[0] < w[1]);
+            let in_range = r.indices.iter().all(|&i| i < n);
+            let w_ok = r.weights.iter().all(|&w| w > 0.0 && w <= 3.0 + 1e-5);
+            sorted
+                && in_range
+                && w_ok
+                && !r.indices.is_empty()
+                && r.indices.len() <= n
+                && r.indices.len() == r.weights.len()
+        },
+    );
+}
+
+/// The full pipeline is deterministic given a seed (same quality, same
+/// coreset, same byte counts).
+#[test]
+fn pipeline_is_deterministic() {
+    let mut rng = Rng::new(123);
+    let ds = PaperDataset::Ba.generate(0.02, &mut rng);
+    let (tr, te) = ds.split(0.7, &mut rng);
+    let run = || {
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let mut cfg =
+            PipelineConfig::new(FrameworkVariant::TreeCss, Downstream::Train(ModelKind::Lr));
+        cfg.protocol = fast_rsa();
+        cfg.he_bits = 256;
+        cfg.train.max_epochs = 20;
+        let rep = run_pipeline(&tr, &te, &cfg, &Backend::Native, &meter).unwrap();
+        (
+            rep.quality,
+            rep.coreset.as_ref().unwrap().indices.clone(),
+            rep.total_bytes,
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.0, b.0);
+    assert_eq!(a.1, b.1);
+    assert_eq!(a.2, b.2);
+}
+
+/// XLA and native backends agree end-to-end (same seed ⇒ same coreset and
+/// closely matching quality) — the strongest three-layer composition test.
+#[test]
+fn xla_and_native_backends_agree_end_to_end() {
+    let Ok(xla) = Backend::xla_default() else {
+        eprintln!("artifacts missing — skipping XLA parity (run `make artifacts`)");
+        return;
+    };
+    let mut rng = Rng::new(321);
+    let ds = PaperDataset::Ri.generate(0.02, &mut rng);
+    let (tr, te) = ds.split(0.7, &mut rng);
+    let run = |backend: &Backend| {
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let mut cfg =
+            PipelineConfig::new(FrameworkVariant::TreeCss, Downstream::Train(ModelKind::Mlp));
+        cfg.protocol = fast_rsa();
+        cfg.he_bits = 256;
+        cfg.train.max_epochs = 25;
+        cfg.train.lr = 0.02;
+        let rep = run_pipeline(&tr, &te, &cfg, backend, &meter).unwrap();
+        (rep.quality, rep.coreset.as_ref().unwrap().indices.clone())
+    };
+    let (q_xla, cs_xla) = run(&xla);
+    let (q_nat, cs_nat) = run(&Backend::Native);
+    assert_eq!(cs_xla, cs_nat, "identical coreset selection");
+    assert!(
+        (q_xla - q_nat).abs() < 0.08,
+        "quality parity: xla {q_xla} vs native {q_nat}"
+    );
+}
+
+/// KNN downstream through the pipeline: coreset weighting preserved.
+#[test]
+fn knn_pipeline_with_coreset() {
+    let mut rng = Rng::new(9);
+    let ds = PaperDataset::Ri.generate(0.02, &mut rng);
+    let (tr, te) = ds.split(0.7, &mut rng);
+    let meter = Meter::new(NetConfig::lan_10gbps());
+    let mut cfg = PipelineConfig::new(FrameworkVariant::TreeCss, Downstream::Knn(5));
+    cfg.protocol = TpsiProtocol::ot();
+    cfg.he_bits = 256;
+    let rep = run_pipeline(&tr, &te, &cfg, &Backend::Native, &meter).unwrap();
+    assert!(rep.quality > 0.9, "knn acc {}", rep.quality);
+    assert!(meter.total_bytes("knn/") > 0, "knn distance traffic charged");
+}
+
+/// The four Table-2 variants hold their defining relationships on one
+/// dataset: CSS trains on less data; quality within tolerance; Tree's
+/// simulated alignment time ≤ Star's.
+#[test]
+fn table2_variant_relationships() {
+    let mut rng = Rng::new(17);
+    let ds = PaperDataset::Mu.generate(0.04, &mut rng);
+    let (tr, te) = ds.split(0.7, &mut rng);
+    let mut results = std::collections::HashMap::new();
+    for variant in FrameworkVariant::ALL {
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let mut cfg = PipelineConfig::new(variant, Downstream::Train(ModelKind::Lr));
+        cfg.protocol = fast_rsa();
+        cfg.he_bits = 256;
+        // Train to the paper's convergence rule: a tiny coreset sees far
+        // fewer optimizer steps per epoch, so a small fixed epoch cap
+        // would underfit the CSS variants.
+        cfg.train.max_epochs = 200;
+        cfg.train.lr = 0.05;
+        let rep = run_pipeline(&tr, &te, &cfg, &Backend::Native, &meter).unwrap();
+        results.insert(variant.name(), (rep.quality, rep.train_size, rep.align.sim_s));
+    }
+    let (q_all, n_all, star_align) = results["STARALL"];
+    let (q_css, n_css, tree_align) = results["TREECSS"];
+    assert!(n_css < n_all, "coreset shrinks training data");
+    assert!(q_css > q_all - 0.1, "quality comparable: {q_css} vs {q_all}");
+    assert!(
+        tree_align <= star_align * 1.1,
+        "tree alignment {tree_align} ≲ star {star_align}"
+    );
+}
