@@ -1,22 +1,57 @@
 //! Fig. 5: effect of clusters-per-client and re-weighting on *runtime*
-//! (coreset construction + downstream training), MU/HI/BP/YP.
+//! (coreset construction + downstream training), MU/HI/BP/YP — plus the
+//! parallel-scaling sweep for the K-Means assignment hot path.
 //!
 //!     cargo bench --bench fig5_runtime [-- --full]
 //!
 //! Expected shape: runtime grows with clusters/client (bigger coreset);
-//! re-weighting adds a small constant overhead.
+//! re-weighting adds a small constant overhead; K-Means assignment scales
+//! near-linearly with workers (>= 2x at 8 workers vs 1 on the synthetic
+//! sweep dataset).
 
-use treecss::bench::Table;
+use treecss::bench::{thread_sweep, thread_sweep_table, Bencher, Table};
 use treecss::coordinator::pipeline::{Backend, Downstream, PipelineConfig};
 use treecss::coordinator::{run_pipeline, FrameworkVariant};
-use treecss::data::synth::PaperDataset;
+use treecss::data::synth::{self, PaperDataset};
+use treecss::ml::kmeans::{AssignBackend, ParAssign};
 use treecss::net::{Meter, NetConfig};
 use treecss::splitnn::trainer::ModelKind;
+use treecss::util::pool::Parallel;
 use treecss::util::rng::Rng;
+
+/// Single- vs multi-thread scaling of the K-Means assignment phase: the
+/// `par_map`/`par_chunks` adoption this PR's speedup claim rests on.
+fn kmeans_assign_thread_sweep(full: bool) {
+    let mut rng = Rng::new(0x515);
+    let rows = if full { 120_000 } else { 60_000 };
+    let (d, k) = (32, 32);
+    let ds = synth::blobs("sweep", rows, d, 4, 8, 4.0, 1.0, &mut rng);
+    let centroids = ds.x.select_rows(&rng.sample_indices(ds.n(), k));
+    let bencher = Bencher::from_env();
+    let mut table = thread_sweep_table(&format!(
+        "Fig. 5 (pre) — K-Means assignment scaling ({rows} rows × {d} dims, k={k})"
+    ));
+    thread_sweep(
+        &bencher,
+        &mut table,
+        "kmeans-assign",
+        &[1, 2, 4, 8],
+        |threads| {
+            let backend = ParAssign { par: Parallel::new(threads) };
+            backend.assign(&ds.x, &centroids)
+        },
+    );
+    table.print();
+}
 
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
+
+    kmeans_assign_thread_sweep(full);
+
     let ks: &[usize] = if full { &[2, 4, 8, 16, 32] } else { &[2, 8, 16] };
+    // Pipeline thread settings to compare (0 = all cores).
+    let thread_settings: &[usize] = if full { &[1, 8] } else { &[1, 0] };
     let cases: Vec<(PaperDataset, Downstream, f64)> = vec![
         (PaperDataset::Mu, Downstream::Train(ModelKind::Mlp), if full { 1.0 } else { 0.05 }),
         (PaperDataset::Hi, Downstream::Train(ModelKind::Mlp), if full { 1.0 } else { 0.008 }),
@@ -28,7 +63,10 @@ fn main() {
 
     let mut table = Table::new(
         "Fig. 5 — runtime vs clusters/client, with and without re-weighting",
-        &["dataset", "k/client", "weighted", "coreset(s)", "train(s)", "total(s)", "coreset size"],
+        &[
+            "dataset", "k/client", "weighted", "threads", "coreset(s)", "train(s)", "total(s)",
+            "coreset size",
+        ],
     );
 
     for (ds_kind, down, scale) in cases {
@@ -38,23 +76,27 @@ fn main() {
         let (tr, te) = ds.split(0.7, &mut rng);
         for &k in ks {
             for reweight in [true, false] {
-                let meter = Meter::new(NetConfig::lan_10gbps());
-                let mut cfg = PipelineConfig::new(FrameworkVariant::TreeCss, down);
-                cfg.coreset.clusters_per_client = k;
-                cfg.coreset.reweight = reweight;
-                cfg.train.max_epochs = if full { 200 } else { 50 };
-                let rep = run_pipeline(&tr, &te, &cfg, &backend, &meter).expect("pipeline");
-                let cs = rep.coreset.as_ref().unwrap();
-                let train_s = rep.train.as_ref().map_or(0.0, |t| t.wall_s + t.sim_comm_s);
-                table.row(vec![
-                    ds_kind.name().into(),
-                    k.to_string(),
-                    reweight.to_string(),
-                    format!("{:.3}", cs.wall_s + cs.sim_s),
-                    format!("{:.3}", train_s),
-                    format!("{:.3}", rep.total_time_s()),
-                    cs.indices.len().to_string(),
-                ]);
+                for &threads in thread_settings {
+                    let meter = Meter::new(NetConfig::lan_10gbps());
+                    let mut cfg = PipelineConfig::new(FrameworkVariant::TreeCss, down);
+                    cfg.coreset.clusters_per_client = k;
+                    cfg.coreset.reweight = reweight;
+                    cfg.train.max_epochs = if full { 200 } else { 50 };
+                    cfg.threads = threads;
+                    let rep = run_pipeline(&tr, &te, &cfg, &backend, &meter).expect("pipeline");
+                    let cs = rep.coreset.as_ref().unwrap();
+                    let train_s = rep.train.as_ref().map_or(0.0, |t| t.wall_s + t.sim_comm_s);
+                    table.row(vec![
+                        ds_kind.name().into(),
+                        k.to_string(),
+                        reweight.to_string(),
+                        if threads == 0 { "auto".into() } else { threads.to_string() },
+                        format!("{:.3}", cs.wall_s + cs.sim_s),
+                        format!("{:.3}", train_s),
+                        format!("{:.3}", rep.total_time_s()),
+                        cs.indices.len().to_string(),
+                    ]);
+                }
             }
         }
         eprintln!("  done {}", ds_kind.name());

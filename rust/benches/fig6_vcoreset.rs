@@ -68,7 +68,7 @@ fn main() {
                 &tr.y,
                 true,
                 &ClusterCoresetConfig { clusters_per_client: k, ..Default::default() },
-                &mut NativeAssign,
+                &NativeAssign,
                 &meter,
                 &he,
             )
@@ -112,7 +112,7 @@ fn main() {
                 &tr.y,
                 false,
                 &ClusterCoresetConfig { clusters_per_client: k, ..Default::default() },
-                &mut NativeAssign,
+                &NativeAssign,
                 &meter,
                 &he,
             )

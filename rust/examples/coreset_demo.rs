@@ -59,7 +59,7 @@ fn main() -> treecss::Result<()> {
             &tr.y,
             true,
             &ClusterCoresetConfig { clusters_per_client: 8, ..Default::default() },
-            &mut NativeAssign,
+            &NativeAssign,
             &meter,
             &he,
         )?;
@@ -111,7 +111,7 @@ fn main() -> treecss::Result<()> {
             &tr.y,
             false,
             &ClusterCoresetConfig { clusters_per_client: 16, ..Default::default() },
-            &mut NativeAssign,
+            &NativeAssign,
             &meter,
             &he,
         )?;

@@ -111,6 +111,43 @@ impl Table {
     }
 }
 
+/// Table shape for [`thread_sweep`] rows: one row per worker count with a
+/// speedup column relative to the sweep's first entry.
+pub fn thread_sweep_table(title: &str) -> Table {
+    Table::new(title, &["case", "threads", "mean", "std", "speedup"])
+}
+
+/// Bench `f` once per worker count in `threads`, appending one row per
+/// count to `table` (built by [`thread_sweep_table`]). The speedup column
+/// is relative to the first count in the list (put `1` first to report
+/// single- vs multi-thread scaling). Returns the timing samples in sweep
+/// order.
+pub fn thread_sweep<T>(
+    bencher: &Bencher,
+    table: &mut Table,
+    case: &str,
+    threads: &[usize],
+    mut f: impl FnMut(usize) -> T,
+) -> Vec<Sample> {
+    let mut samples = Vec::with_capacity(threads.len());
+    let mut base = f64::NAN;
+    for &t in threads {
+        let s = bencher.run(&format!("{case}/threads={t}"), || f(t));
+        if samples.is_empty() {
+            base = s.mean_s;
+        }
+        table.row(vec![
+            case.to_string(),
+            t.to_string(),
+            fmt_secs(s.mean_s),
+            fmt_secs(s.std_s),
+            format!("{:.2}x", base / s.mean_s.max(1e-12)),
+        ]);
+        samples.push(s);
+    }
+    samples
+}
+
 /// Format seconds adaptively.
 pub fn fmt_secs(s: f64) -> String {
     if s >= 1.0 {
@@ -177,5 +214,25 @@ mod tests {
     fn table_checks_columns() {
         let mut t = Table::new("x", &["a"]);
         t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn thread_sweep_emits_one_row_per_count() {
+        let mut table = thread_sweep_table("sweep");
+        let bencher = Bencher::new(0, 1);
+        let samples = thread_sweep(&bencher, &mut table, "spin", &[1, 2, 4], |t| {
+            let mut x = 0u64;
+            for i in 0..1_000 * t as u64 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert_eq!(samples.len(), 3);
+        let md = table.markdown();
+        assert!(md.contains("| case | threads | mean | std | speedup |"), "{md}");
+        assert!(md.contains("| spin | 1 |"), "{md}");
+        assert!(md.contains("| spin | 4 |"), "{md}");
+        // First row is the baseline: speedup exactly 1.00x.
+        assert!(md.contains("1.00x"), "{md}");
     }
 }

@@ -11,8 +11,8 @@ use std::sync::Arc;
 use crate::coreset::cluster_coreset::{self, ClusterCoresetConfig, CoresetResult};
 use crate::data::{Dataset, Matrix};
 use crate::error::Result;
-use crate::ml::kmeans::{AssignBackend, NativeAssign};
-use crate::ml::knn::{self, Knn, NativePairwise, PairwiseBackend};
+use crate::ml::kmeans::{AssignBackend, ParAssign};
+use crate::ml::knn::{self, Knn, PairwiseBackend, ParPairwise};
 use crate::net::Meter;
 use crate::parties::{deal, KeyServerNode};
 use crate::psi::sched::Pairing;
@@ -22,7 +22,7 @@ use crate::runtime::phases::XlaPhases;
 use crate::splitnn::native::NativePhases;
 use crate::splitnn::trainer::{self, ModelKind, TrainConfig, TrainReport};
 use crate::splitnn::ModelPhases;
-use crate::util::pool::ThreadPool;
+use crate::util::pool::{Parallel, ThreadPool};
 use crate::util::rng::Rng;
 
 /// MPSI topology choice.
@@ -93,24 +93,25 @@ impl Backend {
         Ok(Backend::Xla(Arc::new(XlaPhases::new(Arc::new(engine)))))
     }
 
-    fn phases(&self) -> Box<dyn ModelPhases + '_> {
+    fn phases(&self, par: Parallel) -> Box<dyn ModelPhases + '_> {
         match self {
             Backend::Xla(p) => Box::new(p.as_ref().clone()),
-            Backend::Native => Box::new(NativePhases::default()),
+            // batch_norm stays the Default (the aot.py BATCH constant).
+            Backend::Native => Box::new(NativePhases { par, ..Default::default() }),
         }
     }
 
-    fn assign_backend(&self) -> Box<dyn AssignBackendDyn + '_> {
+    fn assign_backend(&self, par: Parallel) -> Box<dyn AssignBackendDyn + Sync + '_> {
         match self {
             Backend::Xla(p) => Box::new(p.as_ref().clone()),
-            Backend::Native => Box::new(NativeAssign),
+            Backend::Native => Box::new(ParAssign { par }),
         }
     }
 
-    fn pairwise_backend(&self) -> Box<dyn PairwiseBackendDyn + '_> {
+    fn pairwise_backend(&self, par: Parallel) -> Box<dyn PairwiseBackendDyn + Sync + '_> {
         match self {
             Backend::Xla(p) => Box::new(p.as_ref().clone()),
-            Backend::Native => Box::new(NativePairwise),
+            Backend::Native => Box::new(ParPairwise { par }),
         }
     }
 
@@ -122,26 +123,26 @@ impl Backend {
     }
 }
 
-// Object-safe adapters (the ml traits take `&mut impl`, we need dyn here).
+// Object-safe adapters (the ml traits take `&impl`, we need dyn here).
 trait AssignBackendDyn {
-    fn assign_dyn(&mut self, x: &Matrix, c: &Matrix) -> (Vec<u32>, Vec<f32>);
+    fn assign_dyn(&self, x: &Matrix, c: &Matrix) -> (Vec<u32>, Vec<f32>);
 }
 impl<T: AssignBackend> AssignBackendDyn for T {
-    fn assign_dyn(&mut self, x: &Matrix, c: &Matrix) -> (Vec<u32>, Vec<f32>) {
+    fn assign_dyn(&self, x: &Matrix, c: &Matrix) -> (Vec<u32>, Vec<f32>) {
         self.assign(x, c)
     }
 }
-struct DynAssign<'a>(&'a mut dyn AssignBackendDyn);
+struct DynAssign<'a>(&'a (dyn AssignBackendDyn + Sync));
 impl AssignBackend for DynAssign<'_> {
-    fn assign(&mut self, x: &Matrix, c: &Matrix) -> (Vec<u32>, Vec<f32>) {
+    fn assign(&self, x: &Matrix, c: &Matrix) -> (Vec<u32>, Vec<f32>) {
         self.0.assign_dyn(x, c)
     }
 }
 trait PairwiseBackendDyn {
-    fn pairwise_dyn(&mut self, q: &Matrix, r: &Matrix) -> Matrix;
+    fn pairwise_dyn(&self, q: &Matrix, r: &Matrix) -> Matrix;
 }
 impl<T: PairwiseBackend> PairwiseBackendDyn for T {
-    fn pairwise_dyn(&mut self, q: &Matrix, r: &Matrix) -> Matrix {
+    fn pairwise_dyn(&self, q: &Matrix, r: &Matrix) -> Matrix {
         self.pairwise_sq(q, r)
     }
 }
@@ -159,6 +160,11 @@ pub struct PipelineConfig {
     pub seed: u64,
     /// Paillier modulus bits for the HE envelope.
     pub he_bits: usize,
+    /// Worker threads for every compute hot path (K-Means assignment,
+    /// per-party clustering, matmul kernels, pairwise distances).
+    /// 0 = all logical cores. Results are identical at any setting; the
+    /// bench harness sweeps 1..N to measure scaling.
+    pub threads: usize,
 }
 
 impl PipelineConfig {
@@ -177,6 +183,7 @@ impl PipelineConfig {
             train: TrainConfig::new(model),
             seed: 2024,
             he_bits: 512,
+            threads: 0,
         }
     }
 }
@@ -217,6 +224,7 @@ pub fn run_pipeline(
     let sw = crate::util::timer::Stopwatch::start();
     let mut rng = Rng::new(cfg.seed);
     let m = cfg.n_clients;
+    let par = Parallel::auto(cfg.threads);
 
     // ---- parties ----------------------------------------------------------
     let (clients, label_owner) = deal(train_ds, m, &mut rng);
@@ -249,16 +257,25 @@ pub fn run_pipeline(
     let y = label_owner.aligned_labels(&aligned)?;
 
     // ---- phase 2: coreset (CSS variants) -----------------------------------
-    let phases = backend.phases();
+    let phases = backend.phases(par);
     let (coreset, train_slices, train_y, train_w) = if cfg.variant.uses_coreset() {
-        let mut ab = backend.assign_backend();
-        let mut dyn_ab = DynAssign(ab.as_mut());
+        // Split the budget between the per-party fan-out and the assignment
+        // kernel inside each fit, so the two parallel levels compose to
+        // ~cfg.threads workers instead of multiplying (oversubscription).
+        // PipelineConfig::threads is the single knob on this path: it
+        // deliberately overrides any caller-set cfg.coreset.threads.
+        let outer = par.threads().min(m.max(1));
+        let inner = Parallel::new(par.threads() / outer);
+        let ab = backend.assign_backend(inner);
+        let dyn_ab = DynAssign(ab.as_ref());
+        let mut ccfg = cfg.coreset.clone();
+        ccfg.threads = outer;
         let cs = cluster_coreset::run(
             &slices,
             &y,
             train_ds.task.is_classification(),
-            &cfg.coreset,
-            &mut dyn_ab,
+            &ccfg,
+            &dyn_ab,
             meter,
             he,
         )?;
@@ -294,7 +311,7 @@ pub fn run_pipeline(
         Downstream::Knn(k) => {
             // VFL-KNN: per-client squared distances, summed at the
             // aggregator; coreset weights join the vote.
-            let mut pw = backend.pairwise_backend();
+            let pw = backend.pairwise_backend(par);
             let parts: Vec<Matrix> = train_slices
                 .iter()
                 .zip(&test_slices)
@@ -408,6 +425,29 @@ mod tests {
         let rep = run_pipeline(&tr, &te, &cfg, &Backend::Native, &meter).unwrap();
         assert!(rep.quality > 0.9, "knn acc {}", rep.quality);
         assert!(rep.train.is_none());
+    }
+
+    #[test]
+    fn pipeline_invariant_under_thread_count() {
+        // `threads` is a pure perf knob: every parallel hot path chunks
+        // work deterministically, so quality/coreset/bytes must not move.
+        let mut rng = Rng::new(6);
+        let ds = PaperDataset::Ri.generate(0.02, &mut rng);
+        let (tr, te) = ds.split(0.7, &mut rng);
+        let run_with = |threads: usize| {
+            let meter = Meter::new(NetConfig::lan_10gbps());
+            let mut cfg = fast_cfg(FrameworkVariant::TreeCss, Downstream::Train(ModelKind::Lr));
+            cfg.threads = threads;
+            run_pipeline(&tr, &te, &cfg, &Backend::Native, &meter).unwrap()
+        };
+        let serial = run_with(1);
+        let par = run_with(4);
+        assert_eq!(serial.quality, par.quality);
+        assert_eq!(
+            serial.coreset.as_ref().unwrap().indices,
+            par.coreset.as_ref().unwrap().indices
+        );
+        assert_eq!(serial.total_bytes, par.total_bytes);
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::ml::kmeans::{AssignBackend, KMeans};
 use crate::net::msg::{self, CtMessage, HybridEnvelope};
 use crate::net::{Meter, PartyId};
 use crate::psi::common::HeContext;
+use crate::util::pool::Parallel;
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -34,6 +35,13 @@ pub struct ClusterCoresetConfig {
     pub reweight: bool,
     pub kmeans_iters: usize,
     pub seed: u64,
+    /// Worker threads for the per-party clustering fan-out (0 = all
+    /// logical cores). The fan-out is order-preserving and each party's
+    /// fit is independent, so the result is identical at any setting.
+    /// NB: `coordinator::run_pipeline` overrides this from its single
+    /// `PipelineConfig::threads` knob; set it directly only when calling
+    /// `run` yourself.
+    pub threads: usize,
 }
 
 impl Default for ClusterCoresetConfig {
@@ -43,6 +51,7 @@ impl Default for ClusterCoresetConfig {
             reweight: true,
             kmeans_iters: 25,
             seed: 99,
+            threads: 0,
         }
     }
 }
@@ -77,7 +86,7 @@ pub fn run(
     y: &[f32],
     is_classification: bool,
     cfg: &ClusterCoresetConfig,
-    backend: &mut impl AssignBackend,
+    backend: &(impl AssignBackend + Sync),
     meter: &Meter,
     he: &HeContext,
 ) -> Result<CoresetResult> {
@@ -85,26 +94,31 @@ pub fn run(
     let mut sim_s = 0.0f64;
     let mut rng = Rng::new(cfg.seed ^ 0xC0E5E7);
     let n = y.len();
+    let par = Parallel::auto(cfg.threads);
 
-    // Steps 1–3 per client: cluster, weight, send CT message.
-    let mut client_data = Vec::with_capacity(slices.len());
-    for (m, x) in slices.iter().enumerate() {
+    // Steps 1–2, every client concurrently: cluster the local slice and
+    // compute rank-based weights. Pure per-party compute — the paper's
+    // clients run these on their own machines, so the fan-out also makes
+    // the simulation honest about available parallelism.
+    let fits: Vec<(Vec<f32>, Vec<u32>, Vec<f32>)> = par.par_map(slices, |m, x| {
         assert_eq!(x.rows(), n, "client {m} misaligned");
         let mut km = KMeans::new(cfg.clusters_per_client);
         km.max_iters = cfg.kmeans_iters;
         km.seed = cfg.seed ^ (m as u64) << 8;
         let fit = km.fit(x, backend);
         let w = local_weights(&fit.assign, &fit.dist, fit.k);
+        (w, fit.assign, fit.dist)
+    });
 
-        // Step 3: seal (w, c, ed) per sample; client → aggregator → label
-        // owner. The aggregator concatenates messages so the label owner
-        // cannot attribute sources; we charge both hops.
-        let ct_msg = CtMessage {
-            client: m as u32,
-            weights: w.clone(),
-            clusters: fit.assign.clone(),
-            dists: fit.dist.clone(),
-        };
+    // Step 3 per client, serialized: seal (w, c, ed) per sample; client →
+    // aggregator → label owner. The aggregator concatenates messages so
+    // the label owner cannot attribute sources; we charge both hops. The
+    // shared RNG (envelope nonces) and the meter keep their exact
+    // pre-parallelization consumption order here, so runs are reproducible
+    // at any thread count.
+    let mut client_data = Vec::with_capacity(slices.len());
+    for (m, (w, clusters, dists)) in fits.into_iter().enumerate() {
+        let ct_msg = CtMessage { client: m as u32, weights: w, clusters, dists };
         let sealed = HybridEnvelope::seal(&mut rng, &he.pk, &ct_msg.encode())?;
         let wire = sealed.encode().len() as u64;
         sim_s += meter.charge(PartyId::Client(m as u32), PartyId::Aggregator, "coreset/ct", wire);
@@ -175,7 +189,7 @@ mod tests {
             &ds.y,
             ds.task.is_classification(),
             &cfg,
-            &mut NativeAssign,
+            &NativeAssign,
             &meter,
             &he,
         )
@@ -250,7 +264,7 @@ mod tests {
             &ds.y,
             true,
             &ClusterCoresetConfig::default(),
-            &mut NativeAssign,
+            &NativeAssign,
             &meter,
             &he,
         )
@@ -261,5 +275,29 @@ mod tests {
             meter.total_bytes("coreset/"),
             "every coreset byte transits the aggregator"
         );
+    }
+
+    #[test]
+    fn result_invariant_under_thread_count() {
+        // The per-party fan-out is order-preserving and the HE/meter phase
+        // stays serialized, so the coreset must be identical at any thread
+        // count — the property that makes `threads` a pure perf knob.
+        let mut rng = crate::util::rng::Rng::new(7);
+        let ds = synth::blobs("t", 300, 9, 2, 2, 3.0, 1.0, &mut rng);
+        let part = VerticalPartition::even(9, 3);
+        let slices: Vec<Matrix> = (0..3).map(|c| part.slice(&ds.x, c)).collect();
+        let run_with = |threads: usize| {
+            let meter = Meter::new(NetConfig::lan_10gbps());
+            let he = HeContext::for_tests();
+            let cfg = ClusterCoresetConfig { threads, ..Default::default() };
+            run(&slices, &ds.y, true, &cfg, &NativeAssign, &meter, &he).unwrap()
+        };
+        let serial = run_with(1);
+        for threads in [2usize, 4] {
+            let par = run_with(threads);
+            assert_eq!(par.indices, serial.indices, "threads={threads}");
+            assert_eq!(par.weights, serial.weights, "threads={threads}");
+            assert_eq!(par.bytes, serial.bytes, "threads={threads}");
+        }
     }
 }

@@ -107,7 +107,7 @@ pub fn for_kmeans(slices: &[Matrix], k: usize, size: usize, seed: u64) -> VCores
     let x = Matrix::hcat(&refs).expect("aligned slices");
     let mut km = KMeans::new(k);
     km.seed = seed;
-    let fit = km.fit(&x, &mut NativeAssign);
+    let fit = km.fit(&x, &NativeAssign);
     let sens: Vec<f32> = fit.dist.iter().map(|&d| d * d).collect();
     importance_sample(&sens, size, &mut Rng::new(seed ^ 0x5EED))
 }

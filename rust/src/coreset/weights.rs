@@ -102,4 +102,54 @@ mod tests {
         assert_eq!(w.len(), 2);
         assert!(w.iter().all(|&x| x > 0.0));
     }
+
+    /// Random (assign, dist, k) instance for the property tests.
+    fn gen_case(r: &mut crate::util::rng::Rng) -> (Vec<u32>, Vec<f32>, usize) {
+        let k = 1 + r.below_usize(8);
+        let n = 1 + r.below_usize(200);
+        let assign: Vec<u32> = (0..n).map(|_| r.below(k as u64) as u32).collect();
+        let dist: Vec<f32> = (0..n).map(|_| r.f32() * 10.0).collect();
+        (assign, dist, k)
+    }
+
+    #[test]
+    fn prop_weights_positive_and_at_most_one() {
+        crate::util::check::forall_default(gen_case, |(assign, dist, k)| {
+            let w = local_weights(assign, dist, *k);
+            w.len() == assign.len() && w.iter().all(|&wi| wi > 0.0 && wi <= 1.0)
+        });
+    }
+
+    #[test]
+    fn prop_cluster_weight_mass_matches_cluster_size() {
+        // Ranks 1..s scaled by 1/s sum to (s+1)/2 — the per-cluster mass
+        // depends only on |S_m^c|, never on the distances.
+        crate::util::check::forall_default(gen_case, |(assign, dist, k)| {
+            let w = local_weights(assign, dist, *k);
+            (0..*k as u32).all(|c| {
+                let members: Vec<usize> =
+                    (0..assign.len()).filter(|&i| assign[i] == c).collect();
+                let s = members.len();
+                let mass: f64 = members.iter().map(|&i| w[i] as f64).sum();
+                let want = s as f64 * (s as f64 + 1.0) / 2.0 / s.max(1) as f64;
+                (mass - want).abs() < 1e-3 * want.max(1.0)
+            })
+        });
+    }
+
+    #[test]
+    fn prop_weights_distance_monotone_within_cluster() {
+        // Strictly closer to the centroid ⇒ strictly more representative.
+        crate::util::check::forall_default(gen_case, |(assign, dist, k)| {
+            let w = local_weights(assign, dist, *k);
+            for i in 0..assign.len() {
+                for j in 0..assign.len() {
+                    if assign[i] == assign[j] && dist[i] < dist[j] && w[i] <= w[j] {
+                        return false;
+                    }
+                }
+            }
+            true
+        });
+    }
 }

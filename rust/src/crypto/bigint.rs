@@ -1003,4 +1003,105 @@ mod tests {
         let big = BigUint::from_hex("10000000000000000").unwrap(); // 2^64
         assert!(n(u64::MAX).lt(&big));
     }
+
+    /// 2^(64·limbs) built from public ops (shl_small caps at 63 bits).
+    fn pow2_64k(limbs: usize) -> BigUint {
+        let two_64 = BigUint::from_u64(u64::MAX).add(&BigUint::one());
+        let mut p = BigUint::one();
+        for _ in 0..limbs {
+            p = p.mul(&two_64);
+        }
+        p
+    }
+
+    #[test]
+    fn prop_zero_operand_identities() {
+        crate::util::check::forall(
+            crate::util::check::Config { cases: 64, seed: 0x2E80 },
+            |r| BigUint::random_bits(r, 1 + r.below_usize(256)),
+            |a| {
+                let zero = BigUint::zero();
+                let one = BigUint::one();
+                let m = a.add(&BigUint::from_u64(2)); // modulus >= 2
+                a.add(&zero) == *a
+                    && zero.add(a) == *a
+                    && a.sub(&zero) == *a
+                    && a.sub(a).is_zero()
+                    && a.mul(&zero).is_zero()
+                    && zero.mul(a).is_zero()
+                    && zero.div_rem(&m) == (zero.clone(), zero.clone())
+                    && a.gcd(&zero) == *a
+                    && zero.gcd(a) == *a
+                    && a.lcm(&zero).is_zero()
+                    && a.mod_pow(&zero, &m).is_one()
+                    && (a.is_zero() || zero.mod_pow(a, &m).is_zero())
+                    && zero.to_bytes_be().is_empty()
+                    && BigUint::from_bytes_be(&[]) == zero
+                    && one.mul(a) == *a
+            },
+        );
+    }
+
+    #[test]
+    fn prop_limb_boundary_carries() {
+        // (2^(64k) - 1) + r must carry across every limb boundary; the
+        // subtraction must borrow all the way back down.
+        crate::util::check::forall(
+            crate::util::check::Config { cases: 64, seed: 0xCA881 },
+            |r| (1 + r.below_usize(4), BigUint::random_bits(r, 64).add(&BigUint::one())),
+            |(k, r)| {
+                let p = pow2_64k(*k); // 2^(64k)
+                let max = p.sub(&BigUint::one()); // k limbs of u64::MAX
+                if max.bit_len() != 64 * k || p.bit_len() != 64 * k + 1 {
+                    return false;
+                }
+                // +1 ripples a carry through all k limbs.
+                if max.add(&BigUint::one()) != p {
+                    return false;
+                }
+                // Round-trips across the boundary in both directions.
+                let up = max.add(r);
+                up.sub(r) == max && up.sub(&max) == *r && p.sub(&p.sub(r)) == *r
+            },
+        );
+    }
+
+    #[test]
+    fn prop_modpow_identities() {
+        // a^(e1+e2) = a^e1·a^e2 and (ab)^e = a^e·b^e, through both the
+        // Montgomery path (odd multi-limb m) and the generic even-m path.
+        crate::util::check::forall(
+            crate::util::check::Config { cases: 24, seed: 0x90D },
+            |r| {
+                let mut m = BigUint::random_bits(r, 130).add(&BigUint::from_u64(3));
+                if m.is_even() {
+                    m = m.add(&BigUint::one()); // odd, >= 2 limbs: Montgomery
+                }
+                let a = BigUint::random_bits(r, 160);
+                let b = BigUint::random_bits(r, 160);
+                let e1 = BigUint::random_bits(r, 48);
+                let e2 = BigUint::random_bits(r, 48);
+                (m, a, b, e1, e2)
+            },
+            |(m, a, b, e1, e2)| {
+                for m in [m.clone(), m.add(&BigUint::one())] {
+                    // odd then even modulus
+                    let lhs = a.mod_pow(&e1.add(e2), &m);
+                    let rhs = a.mod_pow(e1, &m).mul_mod(&a.mod_pow(e2, &m), &m);
+                    if lhs != rhs {
+                        return false;
+                    }
+                    let prod = a.mul(b).mod_pow(e1, &m);
+                    let split = a.mod_pow(e1, &m).mul_mod(&b.mod_pow(e1, &m), &m);
+                    if prod != split {
+                        return false;
+                    }
+                    if a.mod_pow(&BigUint::one(), &m) != a.rem(&m) {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
 }

@@ -4,9 +4,12 @@
 //! type exists for data plumbing, the pure-Rust reference models (used in
 //! parity tests and as a no-artifact fallback), K-Means bookkeeping, and
 //! the V-coreset baseline. The matmul is cache-blocked since the fallback
-//! path uses it in inner loops.
+//! path uses it in inner loops, and the `*_par` variants chunk output rows
+//! across a [`Parallel`] worker set — per-row accumulation order is
+//! unchanged, so results are bitwise identical at any thread count.
 
 use crate::error::{Error, Result};
+use crate::util::pool::{concat_chunks, Parallel};
 
 /// Row-major dense matrix of f32.
 #[derive(Clone, PartialEq)]
@@ -161,21 +164,17 @@ impl Matrix {
         out
     }
 
-    /// Cache-blocked matmul: C = A · B.
-    pub fn matmul(&self, b: &Matrix) -> Result<Matrix> {
-        if self.cols != b.rows {
-            return Err(Error::Data(format!(
-                "matmul {}x{} · {}x{}",
-                self.rows, self.cols, b.rows, b.cols
-            )));
-        }
-        let (m, k, n) = (self.rows, self.cols, b.cols);
-        let mut c = vec![0.0f32; m * n];
+    /// Cache-blocked matmul of rows `lo..hi` of `self` against `b`,
+    /// returned as a flat `(hi-lo) × b.cols` row-major buffer.
+    fn matmul_rows(&self, b: &Matrix, lo: usize, hi: usize) -> Vec<f32> {
+        let (k, n) = (self.cols, b.cols);
+        let rows = hi - lo;
+        let mut c = vec![0.0f32; rows * n];
         const BK: usize = 64;
         for kb in (0..k).step_by(BK) {
             let kend = (kb + BK).min(k);
-            for i in 0..m {
-                let arow = &self.data[i * k..(i + 1) * k];
+            for i in 0..rows {
+                let arow = &self.data[(lo + i) * k..(lo + i + 1) * k];
                 let crow = &mut c[i * n..(i + 1) * n];
                 for kk in kb..kend {
                     let a = arow[kk];
@@ -189,31 +188,63 @@ impl Matrix {
                 }
             }
         }
-        Ok(Matrix { rows: m, cols: n, data: c })
+        c
+    }
+
+    /// Cache-blocked matmul: C = A · B.
+    pub fn matmul(&self, b: &Matrix) -> Result<Matrix> {
+        self.matmul_par(b, Parallel::serial())
+    }
+
+    /// [`Matrix::matmul`] with output rows chunked across `par` workers.
+    /// Falls back to inline execution below the kernel work cutoff.
+    pub fn matmul_par(&self, b: &Matrix, par: Parallel) -> Result<Matrix> {
+        if self.cols != b.rows {
+            return Err(Error::Data(format!(
+                "matmul {}x{} · {}x{}",
+                self.rows, self.cols, b.rows, b.cols
+            )));
+        }
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let par = par.for_work(m.saturating_mul(k).saturating_mul(n));
+        let chunks = par.par_chunks(m, |r| self.matmul_rows(b, r.start, r.end));
+        Ok(Matrix { rows: m, cols: n, data: concat_chunks(chunks, m * n) })
     }
 
     /// C = Aᵀ · B without materializing Aᵀ (gradient contraction).
     pub fn matmul_at_b(&self, b: &Matrix) -> Result<Matrix> {
+        self.matmul_at_b_par(b, Parallel::serial())
+    }
+
+    /// [`Matrix::matmul_at_b`] with the output rows (the contraction's `k`
+    /// dimension) chunked across `par` workers. Each output cell keeps the
+    /// serial accumulation order over samples, so the result is bitwise
+    /// identical at any thread count.
+    pub fn matmul_at_b_par(&self, b: &Matrix, par: Parallel) -> Result<Matrix> {
         if self.rows != b.rows {
             return Err(Error::Data("matmul_at_b row mismatch".into()));
         }
         let (m, k, n) = (self.rows, self.cols, b.cols);
-        let mut c = vec![0.0f32; k * n];
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            let brow = &b.data[i * n..(i + 1) * n];
-            for kk in 0..k {
-                let a = arow[kk];
-                if a == 0.0 {
-                    continue;
-                }
-                let crow = &mut c[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    crow[j] += a * brow[j];
+        let par = par.for_work(m.saturating_mul(k).saturating_mul(n));
+        let chunks = par.par_chunks(k, |range| {
+            let mut c = vec![0.0f32; range.len() * n];
+            for i in 0..m {
+                let arow = &self.data[i * k..(i + 1) * k];
+                let brow = &b.data[i * n..(i + 1) * n];
+                for (kc, kk) in range.clone().enumerate() {
+                    let a = arow[kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let crow = &mut c[kc * n..(kc + 1) * n];
+                    for j in 0..n {
+                        crow[j] += a * brow[j];
+                    }
                 }
             }
-        }
-        Ok(Matrix { rows: k, cols: n, data: c })
+            c
+        });
+        Ok(Matrix { rows: k, cols: n, data: concat_chunks(chunks, k * n) })
     }
 
     /// Elementwise in-place map.
@@ -393,5 +424,38 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(3);
         let a = Matrix::from_fn(4, 7, |_, _| rng.gaussian_f32());
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matmul_par_bitwise_matches_serial() {
+        // 160·96·80 ≈ 1.2M flops — comfortably above PAR_MIN_WORK, so the
+        // chunked path really runs; row-chunking must be bitwise exact.
+        let mut rng = crate::util::rng::Rng::new(10);
+        let a = Matrix::from_fn(160, 96, |_, _| rng.gaussian_f32());
+        let b = Matrix::from_fn(96, 80, |_, _| rng.gaussian_f32());
+        let serial = a.matmul(&b).unwrap();
+        for t in [2usize, 4, 7] {
+            let par = a.matmul_par(&b, Parallel::new(t)).unwrap();
+            assert_eq!(par, serial, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn matmul_at_b_par_bitwise_matches_serial() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let a = Matrix::from_fn(200, 64, |_, _| rng.gaussian_f32());
+        let b = Matrix::from_fn(200, 48, |_, _| rng.gaussian_f32());
+        let serial = a.matmul_at_b(&b).unwrap();
+        for t in [2usize, 4, 8] {
+            let par = a.matmul_at_b_par(&b, Parallel::new(t)).unwrap();
+            assert_eq!(par, serial, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn matmul_par_shape_checked() {
+        let a = m(2, 3, &[0.0; 6]);
+        assert!(a.matmul_par(&m(2, 2, &[0.0; 4]), Parallel::new(4)).is_err());
+        assert!(a.matmul_at_b_par(&m(3, 2, &[0.0; 6]), Parallel::new(4)).is_err());
     }
 }

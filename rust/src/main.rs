@@ -21,14 +21,14 @@ use treecss::coordinator::FrameworkVariant;
 use treecss::coreset::cluster_coreset;
 use treecss::data::synth::{self, PaperDataset};
 use treecss::data::VerticalPartition;
-use treecss::ml::kmeans::NativeAssign;
+use treecss::ml::kmeans::ParAssign;
 use treecss::net::{Meter, NetConfig};
 use treecss::psi::common::HeContext;
 use treecss::psi::sched::Pairing;
 use treecss::psi::tree::{run_tree, TreeMpsiConfig};
 use treecss::psi::{path::run_path, star::run_star, TpsiProtocol};
 use treecss::splitnn::trainer::ModelKind;
-use treecss::util::pool::ThreadPool;
+use treecss::util::pool::{Parallel, ThreadPool};
 use treecss::util::rng::Rng;
 use treecss::{bench, Result};
 
@@ -73,6 +73,7 @@ run options:
   --clusters <k per client>     (default 8)
   --lr <f32>  --epochs <n>      training hyper-parameters
   --backend xla|native          phase backend (default xla)
+  --threads <n>                 compute worker threads (0 = all cores)
   --seed <u64>
 
 mpsi options:
@@ -81,7 +82,7 @@ mpsi options:
   --pairing volume|order  --rsa-bits <n>
 
 coreset options:
-  --dataset ... --scale ... --clusters <k> --no-reweight
+  --dataset ... --scale ... --clusters <k> --threads <n> --no-reweight
 ";
 
 fn parse_dataset(s: &str) -> Result<PaperDataset> {
@@ -128,6 +129,7 @@ fn cmd_run(cli: &Cli) -> Result<()> {
     cfg.coreset.clusters_per_client = cli.opt_parse("clusters", 8)?;
     cfg.train.lr = cli.opt_parse("lr", 0.05)?;
     cfg.train.max_epochs = cli.opt_parse("epochs", 100)?;
+    cfg.threads = cli.opt_parse("threads", 0)?;
     let backend = match cli.opt_or("backend", "xla").as_str() {
         "xla" => Backend::xla_default()?,
         "native" => Backend::Native,
@@ -232,9 +234,15 @@ fn cmd_coreset(cli: &Cli) -> Result<()> {
     let slices: Vec<_> = (0..3).map(|c| part.slice(&ds.x, c)).collect();
     let meter = Meter::new(NetConfig::lan_10gbps());
     let he = HeContext::generate(&mut rng, 512);
+    // Same worker split as run_pipeline: parties fan out, the assignment
+    // kernel inside each fit takes the leftover budget.
+    let par = Parallel::auto(cli.opt_parse("threads", 0)?);
+    let outer = par.threads().min(3);
+    let inner = Parallel::new(par.threads() / outer);
     let cfg = cluster_coreset::ClusterCoresetConfig {
         clusters_per_client: k,
         reweight: !cli.flag("no-reweight"),
+        threads: outer,
         ..Default::default()
     };
     let r = cluster_coreset::run(
@@ -242,7 +250,7 @@ fn cmd_coreset(cli: &Cli) -> Result<()> {
         &ds.y,
         ds.task.is_classification(),
         &cfg,
-        &mut NativeAssign,
+        &ParAssign { par: inner },
         &meter,
         &he,
     )?;

@@ -6,41 +6,95 @@
 //! natively; this module is the native engine and the shared orchestration.
 
 use crate::data::Matrix;
+use crate::util::pool::Parallel;
 use crate::util::rng::Rng;
 
 /// Assignment backend: given rows and centroids, return (assign, dist).
 /// `dist` is the Euclidean distance of each row to its centroid.
+///
+/// Takes `&self` so one backend instance can serve several party threads
+/// concurrently (per-party clustering in `coreset::cluster_coreset` fans
+/// out over a shared backend).
 pub trait AssignBackend {
-    fn assign(&mut self, x: &Matrix, centroids: &Matrix) -> (Vec<u32>, Vec<f32>);
+    fn assign(&self, x: &Matrix, centroids: &Matrix) -> (Vec<u32>, Vec<f32>);
 }
 
-/// Pure-Rust assignment (used in tests and when artifacts are absent).
+/// Assignment kernel over the row range `lo..hi`; `c2` holds the
+/// precomputed per-centroid |c|². Shared by the serial and parallel
+/// backends so both produce bitwise-identical results.
+fn assign_range(
+    x: &Matrix,
+    centroids: &Matrix,
+    c2: &[f32],
+    lo: usize,
+    hi: usize,
+) -> (Vec<u32>, Vec<f32>) {
+    let k = centroids.rows();
+    let mut assign = Vec::with_capacity(hi - lo);
+    let mut dist = Vec::with_capacity(hi - lo);
+    for r in lo..hi {
+        let row = x.row(r);
+        // |x-c|² = |x|² + |c|² − 2x·c.
+        let x2: f32 = row.iter().map(|v| v * v).sum();
+        let mut best = 0u32;
+        let mut best_d = f32::INFINITY;
+        for c in 0..k {
+            let dot: f32 = row.iter().zip(centroids.row(c)).map(|(a, b)| a * b).sum();
+            let d = x2 + c2[c] - 2.0 * dot;
+            if d < best_d {
+                best_d = d;
+                best = c as u32;
+            }
+        }
+        assign.push(best);
+        dist.push(best_d.max(0.0).sqrt());
+    }
+    (assign, dist)
+}
+
+fn centroid_norms(centroids: &Matrix) -> Vec<f32> {
+    (0..centroids.rows())
+        .map(|c| centroids.row(c).iter().map(|v| v * v).sum())
+        .collect()
+}
+
+/// Pure-Rust serial assignment (tests, and the no-artifact fallback on
+/// small inputs).
 pub struct NativeAssign;
 
 impl AssignBackend for NativeAssign {
-    fn assign(&mut self, x: &Matrix, centroids: &Matrix) -> (Vec<u32>, Vec<f32>) {
-        let k = centroids.rows();
+    fn assign(&self, x: &Matrix, centroids: &Matrix) -> (Vec<u32>, Vec<f32>) {
+        let c2 = centroid_norms(centroids);
+        assign_range(x, centroids, &c2, 0, x.rows())
+    }
+}
+
+/// Parallel native assignment: rows chunked across `par` workers; runs
+/// inline below the kernel work cutoff (rows × k × dims distance terms).
+/// Bitwise identical to [`NativeAssign`] at any thread count.
+#[derive(Clone, Copy, Debug)]
+pub struct ParAssign {
+    pub par: Parallel,
+}
+
+impl AssignBackend for ParAssign {
+    fn assign(&self, x: &Matrix, centroids: &Matrix) -> (Vec<u32>, Vec<f32>) {
+        let work = x
+            .rows()
+            .saturating_mul(centroids.rows())
+            .saturating_mul(x.cols().max(1));
+        let par = self.par.for_work(work);
+        let c2 = centroid_norms(centroids);
+        let mut chunks =
+            par.par_chunks(x.rows(), |r| assign_range(x, centroids, &c2, r.start, r.end));
+        if chunks.len() == 1 {
+            return chunks.pop().unwrap();
+        }
         let mut assign = Vec::with_capacity(x.rows());
         let mut dist = Vec::with_capacity(x.rows());
-        // |x-c|² = |x|² + |c|² − 2x·c; precompute |c|².
-        let c2: Vec<f32> = (0..k)
-            .map(|c| centroids.row(c).iter().map(|v| v * v).sum())
-            .collect();
-        for r in 0..x.rows() {
-            let row = x.row(r);
-            let x2: f32 = row.iter().map(|v| v * v).sum();
-            let mut best = 0u32;
-            let mut best_d = f32::INFINITY;
-            for c in 0..k {
-                let dot: f32 = row.iter().zip(centroids.row(c)).map(|(a, b)| a * b).sum();
-                let d = x2 + c2[c] - 2.0 * dot;
-                if d < best_d {
-                    best_d = d;
-                    best = c as u32;
-                }
-            }
-            assign.push(best);
-            dist.push(best_d.max(0.0).sqrt());
+        for (a, d) in chunks {
+            assign.extend_from_slice(&a);
+            dist.extend_from_slice(&d);
         }
         (assign, dist)
     }
@@ -62,7 +116,7 @@ impl KMeans {
     }
 
     /// Run Lloyd's algorithm with k-means++ seeding.
-    pub fn fit(&self, x: &Matrix, backend: &mut impl AssignBackend) -> KMeansResult {
+    pub fn fit(&self, x: &Matrix, backend: &impl AssignBackend) -> KMeansResult {
         assert!(x.rows() > 0, "empty input");
         let k = self.k.min(x.rows());
         let mut rng = Rng::new(self.seed);
@@ -188,7 +242,7 @@ mod tests {
     fn recovers_separated_blobs() {
         let mut rng = Rng::new(1);
         let ds = synth::blobs("t", 300, 4, 3, 1, 8.0, 0.3, &mut rng);
-        let r = KMeans::new(3).fit(&ds.x, &mut NativeAssign);
+        let r = KMeans::new(3).fit(&ds.x, &NativeAssign);
         // Every cluster should be label-pure for well-separated blobs.
         for c in 0..3u32 {
             let mem = r.members(c);
@@ -203,8 +257,8 @@ mod tests {
     fn inertia_decreases_with_k() {
         let mut rng = Rng::new(2);
         let ds = synth::blobs("t", 400, 5, 2, 4, 3.0, 1.0, &mut rng);
-        let i2 = KMeans::new(2).fit(&ds.x, &mut NativeAssign).inertia();
-        let i8 = KMeans::new(8).fit(&ds.x, &mut NativeAssign).inertia();
+        let i2 = KMeans::new(2).fit(&ds.x, &NativeAssign).inertia();
+        let i8 = KMeans::new(8).fit(&ds.x, &NativeAssign).inertia();
         assert!(i8 < i2, "inertia k=8 {i8} < k=2 {i2}");
     }
 
@@ -212,7 +266,7 @@ mod tests {
     fn k_capped_at_n() {
         let mut rng = Rng::new(3);
         let ds = synth::blobs("t", 5, 3, 2, 1, 4.0, 0.5, &mut rng);
-        let r = KMeans::new(10).fit(&ds.x, &mut NativeAssign);
+        let r = KMeans::new(10).fit(&ds.x, &NativeAssign);
         assert_eq!(r.k, 5);
         assert_eq!(r.centroids.rows(), 5);
     }
@@ -221,7 +275,7 @@ mod tests {
     fn assignments_minimize_distance() {
         let mut rng = Rng::new(4);
         let ds = synth::blobs("t", 100, 3, 2, 2, 3.0, 1.0, &mut rng);
-        let r = KMeans::new(4).fit(&ds.x, &mut NativeAssign);
+        let r = KMeans::new(4).fit(&ds.x, &NativeAssign);
         for i in 0..ds.n() {
             let assigned = r.assign[i] as usize;
             for c in 0..r.k {
@@ -246,8 +300,34 @@ mod tests {
     fn deterministic_given_seed() {
         let mut rng = Rng::new(5);
         let ds = synth::blobs("t", 120, 4, 2, 2, 3.0, 1.0, &mut rng);
-        let a = KMeans::new(3).fit(&ds.x, &mut NativeAssign);
-        let b = KMeans::new(3).fit(&ds.x, &mut NativeAssign);
+        let a = KMeans::new(3).fit(&ds.x, &NativeAssign);
+        let b = KMeans::new(3).fit(&ds.x, &NativeAssign);
         assert_eq!(a.assign, b.assign);
+    }
+
+    #[test]
+    fn par_assign_bitwise_matches_serial() {
+        // 4000 rows × 6 centroids × 16 dims = 384k work units > PAR_MIN_WORK,
+        // so the chunked path genuinely runs.
+        let mut rng = Rng::new(6);
+        let ds = synth::blobs("t", 4000, 16, 3, 2, 4.0, 1.0, &mut rng);
+        let centroids = ds.x.select_rows(&rng.sample_indices(ds.n(), 6));
+        let (sa, sd) = NativeAssign.assign(&ds.x, &centroids);
+        for t in [1usize, 2, 4, 8] {
+            let backend = ParAssign { par: Parallel::new(t) };
+            let (pa, pd) = backend.assign(&ds.x, &centroids);
+            assert_eq!(pa, sa, "threads={t}");
+            assert_eq!(pd, sd, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn fit_with_par_backend_matches_serial_fit() {
+        let mut rng = Rng::new(7);
+        let ds = synth::blobs("t", 600, 8, 2, 2, 3.0, 1.0, &mut rng);
+        let serial = KMeans::new(4).fit(&ds.x, &NativeAssign);
+        let par = KMeans::new(4).fit(&ds.x, &ParAssign { par: Parallel::new(4) });
+        assert_eq!(serial.assign, par.assign);
+        assert_eq!(serial.dist, par.dist);
     }
 }

@@ -8,35 +8,72 @@
 //!
 //! The pairwise-distance hot-spot can run through the `pairwise_*` XLA
 //! artifact (Pallas kernel) or natively; both produce squared distances.
+//! The native kernel chunks query rows across a [`Parallel`] worker set
+//! ([`ParPairwise`]) with bitwise-identical results at any thread count.
 
 use crate::data::Matrix;
 use crate::ml::metrics::majority_vote;
+use crate::util::pool::{concat_chunks, Parallel};
 
 /// Pairwise squared-distance backend.
+///
+/// `&self` so one backend can serve concurrent callers (mirrors
+/// [`crate::ml::kmeans::AssignBackend`]).
 pub trait PairwiseBackend {
     /// (|Q| × |R|) squared Euclidean distances.
-    fn pairwise_sq(&mut self, q: &Matrix, r: &Matrix) -> Matrix;
+    fn pairwise_sq(&self, q: &Matrix, r: &Matrix) -> Matrix;
 }
 
-/// Pure-Rust pairwise distances.
+/// Shared kernel: query rows `lo..hi` against every reference row, with
+/// `r2` the precomputed per-reference |r|². Flat row-major output.
+fn pairwise_rows(q: &Matrix, r: &Matrix, r2: &[f32], lo: usize, hi: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity((hi - lo) * r.rows());
+    for qi in lo..hi {
+        let qrow = q.row(qi);
+        let q2: f32 = qrow.iter().map(|v| v * v).sum();
+        for ri in 0..r.rows() {
+            let dot: f32 = qrow.iter().zip(r.row(ri)).map(|(a, b)| a * b).sum();
+            out.push((q2 + r2[ri] - 2.0 * dot).max(0.0));
+        }
+    }
+    out
+}
+
+fn pairwise_impl(q: &Matrix, r: &Matrix, par: Parallel) -> Matrix {
+    assert_eq!(q.cols(), r.cols());
+    let r2: Vec<f32> = (0..r.rows())
+        .map(|i| r.row(i).iter().map(|v| v * v).sum())
+        .collect();
+    let work = q
+        .rows()
+        .saturating_mul(r.rows())
+        .saturating_mul(q.cols().max(1));
+    let par = par.for_work(work);
+    let chunks = par.par_chunks(q.rows(), |range| {
+        pairwise_rows(q, r, &r2, range.start, range.end)
+    });
+    let data = concat_chunks(chunks, q.rows() * r.rows());
+    Matrix::from_vec(q.rows(), r.rows(), data).expect("pairwise shape")
+}
+
+/// Pure-Rust serial pairwise distances.
 pub struct NativePairwise;
 
 impl PairwiseBackend for NativePairwise {
-    fn pairwise_sq(&mut self, q: &Matrix, r: &Matrix) -> Matrix {
-        assert_eq!(q.cols(), r.cols());
-        let mut out = Matrix::zeros(q.rows(), r.rows());
-        let r2: Vec<f32> = (0..r.rows())
-            .map(|i| r.row(i).iter().map(|v| v * v).sum())
-            .collect();
-        for qi in 0..q.rows() {
-            let qrow = q.row(qi);
-            let q2: f32 = qrow.iter().map(|v| v * v).sum();
-            for ri in 0..r.rows() {
-                let dot: f32 = qrow.iter().zip(r.row(ri)).map(|(a, b)| a * b).sum();
-                out.set(qi, ri, (q2 + r2[ri] - 2.0 * dot).max(0.0));
-            }
-        }
-        out
+    fn pairwise_sq(&self, q: &Matrix, r: &Matrix) -> Matrix {
+        pairwise_impl(q, r, Parallel::serial())
+    }
+}
+
+/// Parallel native pairwise distances (query rows chunked over `par`).
+#[derive(Clone, Copy, Debug)]
+pub struct ParPairwise {
+    pub par: Parallel,
+}
+
+impl PairwiseBackend for ParPairwise {
+    fn pairwise_sq(&self, q: &Matrix, r: &Matrix) -> Matrix {
+        pairwise_impl(q, r, self.par)
     }
 }
 
@@ -81,7 +118,7 @@ impl Knn {
     /// End-to-end helper with a backend: distances then vote.
     pub fn classify(
         &self,
-        backend: &mut impl PairwiseBackend,
+        backend: &impl PairwiseBackend,
         queries: &Matrix,
         refs: &Matrix,
         ref_y: &[f32],
@@ -117,7 +154,7 @@ mod tests {
         let (tr, te) = ds.split(0.7, &mut rng);
         let knn = Knn::new(5, 2);
         let w = vec![1.0; tr.n()];
-        let preds = knn.classify(&mut NativePairwise, &te.x, &tr.x, &tr.y, &w);
+        let preds = knn.classify(&NativePairwise, &te.x, &tr.x, &tr.y, &w);
         let acc = preds
             .iter()
             .zip(&te.y)
@@ -134,7 +171,7 @@ mod tests {
         let part = VerticalPartition::even(9, 3);
         let q = ds.subset(&(0..10).collect::<Vec<_>>());
         let r = ds.subset(&(10..40).collect::<Vec<_>>());
-        let mut nb = NativePairwise;
+        let nb = NativePairwise;
         let global = nb.pairwise_sq(&q.x, &r.x);
         let parts: Vec<Matrix> = (0..3)
             .map(|c| nb.pairwise_sq(&part.slice(&q.x, c), &part.slice(&r.x, c)))
@@ -150,10 +187,23 @@ mod tests {
         let q = Matrix::from_vec(1, 1, vec![0.05]).unwrap();
         let y = vec![0.0, 1.0, 0.0];
         let knn = Knn::new(3, 2);
-        let unweighted = knn.classify(&mut NativePairwise, &q, &refs, &y, &[1.0, 1.0, 1.0]);
+        let unweighted = knn.classify(&NativePairwise, &q, &refs, &y, &[1.0, 1.0, 1.0]);
         assert_eq!(unweighted, vec![0]);
-        let weighted = knn.classify(&mut NativePairwise, &q, &refs, &y, &[1.0, 5.0, 1.0]);
+        let weighted = knn.classify(&NativePairwise, &q, &refs, &y, &[1.0, 5.0, 1.0]);
         assert_eq!(weighted, vec![1]);
+    }
+
+    #[test]
+    fn par_pairwise_bitwise_matches_serial() {
+        // 600 × 500 × 8 = 2.4M work units — well above the inline cutoff.
+        let mut rng = Rng::new(3);
+        let q = Matrix::from_fn(600, 8, |_, _| rng.gaussian_f32());
+        let r = Matrix::from_fn(500, 8, |_, _| rng.gaussian_f32());
+        let serial = NativePairwise.pairwise_sq(&q, &r);
+        for t in [1usize, 2, 4, 8] {
+            let par = ParPairwise { par: Parallel::new(t) }.pairwise_sq(&q, &r);
+            assert_eq!(par, serial, "threads={t}");
+        }
     }
 
     #[test]
@@ -161,7 +211,7 @@ mod tests {
         let refs = Matrix::from_vec(2, 1, vec![0.0, 1.0]).unwrap();
         let q = Matrix::from_vec(1, 1, vec![0.1]).unwrap();
         let preds = Knn::new(10, 2).classify(
-            &mut NativePairwise,
+            &NativePairwise,
             &q,
             &refs,
             &[0.0, 1.0],

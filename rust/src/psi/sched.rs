@@ -170,4 +170,83 @@ mod tests {
         assert!(s.pairs.is_empty());
         assert_eq!(s.bye, Some(9));
     }
+
+    /// Random actives (non-contiguous ids, arbitrary ResLens); returns the
+    /// common generator for the VolumeAware property tests below.
+    fn gen_actives(r: &mut crate::util::rng::Rng) -> Vec<Active> {
+        let n = 1 + r.below_usize(12);
+        (0..n).map(|i| (i * 3 + 5, r.below(1_000))).collect()
+    }
+
+    #[test]
+    fn volume_aware_pairs_follow_assort_formula() {
+        // Paper §4.1: AsSort ascending by ResLen, pair c_k ↔ c_(k+⌈|U|/2⌉)
+        // (1-based); odd |U| leaves the middle client (index ⌈|U|/2⌉) a bye.
+        crate::util::check::forall(
+            crate::util::check::Config { cases: 128, seed: 0x5C4ED },
+            gen_actives,
+            |active| {
+                let mut sorted = active.clone();
+                sorted.sort_by_key(|&(id, len)| (len, id));
+                let u = sorted.len();
+                let half = u.div_ceil(2);
+                let s = schedule(active, Pairing::VolumeAware, TpsiKind::Rsa);
+                if s.pairs.len() != u / 2 {
+                    return false;
+                }
+                for (k, p) in s.pairs.iter().enumerate() {
+                    // RSA roles: small party receives, large party sends.
+                    if p.receiver != sorted[k].0 || p.sender != sorted[k + half].0 {
+                        return false;
+                    }
+                }
+                s.bye == (u % 2 == 1).then(|| sorted[half - 1].0)
+            },
+        );
+    }
+
+    #[test]
+    fn volume_aware_roles_by_protocol() {
+        // RSA: the receiver's elements cross the wire twice, so the party
+        // with fewer samples receives. OT: the sender ships the expensive
+        // mapped set, so the party with fewer samples sends (receiver is
+        // the larger one).
+        crate::util::check::forall(
+            crate::util::check::Config { cases: 128, seed: 0x707E5 },
+            gen_actives,
+            |active| {
+                let len_of = |id: usize| active.iter().find(|a| a.0 == id).unwrap().1;
+                let rsa = schedule(active, Pairing::VolumeAware, TpsiKind::Rsa);
+                let ot = schedule(active, Pairing::VolumeAware, TpsiKind::Ot);
+                rsa.pairs
+                    .iter()
+                    .all(|p| len_of(p.receiver) <= len_of(p.sender))
+                    && ot.pairs.iter().all(|p| len_of(p.receiver) >= len_of(p.sender))
+            },
+        );
+    }
+
+    #[test]
+    fn volume_aware_odd_bye_is_volume_median() {
+        // The bye never goes to an extreme: at least ⌊|U|/2⌋ clients hold
+        // no more than the bye's ResLen and at least ⌊|U|/2⌋ hold no less.
+        crate::util::check::forall(
+            crate::util::check::Config { cases: 128, seed: 0xB1E },
+            |r| {
+                let mut a = gen_actives(r);
+                if a.len() % 2 == 0 {
+                    a.pop();
+                }
+                a
+            },
+            |active| {
+                let s = schedule(active, Pairing::VolumeAware, TpsiKind::Ot);
+                let Some(bye) = s.bye else { return false };
+                let bye_len = active.iter().find(|a| a.0 == bye).unwrap().1;
+                let below = active.iter().filter(|a| a.1 <= bye_len).count();
+                let above = active.iter().filter(|a| a.1 >= bye_len).count();
+                below > active.len() / 2 && above > active.len() / 2
+            },
+        );
+    }
 }

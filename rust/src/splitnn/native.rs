@@ -6,18 +6,23 @@
 
 use crate::data::Matrix;
 use crate::error::{Error, Result};
+use crate::util::pool::Parallel;
 
 use super::{ModelPhases, ScalarLoss, TopMlpParams, TopMlpStepOut};
 
 /// Native backend; `batch_norm` is the artifact batch size (64) so gradient
-/// scaling matches the XLA path exactly.
+/// scaling matches the XLA path exactly. `par` feeds the matmul kernels —
+/// row-chunked, so results are bitwise identical at any thread count (the
+/// kernels run inline below their flop cutoff, which covers the standard
+/// batch-64 shapes).
 pub struct NativePhases {
     pub batch_norm: usize,
+    pub par: Parallel,
 }
 
 impl NativePhases {
     pub fn new(batch_norm: usize) -> Self {
-        NativePhases { batch_norm }
+        NativePhases { batch_norm, par: Parallel::serial() }
     }
 }
 
@@ -34,7 +39,7 @@ fn relu_mask(pre: &Matrix, da: &Matrix) -> Result<Matrix> {
 
 impl ModelPhases for NativePhases {
     fn bottom_mlp_fwd(&self, x: &Matrix, w: &Matrix, b: &[f32]) -> Result<Matrix> {
-        let mut a = x.matmul(w)?.add_bias(b)?;
+        let mut a = x.matmul_par(w, self.par)?.add_bias(b)?;
         a.map_inplace(|v| v.max(0.0));
         Ok(a)
     }
@@ -46,19 +51,19 @@ impl ModelPhases for NativePhases {
         b: &[f32],
         da: &Matrix,
     ) -> Result<(Matrix, Vec<f32>)> {
-        let pre = x.matmul(w)?.add_bias(b)?;
+        let pre = x.matmul_par(w, self.par)?.add_bias(b)?;
         let dpre = relu_mask(&pre, da)?;
-        let dw = x.matmul_at_b(&dpre)?;
+        let dw = x.matmul_at_b_par(&dpre, self.par)?;
         let db = dpre.col_sums();
         Ok((dw, db))
     }
 
     fn bottom_lin_fwd(&self, x: &Matrix, w: &Matrix, b: &[f32]) -> Result<Matrix> {
-        x.matmul(w)?.add_bias(b)
+        x.matmul_par(w, self.par)?.add_bias(b)
     }
 
     fn bottom_lin_bwd(&self, x: &Matrix, dz: &Matrix) -> Result<(Matrix, Vec<f32>)> {
-        Ok((x.matmul_at_b(dz)?, dz.col_sums()))
+        Ok((x.matmul_at_b_par(dz, self.par)?, dz.col_sums()))
     }
 
     fn top_mlp_step(
@@ -74,7 +79,7 @@ impl ModelPhases for NativePhases {
         }
         let inv_b = 1.0 / self.batch_norm as f32;
         let h1 = self.bottom_mlp_fwd(hcat, &params.w1, &params.b1)?; // relu layer
-        let logits = h1.matmul(&params.w2)?.add_bias(&params.b2)?;
+        let logits = h1.matmul_par(&params.w2, self.par)?.add_bias(&params.b2)?;
         let l = logits.cols();
 
         // Weighted softmax cross-entropy + gradient (matches kernels/losses.py).
@@ -97,19 +102,19 @@ impl ModelPhases for NativePhases {
         }
         let loss = (loss / self.batch_norm as f64) as f32;
 
-        let dw2 = h1.matmul_at_b(&dlogits)?;
+        let dw2 = h1.matmul_at_b_par(&dlogits, self.par)?;
         let db2 = dlogits.col_sums();
-        let dh1 = dlogits.matmul(&params.w2.transpose())?;
+        let dh1 = dlogits.matmul_par(&params.w2.transpose(), self.par)?;
         let dpre1 = relu_mask(&h1, &dh1)?; // h1 > 0 ⇔ pre1 > 0 for relu
-        let dw1 = hcat.matmul_at_b(&dpre1)?;
+        let dw1 = hcat.matmul_at_b_par(&dpre1, self.par)?;
         let db1 = dpre1.col_sums();
-        let dhcat = dpre1.matmul(&params.w1.transpose())?;
+        let dhcat = dpre1.matmul_par(&params.w1.transpose(), self.par)?;
         Ok(TopMlpStepOut { loss, dhcat, dw1, db1, dw2, db2 })
     }
 
     fn top_mlp_pred(&self, hcat: &Matrix, params: &TopMlpParams) -> Result<Matrix> {
         let h1 = self.bottom_mlp_fwd(hcat, &params.w1, &params.b1)?;
-        h1.matmul(&params.w2)?.add_bias(&params.b2)
+        h1.matmul_par(&params.w2, self.par)?.add_bias(&params.b2)
     }
 
     fn top_scalar_step(

@@ -9,5 +9,6 @@ pub mod rng;
 pub mod stats;
 pub mod timer;
 
+pub use pool::{Parallel, ThreadPool};
 pub use rng::Rng;
 pub use timer::Stopwatch;

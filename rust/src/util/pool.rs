@@ -1,13 +1,180 @@
-//! Fixed-size thread pool (tokio is unavailable offline; PSI pairs and
-//! party event loops run on plain threads).
+//! Parallel-execution layer (tokio/rayon are unavailable offline; every
+//! concurrent path in the crate runs on plain threads through this module).
 //!
-//! `ThreadPool::scope_run` executes a batch of closures and returns their
-//! results in submission order — exactly the shape Tree-MPSI needs: each
-//! round submits one closure per client *pair* and joins the round barrier.
+//! Two complementary primitives:
+//!
+//! * [`Parallel`] — a copyable worker-count handle with scoped, chunked
+//!   data-parallel helpers ([`Parallel::par_map`], [`Parallel::par_chunks`],
+//!   [`Parallel::par_map_index`]). Order-preserving and panic-propagating;
+//!   borrows non-`'static` data freely via `std::thread::scope`. This is
+//!   what the compute hot paths use (K-Means assignment, matmul kernels,
+//!   pairwise distances, per-party clustering), with the worker count
+//!   threaded down from `PipelineConfig::threads`.
+//! * [`ThreadPool`] — a fixed pool consuming `'static` jobs from a shared
+//!   queue. `ThreadPool::scope_run` executes a batch of closures and
+//!   returns their results in submission order — the shape Tree-MPSI
+//!   needs: each round submits one closure per client *pair* and joins
+//!   the round barrier.
 
+use std::ops::Range;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
+
+/// Shared inline-execution cutoff for the data-parallel kernels (K-Means
+/// assignment, matmul, pairwise distances): below this many fused
+/// multiply-add work units, scoped-thread spawn overhead (~tens of µs)
+/// exceeds the compute, so callers drop to serial. One constant so a
+/// future recalibration of spawn overhead lands everywhere at once.
+pub const PAR_MIN_WORK: usize = 1 << 18;
+
+/// Worker-count handle for scoped data-parallel execution.
+///
+/// `Parallel` is deliberately tiny (a `Copy` wrapper around a thread
+/// count): helpers spawn scoped threads per call, so results can borrow
+/// stack data and no pool lifetime management leaks into call sites. All
+/// helpers are **order-preserving** (outputs follow input order regardless
+/// of interleaving), **chunked** (contiguous index ranges, one per worker,
+/// so per-element results are bitwise identical at any thread count), and
+/// **panic-propagating** (a worker panic resumes on the caller with the
+/// original payload).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Parallel {
+    threads: usize,
+}
+
+impl Parallel {
+    /// Exactly `threads` workers (clamped to >= 1).
+    pub fn new(threads: usize) -> Self {
+        Parallel { threads: threads.max(1) }
+    }
+
+    /// The config convention: 0 means "all logical cores".
+    pub fn auto(threads: usize) -> Self {
+        if threads == 0 {
+            Self::host()
+        } else {
+            Self::new(threads)
+        }
+    }
+
+    /// One worker per logical core (min 2).
+    pub fn host() -> Self {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n.max(2))
+    }
+
+    /// Single-threaded execution (runs inline, spawns nothing).
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Gate for the compute kernels: keep this worker set when the job has
+    /// at least [`PAR_MIN_WORK`] fused multiply-add work units, otherwise
+    /// drop to serial (spawn overhead would exceed the compute).
+    pub fn for_work(self, units: usize) -> Parallel {
+        if units < PAR_MIN_WORK {
+            Self::serial()
+        } else {
+            self
+        }
+    }
+
+    /// Split `0..n` into at most `threads` contiguous chunks (sizes
+    /// differing by at most one) and run `f` on each chunk concurrently.
+    /// Returns the per-chunk results in index order.
+    pub fn par_chunks<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(Range<usize>) -> R + Sync,
+    {
+        let t = self.threads.min(n);
+        if t <= 1 {
+            return if n == 0 { Vec::new() } else { vec![f(0..n)] };
+        }
+        let base = n / t;
+        let extra = n % t;
+        let mut bounds = Vec::with_capacity(t + 1);
+        bounds.push(0usize);
+        let mut hi = 0usize;
+        for i in 0..t {
+            hi += base + usize::from(i < extra);
+            bounds.push(hi);
+        }
+        thread::scope(|s| {
+            let handles: Vec<_> = (0..t)
+                .map(|i| {
+                    let range = bounds[i]..bounds[i + 1];
+                    let f = &f;
+                    s.spawn(move || f(range))
+                })
+                .collect();
+            // Join every worker before propagating, so a panic never
+            // unwinds through the scope while other threads are running.
+            let joined: Vec<std::thread::Result<R>> =
+                handles.into_iter().map(|h| h.join()).collect();
+            joined
+                .into_iter()
+                .map(|r| match r {
+                    Ok(v) => v,
+                    Err(payload) => std::panic::resume_unwind(payload),
+                })
+                .collect()
+        })
+    }
+
+    /// Map `f` over a slice in parallel, preserving input order.
+    /// `f` receives `(index, &item)`.
+    pub fn par_map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        self.par_chunks(items.len(), |range| {
+            range.map(|i| f(i, &items[i])).collect::<Vec<R>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect()
+    }
+
+    /// Map `f` over the index space `0..n` in parallel, preserving order.
+    pub fn par_map_index<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        self.par_chunks(n, |range| range.map(&f).collect::<Vec<R>>())
+            .into_iter()
+            .flatten()
+            .collect()
+    }
+}
+
+impl Default for Parallel {
+    fn default() -> Self {
+        Self::host()
+    }
+}
+
+/// Stitch per-chunk buffers (as produced by [`Parallel::par_chunks`]) into
+/// one flat buffer; the common serial case (one chunk) moves the buffer
+/// instead of copying it.
+pub fn concat_chunks<T: Copy>(mut chunks: Vec<Vec<T>>, total: usize) -> Vec<T> {
+    if chunks.len() == 1 {
+        return chunks.pop().unwrap();
+    }
+    let mut data = Vec::with_capacity(total);
+    for chunk in chunks {
+        data.extend_from_slice(&chunk);
+    }
+    data
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -142,5 +309,82 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(5)));
         drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn par_map_preserves_order_at_any_thread_count() {
+        let items: Vec<u64> = (0..103).collect();
+        let want: Vec<u64> = items.iter().map(|v| v * v).collect();
+        for t in [1usize, 2, 3, 8, 200] {
+            let got = Parallel::new(t).par_map(&items, |_, &v| v * v);
+            assert_eq!(got, want, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn par_map_passes_global_indices() {
+        let items = vec![10u64; 57];
+        let got = Parallel::new(4).par_map(&items, |i, &v| i as u64 + v);
+        let want: Vec<u64> = (0..57).map(|i| i + 10).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn par_chunks_covers_range_exactly_once() {
+        for (n, t) in [(0usize, 4usize), (1, 4), (7, 3), (64, 8), (65, 8), (5, 16)] {
+            let chunks = Parallel::new(t).par_chunks(n, |r| r.collect::<Vec<usize>>());
+            let flat: Vec<usize> = chunks.into_iter().flatten().collect();
+            assert_eq!(flat, (0..n).collect::<Vec<_>>(), "n={n} t={t}");
+        }
+    }
+
+    #[test]
+    fn par_map_index_matches_serial() {
+        let par = Parallel::new(4).par_map_index(33, |i| i * 3);
+        let ser = Parallel::serial().par_map_index(33, |i| i * 3);
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn par_map_borrows_stack_data() {
+        // The whole point of the scoped API: closures may borrow non-'static.
+        let data: Vec<f32> = (0..50).map(|i| i as f32).collect();
+        let sum: f32 = Parallel::new(4)
+            .par_chunks(data.len(), |r| r.map(|i| data[i]).sum::<f32>())
+            .into_iter()
+            .sum();
+        assert_eq!(sum, (0..50).sum::<i32>() as f32);
+    }
+
+    #[test]
+    fn par_runs_concurrently() {
+        // Deadlocks unless all 4 chunk workers run at the same time.
+        let barrier = std::sync::Barrier::new(4);
+        let got = Parallel::new(4).par_chunks(4, |r| {
+            barrier.wait();
+            r.start
+        });
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn par_propagates_worker_panics() {
+        let result = std::panic::catch_unwind(|| {
+            Parallel::new(4).par_map_index(16, |i| {
+                if i == 11 {
+                    panic!("boom at {i}");
+                }
+                i
+            })
+        });
+        assert!(result.is_err(), "worker panic must reach the caller");
+    }
+
+    #[test]
+    fn auto_and_serial_thread_counts() {
+        assert_eq!(Parallel::serial().threads(), 1);
+        assert_eq!(Parallel::new(0).threads(), 1);
+        assert!(Parallel::auto(0).threads() >= 2);
+        assert_eq!(Parallel::auto(6).threads(), 6);
     }
 }

@@ -111,7 +111,7 @@ fn coreset_invariants_property() {
                 &ds.y,
                 true,
                 &ClusterCoresetConfig { clusters_per_client: 4, ..Default::default() },
-                &mut NativeAssign,
+                &NativeAssign,
                 &meter,
                 &he,
             )

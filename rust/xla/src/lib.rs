@@ -1,0 +1,171 @@
+//! Offline stub of the PJRT/XLA bindings.
+//!
+//! The real runtime layer (`treecss::runtime`) executes AOT-lowered HLO
+//! artifacts through a PJRT CPU client. Those bindings link against
+//! `xla_extension`, which is not present in this offline build, so this
+//! crate provides the exact API surface the engine compiles against with a
+//! client constructor that fails cleanly at runtime:
+//!
+//! * [`PjRtClient::cpu`] returns an error, so `Engine::new` (and everything
+//!   above it — `Backend::xla_default`, the XLA-parity tests) reports
+//!   "runtime unavailable" instead of crashing, and callers fall back to
+//!   the pure-Rust native backend.
+//! * Every other method is reachable only behind a constructed client, so
+//!   their bodies just return the same error.
+//!
+//! Swapping this path dependency for the real bindings re-enables the
+//! artifact path with no source changes in `treecss`.
+
+use std::borrow::Borrow;
+
+/// Error type mirroring the real bindings' `xla::Error` (stringly here).
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// The uniform "this build has no PJRT" error.
+    pub fn unavailable(what: &str) -> Error {
+        Error {
+            msg: format!(
+                "{what}: PJRT/XLA runtime not linked in this build (offline xla stub); \
+                 use the native backend"
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real bindings.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can carry across the boundary.
+pub trait NativeType: Copy + 'static {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// Host-side tensor value (opaque in the stub).
+#[derive(Debug, Clone, Default)]
+pub struct Literal {}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(_v: &[T]) -> Literal {
+        Literal {}
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::unavailable("Literal::reshape"))
+    }
+
+    /// Unpack a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug, Clone, Default)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    /// Parse an HLO text file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// A computation ready for compilation.
+#[derive(Debug, Clone, Default)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// Device-resident buffer returned by an execution.
+#[derive(Debug, Clone, Default)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    /// Synchronously copy the buffer back as a literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled, loaded executable.
+#[derive(Debug, Clone, Default)]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals; one buffer row per device.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug, Clone, Default)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    /// CPU client constructor — always errors in the stub, which is what
+    /// makes every downstream XLA path degrade gracefully.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("PJRT"), "{msg}");
+        assert!(msg.contains("native backend"), "{msg}");
+    }
+
+    #[test]
+    fn literal_surface_typechecks_and_errors() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(lit.to_tuple().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(PjRtLoadedExecutable::default()
+            .execute::<Literal>(&[])
+            .is_err());
+    }
+}
