@@ -12,7 +12,7 @@ use treecss::coreset::vcoreset;
 use treecss::data::synth::PaperDataset;
 use treecss::data::{Matrix, VerticalPartition};
 use treecss::ml::kmeans::NativeAssign;
-use treecss::net::{Meter, NetConfig};
+use treecss::net::{ChannelTransport, Meter, NetConfig};
 use treecss::psi::common::HeContext;
 use treecss::splitnn::native::NativePhases;
 use treecss::splitnn::trainer::{self, ModelKind, TrainConfig};
@@ -62,14 +62,14 @@ fn main() {
         let test_slices: Vec<Matrix> = (0..3).map(|c| part.slice(&te.x, c)).collect();
         let he = HeContext::generate(&mut Rng::new(1), 512);
         for &k in ks {
-            let meter = Meter::new(NetConfig::lan_10gbps());
+            let net = ChannelTransport::new();
             let cc = cluster_coreset::run(
                 &slices,
                 &tr.y,
                 true,
                 &ClusterCoresetConfig { clusters_per_client: k, ..Default::default() },
                 &NativeAssign,
-                &meter,
+                &net,
                 &he,
             )
             .unwrap();
@@ -106,14 +106,14 @@ fn main() {
         let test_slices: Vec<Matrix> = (0..3).map(|c| part.slice(&te.x, c)).collect();
         let he = HeContext::generate(&mut Rng::new(2), 512);
         for &k in ks {
-            let meter = Meter::new(NetConfig::lan_10gbps());
+            let net = ChannelTransport::new();
             let cc = cluster_coreset::run(
                 &slices,
                 &tr.y,
                 false,
                 &ClusterCoresetConfig { clusters_per_client: k, ..Default::default() },
                 &NativeAssign,
-                &meter,
+                &net,
                 &he,
             )
             .unwrap();

@@ -12,13 +12,13 @@
 
 use treecss::bench::{fmt_bytes, fmt_secs, Table};
 use treecss::data::synth;
-use treecss::net::{Meter, NetConfig};
+use treecss::net::{ChannelTransport, Meter, MeteredTransport, NetConfig};
 use treecss::psi::common::HeContext;
 use treecss::psi::rsa_psi::RsaPsiConfig;
 use treecss::psi::sched::Pairing;
 use treecss::psi::tree::{run_tree, TreeMpsiConfig};
 use treecss::psi::{oracle_intersection, path::run_path, star::run_star, TpsiProtocol};
-use treecss::util::pool::ThreadPool;
+use treecss::util::pool::Parallel;
 use treecss::util::rng::Rng;
 
 fn proto_rsa(full: bool) -> TpsiProtocol {
@@ -35,27 +35,30 @@ fn run_topo(
     sets: &[Vec<u64>],
     protocol: &TpsiProtocol,
     pairing: Pairing,
-    pool: &ThreadPool,
+    par: Parallel,
     he: &HeContext,
 ) -> (treecss::psi::MpsiReport, Meter) {
     let meter = Meter::new(NetConfig::lan_10gbps());
+    let net = MeteredTransport::new(ChannelTransport::new(), &meter);
     let rep = match topo {
         "tree" => run_tree(
             sets,
             &TreeMpsiConfig { protocol: protocol.clone(), pairing, seed: 77 },
-            &meter,
-            pool,
+            &net,
+            par,
             he,
         ),
-        "path" => run_path(sets, protocol, 77, &meter, he),
-        "star" => run_star(sets, protocol, 0, 77, &meter, he),
+        "path" => run_path(sets, protocol, 77, &net, he),
+        "star" => run_star(sets, protocol, 0, 77, &net, he),
         _ => unreachable!(),
-    };
+    }
+    .expect("mpsi");
+    drop(net);
     (rep, meter)
 }
 
 fn sweep_sizes(name: &str, protocol: &TpsiProtocol, sizes: &[usize], clients: usize) {
-    let pool = ThreadPool::for_host();
+    let par = Parallel::host();
     let he = HeContext::generate(&mut Rng::new(3), 512);
     let mut table = Table::new(
         &format!("Fig. 7{name} — Tree vs Path vs Star, {clients} clients, 70% overlap"),
@@ -66,7 +69,7 @@ fn sweep_sizes(name: &str, protocol: &TpsiProtocol, sizes: &[usize], clients: us
         let sets = synth::mpsi_indicator_sets(clients, n, 0.7, &mut rng);
         let oracle = oracle_intersection(&sets);
         for topo in ["tree", "path", "star"] {
-            let (rep, _meter) = run_topo(topo, &sets, protocol, Pairing::VolumeAware, &pool, &he);
+            let (rep, _meter) = run_topo(topo, &sets, protocol, Pairing::VolumeAware, par, &he);
             table.row(vec![
                 n.to_string(),
                 topo.into(),
@@ -86,7 +89,7 @@ fn sweep_sched(full: bool) {
     // Fig. 7(c): client i holds base·(i+1) items; the paper uses base=10k.
     let base = if full { 10_000 } else { 400 };
     let client_counts: &[usize] = if full { &[4, 6, 8, 10, 12, 16] } else { &[4, 6, 8, 10] };
-    let pool = ThreadPool::for_host();
+    let par = Parallel::host();
     let he = HeContext::generate(&mut Rng::new(4), 512);
     let protocol = proto_rsa(full);
     let mut table = Table::new(
@@ -99,7 +102,7 @@ fn sweep_sched(full: bool) {
         let sets = synth::mpsi_indicator_sets_sized(&sizes, 0.7, &mut rng);
         let mut bytes = std::collections::HashMap::new();
         for pairing in [Pairing::VolumeAware, Pairing::RequestOrder] {
-            let (rep, _meter) = run_topo("tree", &sets, &protocol, pairing, &pool, &he);
+            let (rep, _meter) = run_topo("tree", &sets, &protocol, pairing, par, &he);
             bytes.insert(format!("{pairing:?}"), rep.total_bytes);
             let saving = match pairing {
                 Pairing::RequestOrder => {

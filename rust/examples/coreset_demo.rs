@@ -12,7 +12,7 @@ use treecss::coreset::vcoreset;
 use treecss::data::synth::PaperDataset;
 use treecss::data::{Matrix, VerticalPartition};
 use treecss::ml::kmeans::NativeAssign;
-use treecss::net::{Meter, NetConfig};
+use treecss::net::{ChannelTransport, Meter, NetConfig};
 use treecss::psi::common::HeContext;
 use treecss::splitnn::native::NativePhases;
 use treecss::splitnn::trainer::{self, ModelKind, TrainConfig};
@@ -52,7 +52,7 @@ fn main() -> treecss::Result<()> {
         let slices: Vec<Matrix> = (0..3).map(|c| part.slice(&tr.x, c)).collect();
         let test_slices: Vec<Matrix> = (0..3).map(|c| part.slice(&te.x, c)).collect();
 
-        let meter = Meter::new(NetConfig::lan_10gbps());
+        let net = ChannelTransport::new();
         let he = HeContext::generate(&mut Rng::new(7), 512);
         let cc = cluster_coreset::run(
             &slices,
@@ -60,7 +60,7 @@ fn main() -> treecss::Result<()> {
             true,
             &ClusterCoresetConfig { clusters_per_client: 8, ..Default::default() },
             &NativeAssign,
-            &meter,
+            &net,
             &he,
         )?;
         let cc_slices: Vec<Matrix> =
@@ -104,7 +104,7 @@ fn main() -> treecss::Result<()> {
         let slices: Vec<Matrix> = (0..3).map(|c| part.slice(&tr.x, c)).collect();
         let test_slices: Vec<Matrix> = (0..3).map(|c| part.slice(&te.x, c)).collect();
 
-        let meter = Meter::new(NetConfig::lan_10gbps());
+        let net = ChannelTransport::new();
         let he = HeContext::generate(&mut Rng::new(8), 512);
         let cc = cluster_coreset::run(
             &slices,
@@ -112,7 +112,7 @@ fn main() -> treecss::Result<()> {
             false,
             &ClusterCoresetConfig { clusters_per_client: 16, ..Default::default() },
             &NativeAssign,
-            &meter,
+            &net,
             &he,
         )?;
         let cc_slices: Vec<Matrix> =

@@ -14,10 +14,8 @@
 
 use treecss::bench::{fmt_bytes, Table};
 use treecss::config::Cli;
-use treecss::coordinator::pipeline::{Backend, Downstream, PipelineConfig};
-use treecss::coordinator::{run_pipeline, FrameworkVariant};
+use treecss::coordinator::{Backend, Downstream, FrameworkVariant, Pipeline};
 use treecss::data::synth::PaperDataset;
-use treecss::net::{Meter, NetConfig};
 use treecss::splitnn::trainer::ModelKind;
 use treecss::util::rng::Rng;
 
@@ -53,13 +51,15 @@ fn main() -> treecss::Result<()> {
     );
 
     for variant in FrameworkVariant::ALL {
-        let meter = Meter::new(NetConfig::lan_10gbps());
-        let mut cfg = PipelineConfig::new(variant, Downstream::Train(ModelKind::Mlp));
-        cfg.seed = seed;
-        cfg.train.lr = 0.02;
-        cfg.train.max_epochs = epochs;
-        cfg.coreset.clusters_per_client = 12;
-        let rep = run_pipeline(&train, &test, &cfg, &backend, &meter)?;
+        let session = Pipeline::builder(variant)
+            .downstream(Downstream::Train(ModelKind::Mlp))
+            .seed(seed)
+            .lr(0.02)
+            .epochs(epochs)
+            .clusters_per_client(12)
+            .backend(backend.clone())
+            .build();
+        let rep = session.run(&train, &test)?;
         let t = rep.train.as_ref().unwrap();
 
         table.row(vec![

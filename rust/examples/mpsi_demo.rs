@@ -10,13 +10,13 @@
 use treecss::bench::{fmt_bytes, fmt_secs, Table};
 use treecss::config::Cli;
 use treecss::data::synth;
-use treecss::net::{Meter, NetConfig};
+use treecss::net::{ChannelTransport, Meter, MeteredTransport, NetConfig};
 use treecss::psi::common::HeContext;
 use treecss::psi::rsa_psi::RsaPsiConfig;
 use treecss::psi::sched::Pairing;
 use treecss::psi::tree::{run_tree, TreeMpsiConfig};
 use treecss::psi::{oracle_intersection, path::run_path, star::run_star, TpsiProtocol};
-use treecss::util::pool::ThreadPool;
+use treecss::util::pool::Parallel;
 use treecss::util::rng::Rng;
 
 fn main() -> treecss::Result<()> {
@@ -34,7 +34,7 @@ fn main() -> treecss::Result<()> {
     );
 
     let he = HeContext::generate(&mut Rng::new(seed ^ 9), 512);
-    let pool = ThreadPool::for_host();
+    let par = Parallel::host();
 
     let mut table = Table::new(
         "MPSI topology comparison",
@@ -50,6 +50,7 @@ fn main() -> treecss::Result<()> {
     ] {
         for topo in ["tree", "path", "star"] {
             let meter = Meter::new(NetConfig::lan_10gbps());
+            let net = MeteredTransport::new(ChannelTransport::new(), &meter);
             let rep = match topo {
                 "tree" => run_tree(
                     &sets,
@@ -58,12 +59,12 @@ fn main() -> treecss::Result<()> {
                         pairing: Pairing::VolumeAware,
                         seed,
                     },
-                    &meter,
-                    &pool,
+                    &net,
+                    par,
                     &he,
-                ),
-                "path" => run_path(&sets, &protocol, seed, &meter, &he),
-                _ => run_star(&sets, &protocol, 0, seed, &meter, &he),
+                )?,
+                "path" => run_path(&sets, &protocol, seed, &net, &he)?,
+                _ => run_star(&sets, &protocol, 0, seed, &net, &he)?,
             };
             table.row(vec![
                 pname.into(),

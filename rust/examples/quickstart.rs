@@ -2,16 +2,17 @@
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Generates an RI-shaped dataset, deals it to 3 clients + a label owner,
-//! aligns with Tree-MPSI, builds the Cluster-Coreset, trains a weighted
-//! SplitNN logistic regression through the XLA artifacts, and prints the
-//! test accuracy. Falls back to the native backend if `artifacts/` is
-//! missing (run `make artifacts` for the full path).
+//! Generates an RI-shaped dataset, builds a TreeCSS session with the
+//! builder API, and runs it: the session deals the data to 3 clients + a
+//! label owner, aligns with Tree-MPSI (every protocol message travelling
+//! over the session's metered in-process transport), builds the
+//! Cluster-Coreset, trains a weighted SplitNN logistic regression through
+//! the XLA artifacts, and prints the test accuracy. Falls back to the
+//! native backend if `artifacts/` is missing (run `make artifacts` for
+//! the full path).
 
-use treecss::coordinator::pipeline::{Backend, Downstream, PipelineConfig};
-use treecss::coordinator::{run_pipeline, FrameworkVariant};
+use treecss::coordinator::{Backend, Downstream, FrameworkVariant, Pipeline};
 use treecss::data::synth::PaperDataset;
-use treecss::net::{Meter, NetConfig};
 use treecss::splitnn::trainer::ModelKind;
 use treecss::util::rng::Rng;
 
@@ -23,14 +24,15 @@ fn main() -> treecss::Result<()> {
     println!("RI-shaped data: {} train / {} test rows", train.n(), test.n());
 
     // The full TreeCSS variant: Tree-MPSI alignment + Cluster-Coreset +
-    // weighted SplitNN training.
-    let cfg = PipelineConfig::new(FrameworkVariant::TreeCss, Downstream::Train(ModelKind::Lr));
-    let backend = Backend::xla_default().unwrap_or(Backend::Native);
-    let meter = Meter::new(NetConfig::lan_10gbps());
+    // weighted SplitNN training, configured through the session builder.
+    let session = Pipeline::builder(FrameworkVariant::TreeCss)
+        .downstream(Downstream::Train(ModelKind::Lr))
+        .backend(Backend::xla_default().unwrap_or(Backend::Native))
+        .build();
 
-    let report = run_pipeline(&train, &test, &cfg, &backend, &meter)?;
+    let report = session.run(&train, &test)?;
 
-    println!("backend          : {}", backend.name());
+    println!("backend          : {}", session.backend().name());
     println!("aligned          : {} samples", report.n_aligned);
     let cs = report.coreset.as_ref().expect("TreeCSS builds a coreset");
     println!(
@@ -42,6 +44,10 @@ fn main() -> treecss::Result<()> {
     println!(
         "end-to-end time  : {:.2}s compute + {:.3}s simulated wire",
         report.wall_s, report.sim_s
+    );
+    println!(
+        "alignment wire   : {} bytes metered on delivery",
+        session.meter().total_bytes("psi/")
     );
     Ok(())
 }

@@ -1,9 +1,17 @@
 //! The TreeCSS lifecycle coordinator: **align → coreset → train**
 //! (paper §4, Fig. 1), plus the framework variants of Table 2:
 //! STARALL, TREEALL, STARCSS, TREECSS.
+//!
+//! The front door is the builder API —
+//! `Pipeline::builder(variant)...build()` → [`Session::run`] — which owns
+//! a metered in-process wire. [`run_pipeline`] remains as a thin wrapper
+//! for callers that manage their own [`crate::net::Meter`].
 
 pub mod pipeline;
+pub mod session;
 
 pub use pipeline::{
-    run_pipeline, FrameworkVariant, MpsiTopology, PipelineConfig, PipelineReport,
+    run_pipeline, Backend, Downstream, FrameworkVariant, MpsiTopology, PipelineConfig,
+    PipelineReport,
 };
+pub use session::{Pipeline, Session, SessionBuilder};

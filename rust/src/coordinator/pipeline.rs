@@ -2,9 +2,17 @@
 //! Cluster-Coreset → weighted SplitNN training → test evaluation.
 //!
 //! This is the code path behind every Table 2 cell and the e2e examples.
-//! Reported time separates real compute wall-clock from simulated network
-//! transfer time; their sum is the comparable "Time (s)" figure (the
-//! paper's testbed folded both into one wall clock).
+//! All alignment- and coreset-phase messages travel over a
+//! [`MeteredTransport`]-wrapped [`ChannelTransport`], so byte accounting
+//! happens on delivery. Reported time separates real compute wall-clock
+//! from simulated network transfer time; their sum is the comparable
+//! "Time (s)" figure (the paper's testbed folded both into one wall
+//! clock).
+//!
+//! Prefer the builder API in [`crate::coordinator::session`]
+//! (`Pipeline::builder(variant)...build()` → `Session::run`);
+//! [`run_pipeline`] is a thin wrapper over the same internals for callers
+//! that manage their own [`Meter`].
 
 use std::sync::Arc;
 
@@ -13,8 +21,8 @@ use crate::data::{Dataset, Matrix};
 use crate::error::Result;
 use crate::ml::kmeans::{AssignBackend, ParAssign};
 use crate::ml::knn::{self, Knn, PairwiseBackend, ParPairwise};
-use crate::net::Meter;
-use crate::parties::{deal, KeyServerNode};
+use crate::net::{ChannelTransport, Meter, MeteredTransport};
+use crate::parties::{deal_with_overlap, KeyServerNode};
 use crate::psi::sched::Pairing;
 use crate::psi::tree::{run_tree, TreeMpsiConfig};
 use crate::psi::{path::run_path, star::run_star, MpsiReport, TpsiProtocol};
@@ -22,7 +30,7 @@ use crate::runtime::phases::XlaPhases;
 use crate::splitnn::native::NativePhases;
 use crate::splitnn::trainer::{self, ModelKind, TrainConfig, TrainReport};
 use crate::splitnn::ModelPhases;
-use crate::util::pool::{Parallel, ThreadPool};
+use crate::util::pool::Parallel;
 use crate::util::rng::Rng;
 
 /// MPSI topology choice.
@@ -80,6 +88,7 @@ pub enum Downstream {
 }
 
 /// Phase-execution backend.
+#[derive(Clone)]
 pub enum Backend {
     /// XLA artifacts over PJRT (the production path).
     Xla(Arc<XlaPhases>),
@@ -160,10 +169,17 @@ pub struct PipelineConfig {
     pub seed: u64,
     /// Paillier modulus bits for the HE envelope.
     pub he_bits: usize,
-    /// Worker threads for every compute hot path (K-Means assignment,
-    /// per-party clustering, matmul kernels, pairwise distances).
-    /// 0 = all logical cores. Results are identical at any setting; the
-    /// bench harness sweeps 1..N to measure scaling.
+    /// Fraction of samples every client shares (the multi-party
+    /// intersection). 1.0 = the paper's layout (all clients hold all
+    /// samples, shuffled); below 1.0 each client drops a disjoint slice of
+    /// the non-core samples, so alignment faces a genuinely partial
+    /// intersection (`n_aligned < n`).
+    pub overlap: f64,
+    /// Worker threads for every hot path — K-Means assignment, per-party
+    /// clustering, matmul kernels, pairwise distances, *and* the
+    /// concurrent Tree-MPSI pairs. 0 = all logical cores. Results are
+    /// identical at any setting; the bench harness sweeps 1..N to measure
+    /// scaling.
     pub threads: usize,
 }
 
@@ -183,6 +199,7 @@ impl PipelineConfig {
             train: TrainConfig::new(model),
             seed: 2024,
             he_bits: 512,
+            overlap: 1.0,
             threads: 0,
         }
     }
@@ -213,7 +230,11 @@ impl PipelineReport {
     }
 }
 
-/// Run the full lifecycle on a train/test split.
+/// Run the full lifecycle on a train/test split, charging the caller's
+/// meter. Thin wrapper: builds the in-process wire and delegates to the
+/// transport-based pipeline. Prefer the builder API
+/// (`Pipeline::builder(..).build()` → `Session::run`) unless you manage
+/// the [`Meter`] yourself.
 pub fn run_pipeline(
     train_ds: &Dataset,
     test_ds: &Dataset,
@@ -221,30 +242,63 @@ pub fn run_pipeline(
     backend: &Backend,
     meter: &Meter,
 ) -> Result<PipelineReport> {
+    let net = MeteredTransport::new(ChannelTransport::new(), meter);
+    run_over_transport(train_ds, test_ds, cfg, backend, &net, meter)
+}
+
+/// The pipeline proper, over any (metered) wire. `net` carries every
+/// protocol message; `meter` is the same accounting the wire charges
+/// (training/KNN tensor traffic still charges it directly).
+pub(crate) fn run_over_transport(
+    train_ds: &Dataset,
+    test_ds: &Dataset,
+    cfg: &PipelineConfig,
+    backend: &Backend,
+    net: &dyn crate::net::Transport,
+    meter: &Meter,
+) -> Result<PipelineReport> {
     let sw = crate::util::timer::Stopwatch::start();
+    // Report per-run traffic even when the caller's meter already holds
+    // earlier runs (a Session's meter accumulates until reset).
+    let bytes_before = meter.total_bytes("");
     let mut rng = Rng::new(cfg.seed);
     let m = cfg.n_clients;
+    if !(0.0..=1.0).contains(&cfg.overlap) {
+        return Err(crate::Error::Config(format!(
+            "overlap must be in [0, 1], got {}",
+            cfg.overlap
+        )));
+    }
     let par = Parallel::auto(cfg.threads);
 
     // ---- parties ----------------------------------------------------------
-    let (clients, label_owner) = deal(train_ds, m, &mut rng);
+    let (clients, label_owner) = deal_with_overlap(train_ds, m, cfg.overlap, &mut rng);
     let key_server = KeyServerNode::new(&mut rng, cfg.he_bits);
     let he = key_server.he();
+
+    // HE public-key distribution travels (and is metered) like any other
+    // message; every client rebuilds the key from its grant.
+    let sim_keys = key_server.distribute_keys(net, m, "keys/dist")?;
+    for c in &clients {
+        let pk = c.receive_he_key(net, "keys/dist")?;
+        if pk.n != he.pk.n {
+            return Err(crate::Error::Net("HE key grant mismatch".into()));
+        }
+    }
 
     // ---- phase 1: alignment (MPSI over the clients' indicator sets) -------
     let sets: Vec<Vec<u64>> = clients.iter().map(|c| c.ids.clone()).collect();
     let align = match cfg.variant.topology() {
         MpsiTopology::Tree => {
-            let pool = ThreadPool::for_host();
             let tcfg = TreeMpsiConfig {
                 protocol: cfg.protocol.clone(),
                 pairing: cfg.pairing,
                 seed: cfg.seed,
             };
-            run_tree(&sets, &tcfg, meter, &pool, he)
+            run_tree(&sets, &tcfg, net, par, he)?
         }
-        MpsiTopology::Star => run_star(&sets, &cfg.protocol, 0, cfg.seed, meter, he),
-        MpsiTopology::Path => run_path(&sets, &cfg.protocol, cfg.seed, meter, he),
+        MpsiTopology::Star => run_star(&sets, &cfg.protocol, 0, cfg.seed, net, he)?,
+        MpsiTopology::Path => run_path(&sets, &cfg.protocol, cfg.seed, net, he)?,
     };
     let aligned = align.intersection.clone();
     let n_aligned = aligned.len();
@@ -276,7 +330,7 @@ pub fn run_pipeline(
             train_ds.task.is_classification(),
             &ccfg,
             &dyn_ab,
-            meter,
+            net,
             he,
         )?;
         let sl: Vec<Matrix> = slices.iter().map(|s| s.select_rows(&cs.indices)).collect();
@@ -338,7 +392,8 @@ pub fn run_pipeline(
         }
     };
 
-    let sim_s = align.sim_s
+    let sim_s = sim_keys
+        + align.sim_s
         + coreset.as_ref().map_or(0.0, |c| c.sim_s)
         + train_report.as_ref().map_or(0.0, |t| t.sim_comm_s);
 
@@ -352,7 +407,7 @@ pub fn run_pipeline(
         n_aligned,
         wall_s: sw.elapsed_secs(),
         sim_s,
-        total_bytes: meter.total_bytes(""),
+        total_bytes: meter.total_bytes("") - bytes_before,
     })
 }
 
@@ -429,8 +484,10 @@ mod tests {
 
     #[test]
     fn pipeline_invariant_under_thread_count() {
-        // `threads` is a pure perf knob: every parallel hot path chunks
-        // work deterministically, so quality/coreset/bytes must not move.
+        // `threads` is a pure perf knob: every parallel hot path (now
+        // including the concurrent Tree-MPSI pairs on the shared
+        // transport) chunks work deterministically, so quality, coreset,
+        // and the *per-edge* metered traffic must not move.
         let mut rng = Rng::new(6);
         let ds = PaperDataset::Ri.generate(0.02, &mut rng);
         let (tr, te) = ds.split(0.7, &mut rng);
@@ -438,16 +495,50 @@ mod tests {
             let meter = Meter::new(NetConfig::lan_10gbps());
             let mut cfg = fast_cfg(FrameworkVariant::TreeCss, Downstream::Train(ModelKind::Lr));
             cfg.threads = threads;
-            run_pipeline(&tr, &te, &cfg, &Backend::Native, &meter).unwrap()
+            let rep = run_pipeline(&tr, &te, &cfg, &Backend::Native, &meter).unwrap();
+            (rep, meter.edges())
         };
-        let serial = run_with(1);
-        let par = run_with(4);
+        let (serial, serial_edges) = run_with(1);
+        let (par, par_edges) = run_with(4);
         assert_eq!(serial.quality, par.quality);
         assert_eq!(
             serial.coreset.as_ref().unwrap().indices,
             par.coreset.as_ref().unwrap().indices
         );
         assert_eq!(serial.total_bytes, par.total_bytes);
+        // Per-edge totals identical at 1 and 4 workers: same edges, same
+        // bytes, same message counts.
+        assert_eq!(serial_edges.len(), par_edges.len());
+        for ((ka, ea), (kb, eb)) in serial_edges.iter().zip(&par_edges) {
+            assert_eq!(ka, kb);
+            assert_eq!(ea.bytes, eb.bytes, "bytes on edge {ka:?}");
+            assert_eq!(ea.messages, eb.messages, "messages on edge {ka:?}");
+        }
+    }
+
+    #[test]
+    fn partial_overlap_survives_css_and_all_variants() {
+        // With overlap < 1 the MPSI faces a real partial intersection;
+        // every Table-2 variant must align to the core and still train.
+        let mut rng = Rng::new(8);
+        let ds = PaperDataset::Ri.generate(0.03, &mut rng);
+        let (tr, te) = ds.split(0.7, &mut rng);
+        let want_core = (tr.n() as f64 * 0.6).ceil() as usize;
+        for variant in FrameworkVariant::ALL {
+            let meter = Meter::new(NetConfig::lan_10gbps());
+            let mut cfg = fast_cfg(variant, Downstream::Train(ModelKind::Lr));
+            cfg.overlap = 0.6;
+            let rep = run_pipeline(&tr, &te, &cfg, &Backend::Native, &meter).unwrap();
+            assert_eq!(rep.n_aligned, want_core, "{}", variant.name());
+            assert!(rep.n_aligned < tr.n(), "{}: alignment must be partial", variant.name());
+            if variant.uses_coreset() {
+                assert!(rep.coreset.is_some());
+                assert!(rep.train_size <= rep.n_aligned);
+            } else {
+                assert_eq!(rep.train_size, rep.n_aligned);
+            }
+            assert!(rep.quality > 0.8, "{}: quality {}", variant.name(), rep.quality);
+        }
     }
 
     #[test]

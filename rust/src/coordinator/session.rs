@@ -1,0 +1,296 @@
+//! Builder-style session API — the front door of the framework.
+//!
+//! ```no_run
+//! use treecss::coordinator::{Downstream, FrameworkVariant, Pipeline};
+//! use treecss::data::synth::PaperDataset;
+//! use treecss::splitnn::trainer::ModelKind;
+//! use treecss::util::rng::Rng;
+//! # fn main() -> treecss::Result<()> {
+//! let mut rng = Rng::new(7);
+//! let ds = PaperDataset::Ri.generate(0.05, &mut rng);
+//! let (train, test) = ds.split(0.7, &mut rng);
+//! let session = Pipeline::builder(FrameworkVariant::TreeCss)
+//!     .downstream(Downstream::Train(ModelKind::Mlp))
+//!     .clients(4)
+//!     .threads(8)
+//!     .build();
+//! let report = session.run(&train, &test)?;
+//! println!("accuracy {:.4} over {} bytes", report.quality, report.total_bytes);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! A [`Session`] owns the wire: a [`ChannelTransport`] wrapped in
+//! [`crate::net::MeteredTransport`] around the session's [`Meter`], so
+//! every protocol byte is accounted on delivery and per-edge traffic is
+//! inspectable through [`Session::meter`] after a run. Repeated
+//! [`Session::run`] calls accumulate into the same meter; call
+//! `session.meter().reset()` between benchmark repetitions.
+
+use crate::coreset::cluster_coreset::ClusterCoresetConfig;
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::net::{ChannelTransport, Meter, MeteredTransport, NetConfig};
+use crate::psi::sched::Pairing;
+use crate::psi::TpsiProtocol;
+use crate::splitnn::trainer::{ModelKind, TrainConfig};
+
+use super::pipeline::{
+    run_over_transport, Backend, Downstream, FrameworkVariant, PipelineConfig, PipelineReport,
+};
+
+/// Entry point: `Pipeline::builder(variant)` starts a [`SessionBuilder`].
+pub struct Pipeline;
+
+impl Pipeline {
+    pub fn builder(variant: FrameworkVariant) -> SessionBuilder {
+        SessionBuilder {
+            cfg: PipelineConfig::new(variant, Downstream::Train(ModelKind::Lr)),
+            net: NetConfig::default(),
+            backend: None,
+        }
+    }
+}
+
+/// Accumulates pipeline configuration; [`SessionBuilder::build`] freezes it
+/// into a runnable [`Session`].
+pub struct SessionBuilder {
+    cfg: PipelineConfig,
+    net: NetConfig,
+    backend: Option<Backend>,
+}
+
+impl SessionBuilder {
+    /// Downstream evaluator (trained model or KNN). The model kind named
+    /// here is authoritative: `build` copies it into the training config.
+    pub fn downstream(mut self, d: Downstream) -> Self {
+        self.cfg.downstream = d;
+        self
+    }
+
+    /// Number of feature-holding clients (default 3).
+    pub fn clients(mut self, m: usize) -> Self {
+        self.cfg.n_clients = m;
+        self
+    }
+
+    /// Worker threads for every hot path, alignment included
+    /// (0 = all logical cores).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.cfg.threads = n;
+        self
+    }
+
+    /// Two-party PSI primitive (default RSA-512).
+    pub fn protocol(mut self, p: TpsiProtocol) -> Self {
+        self.cfg.protocol = p;
+        self
+    }
+
+    /// Tree-MPSI pairing strategy (default volume-aware).
+    pub fn pairing(mut self, p: Pairing) -> Self {
+        self.cfg.pairing = p;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Paillier modulus bits for the HE envelopes (default 512).
+    pub fn he_bits(mut self, bits: usize) -> Self {
+        self.cfg.he_bits = bits;
+        self
+    }
+
+    /// Fraction of samples shared by every client (default 1.0; below 1.0
+    /// the alignment phase faces a partial intersection).
+    pub fn overlap(mut self, frac: f64) -> Self {
+        self.cfg.overlap = frac;
+        self
+    }
+
+    /// K-Means clusters per client for the CSS variants (default 8).
+    pub fn clusters_per_client(mut self, k: usize) -> Self {
+        self.cfg.coreset.clusters_per_client = k;
+        self
+    }
+
+    /// Full coreset configuration override.
+    pub fn coreset(mut self, cfg: ClusterCoresetConfig) -> Self {
+        self.cfg.coreset = cfg;
+        self
+    }
+
+    /// Training learning rate.
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.cfg.train.lr = lr;
+        self
+    }
+
+    /// Training epoch cap.
+    pub fn epochs(mut self, n: usize) -> Self {
+        self.cfg.train.max_epochs = n;
+        self
+    }
+
+    /// Full training configuration override. The model kind is still
+    /// taken from [`SessionBuilder::downstream`] at build time — set it
+    /// there, not here.
+    pub fn train(mut self, cfg: TrainConfig) -> Self {
+        self.cfg.train = cfg;
+        self
+    }
+
+    /// Latency/bandwidth model of the simulated wire (default 10 Gbps LAN).
+    pub fn net(mut self, cfg: NetConfig) -> Self {
+        self.net = cfg;
+        self
+    }
+
+    /// Phase-execution backend (default: XLA artifacts when present,
+    /// native otherwise).
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.backend = Some(b);
+        self
+    }
+
+    /// Freeze the configuration into a runnable [`Session`].
+    pub fn build(mut self) -> Session {
+        // The downstream choice is the single source of truth for what
+        // gets trained; sync it into the training config exactly once.
+        if let Downstream::Train(kind) = self.cfg.downstream {
+            self.cfg.train.model = kind;
+        }
+        let backend = self
+            .backend
+            .unwrap_or_else(|| Backend::xla_default().unwrap_or(Backend::Native));
+        Session { cfg: self.cfg, backend, meter: Meter::new(self.net) }
+    }
+}
+
+/// A configured pipeline bound to its own metered wire.
+pub struct Session {
+    cfg: PipelineConfig,
+    backend: Backend,
+    meter: Meter,
+}
+
+impl Session {
+    /// Run the full lifecycle (align → coreset → train → evaluate) on a
+    /// train/test split. The session's transport meters every message;
+    /// repeated runs accumulate unless [`Meter::reset`] is called.
+    pub fn run(&self, train: &Dataset, test: &Dataset) -> Result<PipelineReport> {
+        let net = MeteredTransport::new(ChannelTransport::new(), &self.meter);
+        run_over_transport(train, test, &self.cfg, &self.backend, &net, &self.meter)
+    }
+
+    /// The session's byte/time accounting (per-edge, per-phase).
+    pub fn meter(&self) -> &Meter {
+        &self.meter
+    }
+
+    pub fn config(&self) -> &PipelineConfig {
+        &self.cfg
+    }
+
+    pub fn backend(&self) -> &Backend {
+        &self.backend
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::PaperDataset;
+    use crate::psi::rsa_psi::RsaPsiConfig;
+    use crate::util::rng::Rng;
+
+    fn fast_session(variant: FrameworkVariant) -> Session {
+        Pipeline::builder(variant)
+            .downstream(Downstream::Train(ModelKind::Lr))
+            .protocol(TpsiProtocol::Rsa(RsaPsiConfig { modulus_bits: 256, domain: "s".into() }))
+            .he_bits(256)
+            .epochs(30)
+            .lr(0.05)
+            .backend(Backend::Native)
+            .build()
+    }
+
+    #[test]
+    fn builder_session_matches_run_pipeline() {
+        let mut rng = Rng::new(21);
+        let ds = PaperDataset::Ri.generate(0.02, &mut rng);
+        let (tr, te) = ds.split(0.7, &mut rng);
+
+        let session = fast_session(FrameworkVariant::TreeCss);
+        let a = session.run(&tr, &te).unwrap();
+
+        // The thin wrapper with identical knobs produces identical results.
+        let meter = Meter::new(NetConfig::default());
+        let mut cfg = PipelineConfig::new(
+            FrameworkVariant::TreeCss,
+            Downstream::Train(ModelKind::Lr),
+        );
+        cfg.protocol =
+            TpsiProtocol::Rsa(RsaPsiConfig { modulus_bits: 256, domain: "s".into() });
+        cfg.he_bits = 256;
+        cfg.train.max_epochs = 30;
+        cfg.train.lr = 0.05;
+        let b = super::super::pipeline::run_pipeline(&tr, &te, &cfg, &Backend::Native, &meter)
+            .unwrap();
+
+        assert_eq!(a.quality, b.quality);
+        assert_eq!(a.total_bytes, b.total_bytes);
+        assert_eq!(
+            a.coreset.as_ref().unwrap().indices,
+            b.coreset.as_ref().unwrap().indices
+        );
+        // The session's meter recorded the run.
+        assert_eq!(session.meter().total_bytes(""), a.total_bytes);
+    }
+
+    #[test]
+    fn builder_knobs_land_in_config() {
+        let s = Pipeline::builder(FrameworkVariant::StarAll)
+            .downstream(Downstream::Knn(7))
+            .clients(5)
+            .threads(2)
+            .seed(99)
+            .overlap(0.5)
+            .clusters_per_client(12)
+            .backend(Backend::Native)
+            .build();
+        let cfg = s.config();
+        assert_eq!(cfg.variant, FrameworkVariant::StarAll);
+        assert!(matches!(cfg.downstream, Downstream::Knn(7)));
+        assert_eq!(cfg.n_clients, 5);
+        assert_eq!(cfg.threads, 2);
+        assert_eq!(cfg.seed, 99);
+        assert_eq!(cfg.overlap, 0.5);
+        assert_eq!(cfg.coreset.clusters_per_client, 12);
+    }
+
+    #[test]
+    fn downstream_train_sets_model_kind() {
+        let s = Pipeline::builder(FrameworkVariant::TreeAll)
+            .downstream(Downstream::Train(ModelKind::Mlp))
+            .backend(Backend::Native)
+            .build();
+        assert_eq!(s.config().train.model, ModelKind::Mlp);
+    }
+
+    #[test]
+    fn meter_accumulates_and_resets_across_runs() {
+        let mut rng = Rng::new(22);
+        let ds = PaperDataset::Ri.generate(0.015, &mut rng);
+        let (tr, te) = ds.split(0.7, &mut rng);
+        let session = fast_session(FrameworkVariant::TreeAll);
+        let one = session.run(&tr, &te).unwrap().total_bytes;
+        session.run(&tr, &te).unwrap();
+        assert_eq!(session.meter().total_bytes(""), 2 * one);
+        session.meter().reset();
+        assert_eq!(session.meter().total_bytes(""), 0);
+    }
+}

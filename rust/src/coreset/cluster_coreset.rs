@@ -1,6 +1,7 @@
 //! The full five-step Cluster-Coreset protocol (paper §4.2, Fig. 3),
 //! executed across clients, aggregation server and label owner with every
-//! message HE-enveloped and charged to the meter.
+//! message HE-enveloped and exchanged over the [`Transport`] (wrap it in
+//! [`crate::net::MeteredTransport`] and every byte is charged on delivery).
 //!
 //!   1. each client K-Means-clusters its local feature slice;
 //!   2. each client computes rank-based local weights;
@@ -16,7 +17,8 @@ use crate::data::Matrix;
 use crate::error::Result;
 use crate::ml::kmeans::{AssignBackend, KMeans};
 use crate::net::msg::{self, CtMessage, HybridEnvelope};
-use crate::net::{Meter, PartyId};
+use crate::net::{Endpoint, PartyId, Transport};
+use crate::parties::{recv_sealed_ct, send_sealed_ct, AggregatorNode};
 use crate::psi::common::HeContext;
 use crate::util::pool::Parallel;
 use crate::util::rng::Rng;
@@ -87,14 +89,17 @@ pub fn run(
     is_classification: bool,
     cfg: &ClusterCoresetConfig,
     backend: &(impl AssignBackend + Sync),
-    meter: &Meter,
+    net: &dyn Transport,
     he: &HeContext,
 ) -> Result<CoresetResult> {
     let sw = Stopwatch::start();
     let mut sim_s = 0.0f64;
+    let mut bytes = 0u64;
     let mut rng = Rng::new(cfg.seed ^ 0xC0E5E7);
     let n = y.len();
     let par = Parallel::auto(cfg.threads);
+    let agg = AggregatorNode;
+    let label_owner = Endpoint::new(net, PartyId::LabelOwner);
 
     // Steps 1–2, every client concurrently: cluster the local slice and
     // compute rank-based weights. Pure per-party compute — the paper's
@@ -110,22 +115,23 @@ pub fn run(
         (w, fit.assign, fit.dist)
     });
 
-    // Step 3 per client, serialized: seal (w, c, ed) per sample; client →
-    // aggregator → label owner. The aggregator concatenates messages so
-    // the label owner cannot attribute sources; we charge both hops. The
-    // shared RNG (envelope nonces) and the meter keep their exact
-    // pre-parallelization consumption order here, so runs are reproducible
-    // at any thread count.
+    // Step 3 per client, serialized: seal (w, c, ed) per sample; the
+    // envelope travels client → aggregator → label owner, and the label
+    // owner decodes what arrived. The shared RNG (envelope nonces) and the
+    // transport keep their exact pre-parallelization consumption order
+    // here, so runs are reproducible at any thread count.
     let mut client_data = Vec::with_capacity(slices.len());
     for (m, (w, clusters, dists)) in fits.into_iter().enumerate() {
         let ct_msg = CtMessage { client: m as u32, weights: w, clusters, dists };
-        let sealed = HybridEnvelope::seal(&mut rng, &he.pk, &ct_msg.encode())?;
-        let wire = sealed.encode().len() as u64;
-        sim_s += meter.charge(PartyId::Client(m as u32), PartyId::Aggregator, "coreset/ct", wire);
-        sim_s += meter.charge(PartyId::Aggregator, PartyId::LabelOwner, "coreset/ct", wire);
-        // Label owner decrypts.
-        let opened = sealed.open(he.private())?;
-        let decoded = CtMessage::decode(&opened)?;
+        let (sim, wire_bytes) =
+            send_sealed_ct(net, m as u32, &mut rng, &he.pk, &ct_msg, "coreset/ct")?;
+        sim_s += sim;
+        // The aggregator forwards the same ciphertext, so the second hop
+        // carries the same byte count.
+        bytes += 2 * wire_bytes;
+        sim_s +=
+            agg.route(net, PartyId::Client(m as u32), PartyId::LabelOwner, "coreset/ct")?;
+        let decoded = recv_sealed_ct(net, he, "coreset/ct")?;
         client_data.push(ClientCtData {
             weights: decoded.weights,
             clusters: decoded.clusters,
@@ -136,15 +142,24 @@ pub fn run(
     // Step 4: label owner selects representatives.
     let selection = ct::select(&client_data, y, is_classification);
 
-    // Step 5: broadcast selected indicators (sealed) to all clients.
-    let payload = msg::encode_index_list(
-        &selection.indices.iter().map(|&i| i as u64).collect::<Vec<_>>(),
-    );
+    // Step 5: broadcast selected indicators (sealed) to all clients via
+    // the aggregator, each of whom opens its delivery.
+    let sel_u64: Vec<u64> = selection.indices.iter().map(|&i| i as u64).collect();
+    let payload = msg::encode_index_list(&sel_u64);
     let sealed = HybridEnvelope::seal(&mut rng, &he.pk, &payload)?;
-    let wire = sealed.encode().len() as u64;
-    sim_s += meter.charge(PartyId::LabelOwner, PartyId::Aggregator, "coreset/sel", wire);
+    let wire = sealed.encode();
+    bytes += wire.len() as u64 * (1 + slices.len() as u64);
+    sim_s += label_owner.send(PartyId::Aggregator, "coreset/sel", wire)?;
+    let agg_ep = agg.endpoint(net);
+    let routed = agg_ep.recv(PartyId::LabelOwner, "coreset/sel")?;
     for c in 0..slices.len() {
-        sim_s += meter.charge(PartyId::Aggregator, PartyId::Client(c as u32), "coreset/sel", wire);
+        sim_s += agg_ep.send(PartyId::Client(c as u32), "coreset/sel", routed.payload.clone())?;
+        let delivered = Endpoint::new(net, PartyId::Client(c as u32))
+            .recv(PartyId::Aggregator, "coreset/sel")?;
+        let opened = HybridEnvelope::decode(&delivered.payload)?.open(he.private())?;
+        if msg::decode_index_list(&opened)? != sel_u64 {
+            return Err(crate::Error::Psi("selection broadcast corrupted".into()));
+        }
     }
 
     let weights = if cfg.reweight {
@@ -159,7 +174,7 @@ pub fn run(
         distinct_cts: selection.distinct_cts,
         wall_s: sw.elapsed_secs(),
         sim_s,
-        bytes: meter.total_bytes("coreset/"),
+        bytes,
     })
 }
 
@@ -168,7 +183,7 @@ mod tests {
     use super::*;
     use crate::data::{synth, VerticalPartition};
     use crate::ml::kmeans::NativeAssign;
-    use crate::net::NetConfig;
+    use crate::net::{ChannelTransport, Meter, MeteredTransport, NetConfig};
 
     fn run_on(
         ds: &crate::data::Dataset,
@@ -177,7 +192,7 @@ mod tests {
     ) -> (CoresetResult, usize) {
         let part = VerticalPartition::even(ds.d(), 3);
         let slices: Vec<Matrix> = (0..3).map(|c| part.slice(&ds.x, c)).collect();
-        let meter = Meter::new(NetConfig::lan_10gbps());
+        let net = ChannelTransport::new();
         let he = HeContext::for_tests();
         let cfg = ClusterCoresetConfig {
             clusters_per_client: k,
@@ -190,10 +205,11 @@ mod tests {
             ds.task.is_classification(),
             &cfg,
             &NativeAssign,
-            &meter,
+            &net,
             &he,
         )
         .unwrap();
+        assert_eq!(net.pending(), 0, "protocol drains the wire");
         (r, ds.n())
     }
 
@@ -258,14 +274,15 @@ mod tests {
         let part = VerticalPartition::even(6, 3);
         let slices: Vec<Matrix> = (0..3).map(|c| part.slice(&ds.x, c)).collect();
         let meter = Meter::new(NetConfig::lan_10gbps());
+        let net = MeteredTransport::new(ChannelTransport::new(), &meter);
         let he = HeContext::for_tests();
-        run(
+        let r = run(
             &slices,
             &ds.y,
             true,
             &ClusterCoresetConfig::default(),
             &NativeAssign,
-            &meter,
+            &net,
             &he,
         )
         .unwrap();
@@ -274,6 +291,11 @@ mod tests {
             agg_bytes,
             meter.total_bytes("coreset/"),
             "every coreset byte transits the aggregator"
+        );
+        assert_eq!(
+            r.bytes,
+            meter.total_bytes("coreset/"),
+            "engine bookkeeping equals middleware accounting"
         );
     }
 
@@ -287,10 +309,10 @@ mod tests {
         let part = VerticalPartition::even(9, 3);
         let slices: Vec<Matrix> = (0..3).map(|c| part.slice(&ds.x, c)).collect();
         let run_with = |threads: usize| {
-            let meter = Meter::new(NetConfig::lan_10gbps());
+            let net = ChannelTransport::new();
             let he = HeContext::for_tests();
             let cfg = ClusterCoresetConfig { threads, ..Default::default() };
-            run(&slices, &ds.y, true, &cfg, &NativeAssign, &meter, &he).unwrap()
+            run(&slices, &ds.y, true, &cfg, &NativeAssign, &net, &he).unwrap()
         };
         let serial = run_with(1);
         for threads in [2usize, 4] {

@@ -4,17 +4,23 @@
 //! Vertical Federated Learning* (Zhang et al., 2024). The crate is the L3
 //! coordinator of a three-layer stack (see `DESIGN.md`):
 //!
-//! * **L3 (this crate)** — parties, transport, Tree/Path/Star-MPSI,
-//!   RSA/OT two-party PSI, Paillier HE, Cluster-Coreset orchestration and
-//!   the SplitNN training loop. Python never runs on this path.
+//! * **L3 (this crate)** — party endpoints over a pluggable transport
+//!   ([`net::transport`]), Tree/Path/Star-MPSI, RSA/OT two-party PSI,
+//!   Paillier HE, Cluster-Coreset orchestration and the SplitNN training
+//!   loop. Python never runs on this path.
 //! * **L2** — JAX compute graphs (`python/compile/model.py`), AOT-lowered
 //!   to `artifacts/*.hlo.txt`.
 //! * **L1** — Pallas kernels (`python/compile/kernels/`) inside those graphs.
 //!
-//! The end-to-end lifecycle mirrors the paper: **align** (Tree-MPSI over the
-//! clients' sample indicators) → **coreset** (per-client K-Means, cluster
-//! tuples, per-(CT,label) selection, re-weighting) → **train** (weighted
-//! SplitNN on the coreset, executed through PJRT-compiled XLA artifacts).
+//! The front door is the session builder
+//! ([`coordinator::Pipeline::builder`]): configure a framework variant,
+//! build a [`coordinator::Session`] that owns a metered in-process wire,
+//! and run the paper's lifecycle — **align** (Tree-MPSI over the clients'
+//! sample indicators, every protocol message an envelope on the
+//! transport) → **coreset** (per-client K-Means, HE-sealed cluster tuples
+//! routed via the aggregator, per-(CT,label) selection, re-weighting) →
+//! **train** (weighted SplitNN on the coreset, executed through
+//! PJRT-compiled XLA artifacts).
 
 pub mod bench;
 pub mod config;

@@ -16,19 +16,18 @@ use std::process::ExitCode;
 use std::sync::Arc;
 
 use treecss::config::Cli;
-use treecss::coordinator::pipeline::{Backend, Downstream, PipelineConfig};
-use treecss::coordinator::FrameworkVariant;
+use treecss::coordinator::{Backend, Downstream, FrameworkVariant, Pipeline};
 use treecss::coreset::cluster_coreset;
 use treecss::data::synth::{self, PaperDataset};
 use treecss::data::VerticalPartition;
 use treecss::ml::kmeans::ParAssign;
-use treecss::net::{Meter, NetConfig};
+use treecss::net::{ChannelTransport, Meter, MeteredTransport, NetConfig};
 use treecss::psi::common::HeContext;
 use treecss::psi::sched::Pairing;
 use treecss::psi::tree::{run_tree, TreeMpsiConfig};
 use treecss::psi::{path::run_path, star::run_star, TpsiProtocol};
 use treecss::splitnn::trainer::ModelKind;
-use treecss::util::pool::{Parallel, ThreadPool};
+use treecss::util::pool::Parallel;
 use treecss::util::rng::Rng;
 use treecss::{bench, Result};
 
@@ -65,21 +64,28 @@ treecss — TreeCSS vertical federated learning framework
 
 USAGE: treecss <run|mpsi|coreset|info> [--options]
 
-run options:
+run options (builds a Pipeline::builder(..) session over the metered
+in-process transport; parties exchange every protocol message as wire
+envelopes):
   --dataset BA|MU|RI|HI|BP|YP   (default RI)
   --scale <f64>                 fraction of paper size (default 0.05)
   --model lr|mlp|linreg|knn     (default lr)
   --variant treecss|treeall|starcss|starall  (default treecss)
+  --clients <m>                 feature-holding clients (default 3)
+  --overlap <frac>              fraction of samples all clients share
+                                (default 1.0; below 1.0 the alignment
+                                faces a partial intersection)
   --clusters <k per client>     (default 8)
   --lr <f32>  --epochs <n>      training hyper-parameters
   --backend xla|native          phase backend (default xla)
-  --threads <n>                 compute worker threads (0 = all cores)
+  --threads <n>                 worker threads for every hot path,
+                                alignment included (0 = all cores)
   --seed <u64>
 
 mpsi options:
   --clients <m>  --n <per-client size>  --overlap <frac>
   --protocol rsa|ot  --topology tree|path|star
-  --pairing volume|order  --rsa-bits <n>
+  --pairing volume|order  --rsa-bits <n>  --threads <n>
 
 coreset options:
   --dataset ... --scale ... --clusters <k> --threads <n> --no-reweight
@@ -124,21 +130,30 @@ fn cmd_run(cli: &Cli) -> Result<()> {
         tr.d()
     );
 
-    let mut cfg = PipelineConfig::new(variant, downstream);
-    cfg.seed = seed;
-    cfg.coreset.clusters_per_client = cli.opt_parse("clusters", 8)?;
-    cfg.train.lr = cli.opt_parse("lr", 0.05)?;
-    cfg.train.max_epochs = cli.opt_parse("epochs", 100)?;
-    cfg.threads = cli.opt_parse("threads", 0)?;
     let backend = match cli.opt_or("backend", "xla").as_str() {
         "xla" => Backend::xla_default()?,
         "native" => Backend::Native,
         b => return Err(treecss::Error::Config(format!("unknown backend {b:?}"))),
     };
-    let meter = Meter::new(NetConfig::lan_10gbps());
+    let session = Pipeline::builder(variant)
+        .downstream(downstream)
+        .clients(cli.opt_parse("clients", 3)?)
+        .seed(seed)
+        .overlap(cli.opt_parse("overlap", 1.0)?)
+        .clusters_per_client(cli.opt_parse("clusters", 8)?)
+        .lr(cli.opt_parse("lr", 0.05)?)
+        .epochs(cli.opt_parse("epochs", 100)?)
+        .threads(cli.opt_parse("threads", 0)?)
+        .net(NetConfig::lan_10gbps())
+        .backend(backend)
+        .build();
 
-    let rep = treecss::coordinator::run_pipeline(&tr, &te, &cfg, &backend, &meter)?;
-    println!("\n== {} ({} backend) ==", variant.name(), backend.name());
+    let rep = session.run(&tr, &te)?;
+    println!(
+        "\n== {} ({} backend) ==",
+        variant.name(),
+        session.backend().name()
+    );
     println!("aligned samples : {}", rep.n_aligned);
     if let Some(cs) = &rep.coreset {
         println!(
@@ -196,21 +211,14 @@ fn cmd_mpsi(cli: &Cli) -> Result<()> {
     let mut rng = Rng::new(seed);
     let sets = synth::mpsi_indicator_sets(m, n, overlap, &mut rng);
     let meter = Meter::new(NetConfig::lan_10gbps());
+    let net = MeteredTransport::new(ChannelTransport::new(), &meter);
     let he = HeContext::generate(&mut Rng::new(seed ^ 1), 512);
     let topo = cli.opt_or("topology", "tree");
+    let par = Parallel::auto(cli.opt_parse("threads", 0)?);
     let report = match topo.as_str() {
-        "tree" => {
-            let pool = ThreadPool::for_host();
-            run_tree(
-                &sets,
-                &TreeMpsiConfig { protocol, pairing, seed },
-                &meter,
-                &pool,
-                &he,
-            )
-        }
-        "path" => run_path(&sets, &protocol, seed, &meter, &he),
-        "star" => run_star(&sets, &protocol, 0, seed, &meter, &he),
+        "tree" => run_tree(&sets, &TreeMpsiConfig { protocol, pairing, seed }, &net, par, &he)?,
+        "path" => run_path(&sets, &protocol, seed, &net, &he)?,
+        "star" => run_star(&sets, &protocol, 0, seed, &net, &he)?,
         t => return Err(treecss::Error::Config(format!("unknown topology {t:?}"))),
     };
     println!("{topo}-MPSI over {m} clients × {n} items (overlap {overlap}):");
@@ -233,6 +241,7 @@ fn cmd_coreset(cli: &Cli) -> Result<()> {
     let part = VerticalPartition::even(ds.d(), 3);
     let slices: Vec<_> = (0..3).map(|c| part.slice(&ds.x, c)).collect();
     let meter = Meter::new(NetConfig::lan_10gbps());
+    let net = MeteredTransport::new(ChannelTransport::new(), &meter);
     let he = HeContext::generate(&mut rng, 512);
     // Same worker split as run_pipeline: parties fan out, the assignment
     // kernel inside each fit takes the leftover budget.
@@ -251,7 +260,7 @@ fn cmd_coreset(cli: &Cli) -> Result<()> {
         ds.task.is_classification(),
         &cfg,
         &ParAssign { par: inner },
-        &meter,
+        &net,
         &he,
     )?;
     println!(

@@ -1,17 +1,23 @@
-//! Simulated network substrate.
+//! Network substrate: message codecs, the pluggable transport, and the
+//! byte meter.
 //!
 //! The paper's testbed is a 4-machine cluster on a 10 Gbps LAN speaking
-//! gRPC. We replace the wire with an in-process transport that (a) counts
-//! every byte each party sends/receives, (b) converts bytes to *simulated
-//! transfer time* under a configurable latency/bandwidth model, and (c)
-//! still executes all cryptography for real, so wall-clock numbers reflect
-//! the true compute cost. DESIGN.md documents why this substitution
-//! preserves the paper's measurements (they are dominated by bytes × rounds
-//! and crypto compute).
+//! gRPC. We replace the wire with a pluggable [`Transport`]: parties are
+//! endpoints that `send`/`recv` typed [`transport::Envelope`]s, the
+//! in-process [`ChannelTransport`] moves them between protocol threads,
+//! and [`MeteredTransport`] middleware (a) counts every byte each party
+//! sends/receives and (b) converts bytes to *simulated transfer time*
+//! under a configurable latency/bandwidth model. All cryptography still
+//! executes for real, so wall-clock numbers reflect the true compute
+//! cost. DESIGN.md documents why this substitution preserves the paper's
+//! measurements (they are dominated by bytes × rounds and crypto compute)
+//! and where a gRPC/socket transport slots in.
 
 pub mod cost;
 pub mod meter;
 pub mod msg;
+pub mod transport;
 
 pub use cost::NetConfig;
 pub use meter::{Meter, PartyId};
+pub use transport::{ChannelTransport, Endpoint, Envelope, MeteredTransport, Transport};

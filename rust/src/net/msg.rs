@@ -107,6 +107,48 @@ pub fn encode_digest_batch(digests: &[Vec<u8>]) -> Vec<u8> {
     e.finish()
 }
 
+pub fn decode_digest_batch(buf: &[u8]) -> Result<Vec<Vec<u8>>> {
+    let mut d = Decoder::new(buf);
+    let blobs = d.blob_list().map_err(|e| Error::Net(e.to_string()))?;
+    d.finish().map_err(|e| Error::Net(e.to_string()))?;
+    Ok(blobs)
+}
+
+/// Single big-integer payload: the key server's Paillier modulus grant
+/// (the receiver recomputes n² locally, so only n crosses the wire).
+pub fn encode_biguint(v: &crate::crypto::BigUint) -> Vec<u8> {
+    let mut e = Encoder::new();
+    e.bytes(&v.to_bytes_be());
+    e.finish()
+}
+
+pub fn decode_biguint(buf: &[u8]) -> Result<crate::crypto::BigUint> {
+    let mut d = Decoder::new(buf);
+    let raw = d.bytes().map_err(|e| Error::Net(e.to_string()))?;
+    d.finish().map_err(|e| Error::Net(e.to_string()))?;
+    Ok(crate::crypto::BigUint::from_bytes_be(&raw))
+}
+
+/// Public-key announcement: a pair of big integers — RSA PSI ships (n, e)
+/// as its first message, and the receiving party reconstructs its public
+/// key from what actually crossed the wire.
+pub fn encode_public_key(a: &crate::crypto::BigUint, b: &crate::crypto::BigUint) -> Vec<u8> {
+    let mut e = Encoder::new();
+    e.bytes(&a.to_bytes_be()).bytes(&b.to_bytes_be());
+    e.finish()
+}
+
+pub fn decode_public_key(buf: &[u8]) -> Result<(crate::crypto::BigUint, crate::crypto::BigUint)> {
+    let mut d = Decoder::new(buf);
+    let a = d.bytes().map_err(|e| Error::Net(e.to_string()))?;
+    let b = d.bytes().map_err(|e| Error::Net(e.to_string()))?;
+    d.finish().map_err(|e| Error::Net(e.to_string()))?;
+    Ok((
+        crate::crypto::BigUint::from_bytes_be(&a),
+        crate::crypto::BigUint::from_bytes_be(&b),
+    ))
+}
+
 /// Hybrid HE envelope: a fresh 256-bit session key is Paillier-encrypted
 /// (in 32-bit chunks) under the recipient group's public key; the payload
 /// is stream-ciphered with an HMAC-SHA256 keystream under that session key.
@@ -261,6 +303,15 @@ impl TensorMsg {
             data: d.f32_slice().map_err(|e| Error::Net(e.to_string()))?,
         };
         d.finish().map_err(|e| Error::Net(e.to_string()))?;
+        let want = (m.rows as u64).checked_mul(m.cols as u64);
+        if want != Some(m.data.len() as u64) {
+            return Err(Error::Net(format!(
+                "tensor shape {}x{} does not match {} elements",
+                m.rows,
+                m.cols,
+                m.data.len()
+            )));
+        }
         Ok(m)
     }
 
@@ -338,5 +389,174 @@ mod tests {
         let buf = t.encode();
         assert_eq!(buf.len() as u64, TensorMsg::wire_bytes(2, 3));
         assert_eq!(TensorMsg::decode(&buf).unwrap(), t);
+    }
+
+    #[test]
+    fn tensor_shape_mismatch_is_error() {
+        // A forged header claiming 2x3 over 4 payload floats must be
+        // rejected, not accepted as an inconsistent tensor.
+        let mut e = crate::util::codec::Encoder::new();
+        e.u32(2).u32(3).f32_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(TensorMsg::decode(&e.finish()).is_err());
+    }
+
+    // ---- the transport's framing contract -------------------------------
+    //
+    // Every payload type round-trips through encode/decode for arbitrary
+    // contents, and malformed wire input (truncation anywhere, trailing
+    // garbage) returns Err — it never panics and never mis-decodes.
+
+    use crate::util::check;
+
+    /// Truncating an encoding at every prefix length and appending
+    /// trailing garbage must both yield `Err` from `decode`.
+    fn assert_framing<T>(buf: &[u8], decode: impl Fn(&[u8]) -> Result<T>) -> bool {
+        for cut in 0..buf.len() {
+            if decode(&buf[..cut]).is_ok() {
+                return false;
+            }
+        }
+        let mut garbage = buf.to_vec();
+        garbage.push(0xAB);
+        decode(&garbage).is_err()
+    }
+
+    #[test]
+    fn psi_request_property() {
+        check::forall_default(
+            |r| PsiRequest {
+                client: r.below(1 << 20) as u32,
+                res_len: r.next_u64(),
+                has_result: r.below(2) == 1,
+            },
+            |m| {
+                PsiRequest::decode(&m.encode()).unwrap() == *m
+                    && assert_framing(&m.encode(), PsiRequest::decode)
+            },
+        );
+    }
+
+    #[test]
+    fn psi_schedule_property() {
+        check::forall_default(
+            |r| PsiSchedule {
+                round: r.below(64) as u32,
+                partner: (r.below(2) == 1).then(|| r.below(1 << 16) as u32),
+                is_receiver: r.below(2) == 1,
+            },
+            |m| {
+                PsiSchedule::decode(&m.encode()).unwrap() == *m
+                    && assert_framing(&m.encode(), PsiSchedule::decode)
+            },
+        );
+    }
+
+    #[test]
+    fn index_list_property() {
+        check::forall_default(
+            |r| {
+                let n = r.below_usize(40);
+                (0..n).map(|_| r.next_u64()).collect::<Vec<u64>>()
+            },
+            |ids| {
+                decode_index_list(&encode_index_list(ids)).unwrap() == *ids
+                    && assert_framing(&encode_index_list(ids), decode_index_list)
+            },
+        );
+    }
+
+    #[test]
+    fn digest_batch_property() {
+        check::forall_default(
+            |r| {
+                let n = r.below_usize(10);
+                (0..n)
+                    .map(|_| {
+                        let len = r.below_usize(40);
+                        (0..len).map(|_| r.below(256) as u8).collect::<Vec<u8>>()
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |digests| {
+                let buf = encode_digest_batch(digests);
+                decode_digest_batch(&buf).unwrap() == *digests
+                    && assert_framing(&buf, decode_digest_batch)
+            },
+        );
+    }
+
+    #[test]
+    fn bigint_batch_property() {
+        check::forall_default(
+            |r| {
+                let n = r.below_usize(8);
+                (0..n)
+                    .map(|_| crate::crypto::BigUint::from_u64(r.next_u64()))
+                    .collect::<Vec<_>>()
+            },
+            |xs| {
+                let buf = encode_bigint_batch(xs, 16);
+                decode_bigint_batch(&buf).unwrap() == *xs
+                    && assert_framing(&buf, decode_bigint_batch)
+            },
+        );
+    }
+
+    #[test]
+    fn ct_message_property() {
+        check::forall_default(
+            |r| {
+                let n = r.below_usize(30);
+                CtMessage {
+                    client: r.below(64) as u32,
+                    weights: (0..n).map(|_| r.below(1000) as f32 / 8.0).collect(),
+                    clusters: (0..n).map(|_| r.below(32) as u32).collect(),
+                    dists: (0..n).map(|_| r.below(1000) as f32 / 16.0).collect(),
+                }
+            },
+            |m| {
+                CtMessage::decode(&m.encode()).unwrap() == *m
+                    && assert_framing(&m.encode(), CtMessage::decode)
+            },
+        );
+    }
+
+    #[test]
+    fn tensor_property() {
+        check::forall_default(
+            |r| {
+                let rows = 1 + r.below_usize(6);
+                let cols = 1 + r.below_usize(6);
+                let data = (0..rows * cols).map(|i| i as f32 / 3.0).collect();
+                TensorMsg::new(rows, cols, data)
+            },
+            |m| {
+                TensorMsg::decode(&m.encode()).unwrap() == *m
+                    && assert_framing(&m.encode(), TensorMsg::decode)
+            },
+        );
+    }
+
+    #[test]
+    fn public_key_roundtrip_and_framing() {
+        let n = crate::crypto::BigUint::from_hex("c0ffee1234567890abcdef").unwrap();
+        let e = crate::crypto::BigUint::from_u64(65537);
+        let buf = encode_public_key(&n, &e);
+        assert_eq!(decode_public_key(&buf).unwrap(), (n, e));
+        assert!(assert_framing(&buf, decode_public_key));
+    }
+
+    #[test]
+    fn hybrid_envelope_rejects_malformed_wire() {
+        let mut r = Rng::new(3);
+        let (pk, _) = paillier::keygen(&mut r, 256).unwrap();
+        let env = HybridEnvelope::seal(&mut r, &pk, b"payload").unwrap();
+        let buf = env.encode();
+        for cut in 0..buf.len() {
+            assert!(HybridEnvelope::decode(&buf[..cut]).is_err(), "cut={cut}");
+        }
+        let mut garbage = buf.clone();
+        garbage.extend_from_slice(&[1, 2, 3]);
+        assert!(HybridEnvelope::decode(&garbage).is_err());
     }
 }

@@ -1,13 +1,19 @@
 //! Protocol participants (paper §3): feature-holding clients, the label
 //! owner, the aggregation server, and the key server.
 //!
-//! Parties are data-holding nodes; the [`crate::coordinator`] drives the
-//! protocol phases across them while charging every message to the meter.
-//! This mirrors the paper's deployment (one process per party on a LAN)
-//! with threads + the simulated wire substituting for gRPC (DESIGN.md).
+//! Parties are *endpoints*, not passive data structs: each node exposes
+//! protocol methods that take its [`Transport`] handle and move real
+//! [`Envelope`](crate::net::Envelope)s — announcing alignment requests,
+//! awaiting schedules, sealing cluster tuples, routing ciphertext. This
+//! mirrors the paper's deployment (one process per party on a LAN) with
+//! the in-process [`crate::net::ChannelTransport`] substituting for gRPC
+//! (DESIGN.md); a socket transport drops in without touching the nodes.
 
+use crate::crypto::paillier::PaillierPublic;
 use crate::data::{Dataset, Matrix, Task, VerticalPartition};
 use crate::error::{Error, Result};
+use crate::net::msg::{self, HybridEnvelope, PsiSchedule};
+use crate::net::{Endpoint, PartyId, Transport};
 use crate::psi::common::HeContext;
 use crate::util::rng::Rng;
 
@@ -23,6 +29,49 @@ pub struct ClientNode {
 }
 
 impl ClientNode {
+    /// This client's handle on the wire.
+    pub fn endpoint<'t>(&self, net: &'t dyn Transport) -> Endpoint<'t> {
+        Endpoint::new(net, PartyId::Client(self.id))
+    }
+
+    /// Alignment step 1: announce (ResLen, has-result) to the aggregation
+    /// server. Returns the simulated transfer time.
+    pub fn announce_alignment(
+        &self,
+        net: &dyn Transport,
+        round: u32,
+        phase: &str,
+    ) -> Result<f64> {
+        Ok(crate::psi::common::announce(net, self.id, self.res_len(), round, phase)?.sim_s)
+    }
+
+    /// Alignment step 3: block for the aggregator's status message naming
+    /// this round's TPSI partner and role.
+    pub fn await_schedule(&self, net: &dyn Transport, phase: &str) -> Result<PsiSchedule> {
+        crate::psi::common::await_schedule(net, self.id, phase)
+    }
+
+    /// Receive the HE public key the key server distributed and rebuild it
+    /// from the wire bytes.
+    pub fn receive_he_key(&self, net: &dyn Transport, phase: &str) -> Result<PaillierPublic> {
+        let env = self.endpoint(net).recv(PartyId::KeyServer, phase)?;
+        decode_he_key(&env.payload)
+    }
+
+    /// Coreset step 3: seal this client's cluster tuples under the group
+    /// HE key and upload them to the aggregation server (which routes the
+    /// ciphertext it cannot open to the label owner).
+    pub fn send_cluster_tuples(
+        &self,
+        net: &dyn Transport,
+        rng: &mut Rng,
+        pk: &PaillierPublic,
+        ct: &msg::CtMessage,
+        phase: &str,
+    ) -> Result<f64> {
+        Ok(send_sealed_ct(net, self.id, rng, pk, ct, phase)?.0)
+    }
+
     /// Rows re-ordered to match an aligned indicator list (the PSI result).
     pub fn aligned_slice(&self, aligned: &[u64]) -> Result<Matrix> {
         let pos: std::collections::HashMap<u64, usize> =
@@ -52,6 +101,22 @@ pub struct LabelOwnerNode {
 }
 
 impl LabelOwnerNode {
+    /// The label owner's handle on the wire.
+    pub fn endpoint<'t>(&self, net: &'t dyn Transport) -> Endpoint<'t> {
+        Endpoint::new(net, PartyId::LabelOwner)
+    }
+
+    /// Coreset step 3 (receiving side): open one routed cluster-tuple
+    /// envelope with the group private key and decode it.
+    pub fn receive_cluster_tuples(
+        &self,
+        net: &dyn Transport,
+        he: &HeContext,
+        phase: &str,
+    ) -> Result<msg::CtMessage> {
+        recv_sealed_ct(net, he, phase)
+    }
+
     /// Labels re-ordered to an aligned indicator list.
     pub fn aligned_labels(&self, aligned: &[u64]) -> Result<Vec<f32>> {
         let pos: std::collections::HashMap<u64, usize> =
@@ -67,7 +132,34 @@ impl LabelOwnerNode {
     }
 }
 
-/// The key server: generates and distributes the HE context.
+/// The aggregation server: routes envelopes it cannot open and schedules
+/// TPSI pairs. It holds no data and no keys — its whole identity is its
+/// position on the wire.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AggregatorNode;
+
+impl AggregatorNode {
+    pub fn endpoint<'t>(&self, net: &'t dyn Transport) -> Endpoint<'t> {
+        Endpoint::new(net, PartyId::Aggregator)
+    }
+
+    /// Receive one envelope from `from` and forward its (opaque) payload
+    /// to `to` — the routing primitive behind the paper's privacy shape:
+    /// all traffic transits the server, which can read none of it.
+    pub fn route(
+        &self,
+        net: &dyn Transport,
+        from: PartyId,
+        to: PartyId,
+        phase: &str,
+    ) -> Result<f64> {
+        let ep = self.endpoint(net);
+        let env = ep.recv(from, phase)?;
+        ep.send(to, phase, env.payload)
+    }
+}
+
+/// The key server: generates the HE context and distributes the public key.
 pub struct KeyServerNode {
     he: HeContext,
 }
@@ -77,9 +169,81 @@ impl KeyServerNode {
         KeyServerNode { he: HeContext::generate(rng, bits) }
     }
 
+    pub fn endpoint<'t>(&self, net: &'t dyn Transport) -> Endpoint<'t> {
+        Endpoint::new(net, PartyId::KeyServer)
+    }
+
+    /// Distribute the Paillier public key to every client and the label
+    /// owner (metered like any other message). Returns the simulated time.
+    pub fn distribute_keys(
+        &self,
+        net: &dyn Transport,
+        num_clients: usize,
+        phase: &str,
+    ) -> Result<f64> {
+        let wire = encode_he_key(&self.he.pk);
+        let ep = self.endpoint(net);
+        let mut sim = 0.0;
+        for c in 0..num_clients {
+            sim += ep.send(PartyId::Client(c as u32), phase, wire.clone())?;
+        }
+        sim += ep.send(PartyId::LabelOwner, phase, wire)?;
+        // The label owner consumes (and validates) its grant here; clients
+        // consume theirs through `ClientNode::receive_he_key`.
+        let grant = net.recv(PartyId::LabelOwner, PartyId::KeyServer, phase)?;
+        decode_he_key(&grant.payload)?;
+        Ok(sim)
+    }
+
     pub fn he(&self) -> &HeContext {
         &self.he
     }
+}
+
+/// Client half of coreset step 3 (shared by [`ClientNode::send_cluster_tuples`]
+/// and the coreset orchestration, which works over bare client indices):
+/// seal the cluster tuples and upload them to the aggregation server.
+/// Returns (simulated time, wire bytes).
+pub fn send_sealed_ct(
+    net: &dyn Transport,
+    client: u32,
+    rng: &mut Rng,
+    pk: &PaillierPublic,
+    ct: &msg::CtMessage,
+    phase: &str,
+) -> Result<(f64, u64)> {
+    let sealed = HybridEnvelope::seal(rng, pk, &ct.encode())?;
+    let wire = sealed.encode();
+    let bytes = wire.len() as u64;
+    let sim = Endpoint::new(net, PartyId::Client(client)).send(PartyId::Aggregator, phase, wire)?;
+    Ok((sim, bytes))
+}
+
+/// Label-owner half of coreset step 3: open one routed cluster-tuple
+/// envelope with the group private key and decode it.
+pub fn recv_sealed_ct(
+    net: &dyn Transport,
+    he: &HeContext,
+    phase: &str,
+) -> Result<msg::CtMessage> {
+    let env = Endpoint::new(net, PartyId::LabelOwner).recv(PartyId::Aggregator, phase)?;
+    let sealed = HybridEnvelope::decode(&env.payload)?;
+    msg::CtMessage::decode(&sealed.open(he.private())?)
+}
+
+/// Wire form of the Paillier public key: only the modulus travels; the
+/// receiver recomputes n².
+fn encode_he_key(pk: &PaillierPublic) -> Vec<u8> {
+    msg::encode_biguint(&pk.n)
+}
+
+fn decode_he_key(buf: &[u8]) -> Result<PaillierPublic> {
+    let n = msg::decode_biguint(buf)?;
+    if n.is_zero() {
+        return Err(Error::Net("malformed HE key grant: zero modulus".into()));
+    }
+    let n2 = n.mul(&n);
+    Ok(PaillierPublic { n, n2 })
 }
 
 /// Deal a dataset into the paper's party layout: `m` clients with
@@ -87,15 +251,40 @@ impl KeyServerNode {
 /// shuffled) plus a label owner. Every client holds all the samples — the
 /// paper's protocol — but in its own order, so alignment is still required.
 pub fn deal(ds: &Dataset, m: usize, rng: &mut Rng) -> (Vec<ClientNode>, LabelOwnerNode) {
+    deal_with_overlap(ds, m, 1.0, rng)
+}
+
+/// Like [`deal`], but each client holds only a subset of the samples so the
+/// alignment phase faces a *partial* intersection (what real VFL parties
+/// see — disjoint user bases with a shared core).
+///
+/// A common core of `⌈overlap · n⌉` samples goes to every client; each
+/// remaining sample is withheld from exactly one client (round-robin), so
+/// the multi-party intersection is exactly the core. `overlap = 1.0`
+/// reduces to [`deal`]. The label owner always keeps every label — it must
+/// serve whatever subset survives alignment.
+pub fn deal_with_overlap(
+    ds: &Dataset,
+    m: usize,
+    overlap: f64,
+    rng: &mut Rng,
+) -> (Vec<ClientNode>, LabelOwnerNode) {
+    assert!((0.0..=1.0).contains(&overlap), "overlap must be in [0, 1]");
+    let n = ds.n();
+    let n_core = if m <= 1 { n } else { ((n as f64) * overlap).ceil() as usize };
     let part = VerticalPartition::even(ds.d(), m);
     let clients = (0..m)
         .map(|c| {
-            let mut order: Vec<usize> = (0..ds.n()).collect();
-            rng.shuffle(&mut order);
+            // Client c holds the core rows plus every extra row except the
+            // ones assigned to drop at c (extra i is withheld from client
+            // i mod m), then shuffles its local order independently.
+            let mut rows: Vec<usize> = (0..n_core).collect();
+            rows.extend((n_core..n).filter(|i| (i - n_core) % m != c));
+            rng.shuffle(&mut rows);
             ClientNode {
                 id: c as u32,
-                x: part.slice(&ds.x, c).select_rows(&order),
-                ids: order.iter().map(|&i| ds.ids[i]).collect(),
+                x: part.slice(&ds.x, c).select_rows(&rows),
+                ids: rows.iter().map(|&i| ds.ids[i]).collect(),
             }
         })
         .collect();
@@ -107,6 +296,8 @@ pub fn deal(ds: &Dataset, m: usize, rng: &mut Rng) -> (Vec<ClientNode>, LabelOwn
 mod tests {
     use super::*;
     use crate::data::synth;
+    use crate::net::{ChannelTransport, Meter, MeteredTransport, NetConfig};
+    use crate::psi::oracle_intersection;
 
     #[test]
     fn deal_then_align_recovers_rows() {
@@ -146,5 +337,115 @@ mod tests {
         let ds = synth::blobs("t", 10, 4, 2, 1, 3.0, 1.0, &mut rng);
         let (clients, _) = deal(&ds, 2, &mut rng);
         assert!(clients[0].aligned_slice(&[999]).is_err());
+    }
+
+    #[test]
+    fn overlap_controls_the_intersection() {
+        let mut rng = Rng::new(4);
+        let ds = synth::blobs("t", 60, 6, 2, 1, 3.0, 1.0, &mut rng);
+        for overlap in [0.25, 0.5, 0.8] {
+            let (clients, _) = deal_with_overlap(&ds, 3, overlap, &mut rng);
+            let sets: Vec<Vec<u64>> = clients.iter().map(|c| c.ids.clone()).collect();
+            let inter = oracle_intersection(&sets);
+            let want = ((60.0 * overlap).ceil()) as usize;
+            assert_eq!(inter.len(), want, "overlap={overlap}");
+            // Every client can serve the aligned subset.
+            for c in &clients {
+                assert!(c.aligned_slice(&inter).is_ok());
+            }
+        }
+    }
+
+    #[test]
+    fn full_overlap_matches_deal() {
+        let ds = {
+            let mut rng = Rng::new(5);
+            synth::blobs("t", 30, 4, 2, 1, 3.0, 1.0, &mut rng)
+        };
+        let (a, _) = deal(&ds, 3, &mut Rng::new(9));
+        let (b, _) = deal_with_overlap(&ds, 3, 1.0, &mut Rng::new(9));
+        for (ca, cb) in a.iter().zip(&b) {
+            assert_eq!(ca.ids, cb.ids);
+        }
+    }
+
+    #[test]
+    fn key_server_distributes_usable_keys_over_the_wire() {
+        let mut rng = Rng::new(6);
+        let ds = synth::blobs("t", 10, 4, 2, 1, 3.0, 1.0, &mut rng);
+        let (clients, _) = deal(&ds, 2, &mut rng);
+        let ks = KeyServerNode::new(&mut rng, 256);
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let net = MeteredTransport::new(ChannelTransport::new(), &meter);
+        let sim = ks.distribute_keys(&net, 2, "keys/dist").unwrap();
+        assert!(sim > 0.0);
+        assert_eq!(meter.total_messages("keys/"), 3); // 2 clients + label owner
+        for c in &clients {
+            let pk = c.receive_he_key(&net, "keys/dist").unwrap();
+            assert_eq!(pk.n, ks.he().pk.n);
+            // The rebuilt key encrypts; the key server's private key decrypts.
+            let ct = pk.encrypt_u64(&mut rng, 77).unwrap();
+            assert_eq!(ks.he().private().decrypt_u64(&ct), Some(77));
+        }
+        assert_eq!(net.pending(), 0);
+    }
+
+    #[test]
+    fn aggregator_routes_opaque_payloads() {
+        let agg = AggregatorNode;
+        let net = ChannelTransport::new();
+        Endpoint::new(&net, PartyId::Client(0))
+            .send(PartyId::Aggregator, "r", vec![1, 2, 3])
+            .unwrap();
+        agg.route(&net, PartyId::Client(0), PartyId::LabelOwner, "r").unwrap();
+        let got = Endpoint::new(&net, PartyId::LabelOwner)
+            .recv(PartyId::Aggregator, "r")
+            .unwrap();
+        assert_eq!(got.payload, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn client_announces_and_awaits_schedule_via_endpoint() {
+        let mut rng = Rng::new(8);
+        let ds = synth::blobs("t", 8, 4, 2, 1, 3.0, 1.0, &mut rng);
+        let (clients, _) = deal(&ds, 2, &mut rng);
+        let net = ChannelTransport::new();
+        clients[0].announce_alignment(&net, 0, "psi/round0").unwrap();
+        // Aggregator reads the request off the wire and answers.
+        let env = net
+            .recv(PartyId::Aggregator, PartyId::Client(0), "psi/round0")
+            .unwrap();
+        let req = msg::PsiRequest::decode(&env.payload).unwrap();
+        assert_eq!(req.res_len, clients[0].res_len());
+        let status = msg::PsiSchedule { round: 0, partner: Some(1), is_receiver: true };
+        Endpoint::new(&net, PartyId::Aggregator)
+            .send(PartyId::Client(0), "psi/round0", status.encode())
+            .unwrap();
+        let got = clients[0].await_schedule(&net, "psi/round0").unwrap();
+        assert_eq!(got, status);
+        assert_eq!(net.pending(), 0);
+    }
+
+    #[test]
+    fn client_cluster_tuples_route_to_label_owner() {
+        let mut rng = Rng::new(7);
+        let ds = synth::blobs("t", 12, 4, 2, 1, 3.0, 1.0, &mut rng);
+        let (clients, lo) = deal(&ds, 2, &mut rng);
+        let he = HeContext::for_tests();
+        let net = ChannelTransport::new();
+        let ct = msg::CtMessage {
+            client: 0,
+            weights: vec![1.0, 0.5],
+            clusters: vec![0, 1],
+            dists: vec![0.1, 0.2],
+        };
+        clients[0]
+            .send_cluster_tuples(&net, &mut rng, &he.pk, &ct, "coreset/ct")
+            .unwrap();
+        AggregatorNode
+            .route(&net, PartyId::Client(0), PartyId::LabelOwner, "coreset/ct")
+            .unwrap();
+        let got = lo.receive_cluster_tuples(&net, &he, "coreset/ct").unwrap();
+        assert_eq!(got, ct);
     }
 }

@@ -1,12 +1,19 @@
-//! Shared pieces of the MPSI engines: the HE context from the key server
-//! and the result-allocation step (paper Fig. 2 steps 5–6).
+//! Shared pieces of the MPSI engines: the HE context from the key server,
+//! the round-scheduling exchange (paper Fig. 2 steps 1–3) and the
+//! result-allocation step (steps 5–6) — all message-passing over the
+//! [`Transport`], so the engines' wire traffic is exactly what a
+//! per-process deployment would send.
 
 use std::sync::Arc;
 
 use crate::crypto::paillier::{self, PaillierPrivate, PaillierPublic};
-use crate::net::msg::{self, HybridEnvelope};
-use crate::net::{Meter, PartyId};
+use crate::error::Result;
+use crate::net::msg::{self, HybridEnvelope, PsiRequest, PsiSchedule};
+use crate::net::{Endpoint, PartyId, Transport};
 use crate::util::rng::Rng;
+
+use super::sched::{schedule, Pairing, RoundSchedule, ScheduledPair};
+use super::TpsiKind;
 
 /// HE key material distributed by the key server. The aggregation server
 /// never holds `sk` — it only routes sealed envelopes.
@@ -33,90 +40,238 @@ impl HeContext {
     }
 }
 
+/// Wire traffic summary of a protocol step: simulated transfer time plus
+/// the bytes that crossed the transport (the engine's own bookkeeping;
+/// the authoritative per-edge record lives in the metering middleware).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Flow {
+    pub sim_s: f64,
+    pub bytes: u64,
+}
+
+impl Flow {
+    pub fn add(&mut self, sim_s: f64, bytes: u64) {
+        self.sim_s += sim_s;
+        self.bytes += bytes;
+    }
+}
+
 /// Result allocation: the final holder seals the aligned, ordered indicator
 /// list under HE and ships it to every other client via the aggregation
-/// server. Returns the simulated time of the step.
+/// server, which routes ciphertext it cannot open.
 pub fn allocate_result(
     holder: u32,
     num_clients: u32,
     result: &[u64],
     he: &HeContext,
-    meter: &Meter,
+    net: &dyn Transport,
     phase: &str,
     rng: &mut Rng,
-) -> f64 {
+) -> Result<Flow> {
+    let mut flow = Flow::default();
     let payload = msg::encode_index_list(result);
-    let env = HybridEnvelope::seal(rng, &he.pk, &payload).expect("seal");
+    let env = HybridEnvelope::seal(rng, &he.pk, &payload)?;
     let wire = env.encode();
-    let mut sim = meter.charge(
-        PartyId::Client(holder),
-        PartyId::Aggregator,
-        phase,
+
+    // Holder uploads the sealed result to the aggregator.
+    let holder_ep = Endpoint::new(net, PartyId::Client(holder));
+    flow.add(
+        holder_ep.send(PartyId::Aggregator, phase, wire.clone())?,
         wire.len() as u64,
     );
-    // The aggregator forwards to every other client; its uplink serializes.
+
+    // The aggregator forwards the (opaque) envelope to every other client;
+    // its uplink serializes.
+    let agg = Endpoint::new(net, PartyId::Aggregator);
+    let routed = agg.recv(PartyId::Client(holder), phase)?;
     for c in 0..num_clients {
         if c == holder {
             continue;
         }
-        sim += meter.charge(PartyId::Aggregator, PartyId::Client(c), phase, wire.len() as u64);
+        flow.add(
+            agg.send(PartyId::Client(c), phase, routed.payload.clone())?,
+            routed.payload.len() as u64,
+        );
     }
-    // Every client can decrypt with the key-server-provided private key.
-    let opened = env.open(he.private()).expect("open");
-    debug_assert_eq!(msg::decode_index_list(&opened).unwrap(), result);
-    sim
+
+    // Every client opens its delivery with the key-server-provided private
+    // key and recovers the aligned indicator list from the wire bytes.
+    for c in 0..num_clients {
+        if c == holder {
+            continue;
+        }
+        let delivered = Endpoint::new(net, PartyId::Client(c))
+            .recv(PartyId::Aggregator, phase)?;
+        let sealed = HybridEnvelope::decode(&delivered.payload)?;
+        let opened = sealed.open(he.private())?;
+        if msg::decode_index_list(&opened)? != result {
+            return Err(crate::Error::Psi(format!(
+                "client {c}: allocated result corrupted in transit"
+            )));
+        }
+    }
+    Ok(flow)
 }
 
-/// Per-round scheduling chatter: each active client requests (step 1),
-/// the aggregator answers with a status message (step 3). Returns sim time
-/// (serialized at the aggregator, which is the paper's design).
-pub fn charge_round_scheduling(
+/// Client side of alignment step 1: announce "am I active, and how many
+/// items do I hold" to the aggregation server.
+pub fn announce(
+    net: &dyn Transport,
+    client: u32,
+    res_len: u64,
+    round: u32,
+    phase: &str,
+) -> Result<Flow> {
+    let req = PsiRequest { client, res_len, has_result: round > 0 };
+    let wire = req.encode();
+    let bytes = wire.len() as u64;
+    let sim =
+        Endpoint::new(net, PartyId::Client(client)).send(PartyId::Aggregator, phase, wire)?;
+    Ok(Flow { sim_s: sim, bytes })
+}
+
+/// Client side of alignment step 3: block for the aggregator's status
+/// message naming this round's partner and role.
+pub fn await_schedule(net: &dyn Transport, client: u32, phase: &str) -> Result<PsiSchedule> {
+    let env = Endpoint::new(net, PartyId::Client(client)).recv(PartyId::Aggregator, phase)?;
+    PsiSchedule::decode(&env.payload)
+}
+
+/// The full round-scheduling exchange (paper Fig. 2 steps 1–3), with the
+/// party halves interleaved deadlock-free: every active client announces,
+/// the aggregator collects the requests *from the wire*, pairs the clients
+/// it heard from, and answers each with its partner and role; the returned
+/// plan is rebuilt from the schedules the clients actually decoded — the
+/// request/status messages are load-bearing, not decorative.
+pub fn exchange_round_schedule(
     active: &[(usize, u64)],
     round: u32,
-    meter: &Meter,
+    pairing: Pairing,
+    kind: TpsiKind,
+    net: &dyn Transport,
     phase: &str,
-) -> f64 {
-    let mut sim = 0.0;
+) -> Result<(RoundSchedule, Flow)> {
+    let mut flow = Flow::default();
+
+    // Step 1: clients announce.
     for &(id, res_len) in active {
-        let req = msg::PsiRequest { client: id as u32, res_len, has_result: round > 0 };
-        sim += meter.charge(
-            PartyId::Client(id as u32),
-            PartyId::Aggregator,
-            phase,
-            req.encode().len() as u64,
-        );
-        let status = msg::PsiSchedule { round, partner: Some(0), is_receiver: false };
-        sim += meter.charge(
-            PartyId::Aggregator,
-            PartyId::Client(id as u32),
-            phase,
-            status.encode().len() as u64,
+        let f = announce(net, id as u32, res_len, round, phase)?;
+        flow.add(f.sim_s, f.bytes);
+    }
+
+    // Step 2: the aggregator rebuilds the active list from its mailbox and
+    // runs the pairing strategy on what it received.
+    let agg = Endpoint::new(net, PartyId::Aggregator);
+    let mut heard = Vec::with_capacity(active.len());
+    for &(id, _) in active {
+        let env = agg.recv(PartyId::Client(id as u32), phase)?;
+        let req = PsiRequest::decode(&env.payload)?;
+        heard.push((req.client as usize, req.res_len));
+    }
+    let plan = schedule(&heard, pairing, kind);
+
+    // Step 3: the aggregator answers every client.
+    for &(id, _) in active {
+        let status = status_for(&plan, id, round);
+        let wire = status.encode();
+        flow.add(
+            agg.send(PartyId::Client(id as u32), phase, wire.clone())?,
+            wire.len() as u64,
         );
     }
-    sim
+
+    // Clients decode their status; the engine's plan is whatever traveled.
+    let mut pairs = Vec::new();
+    let mut bye = None;
+    for &(id, _) in active {
+        let status = await_schedule(net, id as u32, phase)?;
+        match status.partner {
+            None => bye = Some(id),
+            Some(p) if status.is_receiver => {
+                pairs.push(ScheduledPair { sender: p as usize, receiver: id })
+            }
+            Some(_) => {} // sender role: recorded by the partner's status
+        }
+    }
+    Ok((RoundSchedule { pairs, bye }, flow))
+}
+
+/// The status message for one client under a round plan.
+fn status_for(plan: &RoundSchedule, id: usize, round: u32) -> PsiSchedule {
+    for p in &plan.pairs {
+        if p.sender == id {
+            return PsiSchedule { round, partner: Some(p.receiver as u32), is_receiver: false };
+        }
+        if p.receiver == id {
+            return PsiSchedule { round, partner: Some(p.sender as u32), is_receiver: true };
+        }
+    }
+    // Not paired this round: wait (odd one out).
+    PsiSchedule { round, partner: None, is_receiver: false }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::net::NetConfig;
+    use crate::net::{ChannelTransport, Meter, MeteredTransport, NetConfig};
 
     #[test]
     fn allocation_charges_m_minus_1_forwards() {
         let meter = Meter::new(NetConfig::lan_10gbps());
+        let net = MeteredTransport::new(ChannelTransport::new(), &meter);
         let he = HeContext::for_tests();
         let mut rng = Rng::new(5);
-        let sim = allocate_result(2, 5, &[1, 2, 3], &he, &meter, "alloc", &mut rng);
-        assert!(sim > 0.0);
-        // 1 upload + 4 forwards.
+        let flow = allocate_result(2, 5, &[1, 2, 3], &he, &net, "alloc", &mut rng).unwrap();
+        assert!(flow.sim_s > 0.0);
+        // 1 upload + 4 forwards, both in the meter and in the engine flow.
         assert_eq!(meter.total_messages("alloc"), 5);
+        assert_eq!(meter.total_bytes("alloc"), flow.bytes);
+        // Every byte transits the aggregator (the routing privacy shape).
+        assert_eq!(meter.party_bytes(PartyId::Aggregator, "alloc"), flow.bytes);
     }
 
     #[test]
-    fn scheduling_charges_two_messages_per_client() {
+    fn scheduling_messages_travel_and_rebuild_the_plan() {
         let meter = Meter::new(NetConfig::lan_10gbps());
-        let active = [(0usize, 10u64), (1, 20), (2, 30)];
-        charge_round_scheduling(&active, 0, &meter, "sched");
-        assert_eq!(meter.total_messages("sched"), 6);
+        let net = MeteredTransport::new(ChannelTransport::new(), &meter);
+        let active = [(0usize, 10u64), (1, 20), (2, 30), (3, 40)];
+        let (plan, flow) = exchange_round_schedule(
+            &active,
+            0,
+            Pairing::VolumeAware,
+            TpsiKind::Rsa,
+            &net,
+            "sched",
+        )
+        .unwrap();
+        // Two messages per active client: request up, status down.
+        assert_eq!(meter.total_messages("sched"), 8);
+        assert_eq!(meter.total_bytes("sched"), flow.bytes);
+        // The traveled plan matches the pairing strategy run directly.
+        let direct = schedule(&active, Pairing::VolumeAware, TpsiKind::Rsa);
+        let mut got = plan.pairs.clone();
+        let mut want = direct.pairs.clone();
+        got.sort_by_key(|p| p.receiver);
+        want.sort_by_key(|p| p.receiver);
+        assert_eq!(got, want);
+        assert_eq!(plan.bye, direct.bye);
+    }
+
+    #[test]
+    fn odd_client_count_byes_over_the_wire() {
+        let net = ChannelTransport::new();
+        let active = [(4usize, 9u64), (7, 9), (9, 9)];
+        let (plan, _) = exchange_round_schedule(
+            &active,
+            1,
+            Pairing::RequestOrder,
+            TpsiKind::Ot,
+            &net,
+            "s",
+        )
+        .unwrap();
+        assert_eq!(plan.pairs.len(), 1);
+        assert!(plan.bye.is_some());
+        assert_eq!(net.pending(), 0);
     }
 }

@@ -1,8 +1,10 @@
 //! Private set intersection: two-party primitives and multi-party engines.
 //!
 //! Paper §4.1. The two-party primitives ([`rsa_psi`], [`ot_psi`]) execute
-//! their cryptography for real and charge every message to the [`Meter`].
-//! Three MPSI engines compose them:
+//! their cryptography for real and exchange every message through the
+//! pluggable [`Transport`]; wrap the transport in
+//! [`crate::net::MeteredTransport`] and every byte is charged to the
+//! [`crate::net::Meter`] on delivery. Three MPSI engines compose them:
 //!
 //! * [`tree`] — **Tree-MPSI** (the paper's contribution): pairs active
 //!   clients each round, runs the pairs concurrently, O(log m) rounds.
@@ -21,7 +23,8 @@ pub mod sched;
 pub mod star;
 pub mod tree;
 
-use crate::net::{Meter, PartyId};
+use crate::error::Result;
+use crate::net::{PartyId, Transport};
 
 /// Which two-party primitive an MPSI engine uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -85,24 +88,25 @@ impl TpsiProtocol {
 
     /// Execute between `sender` and `receiver`; result at the receiver.
     ///
-    /// `from`/`to` are the meter identities of sender/receiver; `phase`
-    /// prefixes the meter key; `seed` makes blinding deterministic per run.
+    /// `from`/`to` are the transport identities of sender/receiver;
+    /// `phase` routes (and meters) the pair's messages; `seed` makes
+    /// blinding deterministic per run.
     pub fn run(
         &self,
         sender: &[u64],
         receiver: &[u64],
-        meter: &Meter,
+        net: &dyn Transport,
         from: PartyId,
         to: PartyId,
         phase: &str,
         seed: u64,
-    ) -> TpsiOutcome {
+    ) -> Result<TpsiOutcome> {
         match self {
             TpsiProtocol::Rsa(cfg) => {
-                rsa_psi::run(cfg, sender, receiver, meter, from, to, phase, seed)
+                rsa_psi::run(cfg, sender, receiver, net, from, to, phase, seed)
             }
             TpsiProtocol::Ot(cfg) => {
-                ot_psi::run(cfg, sender, receiver, meter, from, to, phase, seed)
+                ot_psi::run(cfg, sender, receiver, net, from, to, phase, seed)
             }
         }
     }

@@ -17,12 +17,17 @@
 //! receiver — the opposite of the RSA rule, exactly as the paper states.
 //!
 //! The oblivious transfer itself is *simulated at the cost level*: we
-//! evaluate PRF_k directly (the functionality) and charge the bytes a
-//! KKRT-style instantiation would move. Fig. 7(b) compares topologies and
-//! scheduling, which depend on bytes × rounds — preserved by this model.
+//! evaluate PRF_k directly (the functionality) and ship
+//! [`Envelope::sized`](crate::net::Envelope::sized) messages declaring the
+//! bytes a KKRT-style instantiation would move (setup and encoding
+//! envelopes carry no payload; the mapped set travels for real and the
+//! receiver compares against the decoded wire bytes). Fig. 7(b) compares
+//! topologies and scheduling, which depend on bytes × rounds — preserved
+//! by this model.
 
 use crate::crypto::prf::Prf;
-use crate::net::{msg, Meter, PartyId};
+use crate::error::Result;
+use crate::net::{msg, Endpoint, PartyId, Transport};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -58,21 +63,25 @@ pub fn run(
     cfg: &OtPsiConfig,
     sender: &[u64],
     receiver: &[u64],
-    meter: &Meter,
+    net: &dyn Transport,
     sender_id: PartyId,
     receiver_id: PartyId,
     phase: &str,
     seed: u64,
-) -> TpsiOutcome {
+) -> Result<TpsiOutcome> {
     let sw = Stopwatch::start();
     let mut rng = Rng::new(seed ^ 0x07A9_C3D1_55B2_E600);
     let mut cost = PairCost::default();
     let mut sim_s = 0.0;
+    let snd = Endpoint::new(net, sender_id);
+    let rcv = Endpoint::new(net, receiver_id);
 
     // --- setup: base OTs (fixed), split across directions ----------------
     let half = cfg.base_ot_bytes / 2;
-    sim_s += meter.charge(sender_id, receiver_id, phase, half);
-    sim_s += meter.charge(receiver_id, sender_id, phase, half);
+    sim_s += snd.send_sized(receiver_id, phase, Vec::new(), half)?;
+    sim_s += rcv.send_sized(sender_id, phase, Vec::new(), half)?;
+    rcv.recv(sender_id, phase)?;
+    snd.recv(receiver_id, phase)?;
     cost.bytes_s2r += half;
     cost.bytes_r2s += half;
 
@@ -81,7 +90,8 @@ pub fn run(
     // Receiver sends its OT-extension encodings (cost only; the
     // functionality result is PRF_k over receiver's elements).
     let recv_bytes = cfg.recv_encoding_bytes * receiver.len() as u64;
-    sim_s += meter.charge(receiver_id, sender_id, phase, recv_bytes);
+    sim_s += rcv.send_sized(sender_id, phase, Vec::new(), recv_bytes)?;
+    snd.recv(receiver_id, phase)?;
     cost.bytes_r2s += recv_bytes;
     let recv_eval = prf.eval_batch(receiver);
 
@@ -89,16 +99,23 @@ pub fn run(
     let sender_eval = prf.eval_batch(sender);
     let mapped: Vec<Vec<u8>> = sender_eval.iter().map(|d| d.to_vec()).collect();
     let wire = msg::encode_digest_batch(&mapped);
-    // Charge the modelled per-element expansion rather than the raw digest
+    // Declare the modelled per-element expansion rather than the raw digest
     // bytes (the real mapped set includes bin indices + stash).
     let mapped_bytes =
         (wire.len() as u64).max(cfg.send_mapped_bytes * sender.len() as u64);
-    sim_s += meter.charge(sender_id, receiver_id, phase, mapped_bytes);
     cost.bytes_s2r += mapped_bytes;
+    sim_s += snd.send_sized(receiver_id, phase, wire, mapped_bytes)?;
 
-    // --- receiver compares ------------------------------------------------
-    let sender_set: std::collections::HashSet<[u8; 16]> =
-        sender_eval.into_iter().collect();
+    // --- receiver compares against the decoded wire bytes ----------------
+    let mapped_wire = rcv.recv(sender_id, phase)?.payload;
+    let mut sender_set = std::collections::HashSet::new();
+    for d in msg::decode_digest_batch(&mapped_wire)? {
+        let digest: [u8; 16] = d
+            .as_slice()
+            .try_into()
+            .map_err(|_| crate::Error::Net("malformed mapped digest on wire".into()))?;
+        sender_set.insert(digest);
+    }
     let mut intersection: Vec<u64> = receiver
         .iter()
         .zip(&recv_eval)
@@ -109,28 +126,30 @@ pub fn run(
 
     cost.sim_s = sim_s;
     cost.wall_s = sw.elapsed_secs();
-    TpsiOutcome { intersection, cost }
+    Ok(TpsiOutcome { intersection, cost })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::net::NetConfig;
+    use crate::net::{ChannelTransport, Meter, MeteredTransport, NetConfig};
     use crate::psi::oracle_intersection;
     use crate::util::check;
 
     fn run_pair(s: &[u64], r: &[u64]) -> TpsiOutcome {
         let meter = Meter::new(NetConfig::lan_10gbps());
+        let net = MeteredTransport::new(ChannelTransport::new(), &meter);
         run(
             &OtPsiConfig::default(),
             s,
             r,
-            &meter,
+            &net,
             PartyId::Client(0),
             PartyId::Client(1),
             "psi",
             3,
         )
+        .unwrap()
     }
 
     #[test]
@@ -172,6 +191,24 @@ mod tests {
             big_as_receiver < big_as_sender,
             "{big_as_receiver} < {big_as_sender}"
         );
+    }
+
+    #[test]
+    fn metered_bytes_match_cost_model() {
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let net = MeteredTransport::new(ChannelTransport::new(), &meter);
+        let out = run(
+            &OtPsiConfig::default(),
+            &[1, 2, 3, 4],
+            &[3, 4, 5],
+            &net,
+            PartyId::Client(0),
+            PartyId::Client(1),
+            "psi",
+            8,
+        )
+        .unwrap();
+        assert_eq!(meter.total_bytes("psi"), out.cost.total_bytes());
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! with client 2, and so on — O(m) rounds with zero parallelism, the
 //! configuration the paper's Fig. 7 shows losing to Tree-MPSI.
 
-use crate::net::{Meter, PartyId};
+use crate::error::Result;
+use crate::net::{PartyId, Transport};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -19,9 +20,9 @@ pub fn run_path(
     sets: &[Vec<u64>],
     protocol: &TpsiProtocol,
     seed: u64,
-    meter: &Meter,
+    net: &dyn Transport,
     he: &HeContext,
-) -> MpsiReport {
+) -> Result<MpsiReport> {
     assert!(!sets.is_empty());
     let total_sw = Stopwatch::start();
     let m = sets.len();
@@ -29,6 +30,7 @@ pub fn run_path(
     let mut result = sets[0].clone();
     let mut rounds = Vec::new();
     let mut sim_total = 0.0;
+    let mut total_bytes = 0u64;
 
     for next in 1..m {
         let sw = Stopwatch::start();
@@ -36,12 +38,12 @@ pub fn run_path(
         let out = protocol.run(
             &result,
             &sets[next],
-            meter,
+            net,
             PartyId::Client(holder as u32),
             PartyId::Client(next as u32),
             &phase,
             derive_seed(seed, next as u32, 0),
-        );
+        )?;
         let inter = out.intersection;
         // Strictly sequential chain: every hop's compute + wire adds up.
         let hop_sim = out.cost.sim_s + out.cost.wall_s;
@@ -52,34 +54,38 @@ pub fn run_path(
             bytes: out.cost.total_bytes(),
         });
         sim_total += hop_sim;
+        total_bytes += out.cost.total_bytes();
         result = inter;
         holder = next;
     }
 
     result.sort_unstable();
     let mut rng = Rng::new(seed ^ 0xBEEF);
-    sim_total +=
-        allocate_result(holder as u32, m as u32, &result, he, meter, "psi/alloc", &mut rng);
+    let alloc =
+        allocate_result(holder as u32, m as u32, &result, he, net, "psi/alloc", &mut rng)?;
+    sim_total += alloc.sim_s;
+    total_bytes += alloc.bytes;
 
-    MpsiReport {
+    Ok(MpsiReport {
         intersection: result,
-        total_bytes: meter.total_bytes("psi/"),
+        total_bytes,
         rounds,
         wall_s: total_sw.elapsed_secs(),
         sim_s: sim_total,
-    }
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::net::NetConfig;
+    use crate::net::{ChannelTransport, Meter, MeteredTransport, NetConfig};
     use crate::psi::oracle_intersection;
 
     fn run(sets: &[Vec<u64>]) -> MpsiReport {
         let meter = Meter::new(NetConfig::lan_10gbps());
+        let net = MeteredTransport::new(ChannelTransport::new(), &meter);
         let he = HeContext::for_tests();
-        run_path(sets, &TpsiProtocol::ot(), 5, &meter, &he)
+        run_path(sets, &TpsiProtocol::ot(), 5, &net, &he).unwrap()
     }
 
     #[test]
@@ -103,8 +109,9 @@ mod tests {
     fn sim_time_is_serialized_sum() {
         let sets: Vec<Vec<u64>> = (0..4).map(|_| (0..100).collect()).collect();
         let meter = Meter::new(NetConfig::lan_10gbps());
+        let net = MeteredTransport::new(ChannelTransport::new(), &meter);
         let he = HeContext::for_tests();
-        let r = run_path(&sets, &TpsiProtocol::ot(), 5, &meter, &he);
+        let r = run_path(&sets, &TpsiProtocol::ot(), 5, &net, &he).unwrap();
         let hop_sum: f64 = r.rounds.iter().map(|x| x.sim_s).sum();
         // Total sim = hops + allocation; hops dominate and are summed.
         assert!(r.sim_s >= hop_sum);

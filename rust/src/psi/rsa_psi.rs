@@ -1,6 +1,8 @@
 //! RSA-blind-signature two-party PSI (paper §4.1 primitive #1).
 //!
-//! Message flow (all bytes charged to the meter with real encodings):
+//! Message flow — every arrow is an [`Envelope`](crate::net::Envelope)
+//! through the [`Transport`], and the receiving side works from the
+//! decoded wire bytes, never from shared memory:
 //!
 //! ```text
 //!   sender                                   receiver
@@ -16,8 +18,9 @@
 //! exactly why the volume-aware scheduler makes the *smaller* party the
 //! receiver for this protocol (paper's O(2|S|+|B|) optimization).
 
-use crate::crypto::rsa::{signature_key, RsaKeyPair};
-use crate::net::{msg, Meter, PartyId};
+use crate::crypto::rsa::{signature_key, RsaKeyPair, RsaPublic};
+use crate::error::Result;
+use crate::net::{msg, Endpoint, PartyId, Transport};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -46,56 +49,73 @@ pub fn run(
     cfg: &RsaPsiConfig,
     sender: &[u64],
     receiver: &[u64],
-    meter: &Meter,
+    net: &dyn Transport,
     sender_id: PartyId,
     receiver_id: PartyId,
     phase: &str,
     seed: u64,
-) -> TpsiOutcome {
+) -> Result<TpsiOutcome> {
     let sw = Stopwatch::start();
     let mut rng = Rng::new(seed ^ 0x5A5A_1234);
     let mut sim_s = 0.0;
     let mut cost = PairCost::default();
+    let snd = Endpoint::new(net, sender_id);
+    let rcv = Endpoint::new(net, receiver_id);
 
     // --- sender: key generation + public key transfer -------------------
-    let kp = RsaKeyPair::generate(&mut rng, cfg.modulus_bits).expect("rsa keygen");
-    let width = kp.public.element_bytes();
-    let pk_bytes = (width + 8) as u64; // n plus exponent
-    sim_s += meter.charge(sender_id, receiver_id, phase, pk_bytes);
-    cost.bytes_s2r += pk_bytes;
+    let kp = RsaKeyPair::generate(&mut rng, cfg.modulus_bits)?;
+    let pk_wire = msg::encode_public_key(&kp.public.n, &kp.public.e);
+    cost.bytes_s2r += pk_wire.len() as u64;
+    sim_s += snd.send(receiver_id, phase, pk_wire)?;
 
-    // --- receiver: blind every indicator, transmit ----------------------
+    // --- receiver: rebuild the key from the wire, blind, transmit --------
+    let (n, e) = msg::decode_public_key(&rcv.recv(sender_id, phase)?.payload)?;
+    let pk = RsaPublic { n, e };
+    let width = pk.element_bytes();
     let blinded: Vec<_> = receiver
         .iter()
-        .map(|&x| kp.public.blind(&mut rng, &cfg.domain, x))
+        .map(|&x| pk.blind(&mut rng, &cfg.domain, x))
         .collect();
     let blinded_vals: Vec<_> = blinded.iter().map(|b| b.value.clone()).collect();
     let blinded_wire = msg::encode_bigint_batch(&blinded_vals, width);
-    sim_s += meter.charge(receiver_id, sender_id, phase, blinded_wire.len() as u64);
     cost.bytes_r2s += blinded_wire.len() as u64;
+    sim_s += rcv.send(sender_id, phase, blinded_wire)?;
 
     // --- sender: blind-sign receiver's elements; sign own set -----------
-    let recv_blinded = msg::decode_bigint_batch(&blinded_wire).expect("wire decode");
+    let recv_blinded =
+        msg::decode_bigint_batch(&snd.recv(receiver_id, phase)?.payload)?;
     let blind_sigs: Vec<_> = recv_blinded.iter().map(|v| kp.sign_raw(v)).collect();
     let own_keys: Vec<Vec<u8>> = sender
         .iter()
         .map(|&x| signature_key(&kp.sign_indicator(&cfg.domain, x)).to_vec())
         .collect();
-    let sigs_wire = msg::encode_bigint_batch(&blind_sigs, width);
-    let keys_wire = msg::encode_digest_batch(&own_keys);
-    let s2r = (sigs_wire.len() + keys_wire.len()) as u64;
-    sim_s += meter.charge(sender_id, receiver_id, phase, s2r);
-    cost.bytes_s2r += s2r;
+    // One logical message: the signed batch plus the sender's own keys.
+    let mut reply = crate::util::codec::Encoder::new();
+    reply
+        .bytes(&msg::encode_bigint_batch(&blind_sigs, width))
+        .bytes(&msg::encode_digest_batch(&own_keys));
+    let reply = reply.finish();
+    cost.bytes_s2r += reply.len() as u64;
+    sim_s += snd.send(receiver_id, phase, reply)?;
 
     // --- receiver: unblind + compare -------------------------------------
-    let sender_keys: std::collections::HashSet<[u8; 32]> = own_keys
-        .iter()
-        .map(|k| <[u8; 32]>::try_from(k.as_slice()).unwrap())
-        .collect();
-    let mut intersection = Vec::new();
-    let returned = msg::decode_bigint_batch(&sigs_wire).expect("wire decode");
+    let reply = rcv.recv(sender_id, phase)?.payload;
+    let mut d = crate::util::codec::Decoder::new(&reply);
+    let sigs_wire = d.bytes().map_err(|e| crate::Error::Net(e.to_string()))?;
+    let keys_wire = d.bytes().map_err(|e| crate::Error::Net(e.to_string()))?;
+    d.finish().map_err(|e| crate::Error::Net(e.to_string()))?;
+    let returned = msg::decode_bigint_batch(&sigs_wire)?;
+    let mut sender_keys = std::collections::HashSet::new();
+    for k in msg::decode_digest_batch(&keys_wire)? {
+        let key: [u8; 32] = k
+            .as_slice()
+            .try_into()
+            .map_err(|_| crate::Error::Net("malformed signature key on wire".into()))?;
+        sender_keys.insert(key);
+    }
     // Batch unblind: one modular inverse for the whole batch (§Perf).
-    let unblinded = kp.public.unblind_batch(&blinded, &returned).expect("unblind");
+    let unblinded = pk.unblind_batch(&blinded, &returned)?;
+    let mut intersection = Vec::new();
     for (x, sig) in receiver.iter().zip(&unblinded) {
         if sender_keys.contains(&signature_key(sig)) {
             intersection.push(*x);
@@ -105,13 +125,13 @@ pub fn run(
 
     cost.sim_s = sim_s;
     cost.wall_s = sw.elapsed_secs();
-    TpsiOutcome { intersection, cost }
+    Ok(TpsiOutcome { intersection, cost })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::net::NetConfig;
+    use crate::net::{ChannelTransport, Meter, MeteredTransport, NetConfig};
     use crate::psi::oracle_intersection;
 
     fn fast_cfg() -> RsaPsiConfig {
@@ -120,16 +140,18 @@ mod tests {
 
     fn run_pair(s: &[u64], r: &[u64]) -> TpsiOutcome {
         let meter = Meter::new(NetConfig::lan_10gbps());
+        let net = MeteredTransport::new(ChannelTransport::new(), &meter);
         run(
             &fast_cfg(),
             s,
             r,
-            &meter,
+            &net,
             PartyId::Client(0),
             PartyId::Client(1),
             "psi",
             42,
         )
+        .unwrap()
     }
 
     #[test]
@@ -171,18 +193,39 @@ mod tests {
 
     #[test]
     fn meter_matches_cost_struct() {
+        // Middleware accounting == the protocol's own bookkeeping: every
+        // byte the pair believes it sent was charged on delivery.
         let meter = Meter::new(NetConfig::lan_10gbps());
+        let net = MeteredTransport::new(ChannelTransport::new(), &meter);
         let out = run(
             &fast_cfg(),
             &[1, 2, 3],
             &[2, 3, 4],
-            &meter,
+            &net,
             PartyId::Client(0),
             PartyId::Client(1),
             "psi",
             7,
-        );
+        )
+        .unwrap();
         assert_eq!(meter.total_bytes("psi"), out.cost.total_bytes());
+    }
+
+    #[test]
+    fn wire_drains_completely() {
+        let net = ChannelTransport::new();
+        run(
+            &fast_cfg(),
+            &[1, 2],
+            &[2, 5],
+            &net,
+            PartyId::Client(0),
+            PartyId::Client(1),
+            "psi",
+            9,
+        )
+        .unwrap();
+        assert_eq!(net.pending(), 0, "protocol consumed every message");
     }
 
     #[test]

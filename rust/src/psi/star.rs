@@ -7,7 +7,8 @@
 //! We model that bottleneck faithfully: spoke TPSIs run sequentially at the
 //! center, and their simulated times are summed.
 
-use crate::net::{Meter, PartyId};
+use crate::error::Result;
+use crate::net::{PartyId, Transport};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -21,9 +22,9 @@ pub fn run_star(
     protocol: &TpsiProtocol,
     center: usize,
     seed: u64,
-    meter: &Meter,
+    net: &dyn Transport,
     he: &HeContext,
-) -> MpsiReport {
+) -> Result<MpsiReport> {
     assert!(!sets.is_empty());
     assert!(center < sets.len());
     let total_sw = Stopwatch::start();
@@ -31,6 +32,7 @@ pub fn run_star(
     let mut result = sets[center].clone();
     let mut round = RoundReport::default();
     let mut sim_total = 0.0;
+    let mut total_bytes = 0u64;
 
     for spoke in 0..m {
         if spoke == center {
@@ -42,12 +44,12 @@ pub fn run_star(
         let out = protocol.run(
             &sets[spoke],
             &result,
-            meter,
+            net,
             PartyId::Client(spoke as u32),
             PartyId::Client(center as u32),
             &phase,
             derive_seed(seed, spoke as u32, 1),
-        );
+        )?;
         round.pairs.push((spoke as u32, center as u32, out.intersection.len()));
         round.bytes += out.cost.total_bytes();
         // The center participates in (and its running result feeds) every
@@ -57,38 +59,42 @@ pub fn run_star(
     }
     round.wall_s = total_sw.elapsed_secs();
     sim_total += round.sim_s;
+    total_bytes += round.bytes;
 
     result.sort_unstable();
     let mut rng = Rng::new(seed ^ 0xCAFE);
-    sim_total += allocate_result(
+    let alloc = allocate_result(
         center as u32,
         m as u32,
         &result,
         he,
-        meter,
+        net,
         "psi/alloc",
         &mut rng,
-    );
+    )?;
+    sim_total += alloc.sim_s;
+    total_bytes += alloc.bytes;
 
-    MpsiReport {
+    Ok(MpsiReport {
         intersection: result,
-        total_bytes: meter.total_bytes("psi/"),
+        total_bytes,
         rounds: vec![round],
         wall_s: total_sw.elapsed_secs(),
         sim_s: sim_total,
-    }
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::net::NetConfig;
+    use crate::net::{ChannelTransport, Meter, MeteredTransport, NetConfig};
     use crate::psi::oracle_intersection;
 
     fn run(sets: &[Vec<u64>], center: usize) -> MpsiReport {
         let meter = Meter::new(NetConfig::lan_10gbps());
+        let net = MeteredTransport::new(ChannelTransport::new(), &meter);
         let he = HeContext::for_tests();
-        run_star(sets, &TpsiProtocol::ot(), center, 9, &meter, &he)
+        run_star(sets, &TpsiProtocol::ot(), center, 9, &net, &he).unwrap()
     }
 
     #[test]
@@ -120,8 +126,9 @@ mod tests {
     fn center_carries_most_bytes() {
         let sets: Vec<Vec<u64>> = (0..5).map(|_| (0..200).collect()).collect();
         let meter = Meter::new(NetConfig::lan_10gbps());
+        let net = MeteredTransport::new(ChannelTransport::new(), &meter);
         let he = HeContext::for_tests();
-        run_star(&sets, &TpsiProtocol::ot(), 0, 9, &meter, &he);
+        run_star(&sets, &TpsiProtocol::ot(), 0, 9, &net, &he).unwrap();
         let center_bytes = meter.party_bytes(PartyId::Client(0), "psi/spoke");
         for spoke in 1..5u32 {
             let b = meter.party_bytes(PartyId::Client(spoke), "psi/spoke");

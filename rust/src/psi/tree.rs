@@ -1,23 +1,29 @@
 //! **Tree-MPSI** — the paper's multi-party PSI (§4.1).
 //!
 //! Each round: active clients request alignment from the aggregation
-//! server (step 1), the server pairs them (step 2, [`sched`]), notifies
-//! partners (step 3), pairs run two-party PSI *concurrently* (step 4), and
-//! each pair's receiver stays active holding the intersection while the
-//! sender retires. After ⌈log₂ m⌉ rounds one client holds the final result
-//! and allocates it to everyone through the HE envelope (steps 5–6).
+//! server (step 1), the server pairs them (step 2, [`sched`](super::sched))
+//! and notifies partners (step 3) — the `PsiRequest`/`PsiSchedule`
+//! messages travel over the [`Transport`] and the engine executes whatever
+//! plan the clients decode — then pairs run two-party PSI *concurrently*
+//! (step 4), and each pair's receiver stays active holding the
+//! intersection while the sender retires. After ⌈log₂ m⌉ rounds one client
+//! holds the final result and allocates it to everyone through the HE
+//! envelope (steps 5–6).
 //!
-//! Concurrency is real (pairs execute on the thread pool), and the
-//! simulated communication makespan takes the *max* over a round's pairs —
-//! the source of the paper's ~2.25× speedup over Path/Star.
+//! Concurrency is real (pairs execute on scoped worker threads, capped by
+//! the configured [`Parallel`] budget — `--threads 1` serializes alignment
+//! like every other phase), and the simulated communication makespan takes
+//! the *max* over a round's pairs — the source of the paper's ~2.25×
+//! speedup over Path/Star.
 
-use crate::net::{Meter, PartyId};
-use crate::util::pool::ThreadPool;
+use crate::error::Result;
+use crate::net::Transport;
+use crate::util::pool::Parallel;
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
-use super::common::{allocate_result, charge_round_scheduling, HeContext};
-use super::sched::{schedule, Pairing};
+use super::common::{allocate_result, exchange_round_schedule, HeContext};
+use super::sched::Pairing;
 use super::{MpsiReport, RoundReport, TpsiProtocol};
 
 /// Tree-MPSI configuration.
@@ -39,13 +45,16 @@ impl Default for TreeMpsiConfig {
 }
 
 /// Run Tree-MPSI over the clients' indicator sets.
+///
+/// `par` bounds the worker threads pair executions may occupy — the same
+/// budget every other hot path takes from `PipelineConfig::threads`.
 pub fn run_tree(
     sets: &[Vec<u64>],
     cfg: &TreeMpsiConfig,
-    meter: &Meter,
-    pool: &ThreadPool,
+    net: &dyn Transport,
+    par: Parallel,
     he: &HeContext,
-) -> MpsiReport {
+) -> Result<MpsiReport> {
     assert!(!sets.is_empty(), "need at least one client");
     let total_sw = Stopwatch::start();
     let m = sets.len();
@@ -53,6 +62,7 @@ pub fn run_tree(
     let mut active: Vec<usize> = (0..m).collect();
     let mut rounds = Vec::new();
     let mut sim_total = 0.0;
+    let mut total_bytes = 0u64;
     let mut round_no = 0u32;
 
     while active.len() > 1 {
@@ -60,11 +70,17 @@ pub fn run_tree(
         let phase = format!("psi/round{round_no}");
         let actives: Vec<(usize, u64)> =
             active.iter().map(|&id| (id, current[id].len() as u64)).collect();
-        let sched_sim = charge_round_scheduling(&actives, round_no, meter, &phase);
+        let (plan, sched_flow) = exchange_round_schedule(
+            &actives,
+            round_no,
+            cfg.pairing,
+            cfg.protocol.kind(),
+            net,
+            &phase,
+        )?;
+        total_bytes += sched_flow.bytes;
 
-        let plan = schedule(&actives, cfg.pairing, cfg.protocol.kind());
-
-        // Launch every pair concurrently on the pool.
+        // Launch every pair concurrently on scoped workers.
         let jobs: Vec<_> = plan
             .pairs
             .iter()
@@ -76,25 +92,26 @@ pub fn run_tree(
                 let (s_id, r_id) = (p.sender as u32, p.receiver as u32);
                 let phase = phase.clone();
                 let seed = derive_seed(cfg.seed, round_no, pair_idx as u64);
-                let meter_ref: &Meter = meter;
                 move || {
                     let out = protocol.run(
                         &sender_set,
                         &receiver_set,
-                        meter_ref,
-                        PartyId::Client(s_id),
-                        PartyId::Client(r_id),
+                        net,
+                        crate::net::PartyId::Client(s_id),
+                        crate::net::PartyId::Client(r_id),
                         &phase,
                         seed,
-                    );
-                    (s_id, r_id, out)
+                    )?;
+                    Ok((s_id, r_id, out))
                 }
             })
             .collect();
-        let outcomes = run_scoped(pool, jobs);
+        let outcomes: Vec<(u32, u32, super::TpsiOutcome)> = run_scoped(par, jobs)
+            .into_iter()
+            .collect::<Result<_>>()?;
 
         // Fold results: receivers keep intersections, senders retire.
-        let mut report = RoundReport { sim_s: sched_sim, ..Default::default() };
+        let mut report = RoundReport { sim_s: sched_flow.sim_s, ..Default::default() };
         let mut next_active = Vec::new();
         let mut max_pair_sim = 0.0f64;
         for (s_id, r_id, out) in outcomes {
@@ -111,6 +128,7 @@ pub fn run_tree(
         }
         next_active.sort_unstable();
         active = next_active;
+        total_bytes += report.bytes;
         report.sim_s += max_pair_sim;
         report.wall_s = round_sw.elapsed_secs();
         sim_total += report.sim_s;
@@ -123,15 +141,17 @@ pub fn run_tree(
     let mut result = current[active[0]].clone();
     result.sort_unstable();
     let mut rng = Rng::new(cfg.seed ^ 0xEE);
-    sim_total += allocate_result(holder, m as u32, &result, he, meter, "psi/alloc", &mut rng);
+    let alloc = allocate_result(holder, m as u32, &result, he, net, "psi/alloc", &mut rng)?;
+    sim_total += alloc.sim_s;
+    total_bytes += alloc.bytes;
 
-    MpsiReport {
+    Ok(MpsiReport {
         intersection: result,
-        total_bytes: meter.total_bytes("psi/"),
+        total_bytes,
         rounds,
         wall_s: total_sw.elapsed_secs(),
         sim_s: sim_total,
-    }
+    })
 }
 
 /// Derive a per-pair deterministic seed.
@@ -140,32 +160,52 @@ pub(crate) fn derive_seed(base: u64, round: u32, pair: u64) -> u64 {
         ^ pair.wrapping_mul(0xBF58_476D_1CE4_E5B9)
 }
 
-/// Run a round's pair jobs.
+/// Run a round's pair jobs on at most `par.threads()` scoped workers,
+/// returning results in submission order.
 ///
-/// When the host has spare cores, pairs run on scoped threads (真 parallel
-/// wall-clock); on constrained hosts they run sequentially so each pair's
-/// measured compute time is uncontended — that solo measurement is what
-/// the round-makespan model (`max` over pairs) needs to be meaningful.
-/// Correctness is identical either way.
+/// With a budget of 1 the pairs run strictly sequentially (each pair's
+/// measured compute time is uncontended — what the round-makespan model
+/// needs on constrained hosts); larger budgets split the pairs into
+/// contiguous groups, one scoped worker per group. Correctness is
+/// identical at any setting.
 fn run_scoped<'a, T: Send + 'a>(
-    _pool: &ThreadPool,
+    par: Parallel,
     jobs: Vec<impl FnOnce() -> T + Send + 'a>,
 ) -> Vec<T> {
-    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    if cores >= 2 * jobs.len().max(1) {
-        std::thread::scope(|s| {
-            let handles: Vec<_> = jobs.into_iter().map(|j| s.spawn(j)).collect();
-            handles.into_iter().map(|h| h.join().expect("pair panicked")).collect()
-        })
-    } else {
-        jobs.into_iter().map(|j| j()).collect()
+    let t = par.threads().min(jobs.len());
+    if t <= 1 {
+        return jobs.into_iter().map(|j| j()).collect();
     }
+    let n = jobs.len();
+    let base = n / t;
+    let extra = n % t;
+    let mut it = jobs.into_iter();
+    let groups: Vec<Vec<_>> = (0..t)
+        .map(|i| (&mut it).take(base + usize::from(i < extra)).collect())
+        .collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = groups
+            .into_iter()
+            .map(|g| s.spawn(move || g.into_iter().map(|j| j()).collect::<Vec<T>>()))
+            .collect();
+        // Join every worker before propagating, so a panic never unwinds
+        // through the scope while other threads are running.
+        let joined: Vec<std::thread::Result<Vec<T>>> =
+            handles.into_iter().map(|h| h.join()).collect();
+        joined
+            .into_iter()
+            .flat_map(|r| match r {
+                Ok(v) => v,
+                Err(payload) => std::panic::resume_unwind(payload),
+            })
+            .collect()
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::net::NetConfig;
+    use crate::net::{ChannelTransport, Meter, MeteredTransport, NetConfig};
     use crate::psi::oracle_intersection;
     use crate::psi::sched::Pairing;
     use crate::util::check;
@@ -179,10 +219,10 @@ mod tests {
 
     fn run(sets: &[Vec<u64>], protocol: TpsiProtocol, pairing: Pairing) -> MpsiReport {
         let meter = Meter::new(NetConfig::lan_10gbps());
-        let pool = ThreadPool::new(4);
+        let net = MeteredTransport::new(ChannelTransport::new(), &meter);
         let he = HeContext::for_tests();
         let cfg = TreeMpsiConfig { protocol, pairing, seed: 11 };
-        run_tree(sets, &cfg, &meter, &pool, &he)
+        run_tree(sets, &cfg, &net, Parallel::new(4), &he).unwrap()
     }
 
     #[test]
@@ -242,24 +282,61 @@ mod tests {
     }
 
     #[test]
+    fn report_bytes_match_metered_bytes() {
+        // The engine's own byte bookkeeping equals what the middleware
+        // charged: nothing travels unmetered, nothing is double-counted.
+        let sets: Vec<Vec<u64>> = (0..5).map(|c| (c..c + 30).collect()).collect();
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let net = MeteredTransport::new(ChannelTransport::new(), &meter);
+        let he = HeContext::for_tests();
+        let cfg = TreeMpsiConfig { protocol: fast_rsa(), pairing: Pairing::VolumeAware, seed: 2 };
+        let rep = run_tree(&sets, &cfg, &net, Parallel::serial(), &he).unwrap();
+        assert_eq!(rep.total_bytes, meter.total_bytes("psi/"));
+    }
+
+    #[test]
+    fn identical_result_and_bytes_at_any_worker_count() {
+        // The worker budget is a pure perf knob for alignment too.
+        let sets: Vec<Vec<u64>> = (0..6).map(|c| (c..c + 40).collect()).collect();
+        let he = HeContext::for_tests();
+        let run_with = |threads: usize| {
+            let meter = Meter::new(NetConfig::lan_10gbps());
+            let net = MeteredTransport::new(ChannelTransport::new(), &meter);
+            let cfg =
+                TreeMpsiConfig { protocol: fast_rsa(), pairing: Pairing::VolumeAware, seed: 7 };
+            let rep = run_tree(&sets, &cfg, &net, Parallel::new(threads), &he).unwrap();
+            (rep.intersection.clone(), rep.total_bytes)
+        };
+        let serial = run_with(1);
+        for threads in [2usize, 4, 16] {
+            assert_eq!(run_with(threads), serial, "threads={threads}");
+        }
+    }
+
+    #[test]
     fn tree_makespan_beats_path_and_star() {
         // The Fig. 7 invariant: with many equal clients, Tree's simulated
         // distributed time is well below Path's and Star's (O(log m) rounds
         // of concurrent pairs vs O(m) serialized pairs).
         let sets: Vec<Vec<u64>> = (0..8).map(|_| (0..300).collect()).collect();
         let he = HeContext::for_tests();
-        let pool = ThreadPool::new(4);
         let cfg = TreeMpsiConfig {
             protocol: fast_rsa(),
             pairing: Pairing::VolumeAware,
             seed: 1,
         };
         let meter = Meter::new(NetConfig::lan_10gbps());
-        let tree = run_tree(&sets, &cfg, &meter, &pool, &he);
+        let net = MeteredTransport::new(ChannelTransport::new(), &meter);
+        // Serial worker budget: each pair's wall-clock is measured
+        // uncontended, which is what the max-over-pairs makespan model
+        // assumes (one machine pair per TPSI in the paper's testbed).
+        let tree = run_tree(&sets, &cfg, &net, Parallel::serial(), &he).unwrap();
         let meter = Meter::new(NetConfig::lan_10gbps());
-        let path = crate::psi::path::run_path(&sets, &fast_rsa(), 1, &meter, &he);
+        let net = MeteredTransport::new(ChannelTransport::new(), &meter);
+        let path = crate::psi::path::run_path(&sets, &fast_rsa(), 1, &net, &he).unwrap();
         let meter = Meter::new(NetConfig::lan_10gbps());
-        let star = crate::psi::star::run_star(&sets, &fast_rsa(), 0, 1, &meter, &he);
+        let net = MeteredTransport::new(ChannelTransport::new(), &meter);
+        let star = crate::psi::star::run_star(&sets, &fast_rsa(), 0, 1, &net, &he).unwrap();
         assert!(
             tree.sim_s < path.sim_s * 0.7,
             "tree {} vs path {}",

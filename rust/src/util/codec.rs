@@ -126,12 +126,22 @@ impl<'a> Decoder<'a> {
     }
 
     fn take(&mut self, n: usize) -> DResult<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
+        // Checked: `n` comes straight off the wire, so a hostile length
+        // prefix must produce an error, never an overflow panic.
+        let end = self.pos.checked_add(n).ok_or(DecodeError("length overflow"))?;
+        if end > self.buf.len() {
             return Err(DecodeError("underflow"));
         }
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
         Ok(s)
+    }
+
+    /// Read a `count × width` array body, rejecting length prefixes whose
+    /// byte size overflows before the bounds check can catch them.
+    fn take_array(&mut self, count: usize, width: usize) -> DResult<&'a [u8]> {
+        let n = count.checked_mul(width).ok_or(DecodeError("length overflow"))?;
+        self.take(n)
     }
 
     pub fn u8(&mut self) -> DResult<u8> {
@@ -165,7 +175,7 @@ impl<'a> Decoder<'a> {
 
     pub fn u64_slice(&mut self) -> DResult<Vec<u64>> {
         let n = self.u64()? as usize;
-        let raw = self.take(n * 8)?;
+        let raw = self.take_array(n, 8)?;
         Ok(raw
             .chunks_exact(8)
             .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
@@ -174,7 +184,7 @@ impl<'a> Decoder<'a> {
 
     pub fn u32_slice(&mut self) -> DResult<Vec<u32>> {
         let n = self.u64()? as usize;
-        let raw = self.take(n * 4)?;
+        let raw = self.take_array(n, 4)?;
         Ok(raw
             .chunks_exact(4)
             .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
@@ -183,7 +193,7 @@ impl<'a> Decoder<'a> {
 
     pub fn f32_slice(&mut self) -> DResult<Vec<f32>> {
         let n = self.u64()? as usize;
-        let raw = self.take(n * 4)?;
+        let raw = self.take_array(n, 4)?;
         Ok(raw
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
@@ -249,6 +259,20 @@ mod tests {
         let buf = e.finish();
         let mut d = Decoder::new(&buf);
         assert!(d.u64().is_err());
+    }
+
+    #[test]
+    fn hostile_length_prefix_is_error_not_panic() {
+        // A u64 length prefix of u64::MAX must fail the bounds check, not
+        // overflow `count * width` or `pos + n`.
+        let mut e = Encoder::new();
+        e.u64(u64::MAX);
+        let buf = e.finish();
+        assert!(Decoder::new(&buf).u64_slice().is_err());
+        assert!(Decoder::new(&buf).u32_slice().is_err());
+        assert!(Decoder::new(&buf).f32_slice().is_err());
+        assert!(Decoder::new(&buf).bytes().is_err());
+        assert!(Decoder::new(&buf).blob_list().is_err());
     }
 
     #[test]

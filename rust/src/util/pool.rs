@@ -12,9 +12,10 @@
 //!   threaded down from `PipelineConfig::threads`.
 //! * [`ThreadPool`] — a fixed pool consuming `'static` jobs from a shared
 //!   queue. `ThreadPool::scope_run` executes a batch of closures and
-//!   returns their results in submission order — the shape Tree-MPSI
-//!   needs: each round submits one closure per client *pair* and joins
-//!   the round barrier.
+//!   returns their results in submission order. (Tree-MPSI's concurrent
+//!   pairs now run on scoped workers bounded by the same [`Parallel`]
+//!   budget as the compute kernels; the pool remains for `'static`
+//!   fan-out workloads.)
 
 use std::ops::Range;
 use std::sync::mpsc;

@@ -3,9 +3,9 @@
 //! through the full pipeline, and determinism.
 
 use treecss::coordinator::pipeline::{Backend, Downstream, PipelineConfig};
-use treecss::coordinator::{run_pipeline, FrameworkVariant};
+use treecss::coordinator::{run_pipeline, FrameworkVariant, Pipeline};
 use treecss::data::synth::{self, PaperDataset};
-use treecss::net::{Meter, NetConfig};
+use treecss::net::{ChannelTransport, Meter, MeteredTransport, NetConfig};
 use treecss::psi::common::HeContext;
 use treecss::psi::rsa_psi::RsaPsiConfig;
 use treecss::psi::sched::Pairing;
@@ -13,7 +13,7 @@ use treecss::psi::tree::{run_tree, TreeMpsiConfig};
 use treecss::psi::{oracle_intersection, path::run_path, star::run_star, TpsiProtocol};
 use treecss::splitnn::trainer::ModelKind;
 use treecss::util::check;
-use treecss::util::pool::ThreadPool;
+use treecss::util::pool::Parallel;
 use treecss::util::rng::Rng;
 
 fn fast_rsa() -> TpsiProtocol {
@@ -21,11 +21,12 @@ fn fast_rsa() -> TpsiProtocol {
 }
 
 /// Every MPSI engine × protocol × pairing returns the oracle intersection
-/// on randomized inputs (the system-level PSI correctness property).
+/// on randomized inputs (the system-level PSI correctness property), with
+/// every message travelling the shared transport.
 #[test]
 fn all_mpsi_engines_match_oracle_property() {
     let he = HeContext::for_tests();
-    let pool = ThreadPool::new(4);
+    let par = Parallel::new(4);
     check::forall(
         check::Config { cases: 6, seed: 42 },
         |rng| {
@@ -41,22 +42,23 @@ fn all_mpsi_engines_match_oracle_property() {
             let oracle = oracle_intersection(sets);
             for protocol in [fast_rsa(), TpsiProtocol::ot()] {
                 for pairing in [Pairing::VolumeAware, Pairing::RequestOrder] {
-                    let meter = Meter::new(NetConfig::lan_10gbps());
+                    let net = ChannelTransport::new();
                     let cfg = TreeMpsiConfig {
                         protocol: protocol.clone(),
                         pairing,
                         seed: 3,
                     };
-                    if run_tree(sets, &cfg, &meter, &pool, &he).intersection != oracle {
+                    let rep = run_tree(sets, &cfg, &net, par, &he).unwrap();
+                    if rep.intersection != oracle || net.pending() != 0 {
                         return false;
                     }
                 }
-                let meter = Meter::new(NetConfig::lan_10gbps());
-                if run_path(sets, &protocol, 3, &meter, &he).intersection != oracle {
+                let net = ChannelTransport::new();
+                if run_path(sets, &protocol, 3, &net, &he).unwrap().intersection != oracle {
                     return false;
                 }
-                let meter = Meter::new(NetConfig::lan_10gbps());
-                if run_star(sets, &protocol, 0, 3, &meter, &he).intersection != oracle {
+                let net = ChannelTransport::new();
+                if run_star(sets, &protocol, 0, 3, &net, &he).unwrap().intersection != oracle {
                     return false;
                 }
             }
@@ -70,14 +72,17 @@ fn all_mpsi_engines_match_oracle_property() {
 #[test]
 fn volume_aware_scheduling_saves_bytes_on_skewed_sizes() {
     let he = HeContext::for_tests();
-    let pool = ThreadPool::new(4);
+    let par = Parallel::new(4);
     let mut rng = Rng::new(11);
     let sizes: Vec<usize> = (1..=6).map(|i| 60 * i).collect();
     let sets = synth::mpsi_indicator_sets_sized(&sizes, 0.7, &mut rng);
     let run_with = |pairing| {
         let meter = Meter::new(NetConfig::lan_10gbps());
+        let net = MeteredTransport::new(ChannelTransport::new(), &meter);
         let cfg = TreeMpsiConfig { protocol: fast_rsa(), pairing, seed: 5 };
-        run_tree(&sets, &cfg, &meter, &pool, &he).total_bytes
+        let rep = run_tree(&sets, &cfg, &net, par, &he).unwrap();
+        assert_eq!(rep.total_bytes, meter.total_bytes("psi/"));
+        rep.total_bytes
     };
     let volume = run_with(Pairing::VolumeAware);
     let order = run_with(Pairing::RequestOrder);
@@ -105,14 +110,14 @@ fn coreset_invariants_property() {
             let ds = synth::blobs("p", n, d, classes, 2, 3.0, 1.0, &mut rng);
             let part = VerticalPartition::even(d, 3);
             let slices: Vec<_> = (0..3).map(|c| part.slice(&ds.x, c)).collect();
-            let meter = Meter::new(NetConfig::lan_10gbps());
+            let net = ChannelTransport::new();
             let r = cluster_coreset::run(
                 &slices,
                 &ds.y,
                 true,
                 &ClusterCoresetConfig { clusters_per_client: 4, ..Default::default() },
                 &NativeAssign,
-                &meter,
+                &net,
                 &he,
             )
             .unwrap();
@@ -203,6 +208,31 @@ fn knn_pipeline_with_coreset() {
     let rep = run_pipeline(&tr, &te, &cfg, &Backend::Native, &meter).unwrap();
     assert!(rep.quality > 0.9, "knn acc {}", rep.quality);
     assert!(meter.total_bytes("knn/") > 0, "knn distance traffic charged");
+}
+
+/// The builder/session API end-to-end: every lifecycle phase leaves
+/// metered traffic in the session's meter, and the alignment bytes the
+/// engine reports equal what the middleware charged under "psi/".
+#[test]
+fn session_api_meters_every_phase() {
+    let mut rng = Rng::new(31);
+    let ds = PaperDataset::Ri.generate(0.02, &mut rng);
+    let (tr, te) = ds.split(0.7, &mut rng);
+    let session = Pipeline::builder(FrameworkVariant::TreeCss)
+        .downstream(Downstream::Train(ModelKind::Lr))
+        .protocol(fast_rsa())
+        .he_bits(256)
+        .epochs(20)
+        .backend(Backend::Native)
+        .build();
+    let rep = session.run(&tr, &te).unwrap();
+    let meter = session.meter();
+    assert!(meter.total_bytes("keys/") > 0, "key distribution metered");
+    assert!(meter.total_bytes("psi/") > 0, "alignment metered");
+    assert!(meter.total_bytes("coreset/") > 0, "coreset metered");
+    assert!(meter.total_bytes("train/") > 0, "training metered");
+    assert_eq!(rep.align.total_bytes, meter.total_bytes("psi/"));
+    assert_eq!(rep.total_bytes, meter.total_bytes(""));
 }
 
 /// The four Table-2 variants hold their defining relationships on one
