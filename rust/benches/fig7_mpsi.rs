@@ -1,6 +1,7 @@
 //! Fig. 7: Tree-MPSI evaluation.
 //!   (a) RSA-based TPSI: Tree vs Path vs Star, 10 clients, sweeping the
-//!       per-client set size (70% overlap);
+//!       per-client set size (70% overlap), over both the in-process
+//!       channel wire and real localhost TCP sockets;
 //!   (b) the same with the OT/OPRF-based TPSI;
 //!   (c) volume-aware vs request-order scheduling with client i holding
 //!       size·(i+1) items, sweeping the client count.
@@ -8,11 +9,14 @@
 //!     cargo bench --bench fig7_mpsi [-- rsa|ot|sched] [-- --full]
 //!
 //! Expected shape: Tree ≳ 2× faster than Path/Star, growing with set
-//! size; volume-aware scheduling's win grows with the client count.
+//! size; volume-aware scheduling's win grows with the client count; the
+//! channel and tcp rows carry identical byte counts (the wire is
+//! swappable, the protocol traffic is not).
 
 use treecss::bench::{fmt_bytes, fmt_secs, Table};
+use treecss::coordinator::TransportKind;
 use treecss::data::synth;
-use treecss::net::{ChannelTransport, Meter, MeteredTransport, NetConfig};
+use treecss::net::{Meter, MeteredTransport, NetConfig};
 use treecss::psi::common::HeContext;
 use treecss::psi::rsa_psi::RsaPsiConfig;
 use treecss::psi::sched::Pairing;
@@ -32,6 +36,7 @@ fn proto_rsa(full: bool) -> TpsiProtocol {
 
 fn run_topo(
     topo: &str,
+    transport: &str,
     sets: &[Vec<u64>],
     protocol: &TpsiProtocol,
     pairing: Pairing,
@@ -39,7 +44,10 @@ fn run_topo(
     he: &HeContext,
 ) -> (treecss::psi::MpsiReport, Meter) {
     let meter = Meter::new(NetConfig::lan_10gbps());
-    let net = MeteredTransport::new(ChannelTransport::new(), &meter);
+    let wire = TransportKind::from_name(transport)
+        .and_then(|k| k.wire(sets.len()))
+        .expect("build wire");
+    let net = MeteredTransport::new(wire, &meter);
     let rep = match topo {
         "tree" => run_tree(
             sets,
@@ -62,23 +70,36 @@ fn sweep_sizes(name: &str, protocol: &TpsiProtocol, sizes: &[usize], clients: us
     let he = HeContext::generate(&mut Rng::new(3), 512);
     let mut table = Table::new(
         &format!("Fig. 7{name} — Tree vs Path vs Star, {clients} clients, 70% overlap"),
-        &["per-client size", "topology", "rounds", "wall", "sim net", "total bytes", "correct"],
+        &[
+            "per-client size",
+            "topology",
+            "transport",
+            "rounds",
+            "wall",
+            "sim net",
+            "total bytes",
+            "correct",
+        ],
     );
     for &n in sizes {
         let mut rng = Rng::new(7_000 + n as u64);
         let sets = synth::mpsi_indicator_sets(clients, n, 0.7, &mut rng);
         let oracle = oracle_intersection(&sets);
         for topo in ["tree", "path", "star"] {
-            let (rep, _meter) = run_topo(topo, &sets, protocol, Pairing::VolumeAware, par, &he);
-            table.row(vec![
-                n.to_string(),
-                topo.into(),
-                rep.num_rounds().to_string(),
-                fmt_secs(rep.wall_s),
-                fmt_secs(rep.sim_s),
-                fmt_bytes(rep.total_bytes),
-                (rep.intersection == oracle).to_string(),
-            ]);
+            for transport in ["channel", "tcp"] {
+                let (rep, _meter) =
+                    run_topo(topo, transport, &sets, protocol, Pairing::VolumeAware, par, &he);
+                table.row(vec![
+                    n.to_string(),
+                    topo.into(),
+                    transport.into(),
+                    rep.num_rounds().to_string(),
+                    fmt_secs(rep.wall_s),
+                    fmt_secs(rep.sim_s),
+                    fmt_bytes(rep.total_bytes),
+                    (rep.intersection == oracle).to_string(),
+                ]);
+            }
         }
         eprintln!("  done n={n}");
     }
@@ -102,7 +123,7 @@ fn sweep_sched(full: bool) {
         let sets = synth::mpsi_indicator_sets_sized(&sizes, 0.7, &mut rng);
         let mut bytes = std::collections::HashMap::new();
         for pairing in [Pairing::VolumeAware, Pairing::RequestOrder] {
-            let (rep, _meter) = run_topo("tree", &sets, &protocol, pairing, par, &he);
+            let (rep, _meter) = run_topo("tree", "channel", &sets, &protocol, pairing, par, &he);
             bytes.insert(format!("{pairing:?}"), rep.total_bytes);
             let saving = match pairing {
                 Pairing::RequestOrder => {

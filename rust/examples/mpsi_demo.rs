@@ -1,16 +1,21 @@
 //! Multi-party PSI topology comparison (paper §5.3, Fig. 7 in miniature).
 //!
 //!     cargo run --release --example mpsi_demo [-- --clients 10 --n 1000]
+//!     cargo run --release --example mpsi_demo -- --transport tcp
 //!
 //! Ten clients with 70%-overlapping indicator sets run Tree-, Path- and
 //! Star-MPSI under both two-party primitives; the demo prints wall time,
 //! simulated network makespan, rounds, and bytes — and verifies every
-//! engine against the set-intersection oracle.
+//! engine against the set-intersection oracle. With `--transport tcp`
+//! every party owns a real localhost listener and each protocol message
+//! crosses the kernel TCP stack as a length-prefixed frame; byte counts
+//! are identical to the channel wire.
 
 use treecss::bench::{fmt_bytes, fmt_secs, Table};
 use treecss::config::Cli;
+use treecss::coordinator::TransportKind;
 use treecss::data::synth;
-use treecss::net::{ChannelTransport, Meter, MeteredTransport, NetConfig};
+use treecss::net::{Meter, MeteredTransport, NetConfig};
 use treecss::psi::common::HeContext;
 use treecss::psi::rsa_psi::RsaPsiConfig;
 use treecss::psi::sched::Pairing;
@@ -24,12 +29,14 @@ fn main() -> treecss::Result<()> {
     let m: usize = cli.opt_parse("clients", 10)?;
     let n: usize = cli.opt_parse("n", 1000)?;
     let seed: u64 = cli.opt_parse("seed", 5)?;
+    let transport = cli.opt_or("transport", "channel");
 
     let mut rng = Rng::new(seed);
     let sets = synth::mpsi_indicator_sets(m, n, 0.7, &mut rng);
     let oracle = oracle_intersection(&sets);
     println!(
-        "== mpsi_demo: {m} clients × {n} items, 70% overlap (true intersection {}) ==",
+        "== mpsi_demo: {m} clients × {n} items, 70% overlap, {transport} wire \
+         (true intersection {}) ==",
         oracle.len()
     );
 
@@ -50,7 +57,8 @@ fn main() -> treecss::Result<()> {
     ] {
         for topo in ["tree", "path", "star"] {
             let meter = Meter::new(NetConfig::lan_10gbps());
-            let net = MeteredTransport::new(ChannelTransport::new(), &meter);
+            let wire = TransportKind::from_name(&transport)?.wire(m)?;
+            let net = MeteredTransport::new(wire, &meter);
             let rep = match topo {
                 "tree" => run_tree(
                     &sets,

@@ -1,0 +1,227 @@
+//! Multi-process runs: the pipeline over TCP with each client's wire
+//! endpoint hosted by its own OS process.
+//!
+//! The paper's testbed is one machine per party on a LAN. `--distributed
+//! m` reproduces the process topology on localhost: the coordinator
+//! process hosts the aggregation server, label owner and key server
+//! listeners, then self-execs `m` children under the hidden
+//! `party-worker` subcommand. Each child binds a real TCP listener for
+//! its client, reports the bound address on stdout (`READY <addr>`), and
+//! relays every frame that arrives for its client back to the
+//! coordinator's hub listener ([`TcpTransportBuilder::forward_to`]) — so
+//! all protocol traffic addressed to a client genuinely crosses into that
+//! client's process and back over the kernel TCP stack. Protocol *compute*
+//! still executes in the coordinator (the engines interleave both sides
+//! of every exchange); moving party programs out-of-process is the next
+//! step on the ROADMAP, and this module gives it the process + wire
+//! scaffolding.
+//!
+//! Lifecycle: children exit when the coordinator closes their stdin (so a
+//! crashed coordinator cannot leak workers), and
+//! [`Cluster::shutdown`] waits for every child and propagates non-zero
+//! exit states.
+//!
+//! [`TcpTransportBuilder::forward_to`]: crate::net::TcpTransportBuilder::forward_to
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::SocketAddr;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use crate::config::Cli;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::net::{PartyId, TcpTransport, TcpTransportBuilder, TcpTransportConfig};
+
+use super::pipeline::PipelineReport;
+use super::session::Session;
+
+/// One spawned party-worker child: the OS process hosting a client's
+/// listener.
+pub struct Worker {
+    child: Child,
+    party: PartyId,
+    addr: SocketAddr,
+}
+
+impl Worker {
+    pub fn party(&self) -> PartyId {
+        self.party
+    }
+
+    /// The listener address the worker bound for its client.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+/// A set of spawned party-worker processes, one per client.
+pub struct Cluster {
+    workers: Vec<Worker>,
+}
+
+impl Cluster {
+    /// Self-exec `n_clients` party-worker children and collect their
+    /// bound addresses. `forward_to` is the coordinator hub listener every
+    /// worker relays its frames to; `recv_timeout` is forwarded so the
+    /// whole cluster shares one deadline discipline.
+    pub fn spawn(
+        n_clients: usize,
+        forward_to: SocketAddr,
+        recv_timeout: Duration,
+    ) -> Result<Cluster> {
+        let exe = std::env::current_exe()?;
+        let mut workers = Vec::with_capacity(n_clients);
+        for c in 0..n_clients {
+            let mut child = Command::new(&exe)
+                .arg("party-worker")
+                .arg("--client")
+                .arg(c.to_string())
+                .arg("--forward")
+                .arg(forward_to.to_string())
+                .arg("--timeout-ms")
+                .arg(recv_timeout.as_millis().to_string())
+                .stdin(Stdio::piped())
+                .stdout(Stdio::piped())
+                .spawn()?;
+            let stdout = child.stdout.take().expect("stdout was piped");
+            let mut line = String::new();
+            BufReader::new(stdout).read_line(&mut line)?;
+            let addr = match parse_ready(&line) {
+                Some(a) => a,
+                None => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    return Err(Error::Net(format!(
+                        "party-worker {c}: bad handshake {line:?}"
+                    )));
+                }
+            };
+            workers.push(Worker { child, party: PartyId::Client(c as u32), addr });
+        }
+        Ok(Cluster { workers })
+    }
+
+    pub fn workers(&self) -> &[Worker] {
+        &self.workers
+    }
+
+    /// Register every worker's listener as a peer of the coordinator's
+    /// transport.
+    pub fn register_peers(&self, net: &TcpTransport) {
+        for w in &self.workers {
+            net.add_peer(w.party, w.addr);
+        }
+    }
+
+    /// Ask every child to exit (stdin EOF) and wait for it, propagating
+    /// non-zero exit states.
+    pub fn shutdown(mut self) -> Result<()> {
+        for w in &mut self.workers {
+            drop(w.child.stdin.take());
+        }
+        for w in &mut self.workers {
+            let status = w.child.wait()?;
+            if !status.success() {
+                return Err(Error::Net(format!(
+                    "party-worker {} exited with {status}",
+                    w.party
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_ready(line: &str) -> Option<SocketAddr> {
+    line.trim().strip_prefix("READY ")?.parse().ok()
+}
+
+/// Run a built [`Session`]'s pipeline with each client's wire endpoint
+/// hosted by a spawned party-worker process; the aggregator, label owner
+/// and key server stay in this process. Reports the same
+/// [`PipelineReport`] as an in-process run.
+///
+/// Only callable from the `treecss` binary: workers are spawned by
+/// re-executing the current executable with the hidden `party-worker`
+/// subcommand.
+pub fn run_distributed(
+    session: &Session,
+    train: &Dataset,
+    test: &Dataset,
+) -> Result<PipelineReport> {
+    let cfg = TcpTransportConfig::default();
+    let net = TcpTransportBuilder::with_config(cfg)
+        .host(PartyId::Aggregator)
+        .host(PartyId::LabelOwner)
+        .host(PartyId::KeyServer)
+        .build()?;
+    let hub = net.local_addr(PartyId::Aggregator).expect("aggregator hosted");
+    let cluster = Cluster::spawn(session.config().n_clients, hub, cfg.recv_timeout)?;
+    cluster.register_peers(&net);
+    let report = session.run_over(train, test, &net);
+    // Tear the cluster down even when the run failed, then surface the
+    // first error.
+    let shut = cluster.shutdown();
+    let report = report?;
+    shut?;
+    Ok(report)
+}
+
+/// The party-worker entrypoint (hidden `party-worker` subcommand): bind a
+/// listener for `--client <i>`, relay every arrived frame to `--forward
+/// <addr>`, print `READY <addr>` on stdout, and serve until stdin closes.
+pub fn serve_party_worker(cli: &Cli) -> Result<()> {
+    let client: u32 = cli.opt_parse("client", 0u32)?;
+    let forward: SocketAddr = match cli.opt("forward") {
+        Some(s) => s
+            .parse()
+            .map_err(|_| Error::Config(format!("--forward: bad address {s:?}")))?,
+        None => {
+            return Err(Error::Config("party-worker requires --forward <addr>".into()));
+        }
+    };
+    let timeout_ms: u64 = cli.opt_parse("timeout-ms", 30_000u64)?;
+    let cfg = TcpTransportConfig {
+        recv_timeout: Duration::from_millis(timeout_ms),
+        ..Default::default()
+    };
+    let net = TcpTransportBuilder::with_config(cfg)
+        .host(PartyId::Client(client))
+        .forward_to(forward)
+        .build()?;
+    let addr = net.local_addr(PartyId::Client(client)).expect("client hosted");
+    println!("READY {addr}");
+    std::io::stdout().flush()?;
+
+    // Serve frames until the coordinator closes our stdin (or asks
+    // explicitly) — the transport's listener threads do the actual work.
+    let stdin = std::io::stdin();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if stdin.read_line(&mut line)? == 0 {
+            break;
+        }
+        if line.trim() == "SHUTDOWN" {
+            break;
+        }
+    }
+    drop(net);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ready_handshake_parses() {
+        let addr: SocketAddr = "127.0.0.1:4567".parse().unwrap();
+        assert_eq!(parse_ready("READY 127.0.0.1:4567\n"), Some(addr));
+        assert_eq!(parse_ready("READY 127.0.0.1:4567"), Some(addr));
+        assert!(parse_ready("127.0.0.1:4567").is_none());
+        assert!(parse_ready("READY not-an-addr").is_none());
+        assert!(parse_ready("").is_none());
+    }
+}

@@ -4,14 +4,20 @@
 //!
 //! The front door is the builder API —
 //! `Pipeline::builder(variant)...build()` → [`Session::run`] — which owns
-//! a metered in-process wire. [`run_pipeline`] remains as a thin wrapper
-//! for callers that manage their own [`crate::net::Meter`].
+//! a metered wire: in-process channels by default, or real localhost TCP
+//! sockets via `SessionBuilder::transport(TransportKind::Tcp)`.
+//! [`distributed`] runs the same pipeline with each client's wire
+//! endpoint hosted by a spawned party-worker OS process.
+//! [`run_pipeline`] remains as a thin wrapper for callers that manage
+//! their own [`crate::net::Meter`].
 
+pub mod distributed;
 pub mod pipeline;
 pub mod session;
 
+pub use distributed::{run_distributed, Cluster};
 pub use pipeline::{
     run_pipeline, Backend, Downstream, FrameworkVariant, MpsiTopology, PipelineConfig,
     PipelineReport,
 };
-pub use session::{Pipeline, Session, SessionBuilder};
+pub use session::{Pipeline, Session, SessionBuilder, TransportKind};

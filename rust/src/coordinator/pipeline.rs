@@ -397,6 +397,17 @@ pub(crate) fn run_over_transport(
         + coreset.as_ref().map_or(0.0, |c| c.sim_s)
         + train_report.as_ref().map_or(0.0, |t| t.sim_comm_s);
 
+    // Every protocol in the lifecycle consumes exactly what it is sent; an
+    // envelope still sitting in a mailbox here means some party sent a
+    // message nobody read — a protocol bug that must fail the run, not
+    // leak silently.
+    let undelivered = net.pending();
+    if undelivered > 0 {
+        return Err(crate::Error::Net(format!(
+            "{undelivered} undelivered envelope(s) on the wire at pipeline exit"
+        )));
+    }
+
     Ok(PipelineReport {
         variant: cfg.variant,
         align,

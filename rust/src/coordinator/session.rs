@@ -20,17 +20,22 @@
 //! # }
 //! ```
 //!
-//! A [`Session`] owns the wire: a [`ChannelTransport`] wrapped in
+//! A [`Session`] owns the wire: the transport selected by
+//! [`SessionBuilder::transport`] — the in-process [`ChannelTransport`]
+//! (default) or the socket-backed [`crate::net::TcpTransport`], where
+//! every envelope crosses a real localhost TCP connection — wrapped in
 //! [`crate::net::MeteredTransport`] around the session's [`Meter`], so
 //! every protocol byte is accounted on delivery and per-edge traffic is
 //! inspectable through [`Session::meter`] after a run. Repeated
 //! [`Session::run`] calls accumulate into the same meter; call
-//! `session.meter().reset()` between benchmark repetitions.
+//! `session.meter().reset()` between benchmark repetitions. A run that
+//! leaves undelivered envelopes on the wire fails: a drained mailbox at
+//! exit is part of every protocol's contract.
 
 use crate::coreset::cluster_coreset::ClusterCoresetConfig;
 use crate::data::Dataset;
 use crate::error::Result;
-use crate::net::{ChannelTransport, Meter, MeteredTransport, NetConfig};
+use crate::net::{ChannelTransport, Meter, MeteredTransport, NetConfig, TcpTransport, Transport};
 use crate::psi::sched::Pairing;
 use crate::psi::TpsiProtocol;
 use crate::splitnn::trainer::{ModelKind, TrainConfig};
@@ -38,6 +43,40 @@ use crate::splitnn::trainer::{ModelKind, TrainConfig};
 use super::pipeline::{
     run_over_transport, Backend, Downstream, FrameworkVariant, PipelineConfig, PipelineReport,
 };
+
+/// Which wire a [`Session`] builds for its runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process mailboxes (the default simulation wire).
+    #[default]
+    Channel,
+    /// Real localhost TCP sockets: one listener per party, every envelope
+    /// a length-prefixed frame through the kernel loopback stack.
+    Tcp,
+}
+
+impl TransportKind {
+    /// Parse a CLI-style name (`channel` / `tcp`) — the single dispatch
+    /// point shared by the binary, examples, and benches.
+    pub fn from_name(name: &str) -> Result<TransportKind> {
+        match name {
+            "channel" => Ok(TransportKind::Channel),
+            "tcp" => Ok(TransportKind::Tcp),
+            t => Err(crate::Error::Config(format!("unknown transport {t:?}"))),
+        }
+    }
+
+    /// Build this kind of wire for a pipeline with `n_clients` feature
+    /// holders (a TCP wire hosts the full [`crate::parties::roster`]).
+    pub fn wire(self, n_clients: usize) -> Result<Box<dyn Transport>> {
+        Ok(match self {
+            TransportKind::Channel => Box::new(ChannelTransport::new()),
+            TransportKind::Tcp => {
+                Box::new(TcpTransport::hosting(crate::parties::roster(n_clients))?)
+            }
+        })
+    }
+}
 
 /// Entry point: `Pipeline::builder(variant)` starts a [`SessionBuilder`].
 pub struct Pipeline;
@@ -48,6 +87,7 @@ impl Pipeline {
             cfg: PipelineConfig::new(variant, Downstream::Train(ModelKind::Lr)),
             net: NetConfig::default(),
             backend: None,
+            transport: TransportKind::default(),
         }
     }
 }
@@ -58,6 +98,7 @@ pub struct SessionBuilder {
     cfg: PipelineConfig,
     net: NetConfig,
     backend: Option<Backend>,
+    transport: TransportKind,
 }
 
 impl SessionBuilder {
@@ -156,6 +197,14 @@ impl SessionBuilder {
         self
     }
 
+    /// Which wire the session builds per run (default: in-process
+    /// channels; [`TransportKind::Tcp`] moves every envelope over real
+    /// localhost sockets, one listener per party).
+    pub fn transport(mut self, t: TransportKind) -> Self {
+        self.transport = t;
+        self
+    }
+
     /// Freeze the configuration into a runnable [`Session`].
     pub fn build(mut self) -> Session {
         // The downstream choice is the single source of truth for what
@@ -166,7 +215,12 @@ impl SessionBuilder {
         let backend = self
             .backend
             .unwrap_or_else(|| Backend::xla_default().unwrap_or(Backend::Native));
-        Session { cfg: self.cfg, backend, meter: Meter::new(self.net) }
+        Session {
+            cfg: self.cfg,
+            backend,
+            meter: Meter::new(self.net),
+            transport: self.transport,
+        }
     }
 }
 
@@ -175,20 +229,43 @@ pub struct Session {
     cfg: PipelineConfig,
     backend: Backend,
     meter: Meter,
+    transport: TransportKind,
 }
 
 impl Session {
     /// Run the full lifecycle (align → coreset → train → evaluate) on a
-    /// train/test split. The session's transport meters every message;
-    /// repeated runs accumulate unless [`Meter::reset`] is called.
+    /// train/test split over the session's selected transport. Every
+    /// message is metered; repeated runs accumulate unless
+    /// [`Meter::reset`] is called. Fails if the run leaves undelivered
+    /// envelopes on the wire (a protocol bug, not a tolerable leak).
     pub fn run(&self, train: &Dataset, test: &Dataset) -> Result<PipelineReport> {
-        let net = MeteredTransport::new(ChannelTransport::new(), &self.meter);
+        let wire = self.transport.wire(self.cfg.n_clients)?;
+        let net = MeteredTransport::new(wire, &self.meter);
         run_over_transport(train, test, &self.cfg, &self.backend, &net, &self.meter)
+    }
+
+    /// Run the lifecycle over a caller-provided wire — how `--distributed`
+    /// drives the pipeline over a [`TcpTransport`] whose client endpoints
+    /// live in other OS processes. The wire is wrapped in the session's
+    /// metering middleware, so accounting is identical to [`Session::run`].
+    pub fn run_over(
+        &self,
+        train: &Dataset,
+        test: &Dataset,
+        net: &dyn Transport,
+    ) -> Result<PipelineReport> {
+        let metered = MeteredTransport::new(net, &self.meter);
+        run_over_transport(train, test, &self.cfg, &self.backend, &metered, &self.meter)
     }
 
     /// The session's byte/time accounting (per-edge, per-phase).
     pub fn meter(&self) -> &Meter {
         &self.meter
+    }
+
+    /// Which wire [`Session::run`] builds.
+    pub fn transport_kind(&self) -> TransportKind {
+        self.transport
     }
 
     pub fn config(&self) -> &PipelineConfig {
@@ -279,6 +356,39 @@ mod tests {
             .backend(Backend::Native)
             .build();
         assert_eq!(s.config().train.model, ModelKind::Mlp);
+    }
+
+    #[test]
+    fn transport_knob_lands_in_session() {
+        let s = Pipeline::builder(FrameworkVariant::TreeCss)
+            .backend(Backend::Native)
+            .transport(TransportKind::Tcp)
+            .build();
+        assert_eq!(s.transport_kind(), TransportKind::Tcp);
+        let d = Pipeline::builder(FrameworkVariant::TreeCss).backend(Backend::Native).build();
+        assert_eq!(d.transport_kind(), TransportKind::Channel);
+    }
+
+    #[test]
+    fn leftover_envelope_fails_the_run() {
+        // A stray envelope nobody consumes must turn the run into an Err
+        // at exit — an undrained mailbox is a protocol bug, not a leak to
+        // shrug off.
+        use crate::net::{ChannelTransport, Envelope, PartyId, Transport};
+        let mut rng = Rng::new(23);
+        let ds = PaperDataset::Ri.generate(0.015, &mut rng);
+        let (tr, te) = ds.split(0.7, &mut rng);
+        let net = ChannelTransport::new();
+        net.send(Envelope::new(
+            PartyId::Client(0),
+            PartyId::Client(1),
+            "stray/never-read",
+            vec![1, 2, 3],
+        ))
+        .unwrap();
+        let session = fast_session(FrameworkVariant::TreeAll);
+        let err = session.run_over(&tr, &te, &net).unwrap_err();
+        assert!(err.to_string().contains("undelivered"), "{err}");
     }
 
     #[test]

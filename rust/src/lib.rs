@@ -14,13 +14,16 @@
 //!
 //! The front door is the session builder
 //! ([`coordinator::Pipeline::builder`]): configure a framework variant,
-//! build a [`coordinator::Session`] that owns a metered in-process wire,
-//! and run the paper's lifecycle — **align** (Tree-MPSI over the clients'
-//! sample indicators, every protocol message an envelope on the
-//! transport) → **coreset** (per-client K-Means, HE-sealed cluster tuples
-//! routed via the aggregator, per-(CT,label) selection, re-weighting) →
-//! **train** (weighted SplitNN on the coreset, executed through
-//! PJRT-compiled XLA artifacts).
+//! build a [`coordinator::Session`] that owns a metered wire — in-process
+//! channels, or real localhost TCP sockets via
+//! [`coordinator::TransportKind::Tcp`], with `--distributed` hosting each
+//! client's endpoint in its own OS process — and run the paper's
+//! lifecycle — **align** (Tree-MPSI over the clients' sample indicators,
+//! every protocol message an envelope on the transport) → **coreset**
+//! (per-client K-Means, HE-sealed cluster tuples routed via the
+//! aggregator, per-(CT,label) selection, re-weighting) → **train**
+//! (weighted SplitNN on the coreset, executed through PJRT-compiled XLA
+//! artifacts).
 
 pub mod bench;
 pub mod config;

@@ -16,13 +16,16 @@ use std::process::ExitCode;
 use std::sync::Arc;
 
 use treecss::config::Cli;
-use treecss::coordinator::{Backend, Downstream, FrameworkVariant, Pipeline};
+use treecss::coordinator::{
+    distributed, Backend, Downstream, FrameworkVariant, Pipeline, TransportKind,
+};
 use treecss::coreset::cluster_coreset;
 use treecss::data::synth::{self, PaperDataset};
 use treecss::data::VerticalPartition;
 use treecss::ml::kmeans::ParAssign;
 use treecss::net::{ChannelTransport, Meter, MeteredTransport, NetConfig};
 use treecss::psi::common::HeContext;
+use treecss::psi::rsa_psi::RsaPsiConfig;
 use treecss::psi::sched::Pairing;
 use treecss::psi::tree::{run_tree, TreeMpsiConfig};
 use treecss::psi::{path::run_path, star::run_star, TpsiProtocol};
@@ -48,6 +51,8 @@ fn real_main() -> Result<()> {
         "mpsi" => cmd_mpsi(&cli),
         "coreset" => cmd_coreset(&cli),
         "info" => cmd_info(),
+        // Hidden: the child half of `run --distributed` (self-exec'd).
+        "party-worker" => distributed::serve_party_worker(&cli),
         "" | "help" | "--help" => {
             print!("{}", HELP);
             Ok(())
@@ -64,19 +69,28 @@ treecss — TreeCSS vertical federated learning framework
 
 USAGE: treecss <run|mpsi|coreset|info> [--options]
 
-run options (builds a Pipeline::builder(..) session over the metered
-in-process transport; parties exchange every protocol message as wire
-envelopes):
+run options (builds a Pipeline::builder(..) session over a metered
+transport; parties exchange every protocol message as wire envelopes):
   --dataset BA|MU|RI|HI|BP|YP   (default RI)
   --scale <f64>                 fraction of paper size (default 0.05)
   --model lr|mlp|linreg|knn     (default lr)
   --variant treecss|treeall|starcss|starall  (default treecss)
   --clients <m>                 feature-holding clients (default 3)
+  --transport channel|tcp       the wire (default channel; tcp hosts one
+                                localhost listener per party and moves
+                                every envelope as a length-prefixed
+                                frame over real sockets)
+  --distributed <m>             spawn m party-worker OS processes, each
+                                hosting one client's TCP endpoint, and
+                                run the full pipeline over localhost
+                                (implies tcp; overrides --clients)
   --overlap <frac>              fraction of samples all clients share
                                 (default 1.0; below 1.0 the alignment
                                 faces a partial intersection)
   --clusters <k per client>     (default 8)
   --lr <f32>  --epochs <n>      training hyper-parameters
+  --rsa-bits <n>                TPSI RSA modulus bits (default 512)
+  --he-bits <n>                 Paillier modulus bits (default 512)
   --backend xla|native          phase backend (default xla)
   --threads <n>                 worker threads for every hot path,
                                 alignment included (0 = all cores)
@@ -84,11 +98,13 @@ envelopes):
 
 mpsi options:
   --clients <m>  --n <per-client size>  --overlap <frac>
-  --protocol rsa|ot  --topology tree|path|star
+  --protocol rsa|ot  --topology tree|path|star  --transport channel|tcp
   --pairing volume|order  --rsa-bits <n>  --threads <n>
 
 coreset options:
   --dataset ... --scale ... --clusters <k> --threads <n> --no-reweight
+
+(party-worker is internal: the child process half of --distributed.)
 ";
 
 fn parse_dataset(s: &str) -> Result<PaperDataset> {
@@ -135,20 +151,43 @@ fn cmd_run(cli: &Cli) -> Result<()> {
         "native" => Backend::Native,
         b => return Err(treecss::Error::Config(format!("unknown backend {b:?}"))),
     };
+    let distributed: Option<usize> = match cli.opt("distributed") {
+        None => None,
+        Some(s) => Some(s.parse().map_err(|_| {
+            treecss::Error::Config(format!("--distributed: cannot parse {s:?}"))
+        })?),
+    };
+    let transport = TransportKind::from_name(&cli.opt_or("transport", "channel"))?;
+    let n_clients = match distributed {
+        Some(m) => m,
+        None => cli.opt_parse("clients", 3)?,
+    };
     let session = Pipeline::builder(variant)
         .downstream(downstream)
-        .clients(cli.opt_parse("clients", 3)?)
+        .clients(n_clients)
         .seed(seed)
         .overlap(cli.opt_parse("overlap", 1.0)?)
         .clusters_per_client(cli.opt_parse("clusters", 8)?)
         .lr(cli.opt_parse("lr", 0.05)?)
         .epochs(cli.opt_parse("epochs", 100)?)
         .threads(cli.opt_parse("threads", 0)?)
+        .protocol(TpsiProtocol::Rsa(RsaPsiConfig {
+            modulus_bits: cli.opt_parse("rsa-bits", 512)?,
+            domain: "treecss-cli".into(),
+        }))
+        .he_bits(cli.opt_parse("he-bits", 512)?)
         .net(NetConfig::lan_10gbps())
         .backend(backend)
+        .transport(transport)
         .build();
 
-    let rep = session.run(&tr, &te)?;
+    let rep = match distributed {
+        None => session.run(&tr, &te)?,
+        Some(m) => {
+            println!("distributed     : {m} party-worker processes over localhost tcp");
+            distributed::run_distributed(&session, &tr, &te)?
+        }
+    };
     println!(
         "\n== {} ({} backend) ==",
         variant.name(),
@@ -211,7 +250,8 @@ fn cmd_mpsi(cli: &Cli) -> Result<()> {
     let mut rng = Rng::new(seed);
     let sets = synth::mpsi_indicator_sets(m, n, overlap, &mut rng);
     let meter = Meter::new(NetConfig::lan_10gbps());
-    let net = MeteredTransport::new(ChannelTransport::new(), &meter);
+    let wire = TransportKind::from_name(&cli.opt_or("transport", "channel"))?.wire(m)?;
+    let net = MeteredTransport::new(wire, &meter);
     let he = HeContext::generate(&mut Rng::new(seed ^ 1), 512);
     let topo = cli.opt_or("topology", "tree");
     let par = Parallel::auto(cli.opt_parse("threads", 0)?);

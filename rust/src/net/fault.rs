@@ -1,0 +1,179 @@
+//! Fault-injection middleware: wraps any [`Transport`] and corrupts
+//! matching sends, so tests can prove every protocol surfaces an `Err` —
+//! never a hang or a panic — when the wire misbehaves.
+//!
+//! Faults are injected at the envelope layer (above sockets), which keeps
+//! them deterministic and transport-agnostic: the same wrapper exercises
+//! [`ChannelTransport`](super::ChannelTransport) and
+//! [`TcpTransport`](super::TcpTransport) identically.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::Result;
+
+use super::meter::PartyId;
+use super::transport::{Envelope, Transport};
+
+/// Which corruption [`FaultTransport`] injects into matching sends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// The envelope never reaches the wire — the receiver times out.
+    Drop,
+    /// The envelope is delivered twice — a leftover the drained-mailbox
+    /// check at session exit turns into an `Err`.
+    Duplicate,
+    /// The payload arrives cut in half — the codec's truncation checks
+    /// turn it into a decode `Err` at the receiver.
+    Truncate,
+}
+
+/// Transport middleware injecting one kind of [`Fault`] into every send
+/// whose phase matches the configured prefix (after an optional number of
+/// unharmed matches).
+pub struct FaultTransport<T: Transport> {
+    inner: T,
+    fault: Fault,
+    phase_prefix: String,
+    to: Option<PartyId>,
+    skip: AtomicU64,
+    injected: AtomicU64,
+}
+
+impl<T: Transport> FaultTransport<T> {
+    /// Inject `fault` into every send (narrow with
+    /// [`FaultTransport::on_phase_prefix`] / [`FaultTransport::on_to`] /
+    /// [`FaultTransport::after`]).
+    pub fn new(inner: T, fault: Fault) -> Self {
+        FaultTransport {
+            inner,
+            fault,
+            phase_prefix: String::new(),
+            to: None,
+            skip: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// Only corrupt sends whose phase starts with `prefix`.
+    pub fn on_phase_prefix(mut self, prefix: &str) -> Self {
+        self.phase_prefix = prefix.to_string();
+        self
+    }
+
+    /// Only corrupt sends addressed to `party`.
+    pub fn on_to(mut self, party: PartyId) -> Self {
+        self.to = Some(party);
+        self
+    }
+
+    /// Let the first `n` matching sends through unharmed.
+    pub fn after(self, n: u64) -> Self {
+        self.skip.store(n, Ordering::SeqCst);
+        self
+    }
+
+    /// How many faults were actually injected.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::SeqCst)
+    }
+
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T: Transport> Transport for FaultTransport<T> {
+    fn send(&self, env: Envelope) -> Result<f64> {
+        let matches = env.phase.starts_with(self.phase_prefix.as_str())
+            && (self.to.is_none() || self.to == Some(env.to));
+        if !matches {
+            return self.inner.send(env);
+        }
+        // Atomically consume one "skip" credit; once they run out, every
+        // matching send is corrupted (safe under concurrent pair threads).
+        let unharmed = self
+            .skip
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+            .is_ok();
+        if unharmed {
+            return self.inner.send(env);
+        }
+        self.injected.fetch_add(1, Ordering::SeqCst);
+        match self.fault {
+            Fault::Drop => Ok(0.0),
+            Fault::Duplicate => {
+                let sim = self.inner.send(env.clone())?;
+                self.inner.send(env)?;
+                Ok(sim)
+            }
+            Fault::Truncate => {
+                let mut payload = env.payload;
+                payload.truncate(payload.len() / 2);
+                self.inner.send(Envelope::new(env.from, env.to, &env.phase, payload))
+            }
+        }
+    }
+
+    fn recv(&self, at: PartyId, from: PartyId, phase: &str) -> Result<Envelope> {
+        self.inner.recv(at, from, phase)
+    }
+
+    fn pending(&self) -> usize {
+        self.inner.pending()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::ChannelTransport;
+    use std::time::Duration;
+
+    const A: PartyId = PartyId::Client(0);
+    const B: PartyId = PartyId::Client(1);
+
+    #[test]
+    fn drop_swallows_matching_sends() {
+        let t = FaultTransport::new(
+            ChannelTransport::with_timeout(Duration::from_millis(10)),
+            Fault::Drop,
+        )
+        .on_phase_prefix("psi/");
+        t.send(Envelope::new(A, B, "psi/x", vec![1])).unwrap();
+        t.send(Envelope::new(A, B, "keys/x", vec![2])).unwrap();
+        assert!(t.recv(B, A, "psi/x").is_err(), "dropped");
+        assert_eq!(t.recv(B, A, "keys/x").unwrap().payload, vec![2]);
+        assert_eq!(t.injected(), 1);
+    }
+
+    #[test]
+    fn duplicate_leaves_a_leftover() {
+        let t = FaultTransport::new(ChannelTransport::new(), Fault::Duplicate);
+        t.send(Envelope::new(A, B, "p", vec![1])).unwrap();
+        assert_eq!(t.recv(B, A, "p").unwrap().payload, vec![1]);
+        assert_eq!(t.pending(), 1, "the duplicate lingers");
+    }
+
+    #[test]
+    fn truncate_halves_the_payload() {
+        let t = FaultTransport::new(ChannelTransport::new(), Fault::Truncate);
+        t.send(Envelope::new(A, B, "p", vec![1, 2, 3, 4])).unwrap();
+        assert_eq!(t.recv(B, A, "p").unwrap().payload, vec![1, 2]);
+    }
+
+    #[test]
+    fn after_skips_the_first_matches() {
+        let t = FaultTransport::new(
+            ChannelTransport::with_timeout(Duration::from_millis(10)),
+            Fault::Drop,
+        )
+        .after(2);
+        for i in 0..3u8 {
+            t.send(Envelope::new(A, B, "p", vec![i])).unwrap();
+        }
+        assert_eq!(t.recv(B, A, "p").unwrap().payload, vec![0]);
+        assert_eq!(t.recv(B, A, "p").unwrap().payload, vec![1]);
+        assert!(t.recv(B, A, "p").is_err(), "third send was dropped");
+        assert_eq!(t.injected(), 1);
+    }
+}

@@ -5,19 +5,28 @@
 //! gRPC. We replace the wire with a pluggable [`Transport`]: parties are
 //! endpoints that `send`/`recv` typed [`transport::Envelope`]s, the
 //! in-process [`ChannelTransport`] moves them between protocol threads,
-//! and [`MeteredTransport`] middleware (a) counts every byte each party
-//! sends/receives and (b) converts bytes to *simulated transfer time*
-//! under a configurable latency/bandwidth model. All cryptography still
-//! executes for real, so wall-clock numbers reflect the true compute
-//! cost. DESIGN.md documents why this substitution preserves the paper's
+//! and the socket-backed [`TcpTransport`] moves them as length-prefixed
+//! frames over real localhost TCP connections — per-process listeners, so
+//! `--distributed` runs host each client's wire endpoint in its own OS
+//! process. [`MeteredTransport`] middleware (a) counts every byte each
+//! party sends/receives and (b) converts bytes to *simulated transfer
+//! time* under a configurable latency/bandwidth model;
+//! [`FaultTransport`] middleware corrupts matching sends so tests can
+//! prove protocols fail loudly. All cryptography still executes for real,
+//! so wall-clock numbers reflect the true compute cost. DESIGN.md
+//! documents why the in-process substitution preserves the paper's
 //! measurements (they are dominated by bytes × rounds and crypto compute)
-//! and where a gRPC/socket transport slots in.
+//! and how the TCP transport and the distributed process model slot in.
 
 pub mod cost;
+pub mod fault;
 pub mod meter;
 pub mod msg;
+pub mod tcp;
 pub mod transport;
 
 pub use cost::NetConfig;
+pub use fault::{Fault, FaultTransport};
 pub use meter::{Meter, PartyId};
+pub use tcp::{TcpTransport, TcpTransportBuilder, TcpTransportConfig};
 pub use transport::{ChannelTransport, Endpoint, Envelope, MeteredTransport, Transport};

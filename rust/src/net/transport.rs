@@ -6,13 +6,17 @@
 //! [`Transport::recv`] between [`PartyId`] endpoints), and implementations
 //! decide how bytes move. [`ChannelTransport`] is the in-process
 //! implementation — per-(receiver, sender, phase) mailboxes usable from
-//! concurrently executing protocol threads — and a gRPC/socket transport is
-//! a drop-in replacement, not a rewrite.
+//! concurrently executing protocol threads — and [`TcpTransport`]
+//! (`net::tcp`) is the socket-backed drop-in: every envelope becomes a
+//! length-prefixed frame on a real localhost TCP connection, with the same
+//! mailbox demux on the receiving side.
 //!
 //! Byte accounting is middleware: [`MeteredTransport`] wraps any transport
 //! and charges the [`Meter`] as the wire accepts each [`Envelope`], so
 //! accounted bytes are a property of the wire rather than a courtesy of
-//! call sites.
+//! call sites. Fault injection is middleware too
+//! ([`crate::net::FaultTransport`] drops, duplicates, or truncates
+//! matching envelopes to prove protocols fail loudly).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
@@ -21,6 +25,8 @@ use std::time::Duration;
 use crate::error::{Error, Result};
 
 use super::meter::{Meter, PartyId};
+
+pub use super::tcp::{TcpTransport, TcpTransportBuilder, TcpTransportConfig};
 
 /// One wire message: routing header plus the codec'd payload from
 /// [`crate::net::msg`].
@@ -80,6 +86,49 @@ pub trait Transport: Sync {
     /// Receive the next message addressed to `at` from `from` under
     /// `phase`, in send order.
     fn recv(&self, at: PartyId, from: PartyId, phase: &str) -> Result<Envelope>;
+
+    /// Envelopes accepted by this transport but not yet consumed by a
+    /// `recv` — the undelivered traffic sitting in *local* mailboxes. A
+    /// finished protocol must leave the wire empty; the session runner
+    /// (`coordinator::Session::run`) turns a non-zero count at pipeline
+    /// exit into an `Err`. Middleware delegates; transports that cannot
+    /// inspect their mailboxes report 0.
+    fn pending(&self) -> usize {
+        0
+    }
+}
+
+/// Forwarding impl so `&T` (including `&dyn Transport`) is itself a
+/// transport — lets middleware like [`MeteredTransport`] wrap borrowed or
+/// type-erased wires.
+impl<T: Transport + ?Sized> Transport for &T {
+    fn send(&self, env: Envelope) -> Result<f64> {
+        (**self).send(env)
+    }
+
+    fn recv(&self, at: PartyId, from: PartyId, phase: &str) -> Result<Envelope> {
+        (**self).recv(at, from, phase)
+    }
+
+    fn pending(&self) -> usize {
+        (**self).pending()
+    }
+}
+
+/// Forwarding impl for owned type-erased wires (`Box<dyn Transport>`), so
+/// call sites can pick a transport at runtime and wrap it in middleware.
+impl<T: Transport + ?Sized> Transport for Box<T> {
+    fn send(&self, env: Envelope) -> Result<f64> {
+        (**self).send(env)
+    }
+
+    fn recv(&self, at: PartyId, from: PartyId, phase: &str) -> Result<Envelope> {
+        (**self).recv(at, from, phase)
+    }
+
+    fn pending(&self) -> usize {
+        (**self).pending()
+    }
 }
 
 /// Mailbox key: (receiver, sender, phase). Keeping sender and phase in the
@@ -87,58 +136,40 @@ pub trait Transport: Sync {
 /// stealing each other's messages.
 type MailKey = (PartyId, PartyId, String);
 
-/// In-memory transport: FIFO mailboxes + a condvar, usable across the
-/// thread pool (Tree-MPSI runs its pairs concurrently against one
-/// instance). `recv` times out rather than deadlocking when a protocol
-/// bug leaves a message unsent.
-pub struct ChannelTransport {
-    mailboxes: Mutex<HashMap<MailKey, VecDeque<Envelope>>>,
+/// The mailbox discipline shared by every local delivery surface: FIFO
+/// queues keyed by (receiver, sender, phase) plus a condvar, safe under
+/// concurrently executing protocol threads. [`ChannelTransport`] *is* a
+/// `Mailboxes`; [`TcpTransport`] reuses it to demux frames its listener
+/// threads pull off the sockets.
+pub(crate) struct Mailboxes {
+    boxes: Mutex<HashMap<MailKey, VecDeque<Envelope>>>,
     arrived: Condvar,
-    recv_timeout: Duration,
 }
 
-impl ChannelTransport {
-    pub fn new() -> Self {
-        Self::with_timeout(Duration::from_secs(30))
+impl Mailboxes {
+    pub(crate) fn new() -> Self {
+        Mailboxes { boxes: Mutex::new(HashMap::new()), arrived: Condvar::new() }
     }
 
-    /// A transport whose `recv` fails after `timeout` without a message.
-    pub fn with_timeout(timeout: Duration) -> Self {
-        ChannelTransport {
-            mailboxes: Mutex::new(HashMap::new()),
-            arrived: Condvar::new(),
-            recv_timeout: timeout,
-        }
-    }
-
-    /// Messages sitting in mailboxes (undelivered). A finished protocol
-    /// should leave the wire empty; tests assert this.
-    pub fn pending(&self) -> usize {
-        self.mailboxes.lock().unwrap().values().map(|q| q.len()).sum()
-    }
-}
-
-impl Default for ChannelTransport {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl Transport for ChannelTransport {
-    fn send(&self, env: Envelope) -> Result<f64> {
+    pub(crate) fn push(&self, env: Envelope) {
         let key = (env.to, env.from, env.phase.clone());
-        let mut boxes = self.mailboxes.lock().unwrap();
+        let mut boxes = self.boxes.lock().unwrap();
         boxes.entry(key).or_default().push_back(env);
         self.arrived.notify_all();
-        Ok(0.0)
     }
 
-    fn recv(&self, at: PartyId, from: PartyId, phase: &str) -> Result<Envelope> {
+    pub(crate) fn pop(
+        &self,
+        at: PartyId,
+        from: PartyId,
+        phase: &str,
+        timeout: Duration,
+    ) -> Result<Envelope> {
         let key = (at, from, phase.to_string());
         // Fixed deadline: unrelated traffic waking the condvar must not
         // extend this receiver's wait window.
-        let deadline = std::time::Instant::now() + self.recv_timeout;
-        let mut boxes = self.mailboxes.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        let mut boxes = self.boxes.lock().unwrap();
         loop {
             if let Some(env) = boxes.get_mut(&key).and_then(|q| q.pop_front()) {
                 return Ok(env);
@@ -153,6 +184,51 @@ impl Transport for ChannelTransport {
                 self.arrived.wait_timeout(boxes, deadline - now).unwrap();
             boxes = guard;
         }
+    }
+
+    pub(crate) fn pending(&self) -> usize {
+        self.boxes.lock().unwrap().values().map(|q| q.len()).sum()
+    }
+}
+
+/// In-memory transport: FIFO mailboxes + a condvar, usable across the
+/// thread pool (Tree-MPSI runs its pairs concurrently against one
+/// instance). `recv` times out rather than deadlocking when a protocol
+/// bug leaves a message unsent.
+pub struct ChannelTransport {
+    mail: Mailboxes,
+    recv_timeout: Duration,
+}
+
+impl ChannelTransport {
+    pub fn new() -> Self {
+        Self::with_timeout(Duration::from_secs(30))
+    }
+
+    /// A transport whose `recv` fails after `timeout` without a message.
+    pub fn with_timeout(timeout: Duration) -> Self {
+        ChannelTransport { mail: Mailboxes::new(), recv_timeout: timeout }
+    }
+}
+
+impl Default for ChannelTransport {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn send(&self, env: Envelope) -> Result<f64> {
+        self.mail.push(env);
+        Ok(0.0)
+    }
+
+    fn recv(&self, at: PartyId, from: PartyId, phase: &str) -> Result<Envelope> {
+        self.mail.pop(at, from, phase, self.recv_timeout)
+    }
+
+    fn pending(&self) -> usize {
+        self.mail.pending()
     }
 }
 
@@ -187,6 +263,10 @@ impl<T: Transport> Transport for MeteredTransport<'_, T> {
 
     fn recv(&self, at: PartyId, from: PartyId, phase: &str) -> Result<Envelope> {
         self.inner.recv(at, from, phase)
+    }
+
+    fn pending(&self) -> usize {
+        self.inner.pending()
     }
 }
 
@@ -310,6 +390,34 @@ mod tests {
         assert_eq!(env.payload, vec![42]);
         assert_eq!(env.from, A);
         assert_eq!(meter.total_bytes(""), 1);
+    }
+
+    #[test]
+    fn metered_transport_delegates_pending() {
+        let meter = Meter::default();
+        let t = MeteredTransport::new(ChannelTransport::new(), &meter);
+        t.send(Envelope::new(A, B, "p", vec![1])).unwrap();
+        assert_eq!(t.pending(), 1);
+        t.recv(B, A, "p").unwrap();
+        assert_eq!(t.pending(), 0);
+    }
+
+    #[test]
+    fn borrowed_and_boxed_wires_are_transports() {
+        // The forwarding impls let middleware wrap `&dyn` and `Box<dyn>`
+        // wires picked at runtime.
+        let meter = Meter::default();
+        let inner = ChannelTransport::new();
+        let as_dyn: &dyn Transport = &inner;
+        let t = MeteredTransport::new(as_dyn, &meter);
+        t.send(Envelope::new(A, B, "p", vec![7])).unwrap();
+        assert_eq!(t.recv(B, A, "p").unwrap().payload, vec![7]);
+        assert_eq!(meter.total_bytes(""), 1);
+
+        let boxed: Box<dyn Transport> = Box::new(ChannelTransport::new());
+        boxed.send(Envelope::new(A, B, "q", vec![8])).unwrap();
+        assert_eq!(boxed.pending(), 1);
+        assert_eq!(boxed.recv(B, A, "q").unwrap().payload, vec![8]);
     }
 
     #[test]

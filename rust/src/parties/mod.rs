@@ -7,7 +7,9 @@
 //! awaiting schedules, sealing cluster tuples, routing ciphertext. This
 //! mirrors the paper's deployment (one process per party on a LAN) with
 //! the in-process [`crate::net::ChannelTransport`] substituting for gRPC
-//! (DESIGN.md); a socket transport drops in without touching the nodes.
+//! (DESIGN.md); the socket-backed [`crate::net::TcpTransport`] drops in
+//! without touching the nodes, and [`roster`] names the full endpoint set
+//! a pipeline run binds.
 
 use crate::crypto::paillier::PaillierPublic;
 use crate::data::{Dataset, Matrix, Task, VerticalPartition};
@@ -244,6 +246,16 @@ fn decode_he_key(buf: &[u8]) -> Result<PaillierPublic> {
     }
     let n2 = n.mul(&n);
     Ok(PaillierPublic { n, n2 })
+}
+
+/// Every transport endpoint a pipeline run with `n_clients` feature
+/// holders touches: the aggregation server, the label owner, the key
+/// server, and the clients. Transports that bind per-party resources (a
+/// [`crate::net::TcpTransport`] listener per party) host exactly this set.
+pub fn roster(n_clients: usize) -> Vec<PartyId> {
+    let mut parties = vec![PartyId::Aggregator, PartyId::LabelOwner, PartyId::KeyServer];
+    parties.extend((0..n_clients).map(|c| PartyId::Client(c as u32)));
+    parties
 }
 
 /// Deal a dataset into the paper's party layout: `m` clients with

@@ -5,7 +5,7 @@
 use treecss::coordinator::pipeline::{Backend, Downstream, PipelineConfig};
 use treecss::coordinator::{run_pipeline, FrameworkVariant, Pipeline};
 use treecss::data::synth::{self, PaperDataset};
-use treecss::net::{ChannelTransport, Meter, MeteredTransport, NetConfig};
+use treecss::net::{ChannelTransport, Meter, MeteredTransport, NetConfig, Transport};
 use treecss::psi::common::HeContext;
 use treecss::psi::rsa_psi::RsaPsiConfig;
 use treecss::psi::sched::Pairing;
@@ -233,6 +233,45 @@ fn session_api_meters_every_phase() {
     assert!(meter.total_bytes("train/") > 0, "training metered");
     assert_eq!(rep.align.total_bytes, meter.total_bytes("psi/"));
     assert_eq!(rep.total_bytes, meter.total_bytes(""));
+}
+
+/// Multi-process smoke: the real binary under `run --distributed` spawns
+/// one party-worker OS process per client, runs the full MPSI → coreset →
+/// train pipeline over localhost TCP, and reports the same pipeline
+/// summary as an in-process run.
+#[test]
+fn distributed_run_over_localhost_tcp() {
+    let exe = env!("CARGO_BIN_EXE_treecss");
+    let out = std::process::Command::new(exe)
+        .args([
+            "run",
+            "--distributed",
+            "3",
+            "--dataset",
+            "RI",
+            "--scale",
+            "0.015",
+            "--backend",
+            "native",
+            "--model",
+            "lr",
+            "--epochs",
+            "20",
+            "--rsa-bits",
+            "256",
+            "--he-bits",
+            "256",
+            "--seed",
+            "7",
+        ])
+        .output()
+        .expect("spawn treecss binary");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("party-worker processes"), "{stdout}");
+    assert!(stdout.contains("test accuracy"), "{stdout}");
+    assert!(stdout.contains("bytes on wire"), "{stdout}");
 }
 
 /// The four Table-2 variants hold their defining relationships on one

@@ -1,0 +1,370 @@
+//! Transport conformance suite: one behavioral contract, every wire.
+//!
+//! The harness functions take `&dyn Transport` and are instantiated for
+//! both [`ChannelTransport`] (in-process mailboxes) and [`TcpTransport`]
+//! (real localhost sockets, one listener per party): per-(sender, phase)
+//! FIFO ordering, cross-phase isolation, concurrent pair exchange, and
+//! `wire_bytes` accounting through [`MeteredTransport`] must be
+//! indistinguishable. On top of the wire contract, the cross-transport
+//! equivalence test proves a seeded `Session` produces byte-identical
+//! pipeline results and identical per-edge meter totals over either wire,
+//! and the fault-injection tests prove every PSI engine and the session
+//! surface `Err` — never a hang or a panic — when frames are dropped,
+//! duplicated, or truncated.
+
+use std::time::Duration;
+
+use treecss::coordinator::{Backend, Downstream, FrameworkVariant, Pipeline, TransportKind};
+use treecss::data::synth::PaperDataset;
+use treecss::net::{
+    ChannelTransport, Envelope, Fault, FaultTransport, Meter, MeteredTransport, NetConfig,
+    PartyId, TcpTransport, TcpTransportBuilder, TcpTransportConfig, Transport,
+};
+use treecss::psi::common::HeContext;
+use treecss::psi::rsa_psi::{self, RsaPsiConfig};
+use treecss::psi::sched::Pairing;
+use treecss::psi::tree::{run_tree, TreeMpsiConfig};
+use treecss::psi::{path::run_path, star::run_star, TpsiProtocol};
+use treecss::splitnn::trainer::ModelKind;
+use treecss::util::pool::Parallel;
+use treecss::util::rng::Rng;
+
+const A: PartyId = PartyId::Client(0);
+const B: PartyId = PartyId::Client(1);
+const C: PartyId = PartyId::Client(2);
+
+fn fresh_tcp() -> TcpTransport {
+    TcpTransport::hosting((0..16).map(PartyId::Client)).unwrap()
+}
+
+// ---- the wire contract, generic over &dyn Transport ------------------------
+
+fn ordering_per_sender_and_phase(t: &dyn Transport) {
+    for i in 0..10u8 {
+        t.send(Envelope::new(A, B, "p", vec![i])).unwrap();
+    }
+    for i in 0..10u8 {
+        assert_eq!(t.recv(B, A, "p").unwrap().payload, vec![i], "send order preserved");
+    }
+    assert_eq!(t.pending(), 0);
+}
+
+fn cross_phase_isolation(t: &dyn Transport) {
+    t.send(Envelope::new(A, B, "x", vec![1])).unwrap();
+    t.send(Envelope::new(C, B, "x", vec![2])).unwrap();
+    t.send(Envelope::new(A, B, "y", vec![3])).unwrap();
+    // Demux key is (receiver, sender, phase): readable in any order.
+    assert_eq!(t.recv(B, C, "x").unwrap().payload, vec![2]);
+    assert_eq!(t.recv(B, A, "y").unwrap().payload, vec![3]);
+    assert_eq!(t.recv(B, A, "x").unwrap().payload, vec![1]);
+    assert_eq!(t.pending(), 0);
+}
+
+fn concurrent_pair_exchange(t: &dyn Transport) {
+    // Tree-MPSI shape: 8 pairs ping-ponging on one wire at once.
+    std::thread::scope(|s| {
+        for i in 0..8u32 {
+            s.spawn(move || {
+                let me = PartyId::Client(2 * i);
+                let peer = PartyId::Client(2 * i + 1);
+                for round in 0..20u8 {
+                    t.send(Envelope::new(me, peer, "p", vec![i as u8, round])).unwrap();
+                    let back = t.recv(me, peer, "p").unwrap();
+                    assert_eq!(back.payload, vec![i as u8, round], "pair {i} crossed wires");
+                }
+            });
+            s.spawn(move || {
+                let me = PartyId::Client(2 * i + 1);
+                let peer = PartyId::Client(2 * i);
+                for _ in 0..20 {
+                    let env = t.recv(me, peer, "p").unwrap();
+                    t.send(Envelope::new(me, peer, "p", env.payload)).unwrap();
+                }
+            });
+        }
+    });
+    assert_eq!(t.pending(), 0);
+}
+
+/// Send a mixed batch through metering middleware and report what the
+/// meter charged — must be identical across transports.
+fn metered_accounting(t: &dyn Transport) -> (u64, u64, u64) {
+    let meter = Meter::new(NetConfig::lan_10gbps());
+    let net = MeteredTransport::new(t, &meter);
+    net.send(Envelope::new(A, B, "psi/x", vec![0u8; 100])).unwrap();
+    net.send(Envelope::sized(A, B, "psi/x", vec![1, 2, 3], 4096)).unwrap();
+    net.send(Envelope::new(B, A, "train/t", vec![9; 10])).unwrap();
+    assert_eq!(net.recv(B, A, "psi/x").unwrap().payload.len(), 100);
+    assert_eq!(net.recv(B, A, "psi/x").unwrap().wire_bytes(), 4096);
+    assert_eq!(net.recv(A, B, "train/t").unwrap().payload, vec![9; 10]);
+    assert_eq!(net.pending(), 0);
+    (meter.total_bytes(""), meter.total_bytes("psi/"), meter.total_messages(""))
+}
+
+#[test]
+fn channel_ordering() {
+    ordering_per_sender_and_phase(&ChannelTransport::new());
+}
+
+#[test]
+fn tcp_ordering() {
+    let t = fresh_tcp();
+    ordering_per_sender_and_phase(&t);
+}
+
+#[test]
+fn channel_phase_isolation() {
+    cross_phase_isolation(&ChannelTransport::new());
+}
+
+#[test]
+fn tcp_phase_isolation() {
+    let t = fresh_tcp();
+    cross_phase_isolation(&t);
+}
+
+#[test]
+fn channel_concurrent_pairs() {
+    concurrent_pair_exchange(&ChannelTransport::new());
+}
+
+#[test]
+fn tcp_concurrent_pairs() {
+    let t = fresh_tcp();
+    concurrent_pair_exchange(&t);
+}
+
+#[test]
+fn wire_accounting_identical_across_transports() {
+    let channel = metered_accounting(&ChannelTransport::new());
+    let tcp_net = fresh_tcp();
+    let tcp = metered_accounting(&tcp_net);
+    assert_eq!(channel, tcp);
+    // Sized envelopes charge their declared framing, not just payload.
+    assert_eq!(channel.1, 100 + 4096);
+}
+
+#[test]
+fn recv_timeout_on_both_transports() {
+    // A phase that is never sent must fail the receive, not hang it.
+    let channel = ChannelTransport::with_timeout(Duration::from_millis(50));
+    let err = channel.recv(B, A, "never").unwrap_err();
+    assert!(err.to_string().contains("timeout"), "{err}");
+
+    let cfg = TcpTransportConfig {
+        recv_timeout: Duration::from_millis(50),
+        ..Default::default()
+    };
+    let tcp = TcpTransportBuilder::with_config(cfg).host(B).build().unwrap();
+    let err = tcp.recv(B, A, "never").unwrap_err();
+    assert!(err.to_string().contains("timeout"), "{err}");
+}
+
+// ---- cross-transport equivalence -------------------------------------------
+
+fn seeded_session(kind: TransportKind) -> treecss::coordinator::Session {
+    Pipeline::builder(FrameworkVariant::TreeCss)
+        .downstream(Downstream::Train(ModelKind::Lr))
+        .protocol(TpsiProtocol::Rsa(RsaPsiConfig { modulus_bits: 256, domain: "eq".into() }))
+        .he_bits(256)
+        .epochs(20)
+        .lr(0.05)
+        .seed(4242)
+        .backend(Backend::Native)
+        .transport(kind)
+        .build()
+}
+
+#[test]
+fn channel_and_tcp_sessions_are_equivalent() {
+    let mut rng = Rng::new(77);
+    let ds = PaperDataset::Ri.generate(0.02, &mut rng);
+    let (tr, te) = ds.split(0.7, &mut rng);
+
+    let chan_sess = seeded_session(TransportKind::Channel);
+    let chan = chan_sess.run(&tr, &te).unwrap();
+    let tcp_sess = seeded_session(TransportKind::Tcp);
+    let tcp = tcp_sess.run(&tr, &te).unwrap();
+
+    // Byte-identical protocol outcomes.
+    assert_eq!(chan.align.intersection, tcp.align.intersection);
+    let cs_chan = chan.coreset.as_ref().unwrap();
+    let cs_tcp = tcp.coreset.as_ref().unwrap();
+    assert_eq!(cs_chan.indices, cs_tcp.indices);
+    assert_eq!(cs_chan.weights, cs_tcp.weights);
+    assert_eq!(chan.quality, tcp.quality);
+    assert_eq!(chan.train_size, tcp.train_size);
+    assert_eq!(chan.total_bytes, tcp.total_bytes);
+
+    // Identical meter accounting, per phase prefix and per edge.
+    for prefix in ["keys/", "psi/", "coreset/", "train/", ""] {
+        assert_eq!(
+            chan_sess.meter().total_bytes(prefix),
+            tcp_sess.meter().total_bytes(prefix),
+            "bytes under {prefix:?}"
+        );
+        assert_eq!(
+            chan_sess.meter().total_messages(prefix),
+            tcp_sess.meter().total_messages(prefix),
+            "messages under {prefix:?}"
+        );
+    }
+    let edges_chan = chan_sess.meter().edges();
+    let edges_tcp = tcp_sess.meter().edges();
+    assert_eq!(edges_chan.len(), edges_tcp.len());
+    for ((ka, ea), (kb, eb)) in edges_chan.iter().zip(&edges_tcp) {
+        assert_eq!(ka, kb, "edge sets diverge");
+        assert_eq!(ea.bytes, eb.bytes, "bytes on {ka:?}");
+        assert_eq!(ea.messages, eb.messages, "messages on {ka:?}");
+    }
+}
+
+// ---- fault injection --------------------------------------------------------
+
+fn small_sets() -> Vec<Vec<u64>> {
+    (0..4).map(|c| (c..c + 20).collect()).collect()
+}
+
+fn fast_rsa() -> TpsiProtocol {
+    TpsiProtocol::Rsa(RsaPsiConfig { modulus_bits: 256, domain: "fault".into() })
+}
+
+/// Every MPSI engine over a lossy wire: an `Err`, never a hang or panic.
+#[test]
+fn engines_error_on_dropped_frames() {
+    let he = HeContext::for_tests();
+    let sets = small_sets();
+    let lossy = || {
+        FaultTransport::new(
+            ChannelTransport::with_timeout(Duration::from_millis(100)),
+            Fault::Drop,
+        )
+        .on_phase_prefix("psi/")
+    };
+
+    let net = lossy();
+    let cfg = TreeMpsiConfig { protocol: fast_rsa(), pairing: Pairing::VolumeAware, seed: 5 };
+    assert!(run_tree(&sets, &cfg, &net, Parallel::serial(), &he).is_err());
+
+    let net = lossy();
+    assert!(run_path(&sets, &fast_rsa(), 5, &net, &he).is_err());
+
+    let net = lossy();
+    assert!(run_star(&sets, &fast_rsa(), 0, 5, &net, &he).is_err());
+}
+
+#[test]
+fn primitives_error_on_dropped_frames() {
+    let lossy = FaultTransport::new(
+        ChannelTransport::with_timeout(Duration::from_millis(100)),
+        Fault::Drop,
+    );
+    let cfg = RsaPsiConfig { modulus_bits: 256, domain: "fault".into() };
+    assert!(rsa_psi::run(&cfg, &[1, 2], &[2, 3], &lossy, A, B, "psi", 7).is_err());
+    let lossy = FaultTransport::new(
+        ChannelTransport::with_timeout(Duration::from_millis(100)),
+        Fault::Drop,
+    );
+    assert!(TpsiProtocol::ot().run(&[1, 2], &[2, 3], &lossy, A, B, "psi", 7).is_err());
+}
+
+#[test]
+fn engines_error_on_truncated_frames() {
+    // Cutting any protocol message in half must surface as a decode error
+    // from the codec's truncation checks — not a panic, not a hang.
+    let he = HeContext::for_tests();
+    let sets = small_sets();
+    for skip in [0u64, 1, 3] {
+        let net = FaultTransport::new(
+            ChannelTransport::with_timeout(Duration::from_millis(200)),
+            Fault::Truncate,
+        )
+        .on_phase_prefix("psi/")
+        .after(skip);
+        let cfg =
+            TreeMpsiConfig { protocol: fast_rsa(), pairing: Pairing::VolumeAware, seed: 5 };
+        let res = run_tree(&sets, &cfg, &net, Parallel::serial(), &he);
+        assert!(res.is_err(), "skip={skip}: truncation must not pass silently");
+    }
+}
+
+#[test]
+fn duplicated_frames_leave_detectable_leftovers() {
+    // Duplicate the client→aggregator announcements (each consumed exactly
+    // once): the engine still computes the right result, but the dups
+    // linger on the wire, where the session-level drained-mailbox check
+    // (below) turns them into an Err.
+    let he = HeContext::for_tests();
+    let sets = small_sets();
+    let net = FaultTransport::new(ChannelTransport::new(), Fault::Duplicate)
+        .on_phase_prefix("psi/")
+        .on_to(PartyId::Aggregator);
+    let cfg = TreeMpsiConfig { protocol: fast_rsa(), pairing: Pairing::VolumeAware, seed: 5 };
+    let rep = run_tree(&sets, &cfg, &net, Parallel::serial(), &he).unwrap();
+    assert_eq!(rep.intersection, treecss::psi::oracle_intersection(&sets));
+    assert!(net.pending() > 0, "duplicates must linger, not vanish");
+    assert_eq!(net.injected() as usize, net.pending(), "one leftover per duplicate");
+}
+
+fn fault_session() -> treecss::coordinator::Session {
+    Pipeline::builder(FrameworkVariant::TreeAll)
+        .downstream(Downstream::Train(ModelKind::Lr))
+        .protocol(TpsiProtocol::Rsa(RsaPsiConfig { modulus_bits: 256, domain: "fs".into() }))
+        .he_bits(256)
+        .epochs(10)
+        .backend(Backend::Native)
+        .build()
+}
+
+#[test]
+fn session_errors_on_dropped_frames() {
+    let mut rng = Rng::new(31);
+    let ds = PaperDataset::Ri.generate(0.015, &mut rng);
+    let (tr, te) = ds.split(0.7, &mut rng);
+    let net = FaultTransport::new(
+        ChannelTransport::with_timeout(Duration::from_millis(100)),
+        Fault::Drop,
+    )
+    .on_phase_prefix("keys/");
+    let err = fault_session().run_over(&tr, &te, &net).unwrap_err();
+    assert!(err.to_string().contains("timeout"), "{err}");
+}
+
+#[test]
+fn session_errors_on_duplicated_frames() {
+    // The pipeline completes, but the duplicate grant is still sitting in
+    // a mailbox at exit — the drained-wire contract turns that into Err.
+    let mut rng = Rng::new(32);
+    let ds = PaperDataset::Ri.generate(0.015, &mut rng);
+    let (tr, te) = ds.split(0.7, &mut rng);
+    let net = FaultTransport::new(ChannelTransport::new(), Fault::Duplicate)
+        .on_phase_prefix("keys/");
+    let err = fault_session().run_over(&tr, &te, &net).unwrap_err();
+    assert!(err.to_string().contains("undelivered"), "{err}");
+}
+
+#[test]
+fn session_errors_on_truncated_frames() {
+    let mut rng = Rng::new(33);
+    let ds = PaperDataset::Ri.generate(0.015, &mut rng);
+    let (tr, te) = ds.split(0.7, &mut rng);
+    let net = FaultTransport::new(
+        ChannelTransport::with_timeout(Duration::from_millis(200)),
+        Fault::Truncate,
+    )
+    .on_phase_prefix("keys/");
+    assert!(fault_session().run_over(&tr, &te, &net).is_err());
+}
+
+#[test]
+fn tcp_wire_with_dropped_frames_errors_too() {
+    // The same fault middleware composes over the socket transport.
+    let cfg = TcpTransportConfig {
+        recv_timeout: Duration::from_millis(100),
+        ..Default::default()
+    };
+    let tcp = TcpTransportBuilder::with_config(cfg).hosts([A, B]).build().unwrap();
+    let lossy = FaultTransport::new(&tcp as &dyn Transport, Fault::Drop);
+    let rsa = RsaPsiConfig { modulus_bits: 256, domain: "fault".into() };
+    assert!(rsa_psi::run(&rsa, &[1, 2], &[2, 3], &lossy, A, B, "psi", 7).is_err());
+}
