@@ -6,7 +6,7 @@
 //! Expected shape: more clusters → larger coreset → better test quality;
 //! re-weighting helps most at small cluster counts.
 
-use treecss::bench::Table;
+use treecss::bench::{JsonReport, Table};
 use treecss::coordinator::pipeline::{Backend, Downstream, PipelineConfig};
 use treecss::coordinator::{run_pipeline, FrameworkVariant};
 use treecss::data::synth::PaperDataset;
@@ -66,4 +66,14 @@ fn main() {
         eprintln!("  done {}", ds_kind.name());
     }
     table.print();
+
+    let mut report = JsonReport::new("fig4_quality");
+    report
+        .config("mode", if full { "full" } else { "fast" })
+        .config("backend", backend.name())
+        .table(&table);
+    match report.write_at_workspace_root() {
+        Ok(path) => eprintln!("wrote {}", path.display()),
+        Err(e) => eprintln!("[warn] could not write bench JSON: {e}"),
+    }
 }

@@ -9,7 +9,7 @@
 //! near-linearly with workers (>= 2x at 8 workers vs 1 on the synthetic
 //! sweep dataset).
 
-use treecss::bench::{thread_sweep, thread_sweep_table, Bencher, Table};
+use treecss::bench::{thread_sweep, thread_sweep_table, Bencher, JsonReport, Table};
 use treecss::coordinator::pipeline::{Backend, Downstream, PipelineConfig};
 use treecss::coordinator::{run_pipeline, FrameworkVariant};
 use treecss::data::synth::{self, PaperDataset};
@@ -21,7 +21,7 @@ use treecss::util::rng::Rng;
 
 /// Single- vs multi-thread scaling of the K-Means assignment phase: the
 /// `par_map`/`par_chunks` adoption this PR's speedup claim rests on.
-fn kmeans_assign_thread_sweep(full: bool) {
+fn kmeans_assign_thread_sweep(full: bool, report: &mut JsonReport) {
     let mut rng = Rng::new(0x515);
     let rows = if full { 120_000 } else { 60_000 };
     let (d, k) = (32, 32);
@@ -31,7 +31,7 @@ fn kmeans_assign_thread_sweep(full: bool) {
     let mut table = thread_sweep_table(&format!(
         "Fig. 5 (pre) — K-Means assignment scaling ({rows} rows × {d} dims, k={k})"
     ));
-    thread_sweep(
+    let samples = thread_sweep(
         &bencher,
         &mut table,
         "kmeans-assign",
@@ -42,12 +42,15 @@ fn kmeans_assign_thread_sweep(full: bool) {
         },
     );
     table.print();
+    report.table(&table).samples(&samples);
 }
 
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
+    let mut report = JsonReport::new("fig5_runtime");
+    report.config("mode", if full { "full" } else { "fast" });
 
-    kmeans_assign_thread_sweep(full);
+    kmeans_assign_thread_sweep(full, &mut report);
 
     let ks: &[usize] = if full { &[2, 4, 8, 16, 32] } else { &[2, 8, 16] };
     // Pipeline thread settings to compare (0 = all cores).
@@ -102,4 +105,10 @@ fn main() {
         eprintln!("  done {}", ds_kind.name());
     }
     table.print();
+
+    report.config("backend", backend.name()).table(&table);
+    match report.write_at_workspace_root() {
+        Ok(path) => eprintln!("wrote {}", path.display()),
+        Err(e) => eprintln!("[warn] could not write bench JSON: {e}"),
+    }
 }

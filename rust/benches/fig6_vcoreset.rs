@@ -6,7 +6,7 @@
 //! Expected shape: Cluster-Coreset ≥ V-coreset test quality at every
 //! matched size, on both classification and regression.
 
-use treecss::bench::Table;
+use treecss::bench::{JsonReport, Table};
 use treecss::coreset::cluster_coreset::{self, ClusterCoresetConfig};
 use treecss::coreset::vcoreset;
 use treecss::data::synth::PaperDataset;
@@ -140,4 +140,14 @@ fn main() {
     }
 
     table.print();
+
+    let mut report = JsonReport::new("fig6_vcoreset");
+    report
+        .config("mode", if full { "full" } else { "fast" })
+        .config("epochs", epochs)
+        .table(&table);
+    match report.write_at_workspace_root() {
+        Ok(path) => eprintln!("wrote {}", path.display()),
+        Err(e) => eprintln!("[warn] could not write bench JSON: {e}"),
+    }
 }

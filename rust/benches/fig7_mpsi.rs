@@ -1,19 +1,26 @@
 //! Fig. 7: Tree-MPSI evaluation.
 //!   (a) RSA-based TPSI: Tree vs Path vs Star, 10 clients, sweeping the
 //!       per-client set size (70% overlap), over both the in-process
-//!       channel wire and real localhost TCP sockets;
+//!       channel wire and real localhost TCP sockets — each at 1 worker
+//!       and at the full host budget, so the crypto plane's thread
+//!       scaling is visible next to the topology comparison;
 //!   (b) the same with the OT/OPRF-based TPSI;
 //!   (c) volume-aware vs request-order scheduling with client i holding
 //!       size·(i+1) items, sweeping the client count.
 //!
 //!     cargo bench --bench fig7_mpsi [-- rsa|ot|sched] [-- --full]
 //!
+//! `TREECSS_BENCH_REPS` sets repetitions per cell (default 1; the wall
+//! column reports the mean). Alongside the markdown, the run writes
+//! `BENCH_fig7_mpsi.json` (config + every table, machine-readable).
+//!
 //! Expected shape: Tree ≳ 2× faster than Path/Star, growing with set
-//! size; volume-aware scheduling's win grows with the client count; the
-//! channel and tcp rows carry identical byte counts (the wire is
-//! swappable, the protocol traffic is not).
+//! size; the max-threads rows ≳ 2× faster than threads=1 on the RSA
+//! sweep (batched CRT signing dominates); volume-aware scheduling's win
+//! grows with the client count; the channel and tcp rows carry identical
+//! byte counts (the wire is swappable, the protocol traffic is not).
 
-use treecss::bench::{fmt_bytes, fmt_secs, Table};
+use treecss::bench::{fmt_bytes, fmt_secs, JsonReport, Table};
 use treecss::coordinator::TransportKind;
 use treecss::data::synth;
 use treecss::net::{Meter, MeteredTransport, NetConfig};
@@ -32,6 +39,10 @@ fn proto_rsa(full: bool) -> TpsiProtocol {
         modulus_bits: if full { 1024 } else { 512 },
         domain: "fig7".into(),
     })
+}
+
+fn bench_reps() -> usize {
+    treecss::bench::reps_from_env(1)
 }
 
 fn run_topo(
@@ -56,8 +67,8 @@ fn run_topo(
             par,
             he,
         ),
-        "path" => run_path(sets, protocol, 77, &net, he),
-        "star" => run_star(sets, protocol, 0, 77, &net, he),
+        "path" => run_path(sets, protocol, 77, &net, par, he),
+        "star" => run_star(sets, protocol, 0, 77, &net, par, he),
         _ => unreachable!(),
     }
     .expect("mpsi");
@@ -65,8 +76,15 @@ fn run_topo(
     (rep, meter)
 }
 
-fn sweep_sizes(name: &str, protocol: &TpsiProtocol, sizes: &[usize], clients: usize) {
-    let par = Parallel::host();
+fn sweep_sizes(
+    name: &str,
+    protocol: &TpsiProtocol,
+    sizes: &[usize],
+    clients: usize,
+    report: &mut JsonReport,
+) {
+    let host = Parallel::host();
+    let reps = bench_reps();
     let he = HeContext::generate(&mut Rng::new(3), 512);
     let mut table = Table::new(
         &format!("Fig. 7{name} — Tree vs Path vs Star, {clients} clients, 70% overlap"),
@@ -74,6 +92,7 @@ fn sweep_sizes(name: &str, protocol: &TpsiProtocol, sizes: &[usize], clients: us
             "per-client size",
             "topology",
             "transport",
+            "threads",
             "rounds",
             "wall",
             "sim net",
@@ -85,28 +104,53 @@ fn sweep_sizes(name: &str, protocol: &TpsiProtocol, sizes: &[usize], clients: us
         let mut rng = Rng::new(7_000 + n as u64);
         let sets = synth::mpsi_indicator_sets(clients, n, 0.7, &mut rng);
         let oracle = oracle_intersection(&sets);
+        // Before/after view of the batched crypto plane: the same cell at
+        // 1 worker and at the full host budget (skipped on single-core
+        // hosts, where the two rows would be identical).
+        let mut budgets = vec![Parallel::serial()];
+        if host.threads() > 1 {
+            budgets.push(host);
+        }
         for topo in ["tree", "path", "star"] {
             for transport in ["channel", "tcp"] {
-                let (rep, _meter) =
-                    run_topo(topo, transport, &sets, protocol, Pairing::VolumeAware, par, &he);
-                table.row(vec![
-                    n.to_string(),
-                    topo.into(),
-                    transport.into(),
-                    rep.num_rounds().to_string(),
-                    fmt_secs(rep.wall_s),
-                    fmt_secs(rep.sim_s),
-                    fmt_bytes(rep.total_bytes),
-                    (rep.intersection == oracle).to_string(),
-                ]);
+                for &par in &budgets {
+                    let mut wall_sum = 0.0;
+                    let mut last = None;
+                    for _ in 0..reps {
+                        let (rep, _meter) = run_topo(
+                            topo,
+                            transport,
+                            &sets,
+                            protocol,
+                            Pairing::VolumeAware,
+                            par,
+                            &he,
+                        );
+                        wall_sum += rep.wall_s;
+                        last = Some(rep);
+                    }
+                    let rep = last.expect("reps >= 1");
+                    table.row(vec![
+                        n.to_string(),
+                        topo.into(),
+                        transport.into(),
+                        par.threads().to_string(),
+                        rep.num_rounds().to_string(),
+                        fmt_secs(wall_sum / reps as f64),
+                        fmt_secs(rep.sim_s),
+                        fmt_bytes(rep.total_bytes),
+                        (rep.intersection == oracle).to_string(),
+                    ]);
+                }
             }
         }
         eprintln!("  done n={n}");
     }
     table.print();
+    report.table(&table);
 }
 
-fn sweep_sched(full: bool) {
+fn sweep_sched(full: bool, report: &mut JsonReport) {
     // Fig. 7(c): client i holds base·(i+1) items; the paper uses base=10k.
     let base = if full { 10_000 } else { 400 };
     let client_counts: &[usize] = if full { &[4, 6, 8, 10, 12, 16] } else { &[4, 6, 8, 10] };
@@ -144,6 +188,7 @@ fn sweep_sched(full: bool) {
         eprintln!("  done m={m}");
     }
     table.print();
+    report.table(&table);
 }
 
 fn main() {
@@ -161,13 +206,31 @@ fn main() {
         vec![250, 500, 1_000]
     };
 
+    let mut report = JsonReport::new("fig7_mpsi");
+    report
+        .config("mode", if full { "full" } else { "fast" })
+        .config("clients", 10usize)
+        .config("overlap", 0.7)
+        .config("sizes", sizes.clone())
+        .config("reps", bench_reps())
+        .config("host_threads", Parallel::host().threads())
+        .config(
+            "rsa_modulus_bits",
+            if full { 1024usize } else { 512usize },
+        );
+
     if all || which.contains(&"rsa") {
-        sweep_sizes("a (RSA)", &proto_rsa(full), &sizes, 10);
+        sweep_sizes("a (RSA)", &proto_rsa(full), &sizes, 10, &mut report);
     }
     if all || which.contains(&"ot") {
-        sweep_sizes("b (OT/OPRF)", &TpsiProtocol::ot(), &sizes, 10);
+        sweep_sizes("b (OT/OPRF)", &TpsiProtocol::ot(), &sizes, 10, &mut report);
     }
     if all || which.contains(&"sched") {
-        sweep_sched(full);
+        sweep_sched(full, &mut report);
+    }
+
+    match report.write_at_workspace_root() {
+        Ok(path) => eprintln!("wrote {}", path.display()),
+        Err(e) => eprintln!("[warn] could not write bench JSON: {e}"),
     }
 }

@@ -9,7 +9,7 @@
 //! fastest of the four variants (up to ~3× over STARALL on RI); CSS train
 //! sizes a small fraction of ALL.
 
-use treecss::bench::{fmt_bytes, Table};
+use treecss::bench::{fmt_bytes, JsonReport, Table};
 use treecss::coordinator::pipeline::{Backend, Downstream, PipelineConfig};
 use treecss::coordinator::{run_pipeline, FrameworkVariant};
 use treecss::data::synth::PaperDataset;
@@ -106,4 +106,14 @@ fn main() {
         eprintln!("  done {} {}", ds_kind.name(), model_name);
     }
     table.print();
+
+    let mut report = JsonReport::new("table2_e2e");
+    report
+        .config("mode", if full { "full" } else { "fast" })
+        .config("backend", backend.name())
+        .table(&table);
+    match report.write_at_workspace_root() {
+        Ok(path) => eprintln!("wrote {}", path.display()),
+        Err(e) => eprintln!("[warn] could not write bench JSON: {e}"),
+    }
 }

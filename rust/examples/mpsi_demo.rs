@@ -71,8 +71,8 @@ fn main() -> treecss::Result<()> {
                     par,
                     &he,
                 )?,
-                "path" => run_path(&sets, &protocol, seed, &net, &he)?,
-                _ => run_star(&sets, &protocol, 0, seed, &net, &he)?,
+                "path" => run_path(&sets, &protocol, seed, &net, par, &he)?,
+                _ => run_star(&sets, &protocol, 0, seed, &net, par, &he)?,
             };
             table.row(vec![
                 pname.into(),

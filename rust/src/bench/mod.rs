@@ -3,8 +3,15 @@
 //! `Bencher` runs warmup + timed repetitions and reports mean ± std;
 //! `Table` collects labelled rows and renders GitHub-flavoured markdown —
 //! the format every `benches/*.rs` target prints so EXPERIMENTS.md can
-//! quote results directly.
+//! quote results directly. [`JsonReport`] is the machine-readable twin:
+//! every bench target also writes `BENCH_<target>.json` (config + tables +
+//! raw samples) so the perf trajectory can be tracked across PRs without
+//! parsing markdown.
 
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
 use crate::util::stats;
 use crate::util::timer::Stopwatch;
 
@@ -20,6 +27,16 @@ pub struct Sample {
 impl Sample {
     pub fn pretty(&self) -> String {
         format!("{}: {:.4}s ± {:.4}s (n={})", self.name, self.mean_s, self.std_s, self.reps)
+    }
+
+    /// Machine-readable form: `{name, mean_s, std_s, reps}`.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(self.name.clone()));
+        o.insert("mean_s".to_string(), Json::Num(self.mean_s));
+        o.insert("std_s".to_string(), Json::Num(self.std_s));
+        o.insert("reps".to_string(), Json::from(self.reps));
+        Json::Obj(o)
     }
 }
 
@@ -42,11 +59,7 @@ impl Bencher {
 
     /// Quick mode for CI (`TREECSS_BENCH_REPS` overrides).
     pub fn from_env() -> Self {
-        let reps = std::env::var("TREECSS_BENCH_REPS")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(3);
-        Bencher { warmup: 1, reps }
+        Bencher { warmup: 1, reps: reps_from_env(3) }
     }
 
     /// Time `f` (which returns an observation to keep the optimizer
@@ -68,6 +81,18 @@ impl Bencher {
             reps: self.reps,
         }
     }
+}
+
+/// The one reader of `TREECSS_BENCH_REPS`: repetitions per bench cell,
+/// clamped to >= 1, falling back to the target's `default` when unset.
+/// (Targets choose their own default — `Bencher` uses 3, the single-shot
+/// fig7 sweep uses 1 — but the env contract lives here.)
+pub fn reps_from_env(default: usize) -> usize {
+    std::env::var("TREECSS_BENCH_REPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+        .max(1)
 }
 
 /// Markdown table builder for bench reports.
@@ -108,6 +133,96 @@ impl Table {
 
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
+    }
+
+    /// Machine-readable form: `{title, header, rows}` with rows as string
+    /// arrays (exactly the cells the markdown renders).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("title".to_string(), Json::Str(self.title.clone()));
+        o.insert("header".to_string(), Json::from(self.header.clone()));
+        o.insert(
+            "rows".to_string(),
+            Json::Arr(self.rows.iter().map(|r| Json::from(r.clone())).collect()),
+        );
+        Json::Obj(o)
+    }
+
+    /// Write this table alone as a JSON document. Bench targets usually
+    /// bundle all their tables through [`JsonReport`] instead.
+    pub fn write_json(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string() + "\n")
+    }
+}
+
+/// Machine-readable companion to a bench target's markdown output.
+///
+/// Collects the run's config, every table, and any raw timing samples,
+/// then writes `BENCH_<target>.json` — committed alongside EXPERIMENTS.md
+/// updates so the perf trajectory is diffable from PR to PR (and uploaded
+/// as a CI artifact by the bench smoke step).
+pub struct JsonReport {
+    target: String,
+    config: BTreeMap<String, Json>,
+    tables: Vec<Json>,
+    samples: Vec<Json>,
+}
+
+impl JsonReport {
+    pub fn new(target: &str) -> Self {
+        JsonReport {
+            target: target.to_string(),
+            config: BTreeMap::new(),
+            tables: Vec::new(),
+            samples: Vec::new(),
+        }
+    }
+
+    /// Record a config key (mode, sizes, threads, reps, ...).
+    pub fn config(&mut self, key: &str, value: impl Into<Json>) -> &mut Self {
+        self.config.insert(key.to_string(), value.into());
+        self
+    }
+
+    /// Append a finished table.
+    pub fn table(&mut self, t: &Table) -> &mut Self {
+        self.tables.push(t.to_json());
+        self
+    }
+
+    /// Append raw timing samples (seconds; mean/std/reps per sample).
+    pub fn samples(&mut self, ss: &[Sample]) -> &mut Self {
+        self.samples.extend(ss.iter().map(Sample::to_json));
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("target".to_string(), Json::Str(self.target.clone()));
+        o.insert("config".to_string(), Json::Obj(self.config.clone()));
+        o.insert("tables".to_string(), Json::Arr(self.tables.clone()));
+        o.insert("samples".to_string(), Json::Arr(self.samples.clone()));
+        Json::Obj(o)
+    }
+
+    /// Write `BENCH_<target>.json` into `dir`; returns the path written.
+    pub fn write(&self, dir: impl AsRef<Path>) -> std::io::Result<PathBuf> {
+        let path = dir.as_ref().join(format!("BENCH_{}.json", self.target));
+        std::fs::write(&path, self.to_json().to_string() + "\n")?;
+        Ok(path)
+    }
+
+    /// Write `BENCH_<target>.json` at the *workspace* root — where the
+    /// committed artifacts live and where CI's `BENCH_*.json` upload glob
+    /// looks. Cargo runs bench binaries with cwd = the *package* root
+    /// (`rust/`), so a bare `write(".")` would land the file one level
+    /// too deep and CI would keep uploading the stale committed copy.
+    pub fn write_at_workspace_root(&self) -> std::io::Result<PathBuf> {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .map(Path::to_path_buf)
+            .unwrap_or_else(|| PathBuf::from("."));
+        self.write(root)
     }
 }
 
@@ -214,6 +329,52 @@ mod tests {
     fn table_checks_columns() {
         let mut t = Table::new("x", &["a"]);
         t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn table_json_roundtrips_through_parser() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let j = Json::parse(&t.to_json().to_string()).unwrap();
+        assert_eq!(j.req("title").unwrap().as_str().unwrap(), "demo");
+        let rows = j.req("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].as_arr().unwrap()[1].as_str().unwrap(), "2");
+    }
+
+    #[test]
+    fn json_report_writes_bench_file() {
+        let mut t = Table::new("demo", &["case", "mean"]);
+        t.row(vec!["x".into(), "1.00ms".into()]);
+        let s = Bencher::new(0, 2).run("spin", || 1 + 1);
+        let mut report = JsonReport::new("unit_test");
+        report.config("mode", "fast").config("reps", 2usize);
+        report.table(&t).samples(&[s]);
+        let dir = std::env::temp_dir();
+        let path = report.write(&dir).unwrap();
+        assert!(path.ends_with("BENCH_unit_test.json"));
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.req("target").unwrap().as_str().unwrap(), "unit_test");
+        assert_eq!(
+            j.req("config").unwrap().req("mode").unwrap().as_str().unwrap(),
+            "fast"
+        );
+        assert_eq!(j.req("tables").unwrap().as_arr().unwrap().len(), 1);
+        let samples = j.req("samples").unwrap().as_arr().unwrap();
+        assert_eq!(samples[0].req("reps").unwrap().as_usize().unwrap(), 2);
+        assert!(samples[0].req("mean_s").unwrap().as_f64().unwrap() >= 0.0);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn table_write_json_standalone() {
+        let mut t = Table::new("solo", &["a"]);
+        t.row(vec!["7".into()]);
+        let path = std::env::temp_dir().join("treecss_table_solo.json");
+        t.write_json(&path).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.req("title").unwrap().as_str().unwrap(), "solo");
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

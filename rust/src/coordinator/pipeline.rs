@@ -297,8 +297,8 @@ pub(crate) fn run_over_transport(
             };
             run_tree(&sets, &tcfg, net, par, he)?
         }
-        MpsiTopology::Star => run_star(&sets, &cfg.protocol, 0, cfg.seed, net, he)?,
-        MpsiTopology::Path => run_path(&sets, &cfg.protocol, cfg.seed, net, he)?,
+        MpsiTopology::Star => run_star(&sets, &cfg.protocol, 0, cfg.seed, net, par, he)?,
+        MpsiTopology::Path => run_path(&sets, &cfg.protocol, cfg.seed, net, par, he)?,
     };
     let aligned = align.intersection.clone();
     let n_aligned = aligned.len();
@@ -512,6 +512,10 @@ mod tests {
         let (serial, serial_edges) = run_with(1);
         let (par, par_edges) = run_with(4);
         assert_eq!(serial.quality, par.quality);
+        // The batch crypto plane (blinding, CRT signing, HE envelopes) is
+        // bitwise invariant too: the aligned set itself must not move.
+        assert_eq!(serial.align.intersection, par.align.intersection);
+        assert_eq!(serial.align.total_bytes, par.align.total_bytes);
         assert_eq!(
             serial.coreset.as_ref().unwrap().indices,
             par.coreset.as_ref().unwrap().indices

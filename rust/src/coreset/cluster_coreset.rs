@@ -119,19 +119,21 @@ pub fn run(
     // envelope travels client → aggregator → label owner, and the label
     // owner decodes what arrived. The shared RNG (envelope nonces) and the
     // transport keep their exact pre-parallelization consumption order
-    // here, so runs are reproducible at any thread count.
+    // here, so runs are reproducible at any thread count — the envelope's
+    // Paillier batch crypto still fans out over `par` internally (the
+    // randomness draws stay serial; see `HybridEnvelope::seal`).
     let mut client_data = Vec::with_capacity(slices.len());
     for (m, (w, clusters, dists)) in fits.into_iter().enumerate() {
         let ct_msg = CtMessage { client: m as u32, weights: w, clusters, dists };
         let (sim, wire_bytes) =
-            send_sealed_ct(net, m as u32, &mut rng, &he.pk, &ct_msg, "coreset/ct")?;
+            send_sealed_ct(net, m as u32, &mut rng, &he.pk, &ct_msg, "coreset/ct", par)?;
         sim_s += sim;
         // The aggregator forwards the same ciphertext, so the second hop
         // carries the same byte count.
         bytes += 2 * wire_bytes;
         sim_s +=
             agg.route(net, PartyId::Client(m as u32), PartyId::LabelOwner, "coreset/ct")?;
-        let decoded = recv_sealed_ct(net, he, "coreset/ct")?;
+        let decoded = recv_sealed_ct(net, he, "coreset/ct", par)?;
         client_data.push(ClientCtData {
             weights: decoded.weights,
             clusters: decoded.clusters,
@@ -146,7 +148,7 @@ pub fn run(
     // the aggregator, each of whom opens its delivery.
     let sel_u64: Vec<u64> = selection.indices.iter().map(|&i| i as u64).collect();
     let payload = msg::encode_index_list(&sel_u64);
-    let sealed = HybridEnvelope::seal(&mut rng, &he.pk, &payload)?;
+    let sealed = HybridEnvelope::seal(&mut rng, &he.pk, &payload, par)?;
     let wire = sealed.encode();
     bytes += wire.len() as u64 * (1 + slices.len() as u64);
     sim_s += label_owner.send(PartyId::Aggregator, "coreset/sel", wire)?;
@@ -156,7 +158,7 @@ pub fn run(
         sim_s += agg_ep.send(PartyId::Client(c as u32), "coreset/sel", routed.payload.clone())?;
         let delivered = Endpoint::new(net, PartyId::Client(c as u32))
             .recv(PartyId::Aggregator, "coreset/sel")?;
-        let opened = HybridEnvelope::decode(&delivered.payload)?.open(he.private())?;
+        let opened = HybridEnvelope::decode(&delivered.payload)?.open(he.private(), par)?;
         if msg::decode_index_list(&opened)? != sel_u64 {
             return Err(crate::Error::Psi("selection broadcast corrupted".into()));
         }

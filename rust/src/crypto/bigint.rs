@@ -6,7 +6,15 @@
 //! bits, where schoolbook beats Karatsuba's constant), Knuth Algorithm D
 //! division, modular exponentiation (4-bit fixed-window), extended-Euclid
 //! modular inverse, gcd/lcm, Miller–Rabin, and random prime generation.
+//!
+//! [`ModCtx`] is the crate's cached modular-arithmetic context: building a
+//! Montgomery context costs one full-width division plus the 2-adic
+//! inverse, so key material (RSA/Paillier) holds one per modulus and every
+//! hot-path exponentiation reuses it, with batch entry points
+//! ([`ModCtx::mod_pow_batch`], [`ModCtx::mul_mod_batch`]) fanning out over
+//! a [`Parallel`] worker budget.
 
+use crate::util::pool::Parallel;
 use crate::util::rng::Rng;
 
 /// Arbitrary-precision unsigned integer (little-endian u64 limbs, trimmed).
@@ -72,6 +80,17 @@ impl BigUint {
         v
     }
 
+    /// Fixed-width big-endian bytes: left-padded with zeros to `width`
+    /// (or the natural length if the value needs more bytes — never
+    /// truncated). The one pad-to-width implementation shared by every
+    /// wire encoding, so frame widths cannot drift between call sites.
+    pub fn to_bytes_be_padded(&self, width: usize) -> Vec<u8> {
+        let raw = self.to_bytes_be();
+        let mut out = vec![0u8; width.saturating_sub(raw.len())];
+        out.extend_from_slice(&raw);
+        out
+    }
+
     /// To big-endian bytes (no leading zeros; empty for zero).
     pub fn to_bytes_be(&self) -> Vec<u8> {
         if self.is_zero() {
@@ -114,6 +133,19 @@ impl BigUint {
             let v = Self::random_bits(rng, bits);
             if v.cmp(bound) == std::cmp::Ordering::Less {
                 return v;
+            }
+        }
+    }
+
+    /// Uniform invertible element of `Z_n^*` by rejection sampling — the
+    /// blinding/randomizer draw shared by RSA blinding and Paillier
+    /// encryption (for an RSA/Paillier modulus a failed draw would factor
+    /// n, so resampling is effectively free).
+    pub fn random_unit(rng: &mut Rng, n: &BigUint) -> Self {
+        loop {
+            let r = Self::random_below(rng, n);
+            if !r.is_zero() && r.gcd(n).is_one() {
+                return r;
             }
         }
     }
@@ -447,9 +479,16 @@ impl BigUint {
             return Self::one();
         }
         if !m.is_even() && m.limbs.len() >= 2 {
-            return MontgomeryCtx::new(m).pow(self, exp);
+            return MontCore::new(m).pow(self, exp, m);
         }
         self.mod_pow_generic(exp, m)
+    }
+
+    /// Build a cached modular context for this modulus (see [`ModCtx`]).
+    /// Callers performing many operations under one modulus should hold on
+    /// to the context instead of paying its setup inside every `mod_pow`.
+    pub fn mont_ctx(&self) -> ModCtx {
+        ModCtx::new(self)
     }
 
     /// Generic (division-based) modular exponentiation.
@@ -635,23 +674,115 @@ impl BigUint {
     }
 }
 
-/// Montgomery multiplication context for an odd modulus (CIOS algorithm).
+/// Cached modular-arithmetic context for one fixed modulus.
+///
+/// For odd multi-limb moduli (every RSA/Paillier modulus) the context
+/// holds a Montgomery core — n', R² mod m, precomputed once — so repeated
+/// exponentiations and multiplications skip both the per-call setup
+/// division and the Knuth reduction in the inner loop. Even or single-limb
+/// moduli fall back to the division-based kernels transparently, so the
+/// context is total over all non-zero moduli.
+///
+/// §Perf: RSA-PSI and the Paillier envelope perform thousands of
+/// operations per modulus; PR 4 moved the context from "rebuilt inside
+/// every `mod_pow`" to "built once, stored in the key material".
+#[derive(Clone, Debug)]
+pub struct ModCtx {
+    m: BigUint,
+    mont: Option<MontCore>,
+}
+
+impl ModCtx {
+    /// Build a context for `m` (non-zero).
+    pub fn new(m: &BigUint) -> ModCtx {
+        assert!(!m.is_zero(), "modulus must be non-zero");
+        let mont = (!m.is_even() && m.limbs.len() >= 2).then(|| MontCore::new(m));
+        ModCtx { m: m.clone(), mont }
+    }
+
+    pub fn modulus(&self) -> &BigUint {
+        &self.m
+    }
+
+    /// `base^exp mod m` using the cached context. Bitwise identical to
+    /// [`BigUint::mod_pow`] for every input (property-tested).
+    pub fn pow(&self, base: &BigUint, exp: &BigUint) -> BigUint {
+        if self.m.is_one() {
+            return BigUint::zero();
+        }
+        if exp.is_zero() {
+            return BigUint::one();
+        }
+        match &self.mont {
+            Some(core) => core.pow(base, exp, &self.m),
+            None => base.mod_pow_generic(exp, &self.m),
+        }
+    }
+
+    /// `a·b mod m`: two Montgomery products (no Knuth division) when the
+    /// context has a Montgomery core, schoolbook + division otherwise.
+    pub fn mul_mod(&self, a: &BigUint, b: &BigUint) -> BigUint {
+        match &self.mont {
+            Some(core) => core.mul_mod(a, b, &self.m),
+            None => a.mul_mod(b, &self.m),
+        }
+    }
+
+    /// Batch `bases[i]^exp mod m`, fanned out over `par`. The context
+    /// (n', R², window constants) is shared by every element; results are
+    /// order-preserving and bitwise invariant across worker counts.
+    pub fn mod_pow_batch(&self, bases: &[BigUint], exp: &BigUint, par: Parallel) -> Vec<BigUint> {
+        par.par_map(bases, |_, b| self.pow(b, exp))
+    }
+
+    /// Batch pairwise `a[i]·b[i] mod m` over `par`.
+    pub fn mul_mod_batch(&self, a: &[BigUint], b: &[BigUint], par: Parallel) -> Vec<BigUint> {
+        assert_eq!(a.len(), b.len(), "operand batches must pair up");
+        par.par_map_index(a.len(), |i| self.mul_mod(&a[i], &b[i]))
+    }
+}
+
+/// Garner CRT recombination: given `a_p ≡ x mod p` (in `[0, p)`) and
+/// `a_q ≡ x mod q` (in `[0, q)`) with `q_inv = q⁻¹ mod p`, returns the
+/// unique `x ∈ [0, p·q)`. The one implementation of the subtle
+/// borrow-free recombination, shared by RSA CRT signing and Paillier CRT
+/// decryption.
+pub fn crt_combine(
+    a_p: &BigUint,
+    a_q: &BigUint,
+    p: &BigUint,
+    q: &BigUint,
+    q_inv: &BigUint,
+) -> BigUint {
+    let a_q_p = a_q.rem(p);
+    let diff = if a_p.ge(&a_q_p) {
+        a_p.sub(&a_q_p)
+    } else {
+        a_p.add(p).sub(&a_q_p)
+    };
+    let h = diff.mul_mod(q_inv, p);
+    a_q.add(&h.mul(q))
+}
+
+/// Montgomery multiplication core for an odd multi-limb modulus (CIOS
+/// algorithm). Owned (plain limb vectors), so it can live inside key
+/// structs and cross scoped-thread boundaries.
 ///
 /// Keeps operands in Montgomery form (x·R mod n, R = 2^(64k)) so each
 /// modular multiplication is one interleaved multiply-reduce over the
 /// limbs — no Knuth division in the exponentiation inner loop.
-struct MontgomeryCtx<'a> {
-    n: &'a BigUint,
-    /// Number of limbs k (R = 2^(64k)).
-    k: usize,
+#[derive(Clone, Debug)]
+struct MontCore {
+    /// Modulus limbs (length k, R = 2^(64k)).
+    n: Vec<u64>,
     /// n' = -n⁻¹ mod 2^64.
     n_prime: u64,
     /// R² mod n (converts into Montgomery form via mont_mul(x, r2)).
     r2: Vec<u64>,
 }
 
-impl<'a> MontgomeryCtx<'a> {
-    fn new(n: &'a BigUint) -> Self {
+impl MontCore {
+    fn new(n: &BigUint) -> Self {
         debug_assert!(!n.is_even() && !n.is_zero());
         let k = n.limbs.len();
         // n' via Newton iteration on 2-adic inverse: inv *= 2 - n0·inv.
@@ -667,14 +798,14 @@ impl<'a> MontgomeryCtx<'a> {
         let r2 = r2.rem(n);
         let mut r2_limbs = r2.limbs;
         r2_limbs.resize(k, 0);
-        MontgomeryCtx { n, k, n_prime, r2: r2_limbs }
+        MontCore { n: n.limbs.clone(), n_prime, r2: r2_limbs }
     }
 
     /// CIOS Montgomery product: returns a·b·R⁻¹ mod n (limb vectors of
     /// length k, not trimmed).
     fn mont_mul(&self, a: &[u64], b: &[u64]) -> Vec<u64> {
-        let k = self.k;
-        let n = &self.n.limbs;
+        let k = self.n.len();
+        let n = &self.n;
         // t has k+2 limbs (t[k]/t[k+1] hold the running overflow).
         let mut t = vec![0u64; k + 2];
         for i in 0..k {
@@ -717,11 +848,27 @@ impl<'a> MontgomeryCtx<'a> {
         t
     }
 
-    /// 4-bit windowed exponentiation in Montgomery form.
-    fn pow(&self, base: &BigUint, exp: &BigUint) -> BigUint {
-        let k = self.k;
+    /// Plain modular product through the Montgomery core: two mont_muls
+    /// (a·b·R⁻¹, then ·R² ⇒ a·b mod m) replace schoolbook + division.
+    fn mul_mod(&self, a: &BigUint, b: &BigUint, m: &BigUint) -> BigUint {
+        let k = self.n.len();
+        let mut al = a.rem(m).limbs;
+        al.resize(k, 0);
+        let mut bl = b.rem(m).limbs;
+        bl.resize(k, 0);
+        let ab = self.mont_mul(&al, &bl);
+        let out = self.mont_mul(&ab, &self.r2);
+        let mut v = BigUint { limbs: out };
+        v.trim();
+        v
+    }
+
+    /// 4-bit windowed exponentiation in Montgomery form. `m` must be the
+    /// modulus the core was built for.
+    fn pow(&self, base: &BigUint, exp: &BigUint, m: &BigUint) -> BigUint {
+        let k = self.n.len();
         // Pad the reduced base to k limbs, convert to Montgomery form.
-        let mut b = base.rem(self.n).limbs;
+        let mut b = base.rem(m).limbs;
         b.resize(k, 0);
         let b_mont = self.mont_mul(&b, &self.r2);
         // one_mont = R mod n = mont_mul(1, R²).
@@ -862,6 +1009,11 @@ mod tests {
         for bits in [8, 64, 65, 256, 511] {
             let v = BigUint::random_bits(&mut r, bits).add(&BigUint::one());
             assert_eq!(BigUint::from_bytes_be(&v.to_bytes_be()), v);
+            // Padded form: fixed width, same value, never truncated.
+            let padded = v.to_bytes_be_padded(80);
+            assert_eq!(padded.len(), 80.max(v.to_bytes_be().len()));
+            assert_eq!(BigUint::from_bytes_be(&padded), v);
+            assert_eq!(v.to_bytes_be_padded(0), v.to_bytes_be());
         }
     }
 
@@ -1062,6 +1214,98 @@ mod tests {
                 // Round-trips across the boundary in both directions.
                 let up = max.add(r);
                 up.sub(r) == max && up.sub(&max) == *r && p.sub(&p.sub(r)) == *r
+            },
+        );
+    }
+
+    #[test]
+    fn mod_ctx_matches_mod_pow_all_modulus_shapes() {
+        // Montgomery (odd multi-limb), generic-even, and single-limb
+        // moduli all route correctly through the cached context.
+        let mut r = Rng::new(0xC0DEC);
+        for bits in [24usize, 64, 96, 130, 256] {
+            let mut m = BigUint::random_bits(&mut r, bits).add(&BigUint::from_u64(3));
+            for _ in 0..2 {
+                m = m.add(&BigUint::one()); // walk across odd/even
+                let ctx = m.mont_ctx();
+                assert_eq!(ctx.modulus(), &m);
+                for _ in 0..6 {
+                    let base = BigUint::random_bits(&mut r, bits + 13);
+                    let other = BigUint::random_bits(&mut r, bits + 5);
+                    let exp = BigUint::random_bits(&mut r, 48);
+                    assert_eq!(ctx.pow(&base, &exp), base.mod_pow(&exp, &m), "bits={bits}");
+                    assert_eq!(
+                        ctx.mul_mod(&base, &other),
+                        base.mul_mod(&other, &m),
+                        "bits={bits}"
+                    );
+                }
+            }
+        }
+        // Degenerate moduli.
+        let one = BigUint::one();
+        assert!(one.mont_ctx().pow(&n(5), &n(3)).is_zero());
+        assert_eq!(n(7).mont_ctx().pow(&n(5), &BigUint::zero()), one);
+    }
+
+    #[test]
+    fn crt_combine_recovers_the_residue() {
+        let mut r = Rng::new(0xC127);
+        let p = BigUint::gen_prime(&mut r, 64);
+        let q = BigUint::gen_prime(&mut r, 64);
+        let n = p.mul(&q);
+        let q_inv = q.mod_inverse(&p).unwrap();
+        for _ in 0..20 {
+            let x = BigUint::random_below(&mut r, &n);
+            let got = crt_combine(&x.rem(&p), &x.rem(&q), &p, &q, &q_inv);
+            assert_eq!(got, x);
+        }
+    }
+
+    #[test]
+    fn random_unit_is_invertible() {
+        let mut r = Rng::new(0x0417);
+        let n = BigUint::from_u64(3).mul(&BigUint::from_u64(5)).mul(&BigUint::from_u64(7));
+        for _ in 0..30 {
+            let u = BigUint::random_unit(&mut r, &n);
+            assert!(u.mod_inverse(&n).is_some(), "{u:?} must be a unit mod {n:?}");
+        }
+    }
+
+    #[test]
+    fn prop_mod_ctx_batches_match_serial_any_thread_count() {
+        crate::util::check::forall(
+            crate::util::check::Config { cases: 12, seed: 0xBA7C4 },
+            |r| {
+                let m = BigUint::random_bits(r, 40 + r.below_usize(200))
+                    .add(&BigUint::from_u64(5));
+                let n_items = 1 + r.below_usize(9);
+                let bases: Vec<BigUint> =
+                    (0..n_items).map(|_| BigUint::random_bits(r, 220)).collect();
+                let others: Vec<BigUint> =
+                    (0..n_items).map(|_| BigUint::random_bits(r, 220)).collect();
+                let exp = BigUint::random_bits(r, 40);
+                (m, bases, others, exp)
+            },
+            |(m, bases, others, exp)| {
+                let ctx = m.mont_ctx();
+                let want_pow: Vec<BigUint> =
+                    bases.iter().map(|b| b.mod_pow(exp, m)).collect();
+                let want_mul: Vec<BigUint> = bases
+                    .iter()
+                    .zip(others)
+                    .map(|(a, b)| a.mul_mod(b, m))
+                    .collect();
+                for threads in [1usize, 4] {
+                    let par = Parallel::new(threads);
+                    if ctx.mod_pow_batch(bases, exp, par) != want_pow {
+                        return false;
+                    }
+                    if ctx.mul_mod_batch(bases, others, par) != want_mul {
+                        return false;
+                    }
+                }
+                true
             },
         );
     }

@@ -17,7 +17,7 @@ pub mod paillier;
 pub mod prf;
 pub mod rsa;
 
-pub use bigint::BigUint;
+pub use bigint::{BigUint, ModCtx};
 
 use sha2::{Digest, Sha256};
 

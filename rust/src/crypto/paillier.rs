@@ -9,40 +9,127 @@
 //!   Enc(m) = (1 + m·n) · r^n  mod n²
 //!   Dec(c) = L(c^λ mod n²) · μ mod n, with L(u) = (u-1)/n, μ = λ⁻¹ mod n.
 //!
+//! §Perf: the public key caches a [`ModCtx`] for n² (every encryption /
+//! homomorphic op reuses it), decryption takes the CRT fast path (per-prime
+//! exponent p−1 over modulus p² — two exponentiations at ~1/8 the work of
+//! the full-width `c^λ mod n²`, bitwise equal by property test), and the
+//! `*_batch` entry points fan out over a [`Parallel`] budget with serial
+//! randomness draws so results are thread-count-invariant.
+//!
 //! Plaintext domain is Z_n; fixed-point helpers encode f32 vectors with a
 //! configurable scale for the weight/distance messages of Cluster-Coreset.
 
+use crate::crypto::bigint::{crt_combine, ModCtx};
 use crate::crypto::BigUint;
 use crate::error::{Error, Result};
+use crate::util::pool::Parallel;
 use crate::util::rng::Rng;
 
-/// Paillier public key.
+/// Paillier public key with its cached modular context for n².
 #[derive(Clone, Debug)]
 pub struct PaillierPublic {
     pub n: BigUint,
     pub n2: BigUint,
+    ctx_n2: ModCtx,
 }
 
-/// Paillier private key.
+/// Paillier private key (λ, μ) plus the CRT factor form.
 #[derive(Clone, Debug)]
 pub struct PaillierPrivate {
     lambda: BigUint,
     mu: BigUint,
     public: PaillierPublic,
+    crt: PaillierCrt,
 }
 
-/// A Paillier ciphertext (element of Z_{n²}).
+/// CRT decryption key (Paillier '99 §7): per prime u ∈ {p, q} decryption
+/// computes m_u = L_u(c^(u−1) mod u²)·h_u mod u with the half-width
+/// exponent u−1 over the half-width modulus u², then Garner-recombines —
+/// two exponentiations at ~1/8 the work of the full-width `c^λ mod n²`
+/// path each, ~3–4× overall. Bitwise equal to the plain path
+/// ([`PaillierPrivate::decrypt_plain`]), proven by property test.
+#[derive(Clone, Debug)]
+struct PaillierCrt {
+    p: BigUint,
+    q: BigUint,
+    p_minus_1: BigUint,
+    q_minus_1: BigUint,
+    ctx_p2: ModCtx,
+    ctx_q2: ModCtx,
+    /// h_p = L_p((n+1)^(p−1) mod p²)⁻¹ mod p, and the q twin.
+    h_p: BigUint,
+    h_q: BigUint,
+    /// q⁻¹ mod p.
+    q_inv: BigUint,
+}
+
+impl PaillierCrt {
+    fn build(p: &BigUint, q: &BigUint, n: &BigUint) -> Option<PaillierCrt> {
+        let one = BigUint::one();
+        let g = n.add(&one); // the g = n + 1 generator
+        let ctx_p2 = ModCtx::new(&p.mul(p));
+        let ctx_q2 = ModCtx::new(&q.mul(q));
+        let p_minus_1 = p.sub(&one);
+        let q_minus_1 = q.sub(&one);
+        let h_p = l_fn(&ctx_p2.pow(&g, &p_minus_1), p).mod_inverse(p)?;
+        let h_q = l_fn(&ctx_q2.pow(&g, &q_minus_1), q).mod_inverse(q)?;
+        let q_inv = q.mod_inverse(p)?;
+        Some(PaillierCrt {
+            p: p.clone(),
+            q: q.clone(),
+            p_minus_1,
+            q_minus_1,
+            ctx_p2,
+            ctx_q2,
+            h_p,
+            h_q,
+            q_inv,
+        })
+    }
+}
+
+/// The Paillier quotient map L_u(x) = (x − 1) / u, made total over x = 0
+/// (not a valid ciphertext residue; garbage in, garbage out — wire-shaped
+/// input must never panic).
+fn l_fn(x: &BigUint, u: &BigUint) -> BigUint {
+    if x.is_zero() {
+        return BigUint::zero();
+    }
+    x.sub(&BigUint::one()).div_rem(u).0
+}
+
+/// A Paillier ciphertext (element of Z_{n²}) carrying its fixed wire
+/// width, so encoded frames are value-independent in size.
 #[derive(Clone, Debug, PartialEq)]
-pub struct Ciphertext(pub BigUint);
+pub struct Ciphertext {
+    c: BigUint,
+    /// Wire width in bytes — `PaillierPublic::ciphertext_bytes()` at
+    /// creation time (or the frame length when decoded from the wire).
+    width: usize,
+}
 
 impl Ciphertext {
-    /// Wire encoding (big-endian bytes).
-    pub fn to_bytes(&self) -> Vec<u8> {
-        self.0.to_bytes_be()
+    pub fn new(c: BigUint, width: usize) -> Self {
+        Ciphertext { c, width }
     }
 
+    /// The group element.
+    pub fn value(&self) -> &BigUint {
+        &self.c
+    }
+
+    /// Fixed-width wire encoding: big-endian, left-padded with zeros to
+    /// the recorded width. Frame sizes therefore never vary with the
+    /// leading-zero bytes of the ciphertext value — wire accounting is a
+    /// pure function of the key size and message count.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.c.to_bytes_be_padded(self.width)
+    }
+
+    /// Decode, adopting the frame length as the width (round-trips are
+    /// byte-exact).
     pub fn from_bytes(b: &[u8]) -> Self {
-        Ciphertext(BigUint::from_bytes_be(b))
+        Ciphertext { c: BigUint::from_bytes_be(b), width: b.len() }
     }
 }
 
@@ -60,30 +147,57 @@ pub fn keygen(rng: &mut Rng, bits: usize) -> Result<(PaillierPublic, PaillierPri
         // gcd(n, lambda) must be 1 for mu to exist (true for distinct primes
         // of similar size, but check anyway).
         let Some(mu) = lambda.mod_inverse(&n) else { continue };
-        let n2 = n.mul(&n);
-        let public = PaillierPublic { n: n.clone(), n2 };
-        let private = PaillierPrivate { lambda, mu, public: public.clone() };
+        let Some(crt) = PaillierCrt::build(&p, &q, &n) else { continue };
+        let public = PaillierPublic::new(n);
+        let private = PaillierPrivate { lambda, mu, public: public.clone(), crt };
         return Ok((public, private));
     }
 }
 
 impl PaillierPublic {
+    /// Build from the modulus; n² and its modular context are derived.
+    /// `n` must be non-zero (validate wire-decoded moduli before calling).
+    pub fn new(n: BigUint) -> PaillierPublic {
+        let n2 = n.mul(&n);
+        let ctx_n2 = ModCtx::new(&n2);
+        PaillierPublic { n, n2, ctx_n2 }
+    }
+
     /// Encrypt m in Z_n.
     pub fn encrypt(&self, rng: &mut Rng, m: &BigUint) -> Result<Ciphertext> {
         if !m.lt(&self.n) {
             return Err(Error::Crypto("plaintext out of range".into()));
         }
-        // (1 + m n) mod n²
+        let r = BigUint::random_unit(rng, &self.n);
+        Ok(self.encrypt_with(m, &r))
+    }
+
+    /// Deterministic half of encryption, given the blinding factor.
+    fn encrypt_with(&self, m: &BigUint, r: &BigUint) -> Ciphertext {
+        // (1 + m n) mod n²  (g = n + 1 shortcut)
         let gm = BigUint::one().add(&m.mul(&self.n)).rem(&self.n2);
-        // random r in Z_n^*
-        let r = loop {
-            let r = BigUint::random_below(rng, &self.n);
-            if !r.is_zero() && r.gcd(&self.n).is_one() {
-                break r;
+        let rn = self.ctx_n2.pow(r, &self.n);
+        Ciphertext::new(self.ctx_n2.mul_mod(&gm, &rn), self.ciphertext_bytes())
+    }
+
+    /// Batch encryption. Blinding factors are drawn serially (the rng
+    /// stream is consumed exactly as per-element [`PaillierPublic::encrypt`]
+    /// calls would), then the r^n exponentiations fan out over `par` —
+    /// bitwise equal to serial encryption at any worker count.
+    pub fn encrypt_batch(
+        &self,
+        rng: &mut Rng,
+        ms: &[BigUint],
+        par: Parallel,
+    ) -> Result<Vec<Ciphertext>> {
+        for m in ms {
+            if !m.lt(&self.n) {
+                return Err(Error::Crypto("plaintext out of range".into()));
             }
-        };
-        let rn = r.mod_pow(&self.n, &self.n2);
-        Ok(Ciphertext(gm.mul_mod(&rn, &self.n2)))
+        }
+        let rs: Vec<BigUint> =
+            ms.iter().map(|_| BigUint::random_unit(rng, &self.n)).collect();
+        Ok(par.par_map_index(ms.len(), |i| self.encrypt_with(&ms[i], &rs[i])))
     }
 
     /// Encrypt a u64.
@@ -91,30 +205,73 @@ impl PaillierPublic {
         self.encrypt(rng, &BigUint::from_u64(m))
     }
 
+    /// Batch-encrypt u64 plaintexts over `par`.
+    pub fn encrypt_u64_batch(
+        &self,
+        rng: &mut Rng,
+        vs: &[u64],
+        par: Parallel,
+    ) -> Result<Vec<Ciphertext>> {
+        let ms: Vec<BigUint> = vs.iter().map(|&v| BigUint::from_u64(v)).collect();
+        self.encrypt_batch(rng, &ms, par)
+    }
+
     /// Homomorphic addition: Enc(a) ⊕ Enc(b) = Enc(a + b mod n).
     pub fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
-        Ciphertext(a.0.mul_mod(&b.0, &self.n2))
+        Ciphertext::new(self.ctx_n2.mul_mod(&a.c, &b.c), self.ciphertext_bytes())
     }
 
     /// Homomorphic scalar multiply: Enc(a)^k = Enc(k·a mod n).
     pub fn mul_scalar(&self, a: &Ciphertext, k: u64) -> Ciphertext {
-        Ciphertext(a.0.mod_pow(&BigUint::from_u64(k), &self.n2))
+        Ciphertext::new(
+            self.ctx_n2.pow(&a.c, &BigUint::from_u64(k)),
+            self.ciphertext_bytes(),
+        )
     }
 
-    /// Ciphertext size in bytes (for comm accounting).
+    /// Batch homomorphic scalar multiply (`ks[i]` applied to `cts[i]`)
+    /// over `par`.
+    pub fn mul_scalar_batch(
+        &self,
+        cts: &[Ciphertext],
+        ks: &[u64],
+        par: Parallel,
+    ) -> Vec<Ciphertext> {
+        assert_eq!(cts.len(), ks.len(), "scalar batch must pair up");
+        par.par_map_index(cts.len(), |i| self.mul_scalar(&cts[i], ks[i]))
+    }
+
+    /// Ciphertext size in bytes (for comm accounting; also the fixed wire
+    /// width of every ciphertext produced under this key).
     pub fn ciphertext_bytes(&self) -> usize {
         self.n2.bit_len().div_ceil(8)
     }
 }
 
 impl PaillierPrivate {
-    /// Decrypt to Z_n.
+    /// Decrypt to Z_n, via the CRT fast path (per-prime half-width
+    /// exponentiations + Garner recombination).
     pub fn decrypt(&self, c: &Ciphertext) -> BigUint {
+        let crt = &self.crt;
+        let u_p = crt.ctx_p2.pow(&c.c, &crt.p_minus_1);
+        let m_p = l_fn(&u_p, &crt.p).mul_mod(&crt.h_p, &crt.p);
+        let u_q = crt.ctx_q2.pow(&c.c, &crt.q_minus_1);
+        let m_q = l_fn(&u_q, &crt.q).mul_mod(&crt.h_q, &crt.q);
+        crt_combine(&m_p, &m_q, &crt.p, &crt.q, &crt.q_inv)
+    }
+
+    /// Reference slow path: the textbook `L(c^λ mod n²)·μ mod n`. The CRT
+    /// property test pins [`PaillierPrivate::decrypt`] to this bitwise;
+    /// protocol code should use `decrypt`.
+    pub fn decrypt_plain(&self, c: &Ciphertext) -> BigUint {
         let pk = &self.public;
-        let u = c.0.mod_pow(&self.lambda, &pk.n2);
-        // L(u) = (u - 1) / n
-        let l = u.sub(&BigUint::one()).div_rem(&pk.n).0;
-        l.mul_mod(&self.mu, &pk.n)
+        let u = pk.ctx_n2.pow(&c.c, &self.lambda);
+        l_fn(&u, &pk.n).mul_mod(&self.mu, &pk.n)
+    }
+
+    /// Batch CRT decryption over `par` (order-preserving, pure).
+    pub fn decrypt_batch(&self, cts: &[Ciphertext], par: Parallel) -> Vec<BigUint> {
+        par.par_map(cts, |_, c| self.decrypt(c))
     }
 
     pub fn decrypt_u64(&self, c: &Ciphertext) -> Option<u64> {
@@ -144,6 +301,7 @@ pub fn decode_fixed(v: u64) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::check;
 
     fn keys(seed: u64) -> (PaillierPublic, PaillierPrivate) {
         let mut r = Rng::new(seed);
@@ -195,6 +353,7 @@ mod tests {
         let c = pk.encrypt_u64(&mut r, 777).unwrap();
         let c2 = Ciphertext::from_bytes(&c.to_bytes());
         assert_eq!(sk.decrypt_u64(&c2), Some(777));
+        assert_eq!(c, c2, "fixed-width round-trip is lossless");
     }
 
     #[test]
@@ -210,5 +369,107 @@ mod tests {
         let (pk, _) = keys(11);
         let mut r = Rng::new(12);
         assert!(pk.encrypt(&mut r, &pk.n).is_err());
+        assert!(pk
+            .encrypt_batch(&mut r, &[BigUint::zero(), pk.n.clone()], Parallel::serial())
+            .is_err());
+    }
+
+    #[test]
+    fn prop_crt_decrypt_matches_plain_path() {
+        // CRT decryption is bitwise equal to the textbook formula on
+        // every valid ciphertext, including after homomorphic ops.
+        let (pk, sk) = keys(13);
+        check::forall(
+            check::Config { cases: 24, seed: 0xDEC },
+            |r| {
+                let m = BigUint::random_below(r, &pk.n);
+                let mut rng = Rng::new(r.next_u64());
+                let c = pk.encrypt(&mut rng, &m).unwrap();
+                (m, c)
+            },
+            |(m, c)| {
+                let fast = sk.decrypt(c);
+                fast == sk.decrypt_plain(c) && fast == *m
+            },
+        );
+        let mut r = Rng::new(14);
+        let a = pk.encrypt_u64(&mut r, 41).unwrap();
+        let b = pk.encrypt_u64(&mut r, 1).unwrap();
+        let sum = pk.add(&a, &b);
+        assert_eq!(sk.decrypt(&sum), sk.decrypt_plain(&sum));
+        // Degenerate wire values must not panic on either path.
+        let zero = Ciphertext::from_bytes(&[]);
+        assert_eq!(sk.decrypt(&zero), sk.decrypt_plain(&zero));
+    }
+
+    #[test]
+    fn batch_apis_match_serial_and_are_thread_invariant() {
+        let (pk, sk) = keys(15);
+        let ms: Vec<BigUint> = (0..9u64).map(|v| BigUint::from_u64(v * 1_000 + 7)).collect();
+        let serial: Vec<Ciphertext> = {
+            let mut r = Rng::new(90);
+            ms.iter().map(|m| pk.encrypt(&mut r, m).unwrap()).collect()
+        };
+        for threads in [1usize, 2, 4] {
+            let mut r = Rng::new(90);
+            let batch = pk.encrypt_batch(&mut r, &ms, Parallel::new(threads)).unwrap();
+            assert_eq!(batch, serial, "threads={threads}");
+        }
+        let want_dec: Vec<BigUint> = serial.iter().map(|c| sk.decrypt(c)).collect();
+        for threads in [1usize, 4] {
+            assert_eq!(
+                sk.decrypt_batch(&serial, Parallel::new(threads)),
+                want_dec,
+                "threads={threads}"
+            );
+        }
+        let ks: Vec<u64> = (1..=9).collect();
+        let want_mul: Vec<Ciphertext> = serial
+            .iter()
+            .zip(&ks)
+            .map(|(c, &k)| pk.mul_scalar(c, k))
+            .collect();
+        for threads in [1usize, 3] {
+            assert_eq!(
+                pk.mul_scalar_batch(&serial, &ks, Parallel::new(threads)),
+                want_mul,
+                "threads={threads}"
+            );
+        }
+        // u64 batch convenience path agrees with the BigUint one.
+        let vs: Vec<u64> = (0..8).map(|v| v * 3 + 1).collect();
+        let mut r1 = Rng::new(91);
+        let mut r2 = Rng::new(91);
+        let a = pk.encrypt_u64_batch(&mut r1, &vs, Parallel::new(2)).unwrap();
+        let b: Vec<Ciphertext> =
+            vs.iter().map(|&v| pk.encrypt_u64(&mut r2, v).unwrap()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn prop_ciphertext_wire_width_is_fixed() {
+        // Every ciphertext under a key encodes to exactly
+        // ciphertext_bytes() — no value-dependent frame sizes — and the
+        // encoding round-trips losslessly.
+        let (pk, sk) = keys(17);
+        check::forall(
+            check::Config { cases: 24, seed: 0xF1D },
+            |r| {
+                let m = BigUint::random_below(r, &pk.n);
+                let mut rng = Rng::new(r.next_u64());
+                pk.encrypt(&mut rng, &m).unwrap()
+            },
+            |c| {
+                let wire = c.to_bytes();
+                wire.len() == pk.ciphertext_bytes() && Ciphertext::from_bytes(&wire) == *c
+            },
+        );
+        // Homomorphic results keep the fixed width too.
+        let mut r = Rng::new(18);
+        let a = pk.encrypt_u64(&mut r, 3).unwrap();
+        let b = pk.encrypt_u64(&mut r, 4).unwrap();
+        assert_eq!(pk.add(&a, &b).to_bytes().len(), pk.ciphertext_bytes());
+        assert_eq!(pk.mul_scalar(&a, 5).to_bytes().len(), pk.ciphertext_bytes());
+        assert_eq!(sk.decrypt_u64(&Ciphertext::from_bytes(&a.to_bytes())), Some(3));
     }
 }

@@ -47,6 +47,12 @@ impl Prf {
     pub fn eval_batch(&self, xs: &[u64]) -> Vec<[u8; 16]> {
         xs.iter().map(|&x| self.eval_u64(x)).collect()
     }
+
+    /// Batch evaluation fanned out over `par` (order-preserving; bitwise
+    /// equal to [`Prf::eval_batch`] at any worker count).
+    pub fn eval_batch_par(&self, xs: &[u64], par: crate::util::pool::Parallel) -> Vec<[u8; 16]> {
+        par.par_map(xs, |_, &x| self.eval_u64(x))
+    }
 }
 
 #[cfg(test)]
@@ -76,6 +82,10 @@ mod tests {
         let batch = p.eval_batch(&xs);
         for (i, &x) in xs.iter().enumerate() {
             assert_eq!(batch[i], p.eval_u64(x));
+        }
+        for threads in [1usize, 4] {
+            let par = crate::util::pool::Parallel::new(threads);
+            assert_eq!(p.eval_batch_par(&xs, par), batch, "threads={threads}");
         }
     }
 

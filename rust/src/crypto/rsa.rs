@@ -7,23 +7,55 @@
 //!
 //! Security relies on standard RSA-FDH blind-signature unlinkability: the
 //! sender sees only `H(x)·r^e`, uniformly random in `Z_n^*`.
+//!
+//! §Perf: all exponentiations run through cached [`ModCtx`] contexts (one
+//! per modulus, built at key construction instead of per call), signing
+//! takes the CRT fast path (two half-width exponentiations mod p/q plus a
+//! Garner recombination — bitwise equal to `m^d mod n`, property-tested),
+//! and the `*_batch` entry points fan the per-element work out over a
+//! [`Parallel`] worker budget while drawing randomness serially so results
+//! are bitwise invariant across thread counts.
 
+use crate::crypto::bigint::{crt_combine, ModCtx};
 use crate::crypto::{hash_to_zn, sha256, BigUint};
 use crate::error::{Error, Result};
+use crate::util::pool::Parallel;
 use crate::util::rng::Rng;
 
-/// RSA public key (n, e).
+/// RSA public key (n, e) with its cached modular context.
 #[derive(Clone, Debug)]
 pub struct RsaPublic {
     pub n: BigUint,
     pub e: BigUint,
+    /// Cached Montgomery context for n — shared by every blind / unblind /
+    /// verify instead of being rebuilt per exponentiation.
+    ctx: ModCtx,
 }
 
-/// RSA key pair. `d` is the signing exponent.
+/// RSA key pair. `d` is the signing exponent; `crt` the half-width
+/// factor form used by the signing fast path.
 #[derive(Clone, Debug)]
 pub struct RsaKeyPair {
     pub public: RsaPublic,
     d: BigUint,
+    crt: RsaCrt,
+}
+
+/// CRT signing key (RFC 8017 form): d_p = d mod (p−1), d_q = d mod (q−1),
+/// q_inv = q⁻¹ mod p, with cached half-width contexts for p and q. Signing
+/// costs two half-width exponentiations (~8× cheaper each than the
+/// full-width one: half the limbs squared, half the exponent bits) plus a
+/// Garner recombination — ~3–4× on the dominant cost of RSA-PSI.
+#[derive(Clone, Debug)]
+struct RsaCrt {
+    p: BigUint,
+    q: BigUint,
+    d_p: BigUint,
+    d_q: BigUint,
+    /// q⁻¹ mod p.
+    q_inv: BigUint,
+    ctx_p: ModCtx,
+    ctx_q: ModCtx,
 }
 
 impl RsaKeyPair {
@@ -46,13 +78,42 @@ impl RsaKeyPair {
             let d = e
                 .mod_inverse(&phi)
                 .ok_or_else(|| Error::Crypto("e not invertible".into()))?;
-            return Ok(RsaKeyPair { public: RsaPublic { n, e }, d });
+            // Distinct primes ⇒ q invertible mod p.
+            let Some(q_inv) = q.mod_inverse(&p) else { continue };
+            let crt = RsaCrt {
+                d_p: d.rem(&p.sub(&one)),
+                d_q: d.rem(&q.sub(&one)),
+                q_inv,
+                ctx_p: ModCtx::new(&p),
+                ctx_q: ModCtx::new(&q),
+                p,
+                q,
+            };
+            return Ok(RsaKeyPair { public: RsaPublic::new(n, e), d, crt });
         }
     }
 
-    /// Sign a raw group element: `m^d mod n`.
+    /// Sign a raw group element: `m^d mod n`, via the CRT fast path
+    /// (two half-width exponentiations + Garner recombination).
     pub fn sign_raw(&self, m: &BigUint) -> BigUint {
-        m.mod_pow(&self.d, &self.public.n)
+        let crt = &self.crt;
+        let s_p = crt.ctx_p.pow(m, &crt.d_p);
+        let s_q = crt.ctx_q.pow(m, &crt.d_q);
+        crt_combine(&s_p, &s_q, &crt.p, &crt.q, &crt.q_inv)
+    }
+
+    /// Reference slow path: one full-width exponentiation with the cached
+    /// modulus context. The CRT property test pins [`RsaKeyPair::sign_raw`]
+    /// to this bitwise; protocol code should use `sign_raw`.
+    pub fn sign_raw_plain(&self, m: &BigUint) -> BigUint {
+        self.public.ctx.pow(m, &self.d)
+    }
+
+    /// Batch CRT signing fanned out over `par`. Signatures are a pure
+    /// function of the inputs, so the result is order-preserving and
+    /// bitwise invariant across worker counts.
+    pub fn sign_batch(&self, ms: &[BigUint], par: Parallel) -> Vec<BigUint> {
+        par.par_map(ms, |_, m| self.sign_raw(m))
     }
 
     /// Hash-then-sign an indicator (the sender's own elements).
@@ -60,6 +121,11 @@ impl RsaKeyPair {
         let h = crate::crypto::hash_indicator(domain, x);
         let m = hash_to_zn(&h, &self.public.n);
         self.sign_raw(&m)
+    }
+
+    /// Batch hash-then-sign over `par`.
+    pub fn sign_indicator_batch(&self, domain: &str, xs: &[u64], par: Parallel) -> Vec<BigUint> {
+        par.par_map(xs, |_, &x| self.sign_indicator(domain, x))
     }
 }
 
@@ -73,22 +139,53 @@ pub struct Blinded {
 }
 
 impl RsaPublic {
+    /// Build a public key, caching the modular context for `n`.
+    /// `n` must be non-zero (validate wire-decoded moduli before calling).
+    pub fn new(n: BigUint, e: BigUint) -> RsaPublic {
+        let ctx = ModCtx::new(&n);
+        RsaPublic { n, e, ctx }
+    }
+
+    /// The cached modular context for n.
+    pub fn ctx(&self) -> &ModCtx {
+        &self.ctx
+    }
+
     /// Receiver side: blind the hash of indicator `x` with fresh `r`.
     pub fn blind(&self, rng: &mut Rng, domain: &str, x: u64) -> Blinded {
         let h = crate::crypto::hash_indicator(domain, x);
         let m = hash_to_zn(&h, &self.n);
-        // r must be invertible mod n; with n = pq this fails with
-        // negligible probability, so we just resample.
-        loop {
-            let r = BigUint::random_below(rng, &self.n);
-            if r.is_zero() {
-                continue;
-            }
-            if r.gcd(&self.n).is_one() {
-                let re = r.mod_pow(&self.e, &self.n);
-                return Blinded { value: m.mul_mod(&re, &self.n), r };
-            }
-        }
+        let r = BigUint::random_unit(rng, &self.n);
+        let re = self.ctx.pow(&r, &self.e);
+        Blinded { value: self.ctx.mul_mod(&m, &re), r }
+    }
+
+    /// Blind a whole batch. Blinding factors are drawn serially — the rng
+    /// stream is consumed in exactly the order per-element
+    /// [`RsaPublic::blind`] calls would consume it, so the batch is bitwise
+    /// equal to the serial path and invariant across worker counts — then
+    /// the two exponentiation/multiply stages run through the context's
+    /// batch entry points over `par`.
+    pub fn blind_batch(
+        &self,
+        rng: &mut Rng,
+        domain: &str,
+        xs: &[u64],
+        par: Parallel,
+    ) -> Vec<Blinded> {
+        let rs: Vec<BigUint> =
+            xs.iter().map(|_| BigUint::random_unit(rng, &self.n)).collect();
+        let ms: Vec<BigUint> = xs
+            .iter()
+            .map(|&x| hash_to_zn(&crate::crypto::hash_indicator(domain, x), &self.n))
+            .collect();
+        let res = self.ctx.mod_pow_batch(&rs, &self.e, par); // r^e
+        let values = self.ctx.mul_mod_batch(&ms, &res, par); // H(x)·r^e
+        values
+            .into_iter()
+            .zip(rs)
+            .map(|(value, r)| Blinded { value, r })
+            .collect()
     }
 
     /// Receiver side: unblind a blind signature `s = (H(x) r^e)^d`.
@@ -98,7 +195,7 @@ impl RsaPublic {
             .r
             .mod_inverse(&self.n)
             .ok_or_else(|| Error::Crypto("blinding factor not invertible".into()))?;
-        Ok(blind_sig.mul_mod(&r_inv, &self.n))
+        Ok(self.ctx.mul_mod(blind_sig, &r_inv))
     }
 
     /// Batch unblind (Montgomery's inversion trick): one extended Euclid
@@ -108,14 +205,22 @@ impl RsaPublic {
         blinded: &[Blinded],
         blind_sigs: &[BigUint],
     ) -> Result<Vec<BigUint>> {
-        assert_eq!(blinded.len(), blind_sigs.len());
+        if blinded.len() != blind_sigs.len() {
+            // Wire-shaped input (the signature batch arrives from the
+            // peer): a count mismatch is a protocol error, not a panic.
+            return Err(Error::Crypto(format!(
+                "blind signature batch length mismatch: {} blinded vs {} signatures",
+                blinded.len(),
+                blind_sigs.len()
+            )));
+        }
         let rs: Vec<BigUint> = blinded.iter().map(|b| b.r.clone()).collect();
         let invs = BigUint::batch_mod_inverse(&rs, &self.n)
             .ok_or_else(|| Error::Crypto("blinding factor not invertible".into()))?;
         Ok(blind_sigs
             .iter()
             .zip(&invs)
-            .map(|(sig, inv)| sig.mul_mod(inv, &self.n))
+            .map(|(sig, inv)| self.ctx.mul_mod(sig, inv))
             .collect())
     }
 
@@ -123,7 +228,7 @@ impl RsaPublic {
     pub fn verify_indicator(&self, domain: &str, x: u64, sig: &BigUint) -> bool {
         let h = crate::crypto::hash_indicator(domain, x);
         let m = hash_to_zn(&h, &self.n);
-        sig.mod_pow(&self.e, &self.n) == m
+        self.ctx.pow(sig, &self.e) == m
     }
 
     /// Serialized size in bytes of one group element (for comm accounting).
@@ -141,6 +246,7 @@ pub fn signature_key(sig: &BigUint) -> [u8; 32] {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::check;
 
     fn small_key(seed: u64) -> RsaKeyPair {
         let mut r = Rng::new(seed);
@@ -196,5 +302,60 @@ mod tests {
     fn element_bytes_tracks_modulus() {
         let kp = small_key(7);
         assert_eq!(kp.public.element_bytes(), 32); // 256-bit n
+    }
+
+    #[test]
+    fn prop_crt_sign_matches_plain_path() {
+        // The CRT fast path is bitwise equal to m^d mod n — including
+        // m ≥ n (wire-decoded inputs are attacker-shaped) and edge values.
+        let kp = small_key(11);
+        check::forall(
+            check::Config { cases: 40, seed: 0xC47 },
+            |r| BigUint::random_bits(r, 8 + r.below_usize(300)),
+            |m| kp.sign_raw(m) == kp.sign_raw_plain(m),
+        );
+        for m in [BigUint::zero(), BigUint::one(), kp.public.n.sub(&BigUint::one())] {
+            assert_eq!(kp.sign_raw(&m), kp.sign_raw_plain(&m));
+        }
+    }
+
+    #[test]
+    fn blind_batch_matches_serial_and_is_thread_invariant() {
+        let kp = small_key(12);
+        let xs: Vec<u64> = (0..17).map(|i| i * 31 + 5).collect();
+        let serial: Vec<Blinded> = {
+            let mut r = Rng::new(51);
+            xs.iter().map(|&x| kp.public.blind(&mut r, "d", x)).collect()
+        };
+        for threads in [1usize, 2, 4] {
+            let mut r = Rng::new(51);
+            let batch = kp.public.blind_batch(&mut r, "d", &xs, Parallel::new(threads));
+            assert_eq!(batch.len(), serial.len());
+            for (a, b) in batch.iter().zip(&serial) {
+                assert_eq!(a.value, b.value, "threads={threads}");
+                assert_eq!(a.r, b.r, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn sign_batches_match_serial_and_are_thread_invariant() {
+        let kp = small_key(13);
+        let mut r = Rng::new(77);
+        let ms: Vec<BigUint> =
+            (0..13).map(|_| BigUint::random_below(&mut r, &kp.public.n)).collect();
+        let want: Vec<BigUint> = ms.iter().map(|m| kp.sign_raw(m)).collect();
+        for threads in [1usize, 4] {
+            assert_eq!(kp.sign_batch(&ms, Parallel::new(threads)), want, "threads={threads}");
+        }
+        let xs: Vec<u64> = (0..11).collect();
+        let want_ind: Vec<BigUint> = xs.iter().map(|&x| kp.sign_indicator("d", x)).collect();
+        for threads in [1usize, 3] {
+            assert_eq!(
+                kp.sign_indicator_batch("d", &xs, Parallel::new(threads)),
+                want_ind,
+                "threads={threads}"
+            );
+        }
     }
 }

@@ -257,8 +257,8 @@ fn cmd_mpsi(cli: &Cli) -> Result<()> {
     let par = Parallel::auto(cli.opt_parse("threads", 0)?);
     let report = match topo.as_str() {
         "tree" => run_tree(&sets, &TreeMpsiConfig { protocol, pairing, seed }, &net, par, &he)?,
-        "path" => run_path(&sets, &protocol, seed, &net, &he)?,
-        "star" => run_star(&sets, &protocol, 0, seed, &net, &he)?,
+        "path" => run_path(&sets, &protocol, seed, &net, par, &he)?,
+        "star" => run_star(&sets, &protocol, 0, seed, &net, par, &he)?,
         t => return Err(treecss::Error::Config(format!("unknown topology {t:?}"))),
     };
     println!("{topo}-MPSI over {m} clients × {n} items (overlap {overlap}):");

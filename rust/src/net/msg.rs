@@ -10,6 +10,7 @@ use crate::crypto::paillier::{Ciphertext, PaillierPrivate, PaillierPublic};
 use crate::crypto::prf::Prf;
 use crate::error::{Error, Result};
 use crate::util::codec::{Decoder, Encoder};
+use crate::util::pool::Parallel;
 use crate::util::rng::Rng;
 
 /// Client request to the aggregation server to initiate alignment
@@ -78,18 +79,19 @@ impl PsiSchedule {
 
 /// Batch of fixed-width big-integer group elements (blinded indicators,
 /// blind signatures). Width = RSA modulus bytes.
-pub fn encode_bigint_batch(elems: &[crate::crypto::BigUint], width: usize) -> Vec<u8> {
-    let mut e = Encoder::with_capacity(8 + elems.len() * (8 + width));
-    let padded: Vec<Vec<u8>> = elems
-        .iter()
-        .map(|v| {
-            let raw = v.to_bytes_be();
-            let mut out = vec![0u8; width.saturating_sub(raw.len())];
-            out.extend_from_slice(&raw);
-            out
-        })
-        .collect();
-    e.blob_list(&padded);
+///
+/// Generic over borrowed iterators so callers holding the values inside
+/// larger structs (e.g. `Blinded`) encode straight from references instead
+/// of cloning every element first; the wire format (count, then one
+/// length-prefixed padded blob per element) is unchanged.
+pub fn encode_bigint_batch<'a, I>(elems: I, width: usize) -> Vec<u8>
+where
+    I: IntoIterator<Item = &'a crate::crypto::BigUint>,
+    I::IntoIter: ExactSizeIterator,
+{
+    let it = elems.into_iter();
+    let mut e = Encoder::with_capacity(8 + it.len() * (8 + width));
+    e.blob_list_iter(it.map(|v| v.to_bytes_be_padded(width)));
     e.finish()
 }
 
@@ -164,29 +166,48 @@ pub struct HybridEnvelope {
     pub body: Vec<u8>,
 }
 
+/// Session-key width; Paillier-encrypted on the wire in 32-bit chunks
+/// (the chunk count and both seal/open buffers derive from this one
+/// constant, so the key cannot be widened on one side only).
+const SESSION_KEY_BYTES: usize = 32;
+const SESSION_KEY_CHUNKS: usize = SESSION_KEY_BYTES / 4;
+
 impl HybridEnvelope {
-    /// Seal `payload` for holders of `sk` matching `pk`.
-    pub fn seal(rng: &mut Rng, pk: &PaillierPublic, payload: &[u8]) -> Result<Self> {
-        let mut session = [0u8; 32];
+    /// Seal `payload` for holders of `sk` matching `pk`. The session-key
+    /// chunk encryptions fan out over `par` (randomness is drawn serially,
+    /// so envelopes are bitwise identical at any worker count).
+    pub fn seal(
+        rng: &mut Rng,
+        pk: &PaillierPublic,
+        payload: &[u8],
+        par: Parallel,
+    ) -> Result<Self> {
+        let mut session = [0u8; SESSION_KEY_BYTES];
         rng.fill_bytes(&mut session);
         // Paillier-encrypt the key in 32-bit chunks (plaintext < n always).
-        let key_chunks = session
+        let chunk_vals: Vec<u64> = session
             .chunks(4)
-            .map(|c| {
-                let v = u32::from_le_bytes(c.try_into().unwrap()) as u64;
-                pk.encrypt_u64(rng, v)
-            })
-            .collect::<Result<Vec<_>>>()?;
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as u64)
+            .collect();
+        let key_chunks = pk.encrypt_u64_batch(rng, &chunk_vals, par)?;
         let body = stream_cipher(&session, payload);
         Ok(HybridEnvelope { key_chunks, body })
     }
 
-    /// Open with the private key.
-    pub fn open(&self, sk: &PaillierPrivate) -> Result<Vec<u8>> {
-        let mut session = [0u8; 32];
-        for (i, c) in self.key_chunks.iter().enumerate() {
-            let v = sk
-                .decrypt_u64(c)
+    /// Open with the private key; chunk decryptions fan out over `par`.
+    pub fn open(&self, sk: &PaillierPrivate, par: Parallel) -> Result<Vec<u8>> {
+        if self.key_chunks.len() != SESSION_KEY_CHUNKS {
+            return Err(Error::Crypto(format!(
+                "bad session key: {} chunks on wire, want {SESSION_KEY_CHUNKS}",
+                self.key_chunks.len()
+            )));
+        }
+        let vals = sk.decrypt_batch(&self.key_chunks, par);
+        let mut session = [0u8; SESSION_KEY_BYTES];
+        for (i, v) in vals.iter().enumerate() {
+            let v = v
+                .to_u64()
+                .filter(|&v| v <= u32::MAX as u64)
                 .ok_or_else(|| Error::Crypto("bad session key chunk".into()))?;
             session[i * 4..i * 4 + 4].copy_from_slice(&(v as u32).to_le_bytes());
         }
@@ -216,7 +237,7 @@ impl HybridEnvelope {
 
 /// XOR keystream from HMAC-SHA256(session, counter) blocks. Symmetric:
 /// applying twice recovers the plaintext.
-fn stream_cipher(key: &[u8; 32], data: &[u8]) -> Vec<u8> {
+fn stream_cipher(key: &[u8; SESSION_KEY_BYTES], data: &[u8]) -> Vec<u8> {
     let prf = Prf::new(*key);
     let mut out = Vec::with_capacity(data.len());
     for (block_idx, chunk) in data.chunks(16).enumerate() {
@@ -357,9 +378,9 @@ mod tests {
         let mut r = Rng::new(1);
         let (pk, sk) = paillier::keygen(&mut r, 256).unwrap();
         let payload = encode_index_list(&[9, 8, 7, 6, 5]);
-        let env = HybridEnvelope::seal(&mut r, &pk, &payload).unwrap();
+        let env = HybridEnvelope::seal(&mut r, &pk, &payload, Parallel::serial()).unwrap();
         assert_ne!(env.body, payload, "payload must be ciphered");
-        let open = env.open(&sk).unwrap();
+        let open = env.open(&sk, Parallel::serial()).unwrap();
         assert_eq!(decode_index_list(&open).unwrap(), vec![9, 8, 7, 6, 5]);
     }
 
@@ -367,9 +388,47 @@ mod tests {
     fn hybrid_envelope_wire_roundtrip() {
         let mut r = Rng::new(2);
         let (pk, sk) = paillier::keygen(&mut r, 256).unwrap();
-        let env = HybridEnvelope::seal(&mut r, &pk, b"hello coreset").unwrap();
+        let env = HybridEnvelope::seal(&mut r, &pk, b"hello coreset", Parallel::serial()).unwrap();
         let env2 = HybridEnvelope::decode(&env.encode()).unwrap();
-        assert_eq!(env2.open(&sk).unwrap(), b"hello coreset");
+        assert_eq!(env2.open(&sk, Parallel::serial()).unwrap(), b"hello coreset");
+    }
+
+    #[test]
+    fn hybrid_envelope_thread_invariant_and_fixed_key_block() {
+        let (pk, sk) = {
+            let mut r = Rng::new(21);
+            paillier::keygen(&mut r, 256).unwrap()
+        };
+        // Same seed at 1 vs 4 workers: bitwise-identical envelope.
+        let seal_with = |threads: usize| {
+            let mut r = Rng::new(5);
+            HybridEnvelope::seal(&mut r, &pk, b"same payload", Parallel::new(threads)).unwrap()
+        };
+        let a = seal_with(1);
+        let b = seal_with(4);
+        assert_eq!(a.encode(), b.encode());
+        assert_eq!(
+            a.open(&sk, Parallel::new(4)).unwrap(),
+            b.open(&sk, Parallel::serial()).unwrap()
+        );
+        // Fixed-width ciphertext frames: two envelopes over equal-length
+        // payloads encode to the same number of bytes regardless of the
+        // session keys / ciphertext values drawn.
+        let mut r = Rng::new(6);
+        let e1 = HybridEnvelope::seal(&mut r, &pk, b"payload-one", Parallel::serial()).unwrap();
+        let e2 = HybridEnvelope::seal(&mut r, &pk, b"payload-two", Parallel::serial()).unwrap();
+        assert_eq!(e1.encode().len(), e2.encode().len());
+    }
+
+    #[test]
+    fn hybrid_envelope_rejects_wrong_chunk_count() {
+        let mut r = Rng::new(23);
+        let (pk, sk) = paillier::keygen(&mut r, 256).unwrap();
+        let mut env = HybridEnvelope::seal(&mut r, &pk, b"x", Parallel::serial()).unwrap();
+        env.key_chunks.push(env.key_chunks[0].clone());
+        assert!(env.open(&sk, Parallel::serial()).is_err(), "9 chunks must be rejected");
+        env.key_chunks.truncate(3);
+        assert!(env.open(&sk, Parallel::serial()).is_err(), "3 chunks must be rejected");
     }
 
     #[test]
@@ -550,7 +609,7 @@ mod tests {
     fn hybrid_envelope_rejects_malformed_wire() {
         let mut r = Rng::new(3);
         let (pk, _) = paillier::keygen(&mut r, 256).unwrap();
-        let env = HybridEnvelope::seal(&mut r, &pk, b"payload").unwrap();
+        let env = HybridEnvelope::seal(&mut r, &pk, b"payload", Parallel::serial()).unwrap();
         let buf = env.encode();
         for cut in 0..buf.len() {
             assert!(HybridEnvelope::decode(&buf[..cut]).is_err(), "cut={cut}");

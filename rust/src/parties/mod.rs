@@ -17,6 +17,7 @@ use crate::error::{Error, Result};
 use crate::net::msg::{self, HybridEnvelope, PsiSchedule};
 use crate::net::{Endpoint, PartyId, Transport};
 use crate::psi::common::HeContext;
+use crate::util::pool::Parallel;
 use crate::util::rng::Rng;
 
 /// A feature-holding client: its vertical slice plus its (shuffled) local
@@ -62,7 +63,8 @@ impl ClientNode {
 
     /// Coreset step 3: seal this client's cluster tuples under the group
     /// HE key and upload them to the aggregation server (which routes the
-    /// ciphertext it cannot open to the label owner).
+    /// ciphertext it cannot open to the label owner). `par` bounds the
+    /// envelope's Paillier batch workers.
     pub fn send_cluster_tuples(
         &self,
         net: &dyn Transport,
@@ -70,8 +72,9 @@ impl ClientNode {
         pk: &PaillierPublic,
         ct: &msg::CtMessage,
         phase: &str,
+        par: Parallel,
     ) -> Result<f64> {
-        Ok(send_sealed_ct(net, self.id, rng, pk, ct, phase)?.0)
+        Ok(send_sealed_ct(net, self.id, rng, pk, ct, phase, par)?.0)
     }
 
     /// Rows re-ordered to match an aligned indicator list (the PSI result).
@@ -115,8 +118,9 @@ impl LabelOwnerNode {
         net: &dyn Transport,
         he: &HeContext,
         phase: &str,
+        par: Parallel,
     ) -> Result<msg::CtMessage> {
-        recv_sealed_ct(net, he, phase)
+        recv_sealed_ct(net, he, phase, par)
     }
 
     /// Labels re-ordered to an aligned indicator list.
@@ -206,6 +210,7 @@ impl KeyServerNode {
 /// and the coreset orchestration, which works over bare client indices):
 /// seal the cluster tuples and upload them to the aggregation server.
 /// Returns (simulated time, wire bytes).
+#[allow(clippy::too_many_arguments)]
 pub fn send_sealed_ct(
     net: &dyn Transport,
     client: u32,
@@ -213,8 +218,9 @@ pub fn send_sealed_ct(
     pk: &PaillierPublic,
     ct: &msg::CtMessage,
     phase: &str,
+    par: Parallel,
 ) -> Result<(f64, u64)> {
-    let sealed = HybridEnvelope::seal(rng, pk, &ct.encode())?;
+    let sealed = HybridEnvelope::seal(rng, pk, &ct.encode(), par)?;
     let wire = sealed.encode();
     let bytes = wire.len() as u64;
     let sim = Endpoint::new(net, PartyId::Client(client)).send(PartyId::Aggregator, phase, wire)?;
@@ -227,10 +233,11 @@ pub fn recv_sealed_ct(
     net: &dyn Transport,
     he: &HeContext,
     phase: &str,
+    par: Parallel,
 ) -> Result<msg::CtMessage> {
     let env = Endpoint::new(net, PartyId::LabelOwner).recv(PartyId::Aggregator, phase)?;
     let sealed = HybridEnvelope::decode(&env.payload)?;
-    msg::CtMessage::decode(&sealed.open(he.private())?)
+    msg::CtMessage::decode(&sealed.open(he.private(), par)?)
 }
 
 /// Wire form of the Paillier public key: only the modulus travels; the
@@ -244,8 +251,7 @@ fn decode_he_key(buf: &[u8]) -> Result<PaillierPublic> {
     if n.is_zero() {
         return Err(Error::Net("malformed HE key grant: zero modulus".into()));
     }
-    let n2 = n.mul(&n);
-    Ok(PaillierPublic { n, n2 })
+    Ok(PaillierPublic::new(n))
 }
 
 /// Every transport endpoint a pipeline run with `n_clients` feature
@@ -452,12 +458,14 @@ mod tests {
             dists: vec![0.1, 0.2],
         };
         clients[0]
-            .send_cluster_tuples(&net, &mut rng, &he.pk, &ct, "coreset/ct")
+            .send_cluster_tuples(&net, &mut rng, &he.pk, &ct, "coreset/ct", Parallel::new(2))
             .unwrap();
         AggregatorNode
             .route(&net, PartyId::Client(0), PartyId::LabelOwner, "coreset/ct")
             .unwrap();
-        let got = lo.receive_cluster_tuples(&net, &he, "coreset/ct").unwrap();
+        let got = lo
+            .receive_cluster_tuples(&net, &he, "coreset/ct", Parallel::serial())
+            .unwrap();
         assert_eq!(got, ct);
     }
 }

@@ -10,6 +10,7 @@ use crate::crypto::paillier::{self, PaillierPrivate, PaillierPublic};
 use crate::error::Result;
 use crate::net::msg::{self, HybridEnvelope, PsiRequest, PsiSchedule};
 use crate::net::{Endpoint, PartyId, Transport};
+use crate::util::pool::Parallel;
 use crate::util::rng::Rng;
 
 use super::sched::{schedule, Pairing, RoundSchedule, ScheduledPair};
@@ -58,7 +59,9 @@ impl Flow {
 
 /// Result allocation: the final holder seals the aligned, ordered indicator
 /// list under HE and ships it to every other client via the aggregation
-/// server, which routes ciphertext it cannot open.
+/// server, which routes ciphertext it cannot open. `par` bounds the
+/// envelope's Paillier batch workers (thread-count-invariant).
+#[allow(clippy::too_many_arguments)]
 pub fn allocate_result(
     holder: u32,
     num_clients: u32,
@@ -67,10 +70,11 @@ pub fn allocate_result(
     net: &dyn Transport,
     phase: &str,
     rng: &mut Rng,
+    par: Parallel,
 ) -> Result<Flow> {
     let mut flow = Flow::default();
     let payload = msg::encode_index_list(result);
-    let env = HybridEnvelope::seal(rng, &he.pk, &payload)?;
+    let env = HybridEnvelope::seal(rng, &he.pk, &payload, par)?;
     let wire = env.encode();
 
     // Holder uploads the sealed result to the aggregator.
@@ -103,7 +107,7 @@ pub fn allocate_result(
         let delivered = Endpoint::new(net, PartyId::Client(c))
             .recv(PartyId::Aggregator, phase)?;
         let sealed = HybridEnvelope::decode(&delivered.payload)?;
-        let opened = sealed.open(he.private())?;
+        let opened = sealed.open(he.private(), par)?;
         if msg::decode_index_list(&opened)? != result {
             return Err(crate::Error::Psi(format!(
                 "client {c}: allocated result corrupted in transit"
@@ -221,7 +225,9 @@ mod tests {
         let net = MeteredTransport::new(ChannelTransport::new(), &meter);
         let he = HeContext::for_tests();
         let mut rng = Rng::new(5);
-        let flow = allocate_result(2, 5, &[1, 2, 3], &he, &net, "alloc", &mut rng).unwrap();
+        let flow =
+            allocate_result(2, 5, &[1, 2, 3], &he, &net, "alloc", &mut rng, Parallel::new(2))
+                .unwrap();
         assert!(flow.sim_s > 0.0);
         // 1 upload + 4 forwards, both in the meter and in the engine flow.
         assert_eq!(meter.total_messages("alloc"), 5);

@@ -90,7 +90,10 @@ impl TpsiProtocol {
     ///
     /// `from`/`to` are the transport identities of sender/receiver;
     /// `phase` routes (and meters) the pair's messages; `seed` makes
-    /// blinding deterministic per run.
+    /// blinding deterministic per run; `par` bounds the workers the batch
+    /// crypto fans out over (results are bitwise invariant across worker
+    /// counts — a pure perf knob threaded from `PipelineConfig::threads`).
+    #[allow(clippy::too_many_arguments)]
     pub fn run(
         &self,
         sender: &[u64],
@@ -100,13 +103,14 @@ impl TpsiProtocol {
         to: PartyId,
         phase: &str,
         seed: u64,
+        par: crate::util::pool::Parallel,
     ) -> Result<TpsiOutcome> {
         match self {
             TpsiProtocol::Rsa(cfg) => {
-                rsa_psi::run(cfg, sender, receiver, net, from, to, phase, seed)
+                rsa_psi::run(cfg, sender, receiver, net, from, to, phase, seed, par)
             }
             TpsiProtocol::Ot(cfg) => {
-                ot_psi::run(cfg, sender, receiver, net, from, to, phase, seed)
+                ot_psi::run(cfg, sender, receiver, net, from, to, phase, seed, par)
             }
         }
     }

@@ -28,6 +28,7 @@
 use crate::crypto::prf::Prf;
 use crate::error::Result;
 use crate::net::{msg, Endpoint, PartyId, Transport};
+use crate::util::pool::Parallel;
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -57,7 +58,9 @@ impl Default for OtPsiConfig {
     }
 }
 
-/// Execute the protocol; intersection lands at the receiver.
+/// Execute the protocol; intersection lands at the receiver. `par` bounds
+/// the workers the PRF evaluation batches fan out over (pure perf knob;
+/// results are bitwise invariant across worker counts).
 #[allow(clippy::too_many_arguments)]
 pub fn run(
     cfg: &OtPsiConfig,
@@ -68,6 +71,7 @@ pub fn run(
     receiver_id: PartyId,
     phase: &str,
     seed: u64,
+    par: Parallel,
 ) -> Result<TpsiOutcome> {
     let sw = Stopwatch::start();
     let mut rng = Rng::new(seed ^ 0x07A9_C3D1_55B2_E600);
@@ -93,10 +97,10 @@ pub fn run(
     sim_s += rcv.send_sized(sender_id, phase, Vec::new(), recv_bytes)?;
     snd.recv(receiver_id, phase)?;
     cost.bytes_r2s += recv_bytes;
-    let recv_eval = prf.eval_batch(receiver);
+    let recv_eval = prf.eval_batch_par(receiver, par);
 
     // --- sender transmits its mapped set ---------------------------------
-    let sender_eval = prf.eval_batch(sender);
+    let sender_eval = prf.eval_batch_par(sender, par);
     let mapped: Vec<Vec<u8>> = sender_eval.iter().map(|d| d.to_vec()).collect();
     let wire = msg::encode_digest_batch(&mapped);
     // Declare the modelled per-element expansion rather than the raw digest
@@ -148,6 +152,7 @@ mod tests {
             PartyId::Client(1),
             "psi",
             3,
+            Parallel::new(2),
         )
         .unwrap()
     }
@@ -206,6 +211,7 @@ mod tests {
             PartyId::Client(1),
             "psi",
             8,
+            Parallel::serial(),
         )
         .unwrap();
         assert_eq!(meter.total_bytes("psi"), out.cost.total_bytes());

@@ -6,6 +6,7 @@
 
 use crate::error::Result;
 use crate::net::{PartyId, Transport};
+use crate::util::pool::Parallel;
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -15,12 +16,14 @@ use super::{MpsiReport, RoundReport, TpsiProtocol};
 
 /// Run Path-MPSI. The running intersection moves down the chain; each hop
 /// makes the next client the receiver (it stores the new result), matching
-/// the paper's description of the path topology.
+/// the paper's description of the path topology. The hops are strictly
+/// sequential, so each hop's batch crypto gets the whole `par` budget.
 pub fn run_path(
     sets: &[Vec<u64>],
     protocol: &TpsiProtocol,
     seed: u64,
     net: &dyn Transport,
+    par: Parallel,
     he: &HeContext,
 ) -> Result<MpsiReport> {
     assert!(!sets.is_empty());
@@ -43,6 +46,7 @@ pub fn run_path(
             PartyId::Client(next as u32),
             &phase,
             derive_seed(seed, next as u32, 0),
+            par,
         )?;
         let inter = out.intersection;
         // Strictly sequential chain: every hop's compute + wire adds up.
@@ -61,8 +65,16 @@ pub fn run_path(
 
     result.sort_unstable();
     let mut rng = Rng::new(seed ^ 0xBEEF);
-    let alloc =
-        allocate_result(holder as u32, m as u32, &result, he, net, "psi/alloc", &mut rng)?;
+    let alloc = allocate_result(
+        holder as u32,
+        m as u32,
+        &result,
+        he,
+        net,
+        "psi/alloc",
+        &mut rng,
+        par,
+    )?;
     sim_total += alloc.sim_s;
     total_bytes += alloc.bytes;
 
@@ -85,7 +97,7 @@ mod tests {
         let meter = Meter::new(NetConfig::lan_10gbps());
         let net = MeteredTransport::new(ChannelTransport::new(), &meter);
         let he = HeContext::for_tests();
-        run_path(sets, &TpsiProtocol::ot(), 5, &net, &he).unwrap()
+        run_path(sets, &TpsiProtocol::ot(), 5, &net, Parallel::new(2), &he).unwrap()
     }
 
     #[test]
@@ -111,7 +123,7 @@ mod tests {
         let meter = Meter::new(NetConfig::lan_10gbps());
         let net = MeteredTransport::new(ChannelTransport::new(), &meter);
         let he = HeContext::for_tests();
-        let r = run_path(&sets, &TpsiProtocol::ot(), 5, &net, &he).unwrap();
+        let r = run_path(&sets, &TpsiProtocol::ot(), 5, &net, Parallel::serial(), &he).unwrap();
         let hop_sum: f64 = r.rounds.iter().map(|x| x.sim_s).sum();
         // Total sim = hops + allocation; hops dominate and are summed.
         assert!(r.sim_s >= hop_sum);

@@ -21,6 +21,7 @@
 use crate::crypto::rsa::{signature_key, RsaKeyPair, RsaPublic};
 use crate::error::Result;
 use crate::net::{msg, Endpoint, PartyId, Transport};
+use crate::util::pool::Parallel;
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -44,6 +45,10 @@ impl Default for RsaPsiConfig {
 }
 
 /// Execute the protocol. See module docs for the message flow.
+///
+/// `par` bounds the workers the batch crypto (blinding, CRT signing) may
+/// fan out over — results are bitwise invariant across worker counts, so
+/// it is a pure perf knob (threaded down from `PipelineConfig::threads`).
 #[allow(clippy::too_many_arguments)]
 pub fn run(
     cfg: &RsaPsiConfig,
@@ -54,6 +59,7 @@ pub fn run(
     receiver_id: PartyId,
     phase: &str,
     seed: u64,
+    par: Parallel,
 ) -> Result<TpsiOutcome> {
     let sw = Stopwatch::start();
     let mut rng = Rng::new(seed ^ 0x5A5A_1234);
@@ -70,24 +76,26 @@ pub fn run(
 
     // --- receiver: rebuild the key from the wire, blind, transmit --------
     let (n, e) = msg::decode_public_key(&rcv.recv(sender_id, phase)?.payload)?;
-    let pk = RsaPublic { n, e };
+    if n.is_zero() || e.is_zero() {
+        return Err(crate::Error::Net("malformed RSA public key on wire".into()));
+    }
+    let pk = RsaPublic::new(n, e);
     let width = pk.element_bytes();
-    let blinded: Vec<_> = receiver
-        .iter()
-        .map(|&x| pk.blind(&mut rng, &cfg.domain, x))
-        .collect();
-    let blinded_vals: Vec<_> = blinded.iter().map(|b| b.value.clone()).collect();
-    let blinded_wire = msg::encode_bigint_batch(&blinded_vals, width);
+    let blinded = pk.blind_batch(&mut rng, &cfg.domain, receiver, par);
+    // Encode straight from the blinded values (no per-element clones).
+    let blinded_wire =
+        msg::encode_bigint_batch(blinded.iter().map(|b| &b.value), width);
     cost.bytes_r2s += blinded_wire.len() as u64;
     sim_s += rcv.send(sender_id, phase, blinded_wire)?;
 
     // --- sender: blind-sign receiver's elements; sign own set -----------
     let recv_blinded =
         msg::decode_bigint_batch(&snd.recv(receiver_id, phase)?.payload)?;
-    let blind_sigs: Vec<_> = recv_blinded.iter().map(|v| kp.sign_raw(v)).collect();
-    let own_keys: Vec<Vec<u8>> = sender
+    let blind_sigs = kp.sign_batch(&recv_blinded, par);
+    let own_keys: Vec<Vec<u8>> = kp
+        .sign_indicator_batch(&cfg.domain, sender, par)
         .iter()
-        .map(|&x| signature_key(&kp.sign_indicator(&cfg.domain, x)).to_vec())
+        .map(|sig| signature_key(sig).to_vec())
         .collect();
     // One logical message: the signed batch plus the sender's own keys.
     let mut reply = crate::util::codec::Encoder::new();
@@ -150,6 +158,7 @@ mod tests {
             PartyId::Client(1),
             "psi",
             42,
+            Parallel::new(2),
         )
         .unwrap()
     }
@@ -206,6 +215,7 @@ mod tests {
             PartyId::Client(1),
             "psi",
             7,
+            Parallel::serial(),
         )
         .unwrap();
         assert_eq!(meter.total_bytes("psi"), out.cost.total_bytes());
@@ -223,6 +233,7 @@ mod tests {
             PartyId::Client(1),
             "psi",
             9,
+            Parallel::serial(),
         )
         .unwrap();
         assert_eq!(net.pending(), 0, "protocol consumed every message");
@@ -234,5 +245,35 @@ mod tests {
         let b = run_pair(&[1, 2, 3], &[3, 4]);
         assert_eq!(a.intersection, b.intersection);
         assert_eq!(a.cost.total_bytes(), b.cost.total_bytes());
+    }
+
+    #[test]
+    fn pair_is_bitwise_invariant_across_thread_budgets() {
+        // The batch crypto plane is a pure perf knob: the pair's
+        // intersection and its exact wire traffic are identical at any
+        // worker count.
+        let s: Vec<u64> = (0..40).collect();
+        let r: Vec<u64> = (20..60).collect();
+        let run_with = |threads: usize| {
+            let meter = Meter::new(NetConfig::lan_10gbps());
+            let net = MeteredTransport::new(ChannelTransport::new(), &meter);
+            let out = run(
+                &fast_cfg(),
+                &s,
+                &r,
+                &net,
+                PartyId::Client(0),
+                PartyId::Client(1),
+                "psi",
+                13,
+                Parallel::new(threads),
+            )
+            .unwrap();
+            (out.intersection, out.cost.total_bytes(), meter.total_bytes("psi"))
+        };
+        let serial = run_with(1);
+        for threads in [2usize, 4] {
+            assert_eq!(run_with(threads), serial, "threads={threads}");
+        }
     }
 }

@@ -9,6 +9,7 @@
 
 use crate::error::Result;
 use crate::net::{PartyId, Transport};
+use crate::util::pool::Parallel;
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -16,13 +17,16 @@ use super::common::{allocate_result, HeContext};
 use super::tree::derive_seed;
 use super::{MpsiReport, RoundReport, TpsiProtocol};
 
-/// Run Star-MPSI with `center` as the hub (client index).
+/// Run Star-MPSI with `center` as the hub (client index). Spoke TPSIs
+/// serialize at the center, so each spoke's batch crypto gets the whole
+/// `par` budget.
 pub fn run_star(
     sets: &[Vec<u64>],
     protocol: &TpsiProtocol,
     center: usize,
     seed: u64,
     net: &dyn Transport,
+    par: Parallel,
     he: &HeContext,
 ) -> Result<MpsiReport> {
     assert!(!sets.is_empty());
@@ -49,6 +53,7 @@ pub fn run_star(
             PartyId::Client(center as u32),
             &phase,
             derive_seed(seed, spoke as u32, 1),
+            par,
         )?;
         round.pairs.push((spoke as u32, center as u32, out.intersection.len()));
         round.bytes += out.cost.total_bytes();
@@ -71,6 +76,7 @@ pub fn run_star(
         net,
         "psi/alloc",
         &mut rng,
+        par,
     )?;
     sim_total += alloc.sim_s;
     total_bytes += alloc.bytes;
@@ -94,7 +100,7 @@ mod tests {
         let meter = Meter::new(NetConfig::lan_10gbps());
         let net = MeteredTransport::new(ChannelTransport::new(), &meter);
         let he = HeContext::for_tests();
-        run_star(sets, &TpsiProtocol::ot(), center, 9, &net, &he).unwrap()
+        run_star(sets, &TpsiProtocol::ot(), center, 9, &net, Parallel::new(2), &he).unwrap()
     }
 
     #[test]
@@ -128,7 +134,7 @@ mod tests {
         let meter = Meter::new(NetConfig::lan_10gbps());
         let net = MeteredTransport::new(ChannelTransport::new(), &meter);
         let he = HeContext::for_tests();
-        run_star(&sets, &TpsiProtocol::ot(), 0, 9, &net, &he).unwrap();
+        run_star(&sets, &TpsiProtocol::ot(), 0, 9, &net, Parallel::serial(), &he).unwrap();
         let center_bytes = meter.party_bytes(PartyId::Client(0), "psi/spoke");
         for spoke in 1..5u32 {
             let b = meter.party_bytes(PartyId::Client(spoke), "psi/spoke");

@@ -80,7 +80,14 @@ pub fn run_tree(
         )?;
         total_bytes += sched_flow.bytes;
 
-        // Launch every pair concurrently on scoped workers.
+        // Launch every pair concurrently on scoped workers. The budget
+        // splits across the two parallel levels — pair fan-out takes
+        // `outer` workers, each pair's batch crypto gets the leftover —
+        // so they compose to ~par.threads() instead of multiplying.
+        // Early rounds parallelize across pairs; the final rounds (few
+        // pairs) recover the idle workers inside the pair's crypto plane.
+        let outer = par.threads().min(plan.pairs.len().max(1));
+        let inner = Parallel::new((par.threads() / outer).max(1));
         let jobs: Vec<_> = plan
             .pairs
             .iter()
@@ -101,6 +108,7 @@ pub fn run_tree(
                         crate::net::PartyId::Client(r_id),
                         &phase,
                         seed,
+                        inner,
                     )?;
                     Ok((s_id, r_id, out))
                 }
@@ -141,7 +149,8 @@ pub fn run_tree(
     let mut result = current[active[0]].clone();
     result.sort_unstable();
     let mut rng = Rng::new(cfg.seed ^ 0xEE);
-    let alloc = allocate_result(holder, m as u32, &result, he, net, "psi/alloc", &mut rng)?;
+    let alloc =
+        allocate_result(holder, m as u32, &result, he, net, "psi/alloc", &mut rng, par)?;
     sim_total += alloc.sim_s;
     total_bytes += alloc.bytes;
 
@@ -333,10 +342,14 @@ mod tests {
         let tree = run_tree(&sets, &cfg, &net, Parallel::serial(), &he).unwrap();
         let meter = Meter::new(NetConfig::lan_10gbps());
         let net = MeteredTransport::new(ChannelTransport::new(), &meter);
-        let path = crate::psi::path::run_path(&sets, &fast_rsa(), 1, &net, &he).unwrap();
+        let path =
+            crate::psi::path::run_path(&sets, &fast_rsa(), 1, &net, Parallel::serial(), &he)
+                .unwrap();
         let meter = Meter::new(NetConfig::lan_10gbps());
         let net = MeteredTransport::new(ChannelTransport::new(), &meter);
-        let star = crate::psi::star::run_star(&sets, &fast_rsa(), 0, 1, &net, &he).unwrap();
+        let star =
+            crate::psi::star::run_star(&sets, &fast_rsa(), 0, 1, &net, Parallel::serial(), &he)
+                .unwrap();
         assert!(
             tree.sim_s < path.sim_s * 0.7,
             "tree {} vs path {}",

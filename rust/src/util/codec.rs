@@ -81,9 +81,23 @@ impl Encoder {
 
     /// Nested variable-length byte blobs (e.g. HE ciphertexts).
     pub fn blob_list(&mut self, v: &[Vec<u8>]) -> &mut Self {
-        self.u64(v.len() as u64);
-        for b in v {
-            self.bytes(b);
+        self.blob_list_iter(v.iter())
+    }
+
+    /// Same wire format as [`Encoder::blob_list`] from any exact-size
+    /// iterator of byte buffers — the one framing implementation, shared
+    /// by callers that produce blobs on the fly (no intermediate
+    /// `Vec<Vec<u8>>`).
+    pub fn blob_list_iter<I>(&mut self, blobs: I) -> &mut Self
+    where
+        I: IntoIterator,
+        I::Item: AsRef<[u8]>,
+        I::IntoIter: ExactSizeIterator,
+    {
+        let it = blobs.into_iter();
+        self.u64(it.len() as u64);
+        for b in it {
+            self.bytes(b.as_ref());
         }
         self
     }
@@ -250,6 +264,18 @@ mod tests {
         assert_eq!(d.u32_slice().unwrap(), vec![9]);
         assert_eq!(d.blob_list().unwrap(), vec![vec![1, 2], vec![], vec![3]]);
         d.finish().unwrap();
+    }
+
+    #[test]
+    fn blob_list_iter_matches_blob_list() {
+        // One framing implementation: the slice and iterator forms must
+        // produce identical bytes.
+        let blobs = vec![vec![1u8, 2], vec![], vec![3, 4, 5]];
+        let mut a = Encoder::new();
+        a.blob_list(&blobs);
+        let mut b = Encoder::new();
+        b.blob_list_iter(blobs.iter().map(|v| v.clone()));
+        assert_eq!(a.finish(), b.finish());
     }
 
     #[test]

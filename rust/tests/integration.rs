@@ -54,11 +54,13 @@ fn all_mpsi_engines_match_oracle_property() {
                     }
                 }
                 let net = ChannelTransport::new();
-                if run_path(sets, &protocol, 3, &net, &he).unwrap().intersection != oracle {
+                if run_path(sets, &protocol, 3, &net, par, &he).unwrap().intersection != oracle {
                     return false;
                 }
                 let net = ChannelTransport::new();
-                if run_star(sets, &protocol, 0, 3, &net, &he).unwrap().intersection != oracle {
+                if run_star(sets, &protocol, 0, 3, &net, par, &he).unwrap().intersection
+                    != oracle
+                {
                     return false;
                 }
             }

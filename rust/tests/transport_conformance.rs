@@ -247,10 +247,10 @@ fn engines_error_on_dropped_frames() {
     assert!(run_tree(&sets, &cfg, &net, Parallel::serial(), &he).is_err());
 
     let net = lossy();
-    assert!(run_path(&sets, &fast_rsa(), 5, &net, &he).is_err());
+    assert!(run_path(&sets, &fast_rsa(), 5, &net, Parallel::serial(), &he).is_err());
 
     let net = lossy();
-    assert!(run_star(&sets, &fast_rsa(), 0, 5, &net, &he).is_err());
+    assert!(run_star(&sets, &fast_rsa(), 0, 5, &net, Parallel::serial(), &he).is_err());
 }
 
 #[test]
@@ -260,12 +260,16 @@ fn primitives_error_on_dropped_frames() {
         Fault::Drop,
     );
     let cfg = RsaPsiConfig { modulus_bits: 256, domain: "fault".into() };
-    assert!(rsa_psi::run(&cfg, &[1, 2], &[2, 3], &lossy, A, B, "psi", 7).is_err());
+    assert!(
+        rsa_psi::run(&cfg, &[1, 2], &[2, 3], &lossy, A, B, "psi", 7, Parallel::serial()).is_err()
+    );
     let lossy = FaultTransport::new(
         ChannelTransport::with_timeout(Duration::from_millis(100)),
         Fault::Drop,
     );
-    assert!(TpsiProtocol::ot().run(&[1, 2], &[2, 3], &lossy, A, B, "psi", 7).is_err());
+    assert!(TpsiProtocol::ot()
+        .run(&[1, 2], &[2, 3], &lossy, A, B, "psi", 7, Parallel::serial())
+        .is_err());
 }
 
 #[test]
@@ -366,5 +370,7 @@ fn tcp_wire_with_dropped_frames_errors_too() {
     let tcp = TcpTransportBuilder::with_config(cfg).hosts([A, B]).build().unwrap();
     let lossy = FaultTransport::new(&tcp as &dyn Transport, Fault::Drop);
     let rsa = RsaPsiConfig { modulus_bits: 256, domain: "fault".into() };
-    assert!(rsa_psi::run(&rsa, &[1, 2], &[2, 3], &lossy, A, B, "psi", 7).is_err());
+    assert!(
+        rsa_psi::run(&rsa, &[1, 2], &[2, 3], &lossy, A, B, "psi", 7, Parallel::serial()).is_err()
+    );
 }
