@@ -37,7 +37,7 @@ fn quality(
     let mut cfg = TrainConfig::new(model);
     cfg.lr = 0.05;
     cfg.max_epochs = epochs;
-    let (m, _) = trainer::train(&phases, &sub, &y, w, task, &cfg, &meter).unwrap();
+    let (m, _) = trainer::train_local(&phases, &sub, &y, w, task, &cfg, &meter).unwrap();
     m.evaluate(&phases, test_slices, te_y, task).unwrap()
 }
 

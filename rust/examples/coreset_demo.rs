@@ -32,7 +32,7 @@ fn train_quality(
     let mut cfg = TrainConfig::new(model);
     cfg.lr = 0.05;
     cfg.max_epochs = 80;
-    let (m, _) = trainer::train(&phases, slices, y, w, task, &cfg, &meter).unwrap();
+    let (m, _) = trainer::train_local(&phases, slices, y, w, task, &cfg, &meter).unwrap();
     m.evaluate(&phases, test_slices, test_y, task).unwrap()
 }
 

@@ -10,7 +10,10 @@
 //! relays every frame that arrives for its client back to the
 //! coordinator's hub listener ([`TcpTransportBuilder::forward_to`]) — so
 //! all protocol traffic addressed to a client genuinely crosses into that
-//! client's process and back over the kernel TCP stack. Protocol *compute*
+//! client's process and back over the kernel TCP stack: alignment
+//! schedules, coreset ciphertext, and (since the training plane became a
+//! party protocol) every per-batch `train/grad` activation-gradient
+//! tensor and `train/loss` decision. Protocol *compute*
 //! still executes in the coordinator (the engines interleave both sides
 //! of every exchange); moving party programs out-of-process is the next
 //! step on the ROADMAP, and this module gives it the process + wire

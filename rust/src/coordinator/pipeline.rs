@@ -2,12 +2,13 @@
 //! Cluster-Coreset → weighted SplitNN training → test evaluation.
 //!
 //! This is the code path behind every Table 2 cell and the e2e examples.
-//! All alignment- and coreset-phase messages travel over a
-//! [`MeteredTransport`]-wrapped [`ChannelTransport`], so byte accounting
-//! happens on delivery. Reported time separates real compute wall-clock
-//! from simulated network transfer time; their sum is the comparable
-//! "Time (s)" figure (the paper's testbed folded both into one wall
-//! clock).
+//! All alignment-, coreset-, **and training-phase** messages travel over
+//! a [`MeteredTransport`]-wrapped wire, so byte accounting happens on
+//! delivery — Table 2's "Time (s)" training column is measured protocol
+//! traffic, not a simulation. Reported time separates real compute
+//! wall-clock from simulated network transfer time; their sum is the
+//! comparable "Time (s)" figure (the paper's testbed folded both into
+//! one wall clock).
 //!
 //! Prefer the builder API in [`crate::coordinator::session`]
 //! (`Pipeline::builder(variant)...build()` → `Session::run`);
@@ -28,7 +29,8 @@ use crate::psi::tree::{run_tree, TreeMpsiConfig};
 use crate::psi::{path::run_path, star::run_star, MpsiReport, TpsiProtocol};
 use crate::runtime::phases::XlaPhases;
 use crate::splitnn::native::NativePhases;
-use crate::splitnn::trainer::{self, ModelKind, TrainConfig, TrainReport};
+use crate::splitnn::protocol::train_over;
+use crate::splitnn::trainer::{ModelKind, TrainConfig, TrainReport};
 use crate::splitnn::ModelPhases;
 use crate::util::pool::Parallel;
 use crate::util::rng::Rng;
@@ -85,6 +87,18 @@ pub enum Downstream {
     Train(ModelKind),
     /// KNN with k neighbors (no training).
     Knn(usize),
+}
+
+impl Downstream {
+    /// Parse the `--model` CLI flag (`lr|mlp|linreg|knn`); `k` is the
+    /// neighbor count the KNN evaluator uses. The single dispatch point
+    /// shared by the binary and the examples.
+    pub fn from_flag(model: &str, k: usize) -> Result<Downstream> {
+        match model {
+            "knn" => Ok(Downstream::Knn(k)),
+            m => Ok(Downstream::Train(ModelKind::from_name(m)?)),
+        }
+    }
 }
 
 /// Phase-execution backend.
@@ -228,6 +242,13 @@ impl PipelineReport {
     pub fn total_time_s(&self) -> f64 {
         self.wall_s + self.sim_s
     }
+
+    /// Bytes the training protocol put on the wire (`train/*` phases) —
+    /// under `run --distributed` this is traffic that really crossed OS
+    /// process boundaries.
+    pub fn train_wire_bytes(&self) -> u64 {
+        self.train.as_ref().map_or(0, |t| t.comm_bytes)
+    }
 }
 
 /// Run the full lifecycle on a train/test split, charging the caller's
@@ -247,8 +268,8 @@ pub fn run_pipeline(
 }
 
 /// The pipeline proper, over any (metered) wire. `net` carries every
-/// protocol message; `meter` is the same accounting the wire charges
-/// (training/KNN tensor traffic still charges it directly).
+/// protocol message — alignment, coreset, and training alike (only the
+/// KNN evaluator's distance uploads still charge `meter` directly).
 pub(crate) fn run_over_transport(
     train_ds: &Dataset,
     test_ds: &Dataset,
@@ -350,14 +371,17 @@ pub(crate) fn run_over_transport(
 
     let (train_report, quality) = match cfg.downstream {
         Downstream::Train(_) => {
-            let (model, rep) = trainer::train(
+            // The training plane is a party protocol like alignment and
+            // coreset: every activation/gradient tensor travels `net` as
+            // an envelope (metered on delivery, distributable over TCP).
+            let (model, rep) = train_over(
                 phases.as_ref(),
+                net,
                 &train_slices,
                 &train_y,
                 &train_w,
                 train_ds.task,
                 &cfg.train,
-                meter,
             )?;
             let q = model.evaluate(phases.as_ref(), &test_slices, &test_ds.y, test_ds.task)?;
             (Some(rep), q)
@@ -451,6 +475,28 @@ mod tests {
         assert!(cs.reduction(rep.n_aligned) > 0.5, "RI-like compresses well");
         assert!(rep.quality > 0.9, "LR on near-separable: {}", rep.quality);
         assert!(rep.total_time_s() > 0.0);
+        // Training is a wire protocol now: the engine's byte bookkeeping
+        // equals what the metering middleware charged under train/*.
+        assert!(rep.train_wire_bytes() > 0);
+        assert_eq!(rep.train_wire_bytes(), meter.total_bytes("train/"));
+    }
+
+    #[test]
+    fn downstream_parses_model_flags() {
+        assert_eq!(
+            Downstream::from_flag("lr", 5).unwrap(),
+            Downstream::Train(ModelKind::Lr)
+        );
+        assert_eq!(
+            Downstream::from_flag("mlp", 5).unwrap(),
+            Downstream::Train(ModelKind::Mlp)
+        );
+        assert_eq!(
+            Downstream::from_flag("linreg", 5).unwrap(),
+            Downstream::Train(ModelKind::LinReg)
+        );
+        assert_eq!(Downstream::from_flag("knn", 7).unwrap(), Downstream::Knn(7));
+        assert!(Downstream::from_flag("tree", 5).is_err());
     }
 
     #[test]

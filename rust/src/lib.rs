@@ -22,8 +22,11 @@
 //! every protocol message an envelope on the transport) → **coreset**
 //! (per-client K-Means, HE-sealed cluster tuples routed via the
 //! aggregator, per-(CT,label) selection, re-weighting) → **train**
-//! (weighted SplitNN on the coreset, executed through PJRT-compiled XLA
-//! artifacts).
+//! (weighted SplitNN as a party protocol: activations, gradients, and
+//! loss control cross the same transport under `train/fwd`,
+//! `train/grad`, `train/loss` — [`splitnn::protocol::train_over`], with
+//! [`splitnn::trainer::train_local`] as the bitwise-pinned in-process
+//! reference).
 
 pub mod bench;
 pub mod config;

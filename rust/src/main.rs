@@ -126,13 +126,7 @@ fn cmd_run(cli: &Cli) -> Result<()> {
         "starall" => FrameworkVariant::StarAll,
         v => return Err(treecss::Error::Config(format!("unknown variant {v:?}"))),
     };
-    let downstream = match model.as_str() {
-        "lr" => Downstream::Train(ModelKind::Lr),
-        "mlp" => Downstream::Train(ModelKind::Mlp),
-        "linreg" => Downstream::Train(ModelKind::LinReg),
-        "knn" => Downstream::Knn(cli.opt_parse("k", 5)?),
-        other => return Err(treecss::Error::Config(format!("unknown model {other:?}"))),
-    };
+    let downstream = Downstream::from_flag(&model, cli.opt_parse("k", 5)?)?;
 
     let mut rng = Rng::new(seed);
     let mut ds = ds_kind.generate(scale, &mut rng);
@@ -209,6 +203,10 @@ fn cmd_run(cli: &Cli) -> Result<()> {
             t.epochs,
             t.converged,
             t.epoch_losses.last().unwrap_or(&f64::NAN)
+        );
+        println!(
+            "train wire      : {} over train/fwd+grad+loss envelopes",
+            bench::fmt_bytes(rep.train_wire_bytes())
         );
     }
     let quality_name = if matches!(downstream, Downstream::Train(ModelKind::LinReg)) {

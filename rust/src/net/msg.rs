@@ -342,6 +342,38 @@ impl TensorMsg {
     }
 }
 
+/// Training control message (`train/loss` phase): the label owner's
+/// per-batch loss and, at epoch boundaries, its convergence decision —
+/// relayed by the aggregation server to every client so all parties stop
+/// the same step. The loss travels as raw f64 bits so the transport path
+/// reports the exact series the in-process reference loop computes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrainCtrl {
+    pub loss: f64,
+    pub stop: bool,
+}
+
+impl TrainCtrl {
+    /// Encoded size (constant — what the reference loop charges).
+    pub const WIRE_BYTES: u64 = 8 + 1;
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        e.u64(self.loss.to_bits()).u8(self.stop as u8);
+        e.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut d = Decoder::new(buf);
+        let m = TrainCtrl {
+            loss: f64::from_bits(d.u64().map_err(|e| Error::Net(e.to_string()))?),
+            stop: d.u8().map_err(|e| Error::Net(e.to_string()))? != 0,
+        };
+        d.finish().map_err(|e| Error::Net(e.to_string()))?;
+        Ok(m)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -448,6 +480,19 @@ mod tests {
         let buf = t.encode();
         assert_eq!(buf.len() as u64, TensorMsg::wire_bytes(2, 3));
         assert_eq!(TensorMsg::decode(&buf).unwrap(), t);
+    }
+
+    #[test]
+    fn train_ctrl_roundtrip_and_wire_size() {
+        for stop in [false, true] {
+            let m = TrainCtrl { loss: 0.123456789f64, stop };
+            let buf = m.encode();
+            assert_eq!(buf.len() as u64, TrainCtrl::WIRE_BYTES);
+            assert_eq!(TrainCtrl::decode(&buf).unwrap(), m);
+        }
+        // Loss travels as raw bits: NaN and negative zero survive.
+        let odd = TrainCtrl { loss: -0.0, stop: false };
+        assert_eq!(TrainCtrl::decode(&odd.encode()).unwrap().loss.to_bits(), (-0.0f64).to_bits());
     }
 
     #[test]
@@ -592,6 +637,17 @@ mod tests {
             |m| {
                 TensorMsg::decode(&m.encode()).unwrap() == *m
                     && assert_framing(&m.encode(), TensorMsg::decode)
+            },
+        );
+    }
+
+    #[test]
+    fn train_ctrl_property() {
+        check::forall_default(
+            |r| TrainCtrl { loss: (r.next_u64() as f64) / 3.0, stop: r.below(2) == 1 },
+            |m| {
+                TrainCtrl::decode(&m.encode()).unwrap() == *m
+                    && assert_framing(&m.encode(), TrainCtrl::decode)
             },
         );
     }

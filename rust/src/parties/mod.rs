@@ -9,7 +9,11 @@
 //! the in-process [`crate::net::ChannelTransport`] substituting for gRPC
 //! (DESIGN.md); the socket-backed [`crate::net::TcpTransport`] drops in
 //! without touching the nodes, and [`roster`] names the full endpoint set
-//! a pipeline run binds.
+//! a pipeline run binds. The SplitNN training halves of these parties
+//! live in [`training`] — bottom models, top model, and loss each driven
+//! as a wire role.
+
+pub mod training;
 
 use crate::crypto::paillier::PaillierPublic;
 use crate::data::{Dataset, Matrix, Task, VerticalPartition};

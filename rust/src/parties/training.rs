@@ -1,0 +1,562 @@
+//! Training-plane party roles (paper §3 procedure): the per-role halves
+//! of the SplitNN mini-batch step, each moving real
+//! [`Envelope`](crate::net::Envelope)s over the [`Transport`].
+//!
+//! Three roles split the paper's four steps:
+//!
+//! * [`ClientTrainer`] — client m's bottom model: forward on its feature
+//!   slice, activations shipped under `train/fwd`; activation gradients
+//!   received under `train/grad` drive the bottom backward + Adam update.
+//! * [`AggregatorTrainer`] — the aggregation server's top model: merges
+//!   the per-client activations (hcat for the MLP, summed partial logits
+//!   for the scalar heads), runs the top forward, ships the merged output
+//!   to the label owner, then backpropagates the returned loss gradient
+//!   and ships each client its `dhcat` slice.
+//! * [`LabelOwnerTrainer`] — loss + metrics: computes the weighted loss
+//!   gradient from the received outputs (labels and weights never leave
+//!   it), ships it back under `train/grad` with a [`TrainCtrl`] loss
+//!   record under `train/loss`, and owns the paper's §5.1 convergence
+//!   verdict at every epoch boundary.
+//!
+//! The roles are driven by [`crate::splitnn::protocol::train_over`]; batch
+//! membership derives from the session training seed every party shares
+//! at setup, so no index lists cross the wire. Every decoded tensor is
+//! shape-checked against the expected batch geometry — a truncated or
+//! forged frame surfaces as `Err`, never a panic.
+
+use crate::data::Matrix;
+use crate::error::{Error, Result};
+use crate::ml::adam::Adam;
+use crate::net::msg::{TensorMsg, TrainCtrl};
+use crate::net::{Endpoint, PartyId, Transport};
+use crate::splitnn::trainer::{converged, ModelKind, TrainConfig, BOTTOM_WIDTH};
+use crate::splitnn::{ModelPhases, ScalarLoss, TopMlpParams};
+
+/// Phase tag for forward-direction tensors (client activations, merged
+/// top-model outputs).
+pub const PHASE_FWD: &str = "train/fwd";
+/// Phase tag for backward-direction tensors (loss gradients, per-client
+/// activation gradients).
+pub const PHASE_GRAD: &str = "train/grad";
+/// Phase tag for [`TrainCtrl`] loss records and epoch stop decisions.
+pub const PHASE_LOSS: &str = "train/loss";
+
+/// (simulated seconds, wire bytes) a role method put on the wire.
+pub type SendCost = (f64, u64);
+
+fn add(acc: &mut SendCost, sim: f64, bytes: u64) {
+    acc.0 += sim;
+    acc.1 += bytes;
+}
+
+/// Send one tensor and account its exact encoded size.
+fn send_tensor(
+    ep: &Endpoint<'_>,
+    to: PartyId,
+    phase: &str,
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+    acc: &mut SendCost,
+) -> Result<()> {
+    let wire = TensorMsg::new(rows, cols, data).encode();
+    let bytes = wire.len() as u64;
+    let sim = ep.send(to, phase, wire)?;
+    add(acc, sim, bytes);
+    Ok(())
+}
+
+/// Receive one tensor and validate its batch geometry.
+fn recv_tensor(
+    ep: &Endpoint<'_>,
+    from: PartyId,
+    phase: &str,
+    rows: usize,
+    cols: usize,
+) -> Result<Matrix> {
+    let env = ep.recv(from, phase)?;
+    let t = TensorMsg::decode(&env.payload)?;
+    if t.rows as usize != rows || t.cols as usize != cols {
+        return Err(Error::Net(format!(
+            "{phase}: tensor {}x{} from {from}, want {rows}x{cols}",
+            t.rows, t.cols
+        )));
+    }
+    Matrix::from_vec(rows, cols, t.data)
+}
+
+/// Client m's training role: its aligned feature slice plus the bottom
+/// model it owns and updates.
+pub struct ClientTrainer<'a> {
+    id: u32,
+    kind: ModelKind,
+    x: &'a Matrix,
+    bottom: (Matrix, Vec<f32>),
+    opt_w: Adam,
+    opt_b: Adam,
+    /// Batch slice retained between the forward and backward halves.
+    batch_x: Option<Matrix>,
+}
+
+impl<'a> ClientTrainer<'a> {
+    pub fn new(
+        id: u32,
+        kind: ModelKind,
+        x: &'a Matrix,
+        bottom: (Matrix, Vec<f32>),
+        lr: f32,
+    ) -> Self {
+        let opt_w = Adam::new(bottom.0.rows() * bottom.0.cols(), lr);
+        let opt_b = Adam::new(bottom.1.len(), lr);
+        ClientTrainer { id, kind, x, bottom, opt_w, opt_b, batch_x: None }
+    }
+
+    pub fn party(&self) -> PartyId {
+        PartyId::Client(self.id)
+    }
+
+    /// Step 1: bottom forward on this batch; ship the activations to the
+    /// aggregation server.
+    pub fn forward_batch(
+        &mut self,
+        phases: &dyn ModelPhases,
+        net: &dyn Transport,
+        rows: &[usize],
+        acc: &mut SendCost,
+    ) -> Result<()> {
+        let xb = self.x.select_rows(rows);
+        let (w, b) = &self.bottom;
+        let act = match self.kind {
+            ModelKind::Mlp => phases.bottom_mlp_fwd(&xb, w, b)?,
+            ModelKind::Lr | ModelKind::LinReg => phases.bottom_lin_fwd(&xb, w, b)?,
+        };
+        let ep = Endpoint::new(net, self.party());
+        send_tensor(
+            &ep,
+            PartyId::Aggregator,
+            PHASE_FWD,
+            act.rows(),
+            act.cols(),
+            act.into_vec(),
+            acc,
+        )?;
+        self.batch_x = Some(xb);
+        Ok(())
+    }
+
+    /// Step 4b: receive this client's activation-gradient slice, run the
+    /// bottom backward, and apply the Adam update.
+    pub fn backward_batch(
+        &mut self,
+        phases: &dyn ModelPhases,
+        net: &dyn Transport,
+    ) -> Result<()> {
+        let xb = self
+            .batch_x
+            .take()
+            .ok_or_else(|| Error::Net("client backward without a pending forward".into()))?;
+        let cols = if self.kind == ModelKind::Mlp { BOTTOM_WIDTH } else { 1 };
+        let ep = Endpoint::new(net, self.party());
+        let da = recv_tensor(&ep, PartyId::Aggregator, PHASE_GRAD, xb.rows(), cols)?;
+        let (w, b) = &mut self.bottom;
+        let (dw, db) = match self.kind {
+            ModelKind::Mlp => phases.bottom_mlp_bwd(&xb, w, b, &da)?,
+            ModelKind::Lr | ModelKind::LinReg => phases.bottom_lin_bwd(&xb, &da)?,
+        };
+        self.opt_w.step(w.data_mut(), dw.data());
+        self.opt_b.step(b, &db);
+        Ok(())
+    }
+
+    /// Epoch boundary: receive the relayed stop/continue decision.
+    pub fn await_decision(&self, net: &dyn Transport) -> Result<bool> {
+        let env = Endpoint::new(net, self.party()).recv(PartyId::Aggregator, PHASE_LOSS)?;
+        Ok(TrainCtrl::decode(&env.payload)?.stop)
+    }
+
+    /// Surrender the trained bottom parameters.
+    pub fn into_bottom(self) -> (Matrix, Vec<f32>) {
+        self.bottom
+    }
+}
+
+/// Forward state the aggregator retains between the merge-forward and the
+/// backprop halves of one batch.
+enum PendingTop {
+    Mlp { hcat: Matrix, h1: Matrix },
+    Scalar { b: usize },
+}
+
+/// The aggregation server's training role: owns and updates the top
+/// model, merges client activations, and fans gradients back out.
+pub struct AggregatorTrainer {
+    m: usize,
+    kind: ModelKind,
+    n_classes: usize,
+    top: Option<TopMlpParams>,
+    top_bias: f32,
+    opt_w1: Option<Adam>,
+    opt_b1: Option<Adam>,
+    opt_w2: Option<Adam>,
+    opt_b2: Option<Adam>,
+    opt_bias: Option<Adam>,
+    pending: Option<PendingTop>,
+}
+
+impl AggregatorTrainer {
+    pub fn new(
+        m: usize,
+        kind: ModelKind,
+        n_classes: usize,
+        top: Option<TopMlpParams>,
+        top_bias: f32,
+        lr: f32,
+    ) -> Self {
+        let (opt_w1, opt_b1, opt_w2, opt_b2, opt_bias) = match &top {
+            Some(t) => (
+                Some(Adam::new(t.w1.rows() * t.w1.cols(), lr)),
+                Some(Adam::new(t.b1.len(), lr)),
+                Some(Adam::new(t.w2.rows() * t.w2.cols(), lr)),
+                Some(Adam::new(t.b2.len(), lr)),
+                None,
+            ),
+            None => (None, None, None, None, Some(Adam::new(1, lr))),
+        };
+        AggregatorTrainer {
+            m,
+            kind,
+            n_classes,
+            top,
+            top_bias,
+            opt_w1,
+            opt_b1,
+            opt_w2,
+            opt_b2,
+            opt_bias,
+            pending: None,
+        }
+    }
+
+    fn endpoint<'t>(&self, net: &'t dyn Transport) -> Endpoint<'t> {
+        Endpoint::new(net, PartyId::Aggregator)
+    }
+
+    /// Step 2: collect every client's activations (client order — the
+    /// demux key keeps concurrent senders apart), merge, run the top
+    /// forward, and ship the merged output to the label owner.
+    pub fn merge_forward(
+        &mut self,
+        phases: &dyn ModelPhases,
+        net: &dyn Transport,
+        b: usize,
+        acc: &mut SendCost,
+    ) -> Result<()> {
+        let ep = self.endpoint(net);
+        match self.kind {
+            ModelKind::Mlp => {
+                let acts = (0..self.m)
+                    .map(|c| {
+                        recv_tensor(&ep, PartyId::Client(c as u32), PHASE_FWD, b, BOTTOM_WIDTH)
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let refs: Vec<&Matrix> = acts.iter().collect();
+                let hcat = Matrix::hcat(&refs)?;
+                let top = self
+                    .top
+                    .as_ref()
+                    .ok_or_else(|| Error::Data("aggregator missing top parameters".into()))?;
+                let (h1, logits) = phases.top_mlp_forward(&hcat, top)?;
+                send_tensor(
+                    &ep,
+                    PartyId::LabelOwner,
+                    PHASE_FWD,
+                    b,
+                    self.n_classes,
+                    logits.into_vec(),
+                    acc,
+                )?;
+                self.pending = Some(PendingTop::Mlp { hcat, h1 });
+            }
+            ModelKind::Lr | ModelKind::LinReg => {
+                let mut z = vec![self.top_bias; b];
+                for c in 0..self.m {
+                    let part = recv_tensor(&ep, PartyId::Client(c as u32), PHASE_FWD, b, 1)?;
+                    for (zi, &p) in z.iter_mut().zip(part.data()) {
+                        *zi += p;
+                    }
+                }
+                send_tensor(&ep, PartyId::LabelOwner, PHASE_FWD, b, 1, z, acc)?;
+                self.pending = Some(PendingTop::Scalar { b });
+            }
+        }
+        Ok(())
+    }
+
+    /// Step 4: receive the label owner's loss gradient (and its loss
+    /// record), update the top model, and ship each client its slice of
+    /// the activation gradient.
+    pub fn backprop_broadcast(
+        &mut self,
+        phases: &dyn ModelPhases,
+        net: &dyn Transport,
+        acc: &mut SendCost,
+    ) -> Result<()> {
+        let pending = self
+            .pending
+            .take()
+            .ok_or_else(|| Error::Net("aggregator backprop without a pending forward".into()))?;
+        let ep = self.endpoint(net);
+        match pending {
+            PendingTop::Mlp { hcat, h1 } => {
+                let b = hcat.rows();
+                let dlogits =
+                    recv_tensor(&ep, PartyId::LabelOwner, PHASE_GRAD, b, self.n_classes)?;
+                let ctrl = ep.recv(PartyId::LabelOwner, PHASE_LOSS)?;
+                TrainCtrl::decode(&ctrl.payload)?;
+                let top = self.top.as_mut().expect("checked in merge_forward");
+                let g = phases.top_mlp_backward(&hcat, &h1, &dlogits, top)?;
+                self.opt_w1.as_mut().unwrap().step(top.w1.data_mut(), g.dw1.data());
+                self.opt_b1.as_mut().unwrap().step(&mut top.b1, &g.db1);
+                self.opt_w2.as_mut().unwrap().step(top.w2.data_mut(), g.dw2.data());
+                self.opt_b2.as_mut().unwrap().step(&mut top.b2, &g.db2);
+                for c in 0..self.m {
+                    let da = g.dhcat.select_cols(c * BOTTOM_WIDTH, (c + 1) * BOTTOM_WIDTH);
+                    send_tensor(
+                        &ep,
+                        PartyId::Client(c as u32),
+                        PHASE_GRAD,
+                        b,
+                        BOTTOM_WIDTH,
+                        da.into_vec(),
+                        acc,
+                    )?;
+                }
+            }
+            PendingTop::Scalar { b } => {
+                let dzm = recv_tensor(&ep, PartyId::LabelOwner, PHASE_GRAD, b, 1)?;
+                let ctrl = ep.recv(PartyId::LabelOwner, PHASE_LOSS)?;
+                TrainCtrl::decode(&ctrl.payload)?;
+                let dbias: f32 = dzm.data().iter().sum();
+                self.opt_bias
+                    .as_mut()
+                    .unwrap()
+                    .step(std::slice::from_mut(&mut self.top_bias), &[dbias]);
+                for c in 0..self.m {
+                    send_tensor(
+                        &ep,
+                        PartyId::Client(c as u32),
+                        PHASE_GRAD,
+                        b,
+                        1,
+                        dzm.data().to_vec(),
+                        acc,
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Epoch boundary: relay the label owner's stop/continue verdict to
+    /// every client, byte-for-byte.
+    pub fn relay_decision(&self, net: &dyn Transport, acc: &mut SendCost) -> Result<bool> {
+        let ep = self.endpoint(net);
+        let env = ep.recv(PartyId::LabelOwner, PHASE_LOSS)?;
+        let ctrl = TrainCtrl::decode(&env.payload)?;
+        for c in 0..self.m {
+            let sim = ep.send(PartyId::Client(c as u32), PHASE_LOSS, env.payload.clone())?;
+            add(acc, sim, env.payload.len() as u64);
+        }
+        Ok(ctrl.stop)
+    }
+
+    /// Surrender the trained top parameters.
+    pub fn into_top(self) -> (Option<TopMlpParams>, f32) {
+        (self.top, self.top_bias)
+    }
+}
+
+/// The label owner's training role: weighted loss gradients, the epoch
+/// loss series, and the convergence verdict. Labels and weights never
+/// leave this struct.
+pub struct LabelOwnerTrainer<'a> {
+    kind: ModelKind,
+    y: &'a [f32],
+    weights: &'a [f32],
+    /// Full one-hot labels for the MLP head (batches select rows).
+    y1h: Option<Matrix>,
+    conv_window: usize,
+    conv_threshold: f64,
+    epoch_losses: Vec<f64>,
+    epoch_loss: f64,
+    batches: usize,
+}
+
+impl<'a> LabelOwnerTrainer<'a> {
+    pub fn new(cfg: &TrainConfig, y: &'a [f32], weights: &'a [f32], n_classes: usize) -> Self {
+        let y1h = (cfg.model == ModelKind::Mlp)
+            .then(|| crate::splitnn::trainer::one_hot(y, n_classes));
+        LabelOwnerTrainer {
+            kind: cfg.model,
+            y,
+            weights,
+            y1h,
+            conv_window: cfg.conv_window,
+            conv_threshold: cfg.conv_threshold,
+            epoch_losses: Vec::new(),
+            epoch_loss: 0.0,
+            batches: 0,
+        }
+    }
+
+    fn endpoint<'t>(&self, net: &'t dyn Transport) -> Endpoint<'t> {
+        Endpoint::new(net, PartyId::LabelOwner)
+    }
+
+    /// Step 3: receive the merged top-model output, compute the weighted
+    /// loss gradient, and ship it back with the loss record.
+    pub fn loss_grad_batch(
+        &mut self,
+        phases: &dyn ModelPhases,
+        net: &dyn Transport,
+        rows: &[usize],
+        acc: &mut SendCost,
+    ) -> Result<()> {
+        let b = rows.len();
+        let wb: Vec<f32> = rows.iter().map(|&i| self.weights[i]).collect();
+        let ep = self.endpoint(net);
+        let (loss, grad) = match self.kind {
+            ModelKind::Mlp => {
+                let y1h_full = self.y1h.as_ref().expect("one-hot built for mlp");
+                let n_classes = y1h_full.cols();
+                let logits = recv_tensor(&ep, PartyId::Aggregator, PHASE_FWD, b, n_classes)?;
+                let y1h = y1h_full.select_rows(rows);
+                let (loss, dlogits) = phases.top_mlp_loss(&logits, &y1h, &wb)?;
+                (loss, dlogits)
+            }
+            ModelKind::Lr | ModelKind::LinReg => {
+                let z = recv_tensor(&ep, PartyId::Aggregator, PHASE_FWD, b, 1)?;
+                let yb: Vec<f32> = rows.iter().map(|&i| self.y[i]).collect();
+                let kind = if self.kind == ModelKind::Lr {
+                    ScalarLoss::Bce
+                } else {
+                    ScalarLoss::Mse
+                };
+                let (loss, dz) = phases.top_scalar_step(kind, z.data(), &yb, &wb)?;
+                (loss, Matrix::from_vec(b, 1, dz)?)
+            }
+        };
+        let cols = grad.cols();
+        send_tensor(&ep, PartyId::Aggregator, PHASE_GRAD, b, cols, grad.into_vec(), acc)?;
+        let ctrl = TrainCtrl { loss: loss as f64, stop: false }.encode();
+        let bytes = ctrl.len() as u64;
+        let sim = ep.send(PartyId::Aggregator, PHASE_LOSS, ctrl)?;
+        add(acc, sim, bytes);
+        self.epoch_loss += loss as f64;
+        self.batches += 1;
+        Ok(())
+    }
+
+    /// Epoch boundary: close the epoch's loss mean, apply the paper's
+    /// convergence rule, and ship the verdict to the aggregation server
+    /// for relay.
+    pub fn end_epoch(&mut self, net: &dyn Transport, acc: &mut SendCost) -> Result<bool> {
+        self.epoch_losses.push(self.epoch_loss / self.batches.max(1) as f64);
+        self.epoch_loss = 0.0;
+        self.batches = 0;
+        let stop = converged(&self.epoch_losses, self.conv_window, self.conv_threshold);
+        let ctrl = TrainCtrl { loss: *self.epoch_losses.last().unwrap(), stop }.encode();
+        let bytes = ctrl.len() as u64;
+        let sim = self.endpoint(net).send(PartyId::Aggregator, PHASE_LOSS, ctrl)?;
+        add(acc, sim, bytes);
+        Ok(stop)
+    }
+
+    /// The mean-loss-per-epoch series accumulated so far.
+    pub fn losses(&self) -> &[f64] {
+        &self.epoch_losses
+    }
+
+    pub fn into_losses(self) -> Vec<f64> {
+        self.epoch_losses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::ChannelTransport;
+    use crate::splitnn::native::NativePhases;
+
+    /// One scalar-head batch through the three roles over a real wire.
+    #[test]
+    fn one_batch_roundtrip_over_channel() {
+        let net = ChannelTransport::new();
+        let phases = NativePhases::default();
+        let x0 = Matrix::from_fn(4, 2, |r, c| (r + c) as f32 / 3.0);
+        let x1 = Matrix::from_fn(4, 3, |r, c| (r * c) as f32 / 5.0);
+        let cfg = TrainConfig::new(ModelKind::Lr);
+        let y = vec![0.0, 1.0, 1.0, 0.0];
+        let w = vec![1.0; 4];
+
+        let mut c0 =
+            ClientTrainer::new(0, ModelKind::Lr, &x0, (Matrix::zeros(2, 1), vec![0.0]), 0.01);
+        let mut c1 =
+            ClientTrainer::new(1, ModelKind::Lr, &x1, (Matrix::zeros(3, 1), vec![0.0]), 0.01);
+        let mut agg = AggregatorTrainer::new(2, ModelKind::Lr, 2, None, 0.0, 0.01);
+        let mut label = LabelOwnerTrainer::new(&cfg, &y, &w, 2);
+
+        let rows = [0usize, 1, 2, 3];
+        let mut acc = (0.0, 0u64);
+        c0.forward_batch(&phases, &net, &rows, &mut acc).unwrap();
+        c1.forward_batch(&phases, &net, &rows, &mut acc).unwrap();
+        agg.merge_forward(&phases, &net, 4, &mut acc).unwrap();
+        label.loss_grad_batch(&phases, &net, &rows, &mut acc).unwrap();
+        agg.backprop_broadcast(&phases, &net, &mut acc).unwrap();
+        c0.backward_batch(&phases, &net).unwrap();
+        c1.backward_batch(&phases, &net).unwrap();
+
+        let stop = label.end_epoch(&net, &mut acc).unwrap();
+        assert!(!stop);
+        assert_eq!(agg.relay_decision(&net, &mut acc).unwrap(), stop);
+        assert!(!c0.await_decision(&net).unwrap());
+        assert!(!c1.await_decision(&net).unwrap());
+
+        assert_eq!(net.pending(), 0, "one batch drains the wire");
+        assert!(acc.1 > 0);
+        // Unit-weight BCE at z = 0 over 4 rows with batch-norm 64.
+        let expect = (4.0 * (2.0f32).ln() / 64.0) as f64;
+        assert!((label.losses()[0] - expect).abs() < 1e-6, "{}", label.losses()[0]);
+    }
+
+    /// Backward before forward (or a double backward) is a protocol-state
+    /// error, not a hang on the wire.
+    #[test]
+    fn out_of_order_roles_error() {
+        let net = ChannelTransport::new();
+        let phases = NativePhases::default();
+        let x = Matrix::zeros(2, 2);
+        let mut c =
+            ClientTrainer::new(0, ModelKind::Lr, &x, (Matrix::zeros(2, 1), vec![0.0]), 0.01);
+        assert!(c.backward_batch(&phases, &net).is_err());
+        let mut agg = AggregatorTrainer::new(1, ModelKind::Lr, 2, None, 0.0, 0.01);
+        assert!(agg.backprop_broadcast(&phases, &net, &mut (0.0, 0)).is_err());
+    }
+
+    /// A forged activation tensor with the wrong geometry is rejected at
+    /// the aggregator.
+    #[test]
+    fn wrong_shape_tensor_is_rejected() {
+        let net = ChannelTransport::new();
+        let phases = NativePhases::default();
+        let bad = TensorMsg::new(3, 2, vec![0.0; 6]).encode();
+        Endpoint::new(&net, PartyId::Client(0))
+            .send(PartyId::Aggregator, PHASE_FWD, bad)
+            .unwrap();
+        let mut agg = AggregatorTrainer::new(1, ModelKind::Lr, 2, None, 0.0, 0.01);
+        let err = agg
+            .merge_forward(&phases, &net, 3, &mut (0.0, 0))
+            .unwrap_err();
+        assert!(err.to_string().contains("want 3x1"), "{err}");
+    }
+}

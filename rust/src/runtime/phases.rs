@@ -16,7 +16,8 @@ use crate::data::Matrix;
 use crate::error::{Error, Result};
 use crate::ml::kmeans::AssignBackend;
 use crate::ml::knn::PairwiseBackend;
-use crate::splitnn::{ModelPhases, ScalarLoss, TopMlpParams, TopMlpStepOut};
+use crate::splitnn::native::NativePhases;
+use crate::splitnn::{ModelPhases, ScalarLoss, TopMlpGrads, TopMlpParams, TopMlpStepOut};
 
 use super::engine::{matrix_to_tensor, tensor_to_matrix, Engine, Tensor};
 
@@ -175,6 +176,35 @@ impl ModelPhases for XlaPhases {
             dw2: tensor_to_matrix(&out[4], (hh, l), (hh, l))?,
             db2: out[5].as_f32()?.to_vec(),
         })
+    }
+
+    // The split top-MLP halves back the transport-native training
+    // protocol, where forward, loss, and backward execute at different
+    // parties. The AOT artifact set only carries the *fused*
+    // `top_mlp_step_l*` graph, so the halves run on the native parity
+    // backend (op-for-op mirror of the kernels, same batch normalization
+    // constant); compiling split artifacts is the follow-up that moves
+    // them back onto PJRT.
+
+    fn top_mlp_forward(&self, hcat: &Matrix, params: &TopMlpParams) -> Result<(Matrix, Matrix)> {
+        self.check_batch(hcat.rows())?;
+        NativePhases::new(self.batch()).top_mlp_forward(hcat, params)
+    }
+
+    fn top_mlp_loss(&self, logits: &Matrix, y1h: &Matrix, w: &[f32]) -> Result<(f32, Matrix)> {
+        self.check_batch(logits.rows())?;
+        NativePhases::new(self.batch()).top_mlp_loss(logits, y1h, w)
+    }
+
+    fn top_mlp_backward(
+        &self,
+        hcat: &Matrix,
+        h1: &Matrix,
+        dlogits: &Matrix,
+        params: &TopMlpParams,
+    ) -> Result<TopMlpGrads> {
+        self.check_batch(hcat.rows())?;
+        NativePhases::new(self.batch()).top_mlp_backward(hcat, h1, dlogits, params)
     }
 
     fn top_mlp_pred(&self, hcat: &Matrix, params: &TopMlpParams) -> Result<Matrix> {

@@ -11,12 +11,20 @@
 //!   cross-check the artifacts and as a fallback when `artifacts/` is
 //!   absent (CI without Python).
 //!
-//! The [`trainer`] drives the paper's message flow: clients compute bottom
-//! activations, the aggregation server concatenates and runs the top model,
-//! the label owner's loss gradient flows back, clients update bottom
-//! models — with every tensor charged to the communication meter.
+//! Training is a party protocol: [`protocol::train_over`] executes the
+//! paper's four per-mini-batch steps as message exchanges between the
+//! training roles in [`crate::parties::training`] — clients ship bottom
+//! activations (`train/fwd`), the aggregation server merges and runs the
+//! top model, the label owner's weighted loss gradient flows back
+//! (`train/grad`), and loss/stop control rides `train/loss` — every
+//! tensor an [`Envelope`](crate::net::Envelope) on the pluggable
+//! [`Transport`](crate::net::Transport), exactly like alignment and
+//! Cluster-Coreset. [`trainer::train_local`] is the retained in-process
+//! reference loop, pinned bitwise to the transport path by equivalence
+//! tests.
 
 pub mod native;
+pub mod protocol;
 pub mod trainer;
 
 use crate::data::Matrix;
@@ -42,6 +50,17 @@ pub struct TopMlpStepOut {
     pub db2: Vec<f32>,
 }
 
+/// Gradients of the top MLP alone (the aggregator's backward half of a
+/// step, once the label owner's `dlogits` has arrived over the wire).
+#[derive(Clone, Debug)]
+pub struct TopMlpGrads {
+    pub dhcat: Matrix,
+    pub dw1: Matrix,
+    pub db1: Vec<f32>,
+    pub dw2: Matrix,
+    pub db2: Vec<f32>,
+}
+
 /// Scalar loss head kind (LR = BCE-with-logits, LinReg = MSE).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ScalarLoss {
@@ -49,9 +68,11 @@ pub enum ScalarLoss {
     Mse,
 }
 
-/// The five SplitNN compute phases. Implementations must treat inputs as
-/// *logical* (unpadded) shapes; gradient scaling uses a fixed normalization
-/// constant (the artifact batch size) so backends agree bit-for-shape.
+/// The SplitNN compute phases — per-client bottoms, the top model's
+/// party-split halves (forward / loss / backward), and the fused variants.
+/// Implementations must treat inputs as *logical* (unpadded) shapes;
+/// gradient scaling uses a fixed normalization constant (the artifact
+/// batch size) so backends agree bit-for-shape.
 pub trait ModelPhases: Send + Sync {
     /// Client bottom model, MLP flavour: relu(X W + b).
     fn bottom_mlp_fwd(&self, x: &Matrix, w: &Matrix, b: &[f32]) -> Result<Matrix>;
@@ -71,7 +92,9 @@ pub trait ModelPhases: Send + Sync {
     /// Gradients of the linear bottom. Returns (dW, db).
     fn bottom_lin_bwd(&self, x: &Matrix, dz: &Matrix) -> Result<(Matrix, Vec<f32>)>;
 
-    /// Top MLP forward + weighted CE + backward.
+    /// Top MLP forward + weighted CE + backward (the fused in-process
+    /// step; equals `top_mlp_forward` → `top_mlp_loss` →
+    /// `top_mlp_backward` composed).
     fn top_mlp_step(
         &self,
         hcat: &Matrix,
@@ -79,6 +102,25 @@ pub trait ModelPhases: Send + Sync {
         w: &[f32],
         params: &TopMlpParams,
     ) -> Result<TopMlpStepOut>;
+
+    /// Aggregator half of the top-MLP forward: hidden activations `h1` and
+    /// the logits the label owner receives over the wire. The caller keeps
+    /// `h1` for [`ModelPhases::top_mlp_backward`].
+    fn top_mlp_forward(&self, hcat: &Matrix, params: &TopMlpParams) -> Result<(Matrix, Matrix)>;
+
+    /// Label-owner half: weighted softmax cross-entropy loss + `dlogits`
+    /// from the logits alone — labels and weights never leave the caller.
+    fn top_mlp_loss(&self, logits: &Matrix, y1h: &Matrix, w: &[f32]) -> Result<(f32, Matrix)>;
+
+    /// Aggregator backward half: parameter gradients + per-client `dhcat`
+    /// from the received `dlogits` and the retained forward state.
+    fn top_mlp_backward(
+        &self,
+        hcat: &Matrix,
+        h1: &Matrix,
+        dlogits: &Matrix,
+        params: &TopMlpParams,
+    ) -> Result<TopMlpGrads>;
 
     /// Top MLP inference (logits).
     fn top_mlp_pred(&self, hcat: &Matrix, params: &TopMlpParams) -> Result<Matrix>;

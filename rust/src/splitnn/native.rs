@@ -8,7 +8,7 @@ use crate::data::Matrix;
 use crate::error::{Error, Result};
 use crate::util::pool::Parallel;
 
-use super::{ModelPhases, ScalarLoss, TopMlpParams, TopMlpStepOut};
+use super::{ModelPhases, ScalarLoss, TopMlpGrads, TopMlpParams, TopMlpStepOut};
 
 /// Native backend; `batch_norm` is the artifact batch size (64) so gradient
 /// scaling matches the XLA path exactly. `par` feeds the matmul kernels —
@@ -73,15 +73,39 @@ impl ModelPhases for NativePhases {
         w: &[f32],
         params: &TopMlpParams,
     ) -> Result<TopMlpStepOut> {
+        // The fused step IS the composition of the three party halves, so
+        // the in-process reference trainer and the transport protocol are
+        // bitwise identical by construction.
         let b = hcat.rows();
         if y1h.rows() != b || w.len() != b {
             return Err(Error::Data("top_mlp_step batch mismatch".into()));
         }
-        let inv_b = 1.0 / self.batch_norm as f32;
+        let (h1, logits) = self.top_mlp_forward(hcat, params)?;
+        let (loss, dlogits) = self.top_mlp_loss(&logits, y1h, w)?;
+        let g = self.top_mlp_backward(hcat, &h1, &dlogits, params)?;
+        Ok(TopMlpStepOut {
+            loss,
+            dhcat: g.dhcat,
+            dw1: g.dw1,
+            db1: g.db1,
+            dw2: g.dw2,
+            db2: g.db2,
+        })
+    }
+
+    fn top_mlp_forward(&self, hcat: &Matrix, params: &TopMlpParams) -> Result<(Matrix, Matrix)> {
         let h1 = self.bottom_mlp_fwd(hcat, &params.w1, &params.b1)?; // relu layer
         let logits = h1.matmul_par(&params.w2, self.par)?.add_bias(&params.b2)?;
-        let l = logits.cols();
+        Ok((h1, logits))
+    }
 
+    fn top_mlp_loss(&self, logits: &Matrix, y1h: &Matrix, w: &[f32]) -> Result<(f32, Matrix)> {
+        let b = logits.rows();
+        let l = logits.cols();
+        if y1h.rows() != b || y1h.cols() != l || w.len() != b {
+            return Err(Error::Data("top_mlp_loss batch mismatch".into()));
+        }
+        let inv_b = 1.0 / self.batch_norm as f32;
         // Weighted softmax cross-entropy + gradient (matches kernels/losses.py).
         let mut loss = 0.0f64;
         let mut dlogits = Matrix::zeros(b, l);
@@ -100,16 +124,24 @@ impl ModelPhases for NativePhases {
                 dlogits.set(r, c, w[r] * (p - y1h.get(r, c)) * inv_b);
             }
         }
-        let loss = (loss / self.batch_norm as f64) as f32;
+        Ok(((loss / self.batch_norm as f64) as f32, dlogits))
+    }
 
-        let dw2 = h1.matmul_at_b_par(&dlogits, self.par)?;
+    fn top_mlp_backward(
+        &self,
+        hcat: &Matrix,
+        h1: &Matrix,
+        dlogits: &Matrix,
+        params: &TopMlpParams,
+    ) -> Result<TopMlpGrads> {
+        let dw2 = h1.matmul_at_b_par(dlogits, self.par)?;
         let db2 = dlogits.col_sums();
         let dh1 = dlogits.matmul_par(&params.w2.transpose(), self.par)?;
-        let dpre1 = relu_mask(&h1, &dh1)?; // h1 > 0 ⇔ pre1 > 0 for relu
+        let dpre1 = relu_mask(h1, &dh1)?; // h1 > 0 ⇔ pre1 > 0 for relu
         let dw1 = hcat.matmul_at_b_par(&dpre1, self.par)?;
         let db1 = dpre1.col_sums();
         let dhcat = dpre1.matmul_par(&params.w1.transpose(), self.par)?;
-        Ok(TopMlpStepOut { loss, dhcat, dw1, db1, dw2, db2 })
+        Ok(TopMlpGrads { dhcat, dw1, db1, dw2, db2 })
     }
 
     fn top_mlp_pred(&self, hcat: &Matrix, params: &TopMlpParams) -> Result<Matrix> {

@@ -1,5 +1,6 @@
-//! Distributed weighted SplitNN training loop (paper §3 procedure + §4.2
-//! Eq. 2 re-weighting), with per-message communication accounting.
+//! Weighted SplitNN training: shared state/config plus the **in-process
+//! reference loop** [`train_local`] (paper §3 procedure + §4.2 Eq. 2
+//! re-weighting).
 //!
 //! Per mini-batch, the paper's four steps:
 //!   1. each client runs its bottom model on its feature slice and ships
@@ -10,19 +11,31 @@
 //!   4. the server backpropagates, shipping per-client activation
 //!      gradients back; clients update their bottom models (Adam in L3).
 //!
+//! The production path is [`super::protocol::train_over`], which executes
+//! those steps as real envelope exchanges between the party roles in
+//! [`crate::parties::training`]. `train_local` interleaves the identical
+//! compute in one loop and charges the [`Meter`] with the identical
+//! message schedule (`train/fwd`, `train/grad`, `train/loss`), so the two
+//! paths are pinned bitwise — same epoch losses, same parameters, same
+//! per-edge accounting — by the equivalence tests.
+//!
 //! Convergence rule (paper §5.1): stop when the loss change over 5 epochs
-//! drops below 1e-4 (plus an epoch cap for benches).
+//! drops below 1e-4 (plus an epoch cap for benches) — [`converged`].
 
 use crate::data::{Matrix, Task};
 use crate::error::{Error, Result};
 use crate::ml::adam::Adam;
 use crate::ml::metrics;
-use crate::net::msg::TensorMsg;
+use crate::net::msg::{TensorMsg, TrainCtrl};
 use crate::net::{Meter, PartyId};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
 use super::{ModelPhases, ScalarLoss, TopMlpParams};
+
+/// Bottom-model output width for the MLP flavour (manifest `h_bottom`;
+/// fixed by the AOT artifacts).
+pub const BOTTOM_WIDTH: usize = 16;
 
 /// Downstream model (Table 2 columns). KNN needs no training loop.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -33,6 +46,27 @@ pub enum ModelKind {
     Mlp,
     /// Linear regression.
     LinReg,
+}
+
+impl ModelKind {
+    /// Parse a CLI-style name (`lr` / `mlp` / `linreg`) — the single
+    /// dispatch point shared by the binary and the examples.
+    pub fn from_name(name: &str) -> Result<ModelKind> {
+        match name {
+            "lr" => Ok(ModelKind::Lr),
+            "mlp" => Ok(ModelKind::Mlp),
+            "linreg" => Ok(ModelKind::LinReg),
+            m => Err(Error::Config(format!("unknown model {m:?}"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Lr => "lr",
+            ModelKind::Mlp => "mlp",
+            ModelKind::LinReg => "linreg",
+        }
+    }
 }
 
 /// Training hyper-parameters.
@@ -63,6 +97,15 @@ impl TrainConfig {
     }
 }
 
+/// The paper's §5.1 stopping rule on a mean-epoch-loss series: converged
+/// once the absolute change over the last `window` epochs drops below
+/// `threshold`. Shared verbatim by the reference loop and the label-owner
+/// role, so both paths stop the same step.
+pub fn converged(losses: &[f64], window: usize, threshold: f64) -> bool {
+    let e = losses.len();
+    e > window && (losses[e - 1] - losses[e - 1 - window]).abs() < threshold
+}
+
 /// Trained VFL model: per-client bottom parameters + top parameters.
 pub struct TrainedModel {
     pub kind: ModelKind,
@@ -77,9 +120,24 @@ pub struct TrainedModel {
 
 impl TrainedModel {
     /// Predict logits (classification) or targets (regression) for test
-    /// feature slices (one Matrix per client, row-aligned).
+    /// feature slices (one Matrix per client, row-aligned). A malformed
+    /// model (missing top, slice count mismatch, empty slice list) is an
+    /// `Err`, never a panic — this is a serving path.
     pub fn predict(&self, phases: &dyn ModelPhases, slices: &[Matrix]) -> Result<Vec<f32>> {
-        let n = slices[0].rows();
+        let first = slices
+            .first()
+            .ok_or_else(|| Error::Data("predict: empty feature-slice list".into()))?;
+        if slices.len() != self.bottoms.len() {
+            return Err(Error::Data(format!(
+                "predict: {} slices for {} bottom models",
+                slices.len(),
+                self.bottoms.len()
+            )));
+        }
+        let n = first.rows();
+        if slices.iter().any(|s| s.rows() != n) {
+            return Err(Error::Data("predict: slices disagree on row count".into()));
+        }
         let bsz = 64.min(n.max(1));
         let mut out = Vec::with_capacity(n * self.n_classes.max(1));
         let mut lo = 0;
@@ -88,6 +146,9 @@ impl TrainedModel {
             let idx: Vec<usize> = (lo..hi).collect();
             match self.kind {
                 ModelKind::Mlp => {
+                    let top = self.top.as_ref().ok_or_else(|| {
+                        Error::Data("predict: MLP model without top parameters".into())
+                    })?;
                     let acts = slices
                         .iter()
                         .zip(&self.bottoms)
@@ -95,8 +156,7 @@ impl TrainedModel {
                         .collect::<Result<Vec<_>>>()?;
                     let refs: Vec<&Matrix> = acts.iter().collect();
                     let hcat = Matrix::hcat(&refs)?;
-                    let logits =
-                        phases.top_mlp_pred(&hcat, self.top.as_ref().expect("mlp top"))?;
+                    let logits = phases.top_mlp_pred(&hcat, top)?;
                     out.extend_from_slice(logits.data());
                 }
                 ModelKind::Lr | ModelKind::LinReg => {
@@ -150,41 +210,53 @@ pub struct TrainReport {
     pub steps: u64,
 }
 
-/// Train a SplitNN model over vertically partitioned, weighted data.
-///
-/// `slices[m]` is client m's aligned feature matrix (N × d_m); `y` and
-/// `weights` live with the label owner (weights = 1.0 for ALL baselines;
-/// coreset weights for CSS). Gradient flow follows the paper's message
-/// pattern with every tensor charged to `meter`.
-pub fn train(
-    phases: &dyn ModelPhases,
+/// Validated problem dimensions: (clients, samples, classes).
+pub(crate) fn validate(
     slices: &[Matrix],
     y: &[f32],
     weights: &[f32],
     task: Task,
     cfg: &TrainConfig,
-    meter: &Meter,
-) -> Result<(TrainedModel, TrainReport)> {
-    let m = slices.len();
-    let n = slices[0].rows();
+) -> Result<(usize, usize, usize)> {
+    let first = slices
+        .first()
+        .ok_or_else(|| Error::Data("no client feature slices".into()))?;
+    let n = first.rows();
     if n == 0 {
         return Err(Error::Data("empty training set".into()));
+    }
+    if slices.iter().any(|s| s.rows() != n) {
+        return Err(Error::Data("client slices disagree on row count".into()));
     }
     if y.len() != n || weights.len() != n {
         return Err(Error::Data("labels/weights misaligned with features".into()));
     }
-    let n_classes = task.n_classes();
     if cfg.model == ModelKind::Mlp && !task.is_classification() {
         return Err(Error::Data("MLP head needs a classification task".into()));
     }
-    let sw = Stopwatch::start();
-    let mut rng = Rng::new(cfg.seed);
-    let mut sim_comm = 0.0f64;
-    let h = 16usize; // bottom width (manifest h_bottom; fixed by artifacts)
+    Ok((slices.len(), n, task.n_classes()))
+}
 
-    // ---- parameter init (Xavier-ish) ------------------------------------
+/// Initial model parameters. Both training paths draw these from the same
+/// seeded [`Rng`] in the same order (bottoms client 0..m, then the top),
+/// which is what pins the transport protocol bitwise to the reference
+/// loop; conceptually each party initializes its own share from the
+/// session seed agreed at setup.
+pub(crate) struct InitState {
+    pub bottoms: Vec<(Matrix, Vec<f32>)>,
+    pub top: Option<TopMlpParams>,
+    pub top_bias: f32,
+}
+
+pub(crate) fn init_state(
+    cfg: &TrainConfig,
+    slices: &[Matrix],
+    n_classes: usize,
+    rng: &mut Rng,
+) -> InitState {
+    let h = BOTTOM_WIDTH;
     let bottom_out = if cfg.model == ModelKind::Mlp { h } else { 1 };
-    let mut bottoms: Vec<(Matrix, Vec<f32>)> = slices
+    let bottoms: Vec<(Matrix, Vec<f32>)> = slices
         .iter()
         .map(|x| {
             let scale = (2.0 / (x.cols() + bottom_out) as f32).sqrt();
@@ -192,8 +264,8 @@ pub fn train(
             (w, vec![0.0f32; bottom_out])
         })
         .collect();
-    let mut top = if cfg.model == ModelKind::Mlp {
-        let ht = h * m;
+    let top = if cfg.model == ModelKind::Mlp {
+        let ht = h * slices.len();
         let hh = 32usize;
         let s1 = (2.0 / (ht + hh) as f32).sqrt();
         let s2 = (2.0 / (hh + n_classes) as f32).sqrt();
@@ -206,9 +278,49 @@ pub fn train(
     } else {
         None
     };
-    let mut top_bias = 0.0f32;
+    InitState { bottoms, top, top_bias: 0.0 }
+}
 
-    // ---- optimizers ------------------------------------------------------
+/// One-hot labels for the MLP head (full training set; batches select
+/// rows).
+pub(crate) fn one_hot(y: &[f32], n_classes: usize) -> Matrix {
+    let mut oh = Matrix::zeros(y.len(), n_classes);
+    for (r, &label) in y.iter().enumerate() {
+        oh.set(r, label as usize, 1.0);
+    }
+    oh
+}
+
+/// Train a SplitNN model over vertically partitioned, weighted data —
+/// **in-process reference path**.
+///
+/// `slices[m]` is client m's aligned feature matrix (N × d_m); `y` and
+/// `weights` live with the label owner (weights = 1.0 for ALL baselines;
+/// coreset weights for CSS). The compute and the `meter` charges follow
+/// the transport protocol's exact message schedule (`train/fwd` client
+/// activations and merged outputs, `train/grad` loss gradients,
+/// `train/loss` per-batch loss + epoch decisions), so
+/// [`super::protocol::train_over`] over any wire reproduces this
+/// function's results and accounting bitwise.
+pub fn train_local(
+    phases: &dyn ModelPhases,
+    slices: &[Matrix],
+    y: &[f32],
+    weights: &[f32],
+    task: Task,
+    cfg: &TrainConfig,
+    meter: &Meter,
+) -> Result<(TrainedModel, TrainReport)> {
+    let (m, n, n_classes) = validate(slices, y, weights, task, cfg)?;
+    let sw = Stopwatch::start();
+    let mut rng = Rng::new(cfg.seed);
+    let mut sim_comm = 0.0f64;
+    let mut bytes = 0u64;
+    let h = BOTTOM_WIDTH;
+
+    // ---- parameter init + optimizers ------------------------------------
+    let InitState { mut bottoms, mut top, mut top_bias } =
+        init_state(cfg, slices, n_classes, &mut rng);
     let mut opt_bw: Vec<Adam> = bottoms
         .iter()
         .map(|(w, _)| Adam::new(w.rows() * w.cols(), cfg.lr))
@@ -226,22 +338,19 @@ pub fn train(
         None => (None, None, None, None, Some(Adam::new(1, cfg.lr))),
     };
 
-    // One-hot labels for the MLP head.
-    let y1h_full = if cfg.model == ModelKind::Mlp {
-        let mut oh = Matrix::zeros(n, n_classes);
-        for (r, &label) in y.iter().enumerate() {
-            oh.set(r, label as usize, 1.0);
-        }
-        Some(oh)
-    } else {
-        None
+    let y1h_full = (cfg.model == ModelKind::Mlp).then(|| one_hot(y, n_classes));
+
+    // Mirror of one transport send: charge the meter, count the bytes.
+    let mut ship = |from: PartyId, to: PartyId, phase: &str, wire: u64| {
+        sim_comm += meter.charge(from, to, phase, wire);
+        bytes += wire;
     };
 
     // ---- epochs ----------------------------------------------------------
     let bsz = cfg.batch_size.clamp(1, 64);
     let mut order: Vec<usize> = (0..n).collect();
     let mut epoch_losses: Vec<f64> = Vec::new();
-    let mut converged = false;
+    let mut stopped = false;
     let mut steps = 0u64;
 
     for _epoch in 0..cfg.max_epochs {
@@ -262,31 +371,38 @@ pub fn train(
                         .zip(&bottoms)
                         .map(|(x, (w, bias))| phases.bottom_mlp_fwd(x, w, bias))
                         .collect::<Result<Vec<_>>>()?;
-                    for (c, a) in acts.iter().enumerate() {
-                        sim_comm += meter.charge(
+                    for c in 0..m {
+                        ship(
                             PartyId::Client(c as u32),
                             PartyId::Aggregator,
-                            "train/act",
-                            TensorMsg::wire_bytes(a.rows(), a.cols()),
+                            "train/fwd",
+                            TensorMsg::wire_bytes(b, h),
                         );
                     }
                     let refs: Vec<&Matrix> = acts.iter().collect();
                     let hcat = Matrix::hcat(&refs)?;
                     let y1h = y1h_full.as_ref().unwrap().select_rows(chunk);
-                    // 2-3. top step (loss + grads); logits/grads cross the
-                    // aggregator <-> label-owner link.
-                    sim_comm += meter.charge(
+                    // 2-3. top step (loss + grads); logits then the loss
+                    // gradient + control cross the aggregator <->
+                    // label-owner link.
+                    ship(
                         PartyId::Aggregator,
                         PartyId::LabelOwner,
-                        "train/logits",
+                        "train/fwd",
                         TensorMsg::wire_bytes(b, n_classes),
                     );
                     let out = phases.top_mlp_step(&hcat, &y1h, &wb, top.as_ref().unwrap())?;
-                    sim_comm += meter.charge(
+                    ship(
                         PartyId::LabelOwner,
                         PartyId::Aggregator,
-                        "train/dlogits",
+                        "train/grad",
                         TensorMsg::wire_bytes(b, n_classes),
+                    );
+                    ship(
+                        PartyId::LabelOwner,
+                        PartyId::Aggregator,
+                        "train/loss",
+                        TrainCtrl::WIRE_BYTES,
                     );
                     // 4a. update top (Adam at the aggregator).
                     let t = top.as_mut().unwrap();
@@ -297,11 +413,11 @@ pub fn train(
                     // 4b. per-client dA slices back; bottom bwd + Adam.
                     for c in 0..m {
                         let da = out.dhcat.select_cols(c * h, (c + 1) * h);
-                        sim_comm += meter.charge(
+                        ship(
                             PartyId::Aggregator,
                             PartyId::Client(c as u32),
                             "train/grad",
-                            TensorMsg::wire_bytes(da.rows(), da.cols()),
+                            TensorMsg::wire_bytes(b, h),
                         );
                         let (w, bias) = &mut bottoms[c];
                         let (dw, db) = phases.bottom_mlp_bwd(&xb[c], w, bias, &da)?;
@@ -315,21 +431,21 @@ pub fn train(
                     let mut z = vec![top_bias; b];
                     for (c, (x, (w, bias))) in xb.iter().zip(&bottoms).enumerate() {
                         let part = phases.bottom_lin_fwd(x, w, bias)?;
-                        sim_comm += meter.charge(
+                        ship(
                             PartyId::Client(c as u32),
                             PartyId::Aggregator,
-                            "train/act",
+                            "train/fwd",
                             TensorMsg::wire_bytes(b, 1),
                         );
                         for (zi, &p) in z.iter_mut().zip(part.data()) {
                             *zi += p;
                         }
                     }
-                    // 2-3. loss + dz at the label owner.
-                    sim_comm += meter.charge(
+                    // 2-3. merged logits forward; loss + dz back.
+                    ship(
                         PartyId::Aggregator,
                         PartyId::LabelOwner,
-                        "train/logits",
+                        "train/fwd",
                         TensorMsg::wire_bytes(b, 1),
                     );
                     let kind = if cfg.model == ModelKind::Lr {
@@ -338,11 +454,17 @@ pub fn train(
                         ScalarLoss::Mse
                     };
                     let (loss, dz) = phases.top_scalar_step(kind, &z, &yb, &wb)?;
-                    sim_comm += meter.charge(
+                    ship(
                         PartyId::LabelOwner,
                         PartyId::Aggregator,
-                        "train/dlogits",
+                        "train/grad",
                         TensorMsg::wire_bytes(b, 1),
+                    );
+                    ship(
+                        PartyId::LabelOwner,
+                        PartyId::Aggregator,
+                        "train/loss",
+                        TrainCtrl::WIRE_BYTES,
                     );
                     // 4. server bias + per-client bottoms.
                     let dbias: f32 = dz.iter().sum();
@@ -352,7 +474,7 @@ pub fn train(
                         .step(std::slice::from_mut(&mut top_bias), &[dbias]);
                     let dzm = Matrix::from_vec(b, 1, dz)?;
                     for c in 0..m {
-                        sim_comm += meter.charge(
+                        ship(
                             PartyId::Aggregator,
                             PartyId::Client(c as u32),
                             "train/grad",
@@ -372,14 +494,21 @@ pub fn train(
         }
         epoch_losses.push(epoch_loss / batches.max(1) as f64);
 
-        // Paper's convergence rule.
-        let e = epoch_losses.len();
-        if e > cfg.conv_window {
-            let delta = (epoch_losses[e - 1] - epoch_losses[e - 1 - cfg.conv_window]).abs();
-            if delta < cfg.conv_threshold {
-                converged = true;
-                break;
-            }
+        // Epoch decision round: the label owner's convergence verdict
+        // travels to the aggregator and on to every client (paper §5.1
+        // rule), whether or not it says stop.
+        stopped = converged(&epoch_losses, cfg.conv_window, cfg.conv_threshold);
+        ship(PartyId::LabelOwner, PartyId::Aggregator, "train/loss", TrainCtrl::WIRE_BYTES);
+        for c in 0..m {
+            ship(
+                PartyId::Aggregator,
+                PartyId::Client(c as u32),
+                "train/loss",
+                TrainCtrl::WIRE_BYTES,
+            );
+        }
+        if stopped {
+            break;
         }
     }
 
@@ -387,10 +516,10 @@ pub fn train(
     let report = TrainReport {
         epochs: epoch_losses.len(),
         epoch_losses,
-        converged,
+        converged: stopped,
         wall_s: sw.elapsed_secs(),
         sim_comm_s: sim_comm,
-        comm_bytes: meter.total_bytes("train/"),
+        comm_bytes: bytes,
         steps,
     };
     Ok((model, report))
@@ -420,11 +549,12 @@ mod tests {
         cfg.max_epochs = 60;
         let w = vec![1.0; ds.n()];
         let (model, report) =
-            train(&phases, &slices, &ds.y, &w, ds.task, &cfg, &meter).unwrap();
+            train_local(&phases, &slices, &ds.y, &w, ds.task, &cfg, &meter).unwrap();
         let acc = model.evaluate(&phases, &slices, &ds.y, ds.task).unwrap();
         assert!(acc > 0.95, "acc {acc}");
         assert!(report.epoch_losses.first().unwrap() > report.epoch_losses.last().unwrap());
         assert!(report.comm_bytes > 0);
+        assert_eq!(report.comm_bytes, meter.total_bytes("train/"));
     }
 
     #[test]
@@ -438,7 +568,7 @@ mod tests {
         cfg.lr = 0.02;
         cfg.max_epochs = 80;
         let w = vec![1.0; ds.n()];
-        let (model, _) = train(&phases, &slices, &ds.y, &w, ds.task, &cfg, &meter).unwrap();
+        let (model, _) = train_local(&phases, &slices, &ds.y, &w, ds.task, &cfg, &meter).unwrap();
         let acc = model.evaluate(&phases, &slices, &ds.y, ds.task).unwrap();
         assert!(acc > 0.9, "acc {acc}");
     }
@@ -454,7 +584,7 @@ mod tests {
         cfg.lr = 0.05;
         cfg.max_epochs = 120;
         let w = vec![1.0; ds.n()];
-        let (model, _) = train(&phases, &slices, &ds.y, &w, ds.task, &cfg, &meter).unwrap();
+        let (model, _) = train_local(&phases, &slices, &ds.y, &w, ds.task, &cfg, &meter).unwrap();
         let mse = model.evaluate(&phases, &slices, &ds.y, ds.task).unwrap();
         // Irreducible noise is 0.3² ≈ 0.09 plus the interaction term.
         assert!(mse < 0.5, "mse {mse}");
@@ -478,7 +608,8 @@ mod tests {
         let mut cfg = TrainConfig::new(ModelKind::Lr);
         cfg.lr = 0.05;
         cfg.max_epochs = 60;
-        let (model, _) = train(&phases, &slices, &y_bad, &w, ds.task, &cfg, &meter).unwrap();
+        let (model, _) =
+            train_local(&phases, &slices, &y_bad, &w, ds.task, &cfg, &meter).unwrap();
         let acc = model.evaluate(&phases, &slices, &ds.y, ds.task).unwrap();
         assert!(acc > 0.9, "masked corruption should not hurt: acc {acc}");
     }
@@ -494,9 +625,32 @@ mod tests {
         cfg.lr = 0.1;
         cfg.max_epochs = 500;
         let w = vec![1.0; ds.n()];
-        let (_, report) = train(&phases, &slices, &ds.y, &w, ds.task, &cfg, &meter).unwrap();
+        let (_, report) = train_local(&phases, &slices, &ds.y, &w, ds.task, &cfg, &meter).unwrap();
         assert!(report.converged, "should converge well before 500 epochs");
         assert!(report.epochs < 500);
+    }
+
+    #[test]
+    fn convergence_rule_pinned_to_hand_computed_series() {
+        // The paper's rule: stop at epoch e once |loss[e] − loss[e−5]| <
+        // 1e-4, and not a single epoch earlier. The first five epochs can
+        // never trigger (no e−5 exists); epoch 6 compares against 1.00 and
+        // epoch 7 against 0.80 — both far above the threshold.
+        let series = [1.0, 0.80, 0.60, 0.50, 0.45, 0.40, 0.399_95];
+        for e in 1..series.len() {
+            let stop = converged(&series[..e], 5, 1e-4);
+            assert!(!stop, "must not stop after {e} epochs");
+        }
+        assert!(!converged(&series, 5, 1e-4));
+        // Extend until the lagged difference really dips under 1e-4.
+        let mut s = series.to_vec();
+        s.extend([0.399_94, 0.399_93, 0.399_92, 0.399_91]);
+        // loss[10] = 0.39991 vs loss[5] = 0.40 → 9e-5 < 1e-4: stop.
+        assert!(converged(&s, 5, 1e-4));
+        // One epoch earlier: loss[9] = 0.39992 vs loss[4] = 0.45 → no.
+        assert!(!converged(&s[..s.len() - 1], 5, 1e-4));
+        // A window-1 rule on the same series would already have stopped.
+        assert!(converged(&s[..s.len() - 1], 1, 1e-4));
     }
 
     #[test]
@@ -505,7 +659,7 @@ mod tests {
         let meter = Meter::new(NetConfig::lan_10gbps());
         let x = vec![Matrix::zeros(4, 2)];
         let cfg = TrainConfig::new(ModelKind::Lr);
-        let err = train(
+        let err = train_local(
             &phases,
             &x,
             &[0.0; 3],
@@ -515,5 +669,64 @@ mod tests {
             &meter,
         );
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn malformed_model_predicts_err_not_panic() {
+        let phases = NativePhases::default();
+        // MLP model whose top parameters went missing.
+        let model = TrainedModel {
+            kind: ModelKind::Mlp,
+            bottoms: vec![(Matrix::zeros(2, BOTTOM_WIDTH), vec![0.0; BOTTOM_WIDTH])],
+            top: None,
+            top_bias: 0.0,
+            n_classes: 2,
+        };
+        let slices = vec![Matrix::zeros(3, 2)];
+        let err = model.predict(&phases, &slices).unwrap_err();
+        assert!(err.to_string().contains("top"), "{err}");
+
+        // Empty slice list.
+        assert!(model.predict(&phases, &[]).is_err());
+
+        // Slice count that disagrees with the bottoms.
+        let lr = TrainedModel {
+            kind: ModelKind::Lr,
+            bottoms: vec![(Matrix::zeros(2, 1), vec![0.0])],
+            top: None,
+            top_bias: 0.0,
+            n_classes: 2,
+        };
+        let err = lr
+            .predict(&phases, &[Matrix::zeros(3, 2), Matrix::zeros(3, 2)])
+            .unwrap_err();
+        assert!(err.to_string().contains("slices"), "{err}");
+
+        // Ragged slices (clients disagree on row count).
+        let two = TrainedModel {
+            kind: ModelKind::Lr,
+            bottoms: vec![(Matrix::zeros(2, 1), vec![0.0]), (Matrix::zeros(2, 1), vec![0.0])],
+            top: None,
+            top_bias: 0.0,
+            n_classes: 2,
+        };
+        let err = two
+            .predict(&phases, &[Matrix::zeros(10, 2), Matrix::zeros(5, 2)])
+            .unwrap_err();
+        assert!(err.to_string().contains("row count"), "{err}");
+
+        // A well-formed call still works.
+        assert_eq!(lr.predict(&phases, &[Matrix::zeros(3, 2)]).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn model_kind_parses_cli_names() {
+        assert_eq!(ModelKind::from_name("lr").unwrap(), ModelKind::Lr);
+        assert_eq!(ModelKind::from_name("mlp").unwrap(), ModelKind::Mlp);
+        assert_eq!(ModelKind::from_name("linreg").unwrap(), ModelKind::LinReg);
+        assert!(ModelKind::from_name("svm").is_err());
+        for k in [ModelKind::Lr, ModelKind::Mlp, ModelKind::LinReg] {
+            assert_eq!(ModelKind::from_name(k.name()).unwrap(), k);
+        }
     }
 }

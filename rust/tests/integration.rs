@@ -274,6 +274,67 @@ fn distributed_run_over_localhost_tcp() {
     assert!(stdout.contains("party-worker processes"), "{stdout}");
     assert!(stdout.contains("test accuracy"), "{stdout}");
     assert!(stdout.contains("bytes on wire"), "{stdout}");
+    // Training-phase wire bytes are reported and non-zero: activation and
+    // gradient tensors really crossed the process boundary sockets.
+    let train_wire = stdout
+        .lines()
+        .find(|l| l.starts_with("train wire"))
+        .unwrap_or_else(|| panic!("no train wire line in:\n{stdout}"));
+    assert!(!train_wire.contains(": 0B"), "{train_wire}");
+}
+
+/// Eq. 2 ablation invariant: with `reweight = false` the CSS pipeline
+/// trains the coreset under unit weights — bitwise the same losses and
+/// quality as handing the reference trainer the identical coreset rows
+/// with explicit weight 1.0.
+#[test]
+fn no_reweight_equals_unit_weight_training_property() {
+    use treecss::data::VerticalPartition;
+    use treecss::splitnn::native::NativePhases;
+    use treecss::splitnn::trainer::train_local;
+
+    check::forall(
+        check::Config { cases: 3, seed: 55 },
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let ds = PaperDataset::Ri.generate(0.02, &mut rng);
+            let (tr, te) = ds.split(0.7, &mut rng);
+            let meter = Meter::new(NetConfig::lan_10gbps());
+            let mut cfg =
+                PipelineConfig::new(FrameworkVariant::TreeCss, Downstream::Train(ModelKind::Lr));
+            cfg.protocol = fast_rsa();
+            cfg.he_bits = 256;
+            cfg.train.max_epochs = 15;
+            cfg.coreset.reweight = false;
+            let rep = run_pipeline(&tr, &te, &cfg, &Backend::Native, &meter).unwrap();
+            let cs = rep.coreset.as_ref().unwrap();
+            if cs.weights.iter().any(|&w| w != 1.0) {
+                return false; // reweight=false must yield unit weights
+            }
+
+            // Reference: train_local on the same coreset rows, weight 1.
+            // The pipeline trains in aligned-indicator order, so rebuild
+            // that view before selecting the coreset positions.
+            let global = tr.subset_by_ids(&rep.align.intersection);
+            let part = VerticalPartition::even(tr.d(), cfg.n_clients);
+            let slices: Vec<_> = (0..cfg.n_clients)
+                .map(|c| part.slice(&global.x, c).select_rows(&cs.indices))
+                .collect();
+            let y: Vec<f32> = cs.indices.iter().map(|&i| global.y[i]).collect();
+            let w = vec![1.0f32; y.len()];
+            let meter2 = Meter::new(NetConfig::lan_10gbps());
+            let phases = NativePhases::default();
+            let (model, ref_rep) =
+                train_local(&phases, &slices, &y, &w, tr.task, &cfg.train, &meter2).unwrap();
+            let pipe_rep = rep.train.as_ref().unwrap();
+            let test_part = VerticalPartition::even(te.d(), cfg.n_clients);
+            let test_slices: Vec<_> =
+                (0..cfg.n_clients).map(|c| test_part.slice(&te.x, c)).collect();
+            let q = model.evaluate(&phases, &test_slices, &te.y, te.task).unwrap();
+            pipe_rep.epoch_losses == ref_rep.epoch_losses && q == rep.quality
+        },
+    );
 }
 
 /// The four Table-2 variants hold their defining relationships on one

@@ -196,6 +196,16 @@ fn channel_and_tcp_sessions_are_equivalent() {
     assert_eq!(chan.train_size, tcp.train_size);
     assert_eq!(chan.total_bytes, tcp.total_bytes);
 
+    // Training is a wire protocol too: byte-identical loss series, step
+    // counts, and train/* traffic over either transport.
+    let tr_chan = chan.train.as_ref().unwrap();
+    let tr_tcp = tcp.train.as_ref().unwrap();
+    assert_eq!(tr_chan.epoch_losses, tr_tcp.epoch_losses, "loss series diverge across wires");
+    assert_eq!(tr_chan.steps, tr_tcp.steps);
+    assert_eq!(tr_chan.converged, tr_tcp.converged);
+    assert_eq!(tr_chan.comm_bytes, tr_tcp.comm_bytes);
+    assert!(tr_chan.comm_bytes > 0, "training tensors travelled");
+
     // Identical meter accounting, per phase prefix and per edge.
     for prefix in ["keys/", "psi/", "coreset/", "train/", ""] {
         assert_eq!(
@@ -216,6 +226,58 @@ fn channel_and_tcp_sessions_are_equivalent() {
         assert_eq!(ka, kb, "edge sets diverge");
         assert_eq!(ea.bytes, eb.bytes, "bytes on {ka:?}");
         assert_eq!(ea.messages, eb.messages, "messages on {ka:?}");
+    }
+}
+
+/// The training protocol alone, across wires and worker-thread counts:
+/// `train_over` on a TCP roster reproduces `train_local` bitwise — the
+/// same pin the in-process equivalence tests hold for the channel wire.
+#[test]
+fn tcp_training_matches_train_local_bitwise() {
+    use treecss::data::VerticalPartition;
+    use treecss::splitnn::native::NativePhases;
+    use treecss::splitnn::protocol::train_over;
+    use treecss::splitnn::trainer::{train_local, TrainConfig};
+
+    let mut rng = Rng::new(91);
+    let ds = treecss::data::synth::blobs("eq", 120, 9, 2, 1, 4.0, 0.8, &mut rng);
+    let part = VerticalPartition::even(ds.d(), 3);
+    let slices: Vec<_> = (0..3).map(|c| part.slice(&ds.x, c)).collect();
+    let w = vec![1.0f32; ds.n()];
+    let mut cfg = TrainConfig::new(ModelKind::Lr);
+    cfg.max_epochs = 6;
+    cfg.lr = 0.05;
+
+    for threads in [1usize, 4] {
+        let phases = NativePhases { par: Parallel::new(threads), ..Default::default() };
+        let meter_l = Meter::new(NetConfig::lan_10gbps());
+        let (model_l, rep_l) =
+            train_local(&phases, &slices, &ds.y, &w, ds.task, &cfg, &meter_l).unwrap();
+
+        let meter_t = Meter::new(NetConfig::lan_10gbps());
+        let tcp = TcpTransport::hosting(treecss::parties::roster(3)).unwrap();
+        let wire = MeteredTransport::new(&tcp as &dyn Transport, &meter_t);
+        let (model_t, rep_t) =
+            train_over(&phases, &wire, &slices, &ds.y, &w, ds.task, &cfg).unwrap();
+        assert_eq!(wire.pending(), 0);
+
+        assert_eq!(rep_l.epoch_losses, rep_t.epoch_losses, "threads={threads}");
+        assert_eq!(rep_l.comm_bytes, rep_t.comm_bytes);
+        for ((wa, ba), (wb, bb)) in model_l.bottoms.iter().zip(&model_t.bottoms) {
+            assert_eq!(wa.data(), wb.data());
+            assert_eq!(ba, bb);
+        }
+        assert_eq!(model_l.top_bias.to_bits(), model_t.top_bias.to_bits());
+        // Per-edge meter totals identical between the reference loop's
+        // schedule charges and the socket deliveries.
+        let el = meter_l.edges();
+        let et = meter_t.edges();
+        assert_eq!(el.len(), et.len());
+        for ((ka, ea), (kb, eb)) in el.iter().zip(&et) {
+            assert_eq!(ka, kb);
+            assert_eq!(ea.bytes, eb.bytes, "bytes on {ka:?}");
+            assert_eq!(ea.messages, eb.messages, "messages on {ka:?}");
+        }
     }
 }
 
@@ -358,6 +420,45 @@ fn session_errors_on_truncated_frames() {
     )
     .on_phase_prefix("keys/");
     assert!(fault_session().run_over(&tr, &te, &net).is_err());
+}
+
+/// Training-phase fault coverage: a lossy wire under `train/fwd` or
+/// `train/grad` surfaces an `Err` from the session — never a hang, never
+/// a panic — matching the alignment-phase guarantees.
+#[test]
+fn session_errors_on_dropped_train_frames() {
+    let mut rng = Rng::new(41);
+    let ds = PaperDataset::Ri.generate(0.015, &mut rng);
+    let (tr, te) = ds.split(0.7, &mut rng);
+    for phase in ["train/fwd", "train/grad"] {
+        let net = FaultTransport::new(
+            ChannelTransport::with_timeout(Duration::from_millis(200)),
+            Fault::Drop,
+        )
+        .on_phase_prefix(phase);
+        let err = fault_session().run_over(&tr, &te, &net).unwrap_err();
+        assert!(err.to_string().contains("timeout"), "{phase}: {err}");
+        assert!(net.injected() > 0, "{phase}: fault must have fired");
+    }
+}
+
+#[test]
+fn session_errors_on_truncated_train_frames() {
+    // Half a tensor is a codec error at the receiving role, not a panic:
+    // the TensorMsg truncation checks turn the cut frame into Err.
+    let mut rng = Rng::new(42);
+    let ds = PaperDataset::Ri.generate(0.015, &mut rng);
+    let (tr, te) = ds.split(0.7, &mut rng);
+    for phase in ["train/fwd", "train/grad"] {
+        let net = FaultTransport::new(
+            ChannelTransport::with_timeout(Duration::from_millis(200)),
+            Fault::Truncate,
+        )
+        .on_phase_prefix(phase);
+        let res = fault_session().run_over(&tr, &te, &net);
+        assert!(res.is_err(), "{phase}: truncation must not pass silently");
+        assert!(net.injected() > 0, "{phase}: fault must have fired");
+    }
 }
 
 #[test]
