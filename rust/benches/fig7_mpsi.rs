@@ -22,6 +22,7 @@
 
 use treecss::bench::{fmt_bytes, fmt_secs, JsonReport, Table};
 use treecss::coordinator::TransportKind;
+use treecss::crypto::limbs::{set_engine_choice, EngineChoice};
 use treecss::data::synth;
 use treecss::net::{Meter, MeteredTransport, NetConfig};
 use treecss::psi::common::HeContext;
@@ -85,10 +86,10 @@ fn sweep_sizes(
 ) {
     let host = Parallel::host();
     let reps = bench_reps();
-    let he = HeContext::generate(&mut Rng::new(3), 512);
     let mut table = Table::new(
         &format!("Fig. 7{name} — Tree vs Path vs Star, {clients} clients, 70% overlap"),
         &[
+            "engine",
             "per-client size",
             "topology",
             "transport",
@@ -100,52 +101,62 @@ fn sweep_sizes(
             "correct",
         ],
     );
-    for &n in sizes {
-        let mut rng = Rng::new(7_000 + n as u64);
-        let sets = synth::mpsi_indicator_sets(clients, n, 0.7, &mut rng);
-        let oracle = oracle_intersection(&sets);
-        // Before/after view of the batched crypto plane: the same cell at
-        // 1 worker and at the full host budget (skipped on single-core
-        // hosts, where the two rows would be identical).
-        let mut budgets = vec![Parallel::serial()];
-        if host.threads() > 1 {
-            budgets.push(host);
-        }
-        for topo in ["tree", "path", "star"] {
-            for transport in ["channel", "tcp"] {
-                for &par in &budgets {
-                    let mut wall_sum = 0.0;
-                    let mut last = None;
-                    for _ in 0..reps {
-                        let (rep, _meter) = run_topo(
-                            topo,
-                            transport,
-                            &sets,
-                            protocol,
-                            Pairing::VolumeAware,
-                            par,
-                            &he,
-                        );
-                        wall_sum += rep.wall_s;
-                        last = Some(rep);
+    // Engine sweep: fixed-limb vs the pinned BigUint reference. Key
+    // material captures its kernels at construction, so the engine flips
+    // before the per-run keygen and the HE context is rebuilt per engine;
+    // both engines must report `correct` on identical intersections.
+    for (engine, choice) in [("limbs", EngineChoice::Auto), ("bigint", EngineChoice::Bigint)] {
+        set_engine_choice(choice);
+        let he = HeContext::generate(&mut Rng::new(3), 512);
+        for &n in sizes {
+            let mut rng = Rng::new(7_000 + n as u64);
+            let sets = synth::mpsi_indicator_sets(clients, n, 0.7, &mut rng);
+            let oracle = oracle_intersection(&sets);
+            // Before/after view of the batched crypto plane: the same cell
+            // at 1 worker and at the full host budget (skipped on
+            // single-core hosts, where the two rows would be identical).
+            let mut budgets = vec![Parallel::serial()];
+            if host.threads() > 1 {
+                budgets.push(host);
+            }
+            for topo in ["tree", "path", "star"] {
+                for transport in ["channel", "tcp"] {
+                    for &par in &budgets {
+                        let mut wall_sum = 0.0;
+                        let mut last = None;
+                        for _ in 0..reps {
+                            let (rep, _meter) = run_topo(
+                                topo,
+                                transport,
+                                &sets,
+                                protocol,
+                                Pairing::VolumeAware,
+                                par,
+                                &he,
+                            );
+                            wall_sum += rep.wall_s;
+                            last = Some(rep);
+                        }
+                        let rep = last.expect("reps >= 1");
+                        table.row(vec![
+                            engine.into(),
+                            n.to_string(),
+                            topo.into(),
+                            transport.into(),
+                            par.threads().to_string(),
+                            rep.num_rounds().to_string(),
+                            fmt_secs(wall_sum / reps as f64),
+                            fmt_secs(rep.sim_s),
+                            fmt_bytes(rep.total_bytes),
+                            (rep.intersection == oracle).to_string(),
+                        ]);
                     }
-                    let rep = last.expect("reps >= 1");
-                    table.row(vec![
-                        n.to_string(),
-                        topo.into(),
-                        transport.into(),
-                        par.threads().to_string(),
-                        rep.num_rounds().to_string(),
-                        fmt_secs(wall_sum / reps as f64),
-                        fmt_secs(rep.sim_s),
-                        fmt_bytes(rep.total_bytes),
-                        (rep.intersection == oracle).to_string(),
-                    ]);
                 }
             }
+            eprintln!("  done engine={engine} n={n}");
         }
-        eprintln!("  done n={n}");
     }
+    set_engine_choice(EngineChoice::Auto);
     table.print();
     report.table(&table);
 }
@@ -217,6 +228,17 @@ fn main() {
         .config(
             "rsa_modulus_bits",
             if full { 1024usize } else { 512usize },
+        )
+        .config("engines", vec!["limbs".to_string(), "bigint".to_string()])
+        .config(
+            "provenance",
+            format!(
+                "measured: cargo bench --bench fig7_mpsi on a {}-thread host, \
+                 reps={}, engine column sweeps the fixed-limb engine vs the \
+                 pinned BigUint reference",
+                Parallel::host().threads(),
+                bench_reps()
+            ),
         );
 
     if all || which.contains(&"rsa") {

@@ -226,6 +226,59 @@ impl JsonReport {
     }
 }
 
+/// Sanity-gate a `BENCH_<target>.json` document before CI uploads it.
+///
+/// Contract: every artifact carries a `config.provenance` string.
+/// Provenance starting with `measured` must be backed by results — a
+/// non-empty `tables` array in which every table has at least one row.
+/// Provenance mentioning `projection` may ship empty tables (the
+/// committed placeholders CI regenerates). Anything else is rejected, so
+/// a mislabelled or hollow artifact fails the bench smoke step instead
+/// of uploading quietly. Exercised by the `bench-check` CLI subcommand.
+pub fn validate_artifact(doc: &str) -> std::result::Result<(), String> {
+    let json = Json::parse(doc).map_err(|e| format!("not valid JSON: {e}"))?;
+    let target = json
+        .get("target")
+        .and_then(|t| t.as_str().ok())
+        .ok_or_else(|| "missing string field `target`".to_string())?
+        .to_string();
+    let provenance = json
+        .get("config")
+        .and_then(|c| c.get("provenance"))
+        .and_then(|p| p.as_str().ok())
+        .ok_or_else(|| format!("{target}: missing string field `config.provenance`"))?
+        .to_string();
+    let tables = json
+        .get("tables")
+        .and_then(|t| t.as_arr().ok())
+        .ok_or_else(|| format!("{target}: missing array field `tables`"))?;
+    if provenance.starts_with("measured") {
+        if tables.is_empty() {
+            return Err(format!("{target}: provenance claims measured but `tables` is empty"));
+        }
+        for t in tables {
+            let title = t.get("title").and_then(|s| s.as_str().ok()).unwrap_or("<untitled>");
+            let rows = t
+                .get("rows")
+                .and_then(|r| r.as_arr().ok())
+                .ok_or_else(|| format!("{target}: table {title:?} has no `rows` array"))?;
+            if rows.is_empty() {
+                return Err(format!(
+                    "{target}: provenance claims measured but table {title:?} has no rows"
+                ));
+            }
+        }
+        Ok(())
+    } else if provenance.contains("projection") {
+        Ok(())
+    } else {
+        Err(format!(
+            "{target}: provenance must start with `measured` or mention `projection`, \
+             got {provenance:?}"
+        ))
+    }
+}
+
 /// Table shape for [`thread_sweep`] rows: one row per worker count with a
 /// speedup column relative to the sweep's first entry.
 pub fn thread_sweep_table(title: &str) -> Table {
@@ -375,6 +428,39 @@ mod tests {
         let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(j.req("title").unwrap().as_str().unwrap(), "solo");
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn validate_artifact_enforces_provenance_contract() {
+        let doc = |provenance: &str, with_rows: Option<bool>| {
+            let mut report = JsonReport::new("gate_demo");
+            report.config("provenance", provenance);
+            if let Some(rows) = with_rows {
+                let mut t = Table::new("demo", &["a"]);
+                if rows {
+                    t.row(vec!["1".into()]);
+                }
+                report.table(&t);
+            }
+            report.to_json().to_string()
+        };
+
+        // Measured + populated tables: the happy path.
+        validate_artifact(&doc("measured: bench smoke, reps=1", Some(true))).unwrap();
+        // Measured but hollow — both no-tables and empty-rows fail.
+        let e = validate_artifact(&doc("measured: bench smoke", None)).unwrap_err();
+        assert!(e.contains("`tables` is empty"), "{e}");
+        let e = validate_artifact(&doc("measured: bench smoke", Some(false))).unwrap_err();
+        assert!(e.contains("has no rows"), "{e}");
+        // Projection placeholders may ship empty.
+        validate_artifact(&doc("projection: no toolchain on the authoring host", None)).unwrap();
+        // Unlabelled or unknown provenance is rejected.
+        let e = validate_artifact(&doc("vibes", Some(true))).unwrap_err();
+        assert!(e.contains("provenance"), "{e}");
+        let e = validate_artifact(&JsonReport::new("bare").to_json().to_string()).unwrap_err();
+        assert!(e.contains("config.provenance"), "{e}");
+        // Not JSON at all.
+        assert!(validate_artifact("not json").is_err());
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! ([`ModCtx::mod_pow_batch`], [`ModCtx::mul_mod_batch`]) fanning out over
 //! a [`Parallel`] worker budget.
 
+use crate::crypto::limbs::{engine_choice, EngineChoice, FixedEngine};
 use crate::util::pool::Parallel;
 use crate::util::rng::Rng;
 
@@ -21,8 +22,10 @@ use crate::util::rng::Rng;
 #[derive(Clone, PartialEq, Eq, Default)]
 pub struct BigUint {
     /// Limbs, least-significant first. Invariant: no trailing zero limbs
-    /// (`limbs` is empty iff the value is zero).
-    limbs: Vec<u64>,
+    /// (`limbs` is empty iff the value is zero). Crate-visible so the
+    /// fixed-limb engine ([`crate::crypto::limbs`]) can convert without a
+    /// byte-string round-trip.
+    pub(crate) limbs: Vec<u64>,
 }
 
 impl std::fmt::Debug for BigUint {
@@ -48,6 +51,13 @@ impl BigUint {
         } else {
             BigUint { limbs: vec![v] }
         }
+    }
+
+    /// From raw little-endian limbs (trailing zeros allowed; trimmed here).
+    pub(crate) fn from_limbs(limbs: Vec<u64>) -> Self {
+        let mut b = BigUint { limbs };
+        b.trim();
+        b
     }
 
     pub fn from_u128(v: u128) -> Self {
@@ -677,35 +687,87 @@ impl BigUint {
 /// Cached modular-arithmetic context for one fixed modulus.
 ///
 /// For odd multi-limb moduli (every RSA/Paillier modulus) the context
-/// holds a Montgomery core — n', R² mod m, precomputed once — so repeated
-/// exponentiations and multiplications skip both the per-call setup
-/// division and the Knuth reduction in the inner loop. Even or single-limb
-/// moduli fall back to the division-based kernels transparently, so the
-/// context is total over all non-zero moduli.
+/// holds a Montgomery kernel — n', R² mod m, precomputed once — so
+/// repeated exponentiations and multiplications skip both the per-call
+/// setup division and the Knuth reduction in the inner loop. Odd moduli of
+/// at most 32 limbs take the stack-only fixed-limb kernel
+/// ([`crate::crypto::limbs`]) by default; wider odd moduli use the heap
+/// `BigUint` CIOS, and even or single-limb moduli fall back to the
+/// division-based kernels transparently, so the context is total over all
+/// non-zero moduli. See [`ModCtx::kernel_name`] for the dispatch outcome.
 ///
 /// §Perf: RSA-PSI and the Paillier envelope perform thousands of
 /// operations per modulus; PR 4 moved the context from "rebuilt inside
-/// every `mod_pow`" to "built once, stored in the key material".
+/// every `mod_pow`" to "built once, stored in the key material"; PR 6
+/// moved the ≤2048-bit hot path onto stack-allocated `[u64; N]` CIOS with
+/// the `BigUint` path pinned as the differential reference.
 #[derive(Clone, Debug)]
 pub struct ModCtx {
     m: BigUint,
-    mont: Option<MontCore>,
+    kernel: Kernel,
+}
+
+/// The arithmetic kernel a [`ModCtx`] dispatches to, chosen once at build
+/// time from the modulus shape and the process-wide [`EngineChoice`]:
+///
+/// * `Fixed` — stack-only const-generic CIOS ([`crate::crypto::limbs`]),
+///   for odd moduli of 2..=32 limbs (128..2048 bits). The default hot path.
+/// * `Mont` — the heap `BigUint` CIOS; the pinned reference engine, and
+///   the fallback for odd moduli wider than 32 limbs.
+/// * `Generic` — division-based kernels for even or single-limb moduli.
+#[derive(Clone, Debug)]
+enum Kernel {
+    Fixed(FixedEngine),
+    Mont(MontCore),
+    Generic,
 }
 
 impl ModCtx {
-    /// Build a context for `m` (non-zero).
+    /// Build a context for `m` (non-zero), honoring the process-wide
+    /// [`engine_choice`] (`TREECSS_CRYPTO_ENGINE` / `set_engine_choice`).
     pub fn new(m: &BigUint) -> ModCtx {
+        Self::with_engine(m, engine_choice())
+    }
+
+    /// Build a context for `m` with an explicit engine choice, ignoring
+    /// the process-wide preference. Differential tests use this to hold a
+    /// fixed-limb and a reference context side by side without racing on
+    /// the global flag.
+    pub fn with_engine(m: &BigUint, choice: EngineChoice) -> ModCtx {
         assert!(!m.is_zero(), "modulus must be non-zero");
-        let mont = (!m.is_even() && m.limbs.len() >= 2).then(|| MontCore::new(m));
-        ModCtx { m: m.clone(), mont }
+        let kernel = if m.is_even() || m.limbs.len() < 2 {
+            Kernel::Generic
+        } else {
+            let fixed = match choice {
+                EngineChoice::Auto => FixedEngine::for_modulus(m),
+                EngineChoice::Bigint => None,
+            };
+            match fixed {
+                Some(engine) => Kernel::Fixed(engine),
+                None => Kernel::Mont(MontCore::new(m)),
+            }
+        };
+        ModCtx { m: m.clone(), kernel }
     }
 
     pub fn modulus(&self) -> &BigUint {
         &self.m
     }
 
+    /// Name of the kernel this context dispatches to (`"fixed-w4"` /
+    /// `"fixed-w8"` / `"fixed-w16"` / `"fixed-w32"` / `"bigint-cios"` /
+    /// `"generic-division"`) — for benches and dispatch-rule tests.
+    pub fn kernel_name(&self) -> &'static str {
+        match &self.kernel {
+            Kernel::Fixed(engine) => engine.name(),
+            Kernel::Mont(_) => "bigint-cios",
+            Kernel::Generic => "generic-division",
+        }
+    }
+
     /// `base^exp mod m` using the cached context. Bitwise identical to
-    /// [`BigUint::mod_pow`] for every input (property-tested).
+    /// [`BigUint::mod_pow`] for every input (property-tested across all
+    /// three kernels).
     pub fn pow(&self, base: &BigUint, exp: &BigUint) -> BigUint {
         if self.m.is_one() {
             return BigUint::zero();
@@ -713,18 +775,20 @@ impl ModCtx {
         if exp.is_zero() {
             return BigUint::one();
         }
-        match &self.mont {
-            Some(core) => core.pow(base, exp, &self.m),
-            None => base.mod_pow_generic(exp, &self.m),
+        match &self.kernel {
+            Kernel::Fixed(engine) => engine.pow(base, exp, &self.m),
+            Kernel::Mont(core) => core.pow(base, exp, &self.m),
+            Kernel::Generic => base.mod_pow_generic(exp, &self.m),
         }
     }
 
     /// `a·b mod m`: two Montgomery products (no Knuth division) when the
-    /// context has a Montgomery core, schoolbook + division otherwise.
+    /// context has a Montgomery kernel, schoolbook + division otherwise.
     pub fn mul_mod(&self, a: &BigUint, b: &BigUint) -> BigUint {
-        match &self.mont {
-            Some(core) => core.mul_mod(a, b, &self.m),
-            None => a.mul_mod(b, &self.m),
+        match &self.kernel {
+            Kernel::Fixed(engine) => engine.mul_mod(a, b, &self.m),
+            Kernel::Mont(core) => core.mul_mod(a, b, &self.m),
+            Kernel::Generic => a.mul_mod(b, &self.m),
         }
     }
 
@@ -912,8 +976,9 @@ impl MontCore {
     }
 }
 
-/// Compare equal-length limb slices (little-endian).
-fn cmp_limbs(a: &[u64], b: &[u64]) -> std::cmp::Ordering {
+/// Compare equal-length limb slices (little-endian). Shared with the
+/// fixed-limb engine's conditional-subtraction step.
+pub(crate) fn cmp_limbs(a: &[u64], b: &[u64]) -> std::cmp::Ordering {
     debug_assert_eq!(a.len(), b.len());
     for i in (0..a.len()).rev() {
         match a[i].cmp(&b[i]) {

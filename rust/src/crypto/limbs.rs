@@ -1,0 +1,509 @@
+//! Fixed-limb Montgomery engine: stack-only `[u64; N]` modular arithmetic.
+//!
+//! The pipeline only ever uses a handful of modulus widths (512/1024-bit
+//! RSA and their CRT halves, `n²` for Paillier at twice the key width), so
+//! the arbitrary-width heap `BigUint` representation pays for generality
+//! the hot path never needs: every `mont_mul` in the exponentiation inner
+//! loop allocates and frees a scratch vector. This module instantiates the
+//! same CIOS Montgomery multiply + 4-bit windowed exponentiation over
+//! const-generic `[u64; N]` arrays — no heap allocation anywhere in the
+//! multiply/reduce/exponentiate path — at N = 4/8/16/32 limbs
+//! (256/512/1024/2048 bits).
+//!
+//! A modulus of k ≤ N limbs is zero-padded to N: CIOS is width-agnostic as
+//! long as t < 2n is maintained, which padding preserves (the extra
+//! iterations multiply by zero limbs). The Montgomery radix is R = 2^(64N)
+//! rather than the reference engine's 2^(64k), so *internal* forms differ,
+//! but canonical outputs are bitwise identical — pinned by differential
+//! `forall` tests here and in `tests/crypto_engines.rs`.
+//!
+//! Engine selection is process-wide ([`engine_choice`], overridable per
+//! context via `ModCtx::with_engine`): `Auto` prefers the fixed path for
+//! any odd 2..=32-limb modulus, `Bigint` forces the heap CIOS reference
+//! everywhere (the `sign_raw_plain` pinning pattern, promoted to the whole
+//! crypto plane). Benches sweep both to measure the delta.
+
+use crate::crypto::bigint::{cmp_limbs, BigUint};
+
+/// Fixed-width unsigned integer: exactly `N` little-endian `u64` limbs on
+/// the stack (zero-padded; no trimming invariant, unlike [`BigUint`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FixedUint<const N: usize> {
+    pub limbs: [u64; N],
+}
+
+impl<const N: usize> FixedUint<N> {
+    pub fn zero() -> Self {
+        FixedUint { limbs: [0u64; N] }
+    }
+
+    /// Zero-padded conversion from a [`BigUint`]; `None` if the value
+    /// needs more than `N` limbs.
+    pub fn from_biguint(v: &BigUint) -> Option<Self> {
+        if v.limbs.len() > N {
+            return None;
+        }
+        let mut limbs = [0u64; N];
+        limbs[..v.limbs.len()].copy_from_slice(&v.limbs);
+        Some(FixedUint { limbs })
+    }
+
+    /// Back to the trimmed heap representation.
+    pub fn to_biguint(self) -> BigUint {
+        BigUint::from_limbs(self.limbs.to_vec())
+    }
+}
+
+/// Montgomery context over a fixed width: the `[u64; N]` mirror of the
+/// reference `MontCore` in `bigint.rs`, with R = 2^(64N).
+///
+/// Construction (`new`) pays one full-width division for R² and the
+/// 2-adic Newton iteration for n' — exactly like the reference — but the
+/// per-operation path (`mont_mul`, `pow`, `mul_mod`) touches only stack
+/// arrays and `u128` scalar arithmetic.
+#[derive(Clone, Debug)]
+pub struct FixedMont<const N: usize> {
+    /// Modulus limbs, zero-padded to N.
+    n: [u64; N],
+    /// n' = -n⁻¹ mod 2^64.
+    n_prime: u64,
+    /// R² mod n (converts into Montgomery form via mont_mul(x, r2)).
+    r2: [u64; N],
+    /// R mod n = mont_mul(1, R²), cached: the window table's identity
+    /// entry and the accumulator seed for every exponentiation.
+    one_mont: [u64; N],
+}
+
+impl<const N: usize> FixedMont<N> {
+    /// Build a context for an odd modulus of 2..=N limbs; `None` if the
+    /// modulus is even, single-limb, or too wide for this instantiation.
+    pub fn new(m: &BigUint) -> Option<Self> {
+        if m.is_even() || m.limbs.len() < 2 || m.limbs.len() > N {
+            return None;
+        }
+        let n = FixedUint::<N>::from_biguint(m)?.limbs;
+        // n' via Newton iteration on the 2-adic inverse: inv *= 2 - n0·inv.
+        let n0 = n[0];
+        let mut inv: u64 = 1;
+        for _ in 0..6 {
+            inv = inv.wrapping_mul(2u64.wrapping_sub(n0.wrapping_mul(inv)));
+        }
+        let n_prime = inv.wrapping_neg();
+        // R² mod n with one heap division, outside the hot loop.
+        let mut r2_limbs = vec![0u64; 2 * N];
+        r2_limbs.push(1);
+        let r2_big = BigUint::from_limbs(r2_limbs).rem(m);
+        let r2 = FixedUint::<N>::from_biguint(&r2_big)?.limbs;
+        let mut one = [0u64; N];
+        one[0] = 1;
+        let core = FixedMont { n, n_prime, r2, one_mont: [0u64; N] };
+        let one_mont = core.mont_mul(&one, &r2);
+        Some(FixedMont { one_mont, ..core })
+    }
+
+    /// CIOS Montgomery product: a·b·R⁻¹ mod n, entirely on the stack.
+    ///
+    /// Structurally identical to the reference `MontCore::mont_mul`; the
+    /// two overflow limbs live in scalars (`t_n`, `t_n1`) because
+    /// `[u64; N + 2]` is not expressible with stable const generics.
+    fn mont_mul(&self, a: &[u64; N], b: &[u64; N]) -> [u64; N] {
+        let n = &self.n;
+        let mut t = [0u64; N];
+        let (mut t_n, mut t_n1) = (0u64, 0u64);
+        for i in 0..N {
+            // t += a[i] * b
+            let ai = a[i] as u128;
+            let mut carry: u128 = 0;
+            for j in 0..N {
+                let cur = t[j] as u128 + ai * b[j] as u128 + carry;
+                t[j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let cur = t_n as u128 + carry;
+            t_n = cur as u64;
+            t_n1 = (cur >> 64) as u64;
+            // m = t[0] · n' mod 2^64; t += m·n; t >>= 64
+            let m = (t[0].wrapping_mul(self.n_prime)) as u128;
+            let mut carry: u128 = (t[0] as u128 + m * n[0] as u128) >> 64;
+            for j in 1..N {
+                let cur = t[j] as u128 + m * n[j] as u128 + carry;
+                t[j - 1] = cur as u64;
+                carry = cur >> 64;
+            }
+            let cur = t_n as u128 + carry;
+            t[N - 1] = cur as u64;
+            t_n = t_n1.wrapping_add((cur >> 64) as u64);
+            t_n1 = 0;
+        }
+        // Conditional subtraction: t may be in [0, 2n).
+        let ge = t_n != 0 || cmp_limbs(&t, n) != std::cmp::Ordering::Less;
+        if ge {
+            let mut borrow = 0u64;
+            for j in 0..N {
+                let (d1, b1) = t[j].overflowing_sub(n[j]);
+                let (d2, b2) = d1.overflowing_sub(borrow);
+                t[j] = d2;
+                borrow = (b1 as u64) + (b2 as u64);
+            }
+        }
+        t
+    }
+
+    /// 4-bit windowed exponentiation in Montgomery form. `m` must be the
+    /// modulus this context was built for. Mirrors the reference
+    /// `MontCore::pow` window walk bit for bit.
+    pub fn pow(&self, base: &BigUint, exp: &BigUint, m: &BigUint) -> BigUint {
+        let b = FixedUint::<N>::from_biguint(&base.rem(m))
+            .expect("reduced operand fits the engine width");
+        let b_mont = self.mont_mul(&b.limbs, &self.r2);
+        // Window table: base^0..base^15 in Montgomery form, on the stack.
+        let mut table = [[0u64; N]; 16];
+        table[0] = self.one_mont;
+        table[1] = b_mont;
+        for i in 2..16 {
+            table[i] = self.mont_mul(&table[i - 1], &b_mont);
+        }
+        let bits = exp.bit_len();
+        let windows = bits.div_ceil(4);
+        let mut acc = self.one_mont;
+        for w in (0..windows).rev() {
+            if w != windows - 1 {
+                for _ in 0..4 {
+                    acc = self.mont_mul(&acc, &acc);
+                }
+            }
+            let mut nib = 0usize;
+            for b in 0..4 {
+                let idx = w * 4 + (3 - b);
+                nib <<= 1;
+                if idx < bits && exp.bit(idx) {
+                    nib |= 1;
+                }
+            }
+            if nib != 0 {
+                acc = self.mont_mul(&acc, &table[nib]);
+            }
+        }
+        // Convert out of Montgomery form: mont_mul(acc, 1).
+        let mut one = [0u64; N];
+        one[0] = 1;
+        FixedUint { limbs: self.mont_mul(&acc, &one) }.to_biguint()
+    }
+
+    /// Plain modular product: two mont_muls (a·b·R⁻¹, then ·R² ⇒ a·b
+    /// mod m), no division and no allocation.
+    pub fn mul_mod(&self, a: &BigUint, b: &BigUint, m: &BigUint) -> BigUint {
+        let al = FixedUint::<N>::from_biguint(&a.rem(m))
+            .expect("reduced operand fits the engine width");
+        let bl = FixedUint::<N>::from_biguint(&b.rem(m))
+            .expect("reduced operand fits the engine width");
+        let ab = self.mont_mul(&al.limbs, &bl.limbs);
+        FixedUint { limbs: self.mont_mul(&ab, &self.r2) }.to_biguint()
+    }
+}
+
+/// Width-erased fixed-limb engine, dispatching to the smallest supported
+/// instantiation that fits the modulus. Boxed per variant so the enum (and
+/// the `ModCtx` holding it) stays small; the box is touched once per
+/// operation, never inside the CIOS loop.
+#[derive(Clone, Debug)]
+pub enum FixedEngine {
+    /// ≤ 256-bit moduli — the CRT halves of 512-bit RSA.
+    W4(Box<FixedMont<4>>),
+    /// ≤ 512-bit moduli.
+    W8(Box<FixedMont<8>>),
+    /// ≤ 1024-bit moduli.
+    W16(Box<FixedMont<16>>),
+    /// ≤ 2048-bit moduli — Paillier n² at 1024-bit keys.
+    W32(Box<FixedMont<32>>),
+}
+
+impl FixedEngine {
+    /// Pick the smallest width that fits an odd multi-limb modulus;
+    /// `None` (caller falls back to the `BigUint` reference or the
+    /// division kernels) for even, single-limb, or >32-limb moduli.
+    pub fn for_modulus(m: &BigUint) -> Option<FixedEngine> {
+        if m.is_even() {
+            return None;
+        }
+        match m.limbs.len() {
+            2..=4 => FixedMont::<4>::new(m).map(|c| FixedEngine::W4(Box::new(c))),
+            5..=8 => FixedMont::<8>::new(m).map(|c| FixedEngine::W8(Box::new(c))),
+            9..=16 => FixedMont::<16>::new(m).map(|c| FixedEngine::W16(Box::new(c))),
+            17..=32 => FixedMont::<32>::new(m).map(|c| FixedEngine::W32(Box::new(c))),
+            _ => None,
+        }
+    }
+
+    /// Width in limbs of the selected instantiation.
+    pub fn width_limbs(&self) -> usize {
+        match self {
+            FixedEngine::W4(_) => 4,
+            FixedEngine::W8(_) => 8,
+            FixedEngine::W16(_) => 16,
+            FixedEngine::W32(_) => 32,
+        }
+    }
+
+    /// Kernel name for benches and dispatch tests.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FixedEngine::W4(_) => "fixed-w4",
+            FixedEngine::W8(_) => "fixed-w8",
+            FixedEngine::W16(_) => "fixed-w16",
+            FixedEngine::W32(_) => "fixed-w32",
+        }
+    }
+
+    /// `base^exp mod m` through the selected width.
+    pub fn pow(&self, base: &BigUint, exp: &BigUint, m: &BigUint) -> BigUint {
+        match self {
+            FixedEngine::W4(c) => c.pow(base, exp, m),
+            FixedEngine::W8(c) => c.pow(base, exp, m),
+            FixedEngine::W16(c) => c.pow(base, exp, m),
+            FixedEngine::W32(c) => c.pow(base, exp, m),
+        }
+    }
+
+    /// `a·b mod m` through the selected width.
+    pub fn mul_mod(&self, a: &BigUint, b: &BigUint, m: &BigUint) -> BigUint {
+        match self {
+            FixedEngine::W4(c) => c.mul_mod(a, b, m),
+            FixedEngine::W8(c) => c.mul_mod(a, b, m),
+            FixedEngine::W16(c) => c.mul_mod(a, b, m),
+            FixedEngine::W32(c) => c.mul_mod(a, b, m),
+        }
+    }
+}
+
+/// Process-wide engine preference consulted by `ModCtx::new`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineChoice {
+    /// Prefer the fixed-limb engine whenever the modulus fits a supported
+    /// width (the default).
+    Auto,
+    /// Force the heap `BigUint` CIOS reference for every context — the
+    /// pinned engine differential tests and benches compare against.
+    Bigint,
+}
+
+impl EngineChoice {
+    /// Parse an engine name (`TREECSS_CRYPTO_ENGINE`, bench CLI).
+    pub fn from_name(s: &str) -> Option<EngineChoice> {
+        match s {
+            "auto" | "limbs" | "fixed" => Some(EngineChoice::Auto),
+            "bigint" | "reference" => Some(EngineChoice::Bigint),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (the bench artifact's `engine` column).
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineChoice::Auto => "limbs",
+            EngineChoice::Bigint => "bigint",
+        }
+    }
+}
+
+// 0 = Auto, 1 = Bigint, 2 = unresolved (read TREECSS_CRYPTO_ENGINE once).
+static ENGINE: std::sync::atomic::AtomicU8 = std::sync::atomic::AtomicU8::new(2);
+
+/// The process-wide engine preference. First read resolves the
+/// `TREECSS_CRYPTO_ENGINE` env var (`limbs`/`auto` or `bigint`; unset or
+/// unrecognized ⇒ `Auto`) and caches it.
+pub fn engine_choice() -> EngineChoice {
+    match ENGINE.load(std::sync::atomic::Ordering::Relaxed) {
+        0 => EngineChoice::Auto,
+        1 => EngineChoice::Bigint,
+        _ => {
+            let resolved = std::env::var("TREECSS_CRYPTO_ENGINE")
+                .ok()
+                .and_then(|s| EngineChoice::from_name(&s))
+                .unwrap_or(EngineChoice::Auto);
+            set_engine_choice(resolved);
+            resolved
+        }
+    }
+}
+
+/// Override the process-wide engine preference. Affects contexts built
+/// *after* the call (existing `ModCtx`/key material keeps its kernel), so
+/// benches and the cross-engine integration test set it before keygen.
+pub fn set_engine_choice(choice: EngineChoice) {
+    let v = match choice {
+        EngineChoice::Auto => 0,
+        EngineChoice::Bigint => 1,
+    };
+    ENGINE.store(v, std::sync::atomic::Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::bigint::ModCtx;
+    use crate::util::check::{forall, Config};
+    use crate::util::pool::Parallel;
+    use crate::util::rng::Rng;
+
+    /// Random odd modulus with the exact bit length (top bit set).
+    fn odd_modulus(r: &mut Rng, bits: usize) -> BigUint {
+        let mut hi = BigUint::one();
+        for _ in 0..(bits - 1) / 63 {
+            hi = hi.shl_small(63);
+        }
+        hi = hi.shl_small((bits - 1) % 63);
+        let mut m = BigUint::random_bits(r, bits).rem(&hi).add(&hi);
+        if m.is_even() {
+            m = m.add(&BigUint::one());
+        }
+        m
+    }
+
+    #[test]
+    fn conversion_roundtrip_and_overflow() {
+        let mut r = Rng::new(7);
+        for bits in [1, 64, 65, 200, 256] {
+            let v = BigUint::random_bits(&mut r, bits);
+            let f = FixedUint::<4>::from_biguint(&v).unwrap();
+            assert_eq!(f.to_biguint(), v);
+        }
+        let too_wide = BigUint::random_bits(&mut r, 257);
+        assert!(FixedUint::<4>::from_biguint(&too_wide).is_none());
+        assert_eq!(FixedUint::<4>::zero().to_biguint(), BigUint::zero());
+    }
+
+    #[test]
+    fn width_selection_and_fallbacks() {
+        let mut r = Rng::new(11);
+        for (bits, want) in [
+            (128, "fixed-w4"),
+            (256, "fixed-w4"),
+            (257, "fixed-w8"),
+            (512, "fixed-w8"),
+            (1024, "fixed-w16"),
+            (2048, "fixed-w32"),
+        ] {
+            let m = odd_modulus(&mut r, bits);
+            let ctx = ModCtx::with_engine(&m, EngineChoice::Auto);
+            assert_eq!(ctx.kernel_name(), want, "bits={bits}");
+        }
+        // Beyond 32 limbs: fixed engine declines, BigUint CIOS takes over.
+        let wide = odd_modulus(&mut r, 2049);
+        assert!(FixedEngine::for_modulus(&wide).is_none());
+        let ctx = ModCtx::with_engine(&wide, EngineChoice::Auto);
+        assert_eq!(ctx.kernel_name(), "bigint-cios");
+        // Even and single-limb moduli: division kernels under any choice.
+        let even = odd_modulus(&mut r, 512).add(&BigUint::one());
+        assert!(FixedEngine::for_modulus(&even).is_none());
+        let ctx = ModCtx::with_engine(&even, EngineChoice::Auto);
+        assert_eq!(ctx.kernel_name(), "generic-division");
+        let small = BigUint::from_u64(0x1_0001);
+        let ctx = ModCtx::with_engine(&small, EngineChoice::Auto);
+        assert_eq!(ctx.kernel_name(), "generic-division");
+        // Forced reference engine.
+        let m = odd_modulus(&mut r, 512);
+        let ctx = ModCtx::with_engine(&m, EngineChoice::Bigint);
+        assert_eq!(ctx.kernel_name(), "bigint-cios");
+    }
+
+    #[test]
+    fn prop_fixed_matches_reference_all_widths() {
+        // Differential pinning: for random moduli at every pipeline width,
+        // the fixed engine and the BigUint reference agree bitwise on
+        // pow / mul_mod, including operands at and above the modulus.
+        for bits in [512usize, 1024, 2048] {
+            let cases = if bits >= 2048 { 4 } else { 8 };
+            forall(
+                Config { cases, seed: 0xF1CED + bits as u64 },
+                |r| {
+                    let m = odd_modulus(r, bits);
+                    let a = BigUint::random_bits(r, bits + 17);
+                    let b = BigUint::random_bits(r, bits - 1);
+                    let e = BigUint::random_bits(r, 96);
+                    (m, a, b, e)
+                },
+                |(m, a, b, e)| {
+                    let fixed = ModCtx::with_engine(m, EngineChoice::Auto);
+                    let refr = ModCtx::with_engine(m, EngineChoice::Bigint);
+                    assert!(fixed.kernel_name().starts_with("fixed-"));
+                    fixed.pow(a, e) == refr.pow(a, e)
+                        && fixed.pow(a, e) == a.mod_pow(e, m)
+                        && fixed.mul_mod(a, b) == refr.mul_mod(a, b)
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn prop_batch_apis_match_reference() {
+        // The batch fan-out inherits the fixed path: mod_pow_batch and
+        // mul_mod_batch agree with the reference engine at 1 and 4 threads.
+        forall(
+            Config { cases: 6, seed: 0xBA7C4 },
+            |r| {
+                let m = odd_modulus(r, 512);
+                let xs: Vec<BigUint> = (0..9).map(|_| BigUint::random_bits(r, 530)).collect();
+                let ys: Vec<BigUint> = (0..9).map(|_| BigUint::random_bits(r, 511)).collect();
+                let e = BigUint::random_bits(r, 64);
+                (m, xs, ys, e)
+            },
+            |(m, xs, ys, e)| {
+                let fixed = ModCtx::with_engine(m, EngineChoice::Auto);
+                let refr = ModCtx::with_engine(m, EngineChoice::Bigint);
+                [Parallel::serial(), Parallel::new(4)].iter().all(|par| {
+                    fixed.mod_pow_batch(xs, e, *par) == refr.mod_pow_batch(xs, e, *par)
+                        && fixed.mul_mod_batch(xs, ys, *par) == refr.mul_mod_batch(xs, ys, *par)
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn adversarial_edges_match_reference() {
+        let mut r = Rng::new(0xED6E);
+        for bits in [256usize, 512, 1024] {
+            let m = odd_modulus(&mut r, bits);
+            let fixed = ModCtx::with_engine(&m, EngineChoice::Auto);
+            let refr = ModCtx::with_engine(&m, EngineChoice::Bigint);
+            let n_minus_1 = m.sub(&BigUint::one());
+            let edges = [
+                BigUint::zero(),
+                BigUint::one(),
+                n_minus_1.clone(),
+                m.clone(),
+                m.add(&BigUint::one()),
+                m.mul_u64(3).add(&BigUint::from_u64(5)),
+            ];
+            let exps = [
+                BigUint::zero(),
+                BigUint::one(),
+                BigUint::from_u64(2),
+                BigUint::from_u64(65537),
+                n_minus_1.clone(),
+            ];
+            for a in &edges {
+                for e in &exps {
+                    assert_eq!(fixed.pow(a, e), refr.pow(a, e));
+                    assert_eq!(fixed.pow(a, e), a.mod_pow(e, &m));
+                }
+                for b in &edges {
+                    assert_eq!(fixed.mul_mod(a, b), refr.mul_mod(a, b));
+                    assert_eq!(fixed.mul_mod(a, b), a.mul_mod(b, &m));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn engine_choice_parsing() {
+        assert_eq!(EngineChoice::from_name("limbs"), Some(EngineChoice::Auto));
+        assert_eq!(EngineChoice::from_name("auto"), Some(EngineChoice::Auto));
+        assert_eq!(EngineChoice::from_name("fixed"), Some(EngineChoice::Auto));
+        assert_eq!(EngineChoice::from_name("bigint"), Some(EngineChoice::Bigint));
+        assert_eq!(EngineChoice::from_name("reference"), Some(EngineChoice::Bigint));
+        assert_eq!(EngineChoice::from_name("quantum"), None);
+        assert_eq!(EngineChoice::Auto.name(), "limbs");
+        assert_eq!(EngineChoice::Bigint.name(), "bigint");
+    }
+}

@@ -1,5 +1,8 @@
 //! Cryptographic substrate, implemented from scratch on top of `bigint`.
 //!
+//! * [`limbs`] — fixed-limb Montgomery engine: stack-only `[u64; N]` CIOS
+//!   at 4/8/16/32 limbs, dispatched behind [`ModCtx`] with the heap
+//!   `BigUint` path pinned as the differential reference.
 //! * [`rsa`] — RSA blind signatures, the primitive under the RSA-based
 //!   two-party PSI (paper §4.1).
 //! * [`prf`] — HMAC-SHA256 pseudo-random function, the primitive under the
@@ -13,11 +16,13 @@
 //! same modular exponentiations per element.
 
 pub mod bigint;
+pub mod limbs;
 pub mod paillier;
 pub mod prf;
 pub mod rsa;
 
 pub use bigint::{BigUint, ModCtx};
+pub use limbs::{engine_choice, set_engine_choice, EngineChoice};
 
 use sha2::{Digest, Sha256};
 

@@ -14,7 +14,10 @@
 //! exponent p−1 over modulus p² — two exponentiations at ~1/8 the work of
 //! the full-width `c^λ mod n²`, bitwise equal by property test), and the
 //! `*_batch` entry points fan out over a [`Parallel`] budget with serial
-//! randomness draws so results are thread-count-invariant.
+//! randomness draws so results are thread-count-invariant. The cached
+//! contexts (n² and both CRT prime squares) dispatch to the stack-only
+//! fixed-limb engine ([`crate::crypto::limbs`]) when the modulus fits a
+//! supported width, pinned bitwise to the `BigUint` reference.
 //!
 //! Plaintext domain is Z_n; fixed-point helpers encode f32 vectors with a
 //! configurable scale for the weight/distance messages of Cluster-Coreset.
@@ -372,6 +375,32 @@ mod tests {
         assert!(pk
             .encrypt_batch(&mut r, &[BigUint::zero(), pk.n.clone()], Parallel::serial())
             .is_err());
+    }
+
+    #[test]
+    fn fixed_engine_round_trip_and_dispatch() {
+        use crate::crypto::limbs::EngineChoice;
+        // 256-bit keys: n² is 8 limbs (fixed-w8), the CRT prime squares
+        // are 4 limbs (fixed-w4) — the whole HE plane runs on the stack
+        // engine by default, and round-trips stay exact.
+        let (pk, sk) = keys(31);
+        assert_eq!(pk.ctx_n2.kernel_name(), "fixed-w8");
+        assert_eq!(sk.crt.ctx_p2.kernel_name(), "fixed-w4");
+        assert_eq!(sk.crt.ctx_q2.kernel_name(), "fixed-w4");
+        let mut r = Rng::new(32);
+        let a = pk.encrypt_u64(&mut r, 2026).unwrap();
+        let b = pk.encrypt_u64(&mut r, 4).unwrap();
+        assert_eq!(sk.decrypt_u64(&pk.add(&a, &b)), Some(2030));
+        // The ciphertext group element matches a forced BigUint-reference
+        // evaluation of the encryption equation with the same randomness.
+        let refr = ModCtx::with_engine(&pk.n2, EngineChoice::Bigint);
+        assert_eq!(refr.kernel_name(), "bigint-cios");
+        let m = BigUint::from_u64(123_456);
+        let rnd = BigUint::random_unit(&mut r, &pk.n);
+        let c = pk.encrypt_with(&m, &rnd);
+        let g_m = BigUint::one().add(&m.mul(&pk.n)).rem(&pk.n2);
+        let want = refr.mul_mod(&g_m, &refr.pow(&rnd, &pk.n));
+        assert_eq!(*c.value(), want);
     }
 
     #[test]

@@ -5,6 +5,11 @@
 //! We execute the PRF evaluations for real and model the oblivious transfer
 //! at the cost level (bytes exchanged per OT in `psi::ot_psi`), which is the
 //! granularity the paper's Fig. 7 measures.
+//!
+//! Engine note: this plane is pure symmetric crypto — no modular
+//! exponentiation — so it is invariant under the fixed-limb vs `BigUint`
+//! engine choice ([`crate::crypto::limbs`]); only the RSA/Paillier planes
+//! change kernels.
 
 use hmac::{Hmac, Mac};
 use sha2::Sha256;

@@ -14,7 +14,10 @@
 //! Garner recombination — bitwise equal to `m^d mod n`, property-tested),
 //! and the `*_batch` entry points fan the per-element work out over a
 //! [`Parallel`] worker budget while drawing randomness serially so results
-//! are bitwise invariant across thread counts.
+//! are bitwise invariant across thread counts. Every cached context — the
+//! full-width n and both CRT halves — dispatches to the stack-only
+//! fixed-limb engine ([`crate::crypto::limbs`]) when the modulus fits a
+//! supported width, pinned bitwise to the `BigUint` reference.
 
 use crate::crypto::bigint::{crt_combine, ModCtx};
 use crate::crypto::{hash_to_zn, sha256, BigUint};
@@ -316,6 +319,36 @@ mod tests {
         );
         for m in [BigUint::zero(), BigUint::one(), kp.public.n.sub(&BigUint::one())] {
             assert_eq!(kp.sign_raw(&m), kp.sign_raw_plain(&m));
+        }
+    }
+
+    #[test]
+    fn fixed_engine_paths_match_bigint_reference() {
+        use crate::crypto::limbs::EngineChoice;
+        // 256-bit keys dispatch every cached context — full-width n and
+        // both CRT halves — to the fixed-limb engine by default…
+        let kp = small_key(21);
+        assert_eq!(kp.public.ctx.kernel_name(), "fixed-w4");
+        assert_eq!(kp.crt.ctx_p.kernel_name(), "fixed-w4");
+        assert_eq!(kp.crt.ctx_q.kernel_name(), "fixed-w4");
+        // …and signing/verification through it agree bitwise with a
+        // forced BigUint-reference context for the same n.
+        let refr = ModCtx::with_engine(&kp.public.n, EngineChoice::Bigint);
+        assert_eq!(refr.kernel_name(), "bigint-cios");
+        let mut r = Rng::new(91);
+        for m in [
+            BigUint::from_u64(2),
+            BigUint::random_below(&mut r, &kp.public.n),
+            kp.public.n.sub(&BigUint::one()),
+        ] {
+            assert_eq!(kp.sign_raw(&m), refr.pow(&m, &kp.d));
+        }
+        for x in [0u64, 9, 0xDEAD_BEEF] {
+            let blinded = kp.public.blind(&mut r, "d", x);
+            let sig = kp.public.unblind(&blinded, &kp.sign_raw(&blinded.value)).unwrap();
+            assert!(kp.public.verify_indicator("d", x, &sig));
+            let m = hash_to_zn(&crate::crypto::hash_indicator("d", x), &kp.public.n);
+            assert_eq!(refr.pow(&sig, &kp.public.e), m);
         }
     }
 

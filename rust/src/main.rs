@@ -6,6 +6,7 @@
 //!   mpsi     — multi-party PSI only, comparing topologies.
 //!   coreset  — Cluster-Coreset only, reporting reduction + weights.
 //!   info     — artifact/runtime diagnostics.
+//!   bench-check — validate BENCH_*.json artifacts (provenance contract).
 //!
 //! Examples:
 //!   treecss run --dataset RI --scale 0.1 --model mlp --variant treecss
@@ -51,6 +52,7 @@ fn real_main() -> Result<()> {
         "mpsi" => cmd_mpsi(&cli),
         "coreset" => cmd_coreset(&cli),
         "info" => cmd_info(),
+        "bench-check" => cmd_bench_check(&cli),
         // Hidden: the child half of `run --distributed` (self-exec'd).
         "party-worker" => distributed::serve_party_worker(&cli),
         "" | "help" | "--help" => {
@@ -67,7 +69,7 @@ fn real_main() -> Result<()> {
 const HELP: &str = "\
 treecss — TreeCSS vertical federated learning framework
 
-USAGE: treecss <run|mpsi|coreset|info> [--options]
+USAGE: treecss <run|mpsi|coreset|info|bench-check> [--options]
 
 run options (builds a Pipeline::builder(..) session over a metered
 transport; parties exchange every protocol message as wire envelopes):
@@ -103,6 +105,12 @@ mpsi options:
 
 coreset options:
   --dataset ... --scale ... --clusters <k> --threads <n> --no-reweight
+
+bench-check usage:
+  treecss bench-check BENCH_*.json    fail unless every artifact honours
+                                      the provenance contract (measured
+                                      provenance must carry non-empty
+                                      result tables; projection may not)
 
 (party-worker is internal: the child process half of --distributed.)
 ";
@@ -311,6 +319,21 @@ fn cmd_coreset(cli: &Cli) -> Result<()> {
         r.wall_s,
         bench::fmt_bytes(r.bytes)
     );
+    Ok(())
+}
+
+fn cmd_bench_check(cli: &Cli) -> Result<()> {
+    if cli.positionals.is_empty() {
+        let usage = "bench-check: no artifact paths (try: treecss bench-check BENCH_*.json)";
+        return Err(treecss::Error::Config(usage.into()));
+    }
+    for path in &cli.positionals {
+        let doc = std::fs::read_to_string(path)
+            .map_err(|e| treecss::Error::Config(format!("bench-check: {path}: {e}")))?;
+        bench::validate_artifact(&doc)
+            .map_err(|e| treecss::Error::Config(format!("bench-check: {path}: {e}")))?;
+        println!("{path}: ok");
+    }
     Ok(())
 }
 

@@ -16,9 +16,16 @@
 //! (with bounded retry, so processes may start in any order) and caches
 //! **one connection per destination** — all sends to a peer serialize
 //! through it, which is what guarantees per-(sender, phase) FIFO order on
-//! the receiving side. Dropping the transport flips a shutdown flag, wakes
-//! every acceptor, closes cached connections and joins the listener
-//! threads, releasing the ports.
+//! the receiving side. A cached connection that has gone stale (the peer
+//! restarted or dropped it between sends) is detected by a nonblocking
+//! peek probe, redialed once, and the in-flight frame retransmitted —
+//! only a failure on the fresh connection surfaces as `Err`. Dropping the
+//! transport flips a shutdown flag, wakes every acceptor, closes cached
+//! connections, and joins both the listener threads (releasing the ports)
+//! and the connection-handler threads (whose reads poll on
+//! [`TcpTransportConfig::handler_poll`] so shutdown is honored even
+//! mid-frame). All transport mutexes recover from poisoning — one
+//! panicked worker cannot cascade panics into unrelated sends/recvs.
 //!
 //! A transport built with [`TcpTransportBuilder::forward_to`] is a *relay*:
 //! instead of mailboxing arrived frames it re-sends them, byte for byte, to
@@ -57,6 +64,11 @@ pub struct TcpTransportConfig {
     /// Frames whose length prefix exceeds this are rejected before any
     /// allocation (hostile-length posture, applied at the frame layer).
     pub max_frame_bytes: u64,
+    /// Read-timeout tick on accepted connections: handler threads wake
+    /// this often between partial reads to re-check the shutdown flag, so
+    /// a half-open peer can park a handler for at most one tick past
+    /// transport drop (instead of forever in `read_exact`).
+    pub handler_poll: Duration,
 }
 
 impl Default for TcpTransportConfig {
@@ -66,6 +78,7 @@ impl Default for TcpTransportConfig {
             dial_attempts: 40,
             dial_backoff: Duration::from_millis(25),
             max_frame_bytes: 256 * 1024 * 1024,
+            handler_poll: Duration::from_millis(100),
         }
     }
 }
@@ -124,6 +137,15 @@ fn decode_party(d: &mut Decoder) -> Result<PartyId> {
     }
 }
 
+/// Lock a transport mutex, recovering from poisoning. Every mutex in this
+/// module guards plain state (an address map or a connection slot) that
+/// is valid at any instant a panic could unwind past it, so one panicked
+/// worker thread must not cascade into panics on unrelated sends/recvs —
+/// faults stay `Err`-never-panic, matching the FaultTransport contract.
+fn lock_clean<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Write one length-prefixed frame.
 fn write_frame(w: &mut impl Write, body: &[u8]) -> std::io::Result<()> {
     w.write_all(&(body.len() as u64).to_le_bytes())?;
@@ -131,21 +153,50 @@ fn write_frame(w: &mut impl Write, body: &[u8]) -> std::io::Result<()> {
     w.flush()
 }
 
-/// Read one length-prefixed frame. A hostile length prefix (over
-/// `max_len`) errors before allocating; a truncated body errors via
-/// `read_exact` instead of blocking forever on a half-frame.
-fn read_frame(r: &mut impl Read, max_len: u64) -> Result<Vec<u8>> {
-    let mut len8 = [0u8; 8];
-    r.read_exact(&mut len8)?;
-    let len = u64::from_le_bytes(len8);
-    if len > max_len {
-        return Err(Error::Net(format!(
-            "tcp frame length {len} exceeds cap {max_len}"
-        )));
+/// True when a cached outbound connection is already dead. The protocol
+/// never sends bytes back on dialed connections, so an EOF or any
+/// readable byte on a nonblocking peek means the peer closed or reset the
+/// connection (e.g. it restarted between sends). Writes to such a stream
+/// can still "succeed" into the kernel buffer, so senders probe before
+/// writing instead of trusting the write result.
+fn conn_is_stale(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return true;
     }
-    let mut body = vec![0u8; len as usize];
-    r.read_exact(&mut body)?;
-    Ok(body)
+    let mut byte = [0u8; 1];
+    let stale = match stream.peek(&mut byte) {
+        Ok(_) => true, // EOF (0 bytes) or unexpected inbound data
+        Err(e) => e.kind() != std::io::ErrorKind::WouldBlock,
+    };
+    if stream.set_nonblocking(false).is_err() {
+        return true;
+    }
+    stale
+}
+
+/// Write `body` to the cached connection in `slot`, dialing on first use
+/// and redialing **once, with retransmission,** when the cached
+/// connection has gone stale or the write fails. A peer restart between
+/// two sends must not lose the in-flight envelope when a fresh dial would
+/// deliver it; only a failure on the fresh connection surfaces as `Err`.
+fn send_frame_reconnecting(
+    slot: &mut Option<TcpStream>,
+    addr: SocketAddr,
+    cfg: &TcpTransportConfig,
+    body: &[u8],
+) -> Result<()> {
+    if let Some(stream) = slot.as_mut() {
+        if !conn_is_stale(stream) && write_frame(stream, body).is_ok() {
+            return Ok(());
+        }
+        // Stale connection or failed write: drop it and retransmit on a
+        // fresh dial below.
+        *slot = None;
+    }
+    let mut fresh = dial(addr, cfg)?;
+    write_frame(&mut fresh, body)?;
+    *slot = Some(fresh);
+    Ok(())
 }
 
 /// State shared with acceptor/handler threads.
@@ -156,23 +207,65 @@ struct Shared {
     /// Relay mode: re-send every arrived frame here instead of mailboxing.
     forward: Option<SocketAddr>,
     forward_conn: Mutex<Option<TcpStream>>,
+    /// Handler threads serving accepted connections, joined on Drop so a
+    /// blocked handler never outlives the transport.
+    handlers: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl Shared {
     /// Relay one raw frame body to the forward address over the single
     /// cached relay connection (serialized, so arrival order at the
     /// destination matches the order frames were read off our sockets).
+    /// Shares the redial-and-retransmit posture of `Transport::send`.
     fn forward_frame(&self, addr: SocketAddr, body: &[u8]) -> Result<()> {
-        let mut conn = self.forward_conn.lock().unwrap();
-        if conn.is_none() {
-            *conn = Some(dial(addr, &self.cfg)?);
-        }
-        let res = write_frame(conn.as_mut().expect("just dialed"), body);
-        if let Err(e) = res {
-            *conn = None;
-            return Err(Error::Net(format!("tcp forward to {addr}: {e}")));
+        let mut conn = lock_clean(&self.forward_conn);
+        send_frame_reconnecting(&mut conn, addr, &self.cfg, body)
+            .map_err(|e| Error::Net(format!("tcp forward to {addr}: {e}")))
+    }
+
+    /// `read_exact` in poll-sized steps: the stream carries a
+    /// `handler_poll` read timeout, and every timeout tick re-checks the
+    /// shutdown flag while keeping partial progress — a half-open peer
+    /// holding a silent half-frame can never park a handler thread past
+    /// transport drop.
+    fn read_full(&self, stream: &mut TcpStream, buf: &mut [u8]) -> Result<()> {
+        let mut filled = 0usize;
+        while filled < buf.len() {
+            if self.shutdown.load(Ordering::SeqCst) {
+                return Err(Error::Net("tcp: transport shut down".into()));
+            }
+            match stream.read(&mut buf[filled..]) {
+                Ok(0) => return Err(Error::Net("tcp: connection closed".into())),
+                Ok(n) => filled += n,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                            | std::io::ErrorKind::Interrupted
+                    ) => {}
+                Err(e) => return Err(e.into()),
+            }
         }
         Ok(())
+    }
+
+    /// Read one length-prefixed frame with the polled reader. A hostile
+    /// length prefix (over `max_frame_bytes`) errors before allocating; a
+    /// truncated body errors on EOF instead of blocking forever.
+    fn read_frame(&self, stream: &mut TcpStream) -> Result<Vec<u8>> {
+        let mut len8 = [0u8; 8];
+        self.read_full(stream, &mut len8)?;
+        let len = u64::from_le_bytes(len8);
+        if len > self.cfg.max_frame_bytes {
+            return Err(Error::Net(format!(
+                "tcp frame length {len} exceeds cap {}",
+                self.cfg.max_frame_bytes
+            )));
+        }
+        let mut body = vec![0u8; len as usize];
+        self.read_full(stream, &mut body)?;
+        Ok(body)
     }
 }
 
@@ -203,7 +296,8 @@ fn accept_loop(shared: Arc<Shared>, listener: TcpListener) {
         }
         if let Ok(stream) = conn {
             let sh = Arc::clone(&shared);
-            std::thread::spawn(move || serve_conn(sh, stream));
+            let handle = std::thread::spawn(move || serve_conn(sh, stream));
+            lock_clean(&shared.handlers).push(handle);
         }
     }
 }
@@ -211,13 +305,18 @@ fn accept_loop(shared: Arc<Shared>, listener: TcpListener) {
 /// Drain frames off one accepted connection until EOF, shutdown, or a
 /// malformed frame (which drops the connection — the lost message then
 /// surfaces as a recv timeout at whoever expected it, never a panic).
+/// Reads run on a `handler_poll` timeout tick so shutdown is honored even
+/// mid-frame (see `Shared::read_full`).
 fn serve_conn(shared: Arc<Shared>, mut stream: TcpStream) {
     let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(shared.cfg.handler_poll)).is_err() {
+        return;
+    }
     loop {
         if shared.shutdown.load(Ordering::SeqCst) {
             return;
         }
-        let body = match read_frame(&mut stream, shared.cfg.max_frame_bytes) {
+        let body = match shared.read_frame(&mut stream) {
             Ok(b) => b,
             Err(_) => return,
         };
@@ -301,6 +400,7 @@ impl TcpTransportBuilder {
             shutdown: AtomicBool::new(false),
             forward: self.forward,
             forward_conn: Mutex::new(None),
+            handlers: Mutex::new(Vec::new()),
         });
         let mut local_addrs = HashMap::new();
         let mut peers: HashMap<PartyId, SocketAddr> = self.peers.into_iter().collect();
@@ -364,35 +464,29 @@ impl TcpTransport {
     /// another process — how a coordinator learns its workers' endpoints
     /// after they bind.
     pub fn add_peer(&self, party: PartyId, addr: SocketAddr) {
-        self.peers.lock().unwrap().insert(party, addr);
+        lock_clean(&self.peers).insert(party, addr);
         // A stale cached connection must not outlive the route change.
-        self.conns.lock().unwrap().remove(&party);
+        lock_clean(&self.conns).remove(&party);
     }
 }
 
 impl Transport for TcpTransport {
     fn send(&self, env: Envelope) -> Result<f64> {
         let to = env.to;
-        let addr = match self.peers.lock().unwrap().get(&to) {
+        let addr = match lock_clean(&self.peers).get(&to) {
             Some(a) => *a,
             None => {
                 return Err(Error::Net(format!("tcp: no route to {to} (unknown peer)")));
             }
         };
         let slot = {
-            let mut conns = self.conns.lock().unwrap();
+            let mut conns = lock_clean(&self.conns);
             Arc::clone(conns.entry(to).or_default())
         };
-        let mut conn = slot.lock().unwrap();
-        if conn.is_none() {
-            *conn = Some(dial(addr, &self.shared.cfg)?);
-        }
+        let mut conn = lock_clean(&slot);
         let body = encode_envelope(&env);
-        let res = write_frame(conn.as_mut().expect("just dialed"), &body);
-        if let Err(e) = res {
-            *conn = None;
-            return Err(Error::Net(format!("tcp send to {to} at {addr}: {e}")));
-        }
+        send_frame_reconnecting(&mut conn, addr, &self.shared.cfg, &body)
+            .map_err(|e| Error::Net(format!("tcp send to {to} at {addr}: {e}")))?;
         Ok(0.0)
     }
 
@@ -402,7 +496,7 @@ impl Transport for TcpTransport {
         // side of a distributed run). Anything else is a caller bug worth
         // a crisp error instead of a full timeout.
         let known =
-            self.local_addrs.contains_key(&at) || self.peers.lock().unwrap().contains_key(&at);
+            self.local_addrs.contains_key(&at) || lock_clean(&self.peers).contains_key(&at);
         if !known {
             return Err(Error::Net(format!(
                 "tcp: recv at {at}: party neither hosted by this process nor peered"
@@ -420,14 +514,22 @@ impl Drop for TcpTransport {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         // Close outbound connections so peer handler threads see EOF.
-        self.conns.lock().unwrap().clear();
-        *self.shared.forward_conn.lock().unwrap() = None;
+        lock_clean(&self.conns).clear();
+        *lock_clean(&self.shared.forward_conn) = None;
         // Wake each acceptor so it observes the flag, then join it — the
         // join is what releases the listener ports deterministically.
         for addr in self.local_addrs.values() {
             let _ = TcpStream::connect(*addr);
         }
         for h in self.acceptors.drain(..) {
+            let _ = h.join();
+        }
+        // Join the handler threads too: their polled reads observe the
+        // shutdown flag within one `handler_poll` tick, so even a handler
+        // parked on a half-open peer's silent half-frame is reclaimed
+        // here instead of outliving the transport.
+        let handlers: Vec<JoinHandle<()>> = lock_clean(&self.shared.handlers).drain(..).collect();
+        for h in handlers {
             let _ = h.join();
         }
     }
@@ -455,20 +557,65 @@ mod tests {
         assert_eq!(got.wire_bytes(), 96);
     }
 
+    /// A bare `Shared` plus a connected socket pair, for driving the
+    /// frame reader directly with hostile bytes.
+    fn shared_and_socket_pair(cfg: TcpTransportConfig) -> (Shared, TcpStream, TcpStream) {
+        let shared = Shared {
+            mail: Mailboxes::new(),
+            cfg,
+            shutdown: AtomicBool::new(false),
+            forward: None,
+            forward_conn: Mutex::new(None),
+            handlers: Mutex::new(Vec::new()),
+        };
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (served, _) = listener.accept().unwrap();
+        served.set_read_timeout(Some(cfg.handler_poll)).unwrap();
+        (shared, client, served)
+    }
+
     #[test]
     fn hostile_frame_length_is_error_not_allocation() {
-        let mut buf: Vec<u8> = u64::MAX.to_le_bytes().to_vec();
-        buf.extend_from_slice(&[0; 16]);
-        let err = read_frame(&mut std::io::Cursor::new(buf), 1 << 20).unwrap_err();
+        let cfg = TcpTransportConfig {
+            max_frame_bytes: 1 << 20,
+            handler_poll: Duration::from_millis(10),
+            ..Default::default()
+        };
+        let (shared, mut client, mut served) = shared_and_socket_pair(cfg);
+        client.write_all(&u64::MAX.to_le_bytes()).unwrap();
+        client.write_all(&[0; 16]).unwrap();
+        let err = shared.read_frame(&mut served).unwrap_err();
         assert!(err.to_string().contains("exceeds cap"), "{err}");
     }
 
     #[test]
     fn truncated_frame_is_error_not_hang() {
-        // Header promises 100 bytes, wire carries 3.
-        let mut buf: Vec<u8> = 100u64.to_le_bytes().to_vec();
-        buf.extend_from_slice(&[1, 2, 3]);
-        assert!(read_frame(&mut std::io::Cursor::new(buf), 1 << 20).is_err());
+        // Header promises 100 bytes, wire carries 3 and then closes.
+        let cfg = TcpTransportConfig {
+            handler_poll: Duration::from_millis(10),
+            ..Default::default()
+        };
+        let (shared, mut client, mut served) = shared_and_socket_pair(cfg);
+        client.write_all(&100u64.to_le_bytes()).unwrap();
+        client.write_all(&[1, 2, 3]).unwrap();
+        drop(client);
+        assert!(shared.read_frame(&mut served).is_err());
+    }
+
+    #[test]
+    fn shutdown_interrupts_a_mid_frame_read() {
+        // A silent peer parks the reader mid-frame; flipping the shutdown
+        // flag must surface within one poll tick, not hang.
+        let cfg = TcpTransportConfig {
+            handler_poll: Duration::from_millis(10),
+            ..Default::default()
+        };
+        let (shared, mut client, mut served) = shared_and_socket_pair(cfg);
+        client.write_all(&[9, 9, 9]).unwrap(); // 3 of 8 header bytes, then silence
+        shared.shutdown.store(true, Ordering::SeqCst);
+        let err = shared.read_frame(&mut served).unwrap_err();
+        assert!(err.to_string().contains("shut down"), "{err}");
     }
 
     #[test]
@@ -587,5 +734,121 @@ mod tests {
         drop(t);
         // Drop joined the acceptor, so nothing is listening there anymore.
         assert!(std::net::TcpStream::connect(addr).is_err(), "listener must be gone");
+    }
+
+    /// Read one length-prefixed frame with plain blocking reads — the
+    /// test-side peer for exercising the sender against a raw listener.
+    fn read_test_frame(s: &mut TcpStream) -> Vec<u8> {
+        let mut len8 = [0u8; 8];
+        s.read_exact(&mut len8).unwrap();
+        let mut body = vec![0u8; u64::from_le_bytes(len8) as usize];
+        s.read_exact(&mut body).unwrap();
+        body
+    }
+
+    #[test]
+    fn send_redials_and_retransmits_when_cached_connection_is_stale() {
+        // The peer is a raw listener we control, so we can kill the
+        // accepted connection between two sends — the deterministic
+        // stand-in for "the peer process restarted": the sender's cached
+        // connection is dead, but a fresh dial to the same address works.
+        let ta = TcpTransport::hosting([A]).unwrap();
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        ta.add_peer(B, listener.local_addr().unwrap());
+        ta.send(Envelope::new(A, B, "p", vec![1])).unwrap();
+        let (mut c1, _) = listener.accept().unwrap();
+        let f1 = read_test_frame(&mut c1);
+        assert_eq!(decode_envelope(&f1).unwrap().payload, vec![1]);
+        // Peer "restarts": the accepted connection dies while the
+        // sender's cache still holds its end. Give the FIN a moment to
+        // land so the staleness probe sees it.
+        drop(c1);
+        std::thread::sleep(Duration::from_millis(100));
+        // Pre-fix, this send wrote into the dead socket's buffer,
+        // reported Ok, and the envelope was lost (or, on a later send,
+        // errored with the slot cleared — still losing the frame). Now it
+        // must redial and retransmit.
+        ta.send(Envelope::new(A, B, "p", vec![2])).unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        let mut c2 = loop {
+            match listener.accept() {
+                Ok((c, _)) => break c,
+                Err(_) => {
+                    assert!(
+                        std::time::Instant::now() < deadline,
+                        "sender never redialed after the peer connection died"
+                    );
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        };
+        c2.set_nonblocking(false).unwrap();
+        let f2 = read_test_frame(&mut c2);
+        assert_eq!(decode_envelope(&f2).unwrap().payload, vec![2], "envelope retransmitted");
+    }
+
+    #[test]
+    fn poisoned_locks_do_not_cascade_into_send_recv_panics() {
+        let t = pair();
+        t.send(Envelope::new(A, B, "p", vec![1])).unwrap();
+        assert_eq!(t.recv(B, A, "p").unwrap().payload, vec![1]);
+        // Poison the per-destination slot, the connection map, and the
+        // peer map: a worker panicking while holding each lock.
+        let slot = Arc::clone(lock_clean(&t.conns).get(&B).unwrap());
+        let _ = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _guard = slot.lock().unwrap();
+                panic!("poison the conn slot");
+            })
+            .join()
+        });
+        let _ = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _guard = t.conns.lock().unwrap();
+                panic!("poison the conn map");
+            })
+            .join()
+        });
+        let _ = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _guard = t.peers.lock().unwrap();
+                panic!("poison the peer map");
+            })
+            .join()
+        });
+        // Pre-fix, every one of these panicked on PoisonError. The state
+        // under each lock is plain data, so traffic must keep flowing.
+        t.send(Envelope::new(A, B, "p", vec![2])).unwrap();
+        assert_eq!(t.recv(B, A, "p").unwrap().payload, vec![2]);
+        t.add_peer(B, t.local_addr(B).unwrap());
+        t.send(Envelope::new(A, B, "p", vec![3])).unwrap();
+        assert_eq!(t.recv(B, A, "p").unwrap().payload, vec![3]);
+    }
+
+    #[test]
+    fn dropped_transport_reclaims_handler_parked_on_half_frame() {
+        let cfg = TcpTransportConfig {
+            handler_poll: Duration::from_millis(20),
+            ..Default::default()
+        };
+        let t = TcpTransportBuilder::with_config(cfg).host(A).build().unwrap();
+        let addr = t.local_addr(A).unwrap();
+        // A half-open peer: sends 3 of the 8 length-prefix bytes, then
+        // goes silent while keeping the connection alive.
+        let mut hostile = TcpStream::connect(addr).unwrap();
+        hostile.write_all(&[1, 2, 3]).unwrap();
+        std::thread::sleep(Duration::from_millis(60)); // handler picks it up mid-frame
+        drop(t);
+        // Pre-fix, the handler sat in read_exact forever, outliving the
+        // transport and holding our connection open. Post-fix, Drop joins
+        // it (the polled read observes shutdown within one tick), so its
+        // end of the connection closes and we observe EOF/reset promptly.
+        hostile.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut buf = [0u8; 1];
+        let got = hostile.read(&mut buf);
+        let closed = matches!(got, Ok(0))
+            || matches!(&got, Err(e) if e.kind() == std::io::ErrorKind::ConnectionReset);
+        assert!(closed, "handler thread still holds the connection: {got:?}");
     }
 }

@@ -1,0 +1,84 @@
+//! Cross-engine pinning at the key-material level: flipping the
+//! process-wide crypto engine between the fixed-limb path and the
+//! `BigUint` reference must change *nothing observable* — identical key
+//! material from identical seeds, bitwise-equal signatures, blind rounds,
+//! and HE round-trips.
+//!
+//! The engine choice is process-global, so this file holds exactly one
+//! test: the flips can never race another test in the same binary.
+
+use treecss::crypto::limbs::{set_engine_choice, EngineChoice};
+use treecss::crypto::{paillier, rsa::RsaKeyPair, BigUint, ModCtx};
+use treecss::util::pool::Parallel;
+use treecss::util::rng::Rng;
+
+/// Run the full RSA + Paillier surface under one engine and fingerprint
+/// every output. Key generation draws randomness only through
+/// `BigUint::mod_pow` (always the pinned reference), so both engines see
+/// identical rng streams and identical key material — any divergence in
+/// the fingerprint is an arithmetic divergence between kernels.
+fn crypto_fingerprint(choice: EngineChoice) -> Vec<Vec<u8>> {
+    set_engine_choice(choice);
+    let mut out: Vec<Vec<u8>> = Vec::new();
+    let par = Parallel::new(3);
+
+    // RSA: blind → sign → unblind → verify, plus batch signing.
+    let mut rng = Rng::new(0x55AA);
+    let kp = RsaKeyPair::generate(&mut rng, 256).unwrap();
+    out.push(kp.public.n.to_bytes_be());
+    let xs: Vec<u64> = (0..7).map(|i| i * 17 + 3).collect();
+    let blinded = kp.public.blind_batch(&mut rng, "eng", &xs, par);
+    let blind_sigs =
+        kp.sign_batch(&blinded.iter().map(|b| b.value.clone()).collect::<Vec<_>>(), par);
+    let sigs = kp.public.unblind_batch(&blinded, &blind_sigs).unwrap();
+    for (x, sig) in xs.iter().zip(&sigs) {
+        assert!(kp.public.verify_indicator("eng", *x, sig), "x={x}");
+        out.push(sig.to_bytes_be());
+    }
+
+    // Paillier: encrypt → homomorphic ops → decrypt, batched.
+    let (pk, sk) = paillier::keygen(&mut rng, 256).unwrap();
+    out.push(pk.n2.to_bytes_be());
+    let ms: Vec<BigUint> = (0..5u64).map(|v| BigUint::from_u64(v * 1009 + 11)).collect();
+    let cts = pk.encrypt_batch(&mut rng, &ms, par).unwrap();
+    let doubled = pk.mul_scalar_batch(&cts, &[2u64; 5], par);
+    let sum = pk.add(&doubled[0], &doubled[4]);
+    for ct in cts.iter().chain(doubled.iter()).chain([&sum]) {
+        out.push(ct.to_bytes());
+    }
+    for (m, got) in ms.iter().zip(sk.decrypt_batch(&cts, par)) {
+        assert_eq!(*m, got);
+    }
+    assert_eq!(sk.decrypt(&sum), BigUint::from_u64(2 * 11 + 2 * (4 * 1009 + 11)));
+
+    // Raw ModCtx parity at the wider pipeline widths (no keygen cost):
+    // fixed vs whatever the global choice picked, against mod_pow.
+    let mut r = Rng::new(0xC0DE);
+    for bits in [512usize, 1024] {
+        let mut m = BigUint::random_bits(&mut r, bits);
+        if m.is_even() {
+            m = m.add(&BigUint::one());
+        }
+        if m.bit_len() < 128 {
+            continue; // vanishingly unlikely; keep the property total
+        }
+        let ctx = ModCtx::new(&m);
+        let base = BigUint::random_bits(&mut r, bits + 9);
+        let exp = BigUint::random_bits(&mut r, 80);
+        let got = ctx.pow(&base, &exp);
+        assert_eq!(got, base.mod_pow(&exp, &m));
+        out.push(got.to_bytes_be());
+    }
+    out
+}
+
+#[test]
+fn fixed_and_bigint_engines_are_bitwise_identical() {
+    let reference = crypto_fingerprint(EngineChoice::Bigint);
+    let fixed = crypto_fingerprint(EngineChoice::Auto);
+    set_engine_choice(EngineChoice::Auto);
+    assert_eq!(reference.len(), fixed.len());
+    for (i, (a, b)) in reference.iter().zip(&fixed).enumerate() {
+        assert_eq!(a, b, "engine outputs diverge at fingerprint entry {i}");
+    }
+}
