@@ -1,0 +1,161 @@
+//! Serving-plane throughput: N concurrent sessions vs the serial path.
+//!
+//! Each cell hosts N seeded sessions behind a live [`ServeDaemon`]
+//! (control protocol over localhost TCP, sessions multiplexed on one
+//! shared wire, phases namespaced `session/<id>/<phase>`) and reports
+//! the wall-clock from first submit to last result, next to the same N
+//! seeds run serially on private wires. Every served report is checked
+//! byte-identical to its serial twin — the `identical` column is part
+//! of the measurement, not an afterthought: a serving plane that is
+//! fast but divergent is wrong.
+//!
+//!     cargo bench --bench bench_serve [-- --full]
+//!
+//! `TREECSS_BENCH_REPS` sets repetitions per cell (default 1; the wall
+//! column reports the mean). Alongside the markdown, the run writes
+//! `BENCH_bench_serve.json` (config + every table, machine-readable).
+//!
+//! Expected shape: at 4 workers the 4-session wall lands well under 4×
+//! the 1-session wall (sessions overlap on the shared wire; the crypto
+//! plane is the shared bottleneck, so the win is concurrency, not a 4×
+//! speedup), and the `serve` rows track the `serial` baseline per
+//! session within scheduling noise. The channel and tcp wires carry the
+//! same reports — the wire is swappable, the protocol traffic is not.
+
+use std::time::Instant;
+
+use treecss::bench::{fmt_secs, JsonReport, Table};
+use treecss::coordinator::{
+    ControlClient, ReportSummary, ServeConfig, ServeDaemon, ServeWire, SessionSpec,
+};
+
+fn bench_reps() -> usize {
+    treecss::bench::reps_from_env(1)
+}
+
+fn spec_for(seed: u64, full: bool) -> SessionSpec {
+    SessionSpec {
+        dataset: "RI".into(),
+        scale: if full { 0.03 } else { 0.012 },
+        variant: "treecss".into(),
+        seed,
+        epochs: if full { 60 } else { 15 },
+        rsa_bits: if full { 512 } else { 256 },
+        he_bits: if full { 512 } else { 256 },
+        threads: 1,
+        ..SessionSpec::default()
+    }
+}
+
+/// Serial ground truth for `n` sessions (ids 1..=n, matching the
+/// daemon's submit-order id assignment) plus its wall-clock.
+fn run_serial_baseline(n: usize, full: bool) -> (Vec<ReportSummary>, f64) {
+    let t0 = Instant::now();
+    let serial: Vec<ReportSummary> = (0..n)
+        .map(|i| spec_for(1_000 + i as u64, full).run_serial(i as u64 + 1).expect("serial run"))
+        .collect();
+    (serial, t0.elapsed().as_secs_f64())
+}
+
+/// One served measurement: a fresh daemon, `n` sessions submitted over
+/// one control connection, all results awaited. Returns (wall, all
+/// reports byte-identical to `serial`).
+fn run_served(
+    n: usize,
+    full: bool,
+    wire: ServeWire,
+    workers: usize,
+    serial: &[ReportSummary],
+) -> (f64, bool) {
+    let cfg = ServeConfig { workers, max_clients: 4, ..ServeConfig::default() };
+    let daemon = ServeDaemon::start(cfg, wire, "127.0.0.1:0").expect("start daemon");
+    let addr = daemon.control_addr();
+
+    let t0 = Instant::now();
+    let mut client = ControlClient::connect(addr).expect("connect control");
+    let ids: Vec<u64> = (0..n)
+        .map(|i| client.submit(&spec_for(1_000 + i as u64, full)).expect("submit"))
+        .collect();
+    let results: Vec<ReportSummary> = ids
+        .iter()
+        .map(|&id| {
+            client.await_result(id, std::time::Duration::from_secs(3600)).expect("await result")
+        })
+        .collect();
+    let wall = t0.elapsed().as_secs_f64();
+
+    let identical = results.iter().zip(serial).all(|(got, want)| got == want);
+    let _ = client.shutdown();
+    daemon.shutdown();
+    (wall, identical)
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let reps = bench_reps();
+    let session_counts: [usize; 2] = [1, 4];
+    const WORKERS: usize = 4;
+
+    let mut report = JsonReport::new("bench_serve");
+    report
+        .config("mode", if full { "full" } else { "fast" })
+        .config("session_counts", session_counts.to_vec())
+        .config("workers", WORKERS)
+        .config("reps", reps)
+        .config("dataset", "RI")
+        .config("variant", "treecss")
+        .config(
+            "provenance",
+            format!(
+                "measured: cargo bench --bench bench_serve, reps={reps}; serve rows \
+                 run through a live ServeDaemon (TCP control protocol, sessions \
+                 multiplexed on one wire), serial rows are the same seeds on \
+                 private wires; the identical column asserts byte-equality"
+            ),
+        );
+
+    let mut table = Table::new(
+        "Serving plane — N concurrent sessions vs serial, 4 workers",
+        &["sessions", "mode", "wire", "workers", "wall", "wall/session", "identical"],
+    );
+
+    for &n in &session_counts {
+        let (serial, serial_wall) = run_serial_baseline(n, full);
+        table.row(vec![
+            n.to_string(),
+            "serial".into(),
+            "-".into(),
+            "1".into(),
+            fmt_secs(serial_wall),
+            fmt_secs(serial_wall / n as f64),
+            "-".into(),
+        ]);
+        for (wire_name, wire) in [("channel", ServeWire::Channel), ("tcp", ServeWire::Tcp)] {
+            let mut wall_sum = 0.0;
+            let mut all_identical = true;
+            for _ in 0..reps {
+                let (wall, identical) = run_served(n, full, wire, WORKERS, &serial);
+                wall_sum += wall;
+                all_identical &= identical;
+            }
+            let wall = wall_sum / reps as f64;
+            table.row(vec![
+                n.to_string(),
+                "serve".into(),
+                wire_name.into(),
+                WORKERS.to_string(),
+                fmt_secs(wall),
+                fmt_secs(wall / n as f64),
+                all_identical.to_string(),
+            ]);
+            eprintln!("  done sessions={n} wire={wire_name}");
+        }
+    }
+
+    table.print();
+    report.table(&table);
+    match report.write_at_workspace_root() {
+        Ok(path) => eprintln!("wrote {}", path.display()),
+        Err(e) => eprintln!("[warn] could not write bench JSON: {e}"),
+    }
+}

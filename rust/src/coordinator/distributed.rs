@@ -41,10 +41,17 @@ use super::session::Session;
 
 /// One spawned party-worker child: the OS process hosting a client's
 /// listener.
+///
+/// Kill-on-drop guard: unless the child was already reaped by a clean
+/// [`Cluster::shutdown`], dropping a `Worker` kills and waits the process.
+/// A coordinator that panics mid-run — or errs out of [`Cluster::spawn`]
+/// with only some children launched — therefore cannot leak workers; the
+/// stdin-EOF path remains the *graceful* exit, this is the backstop.
 pub struct Worker {
     child: Child,
     party: PartyId,
     addr: SocketAddr,
+    reaped: bool,
 }
 
 impl Worker {
@@ -55,6 +62,15 @@ impl Worker {
     /// The listener address the worker bound for its client.
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        if !self.reaped {
+            let _ = self.child.kill();
+            let _ = self.child.wait();
+        }
     }
 }
 
@@ -88,19 +104,26 @@ impl Cluster {
                 .stdout(Stdio::piped())
                 .spawn()?;
             let stdout = child.stdout.take().expect("stdout was piped");
+            // Wrap in the kill-on-drop guard *before* the fallible handshake:
+            // any `?` below — including the read_line — reaps this child and,
+            // via `workers` unwinding, every previously spawned sibling.
+            let mut worker = Worker {
+                child,
+                party: PartyId::Client(c as u32),
+                addr: "127.0.0.1:0".parse().expect("literal addr"),
+                reaped: false,
+            };
             let mut line = String::new();
             BufReader::new(stdout).read_line(&mut line)?;
-            let addr = match parse_ready(&line) {
-                Some(a) => a,
+            match parse_ready(&line) {
+                Some(a) => worker.addr = a,
                 None => {
-                    let _ = child.kill();
-                    let _ = child.wait();
                     return Err(Error::Net(format!(
                         "party-worker {c}: bad handshake {line:?}"
                     )));
                 }
-            };
-            workers.push(Worker { child, party: PartyId::Client(c as u32), addr });
+            }
+            workers.push(worker);
         }
         Ok(Cluster { workers })
     }
@@ -118,21 +141,33 @@ impl Cluster {
     }
 
     /// Ask every child to exit (stdin EOF) and wait for it, propagating
-    /// non-zero exit states.
+    /// the first non-zero exit state. Every child is waited even when an
+    /// earlier one failed — and any child this loop does not reach (a
+    /// `wait` error) is still reaped by the [`Worker`] drop guard.
     pub fn shutdown(mut self) -> Result<()> {
         for w in &mut self.workers {
             drop(w.child.stdin.take());
         }
+        let mut first_err = None;
         for w in &mut self.workers {
-            let status = w.child.wait()?;
-            if !status.success() {
-                return Err(Error::Net(format!(
-                    "party-worker {} exited with {status}",
-                    w.party
-                )));
+            match w.child.wait() {
+                Ok(status) => {
+                    w.reaped = true;
+                    if !status.success() && first_err.is_none() {
+                        first_err = Some(Error::Net(format!(
+                            "party-worker {} exited with {status}",
+                            w.party
+                        )));
+                    }
+                }
+                Err(e) if first_err.is_none() => first_err = Some(e.into()),
+                Err(_) => {}
             }
         }
-        Ok(())
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 }
 
@@ -217,6 +252,36 @@ pub fn serve_party_worker(cli: &Cli) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Regression: a `Worker` dropped without `Cluster::shutdown` (panic /
+    /// early-error path) must kill and reap its child, not leak it.
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn worker_drop_reaps_child() {
+        let child = Command::new("sleep")
+            .arg("30")
+            .stdin(Stdio::piped())
+            .spawn()
+            .expect("spawn sleep");
+        let pid = child.id();
+        let worker = Worker {
+            child,
+            party: PartyId::Client(0),
+            addr: "127.0.0.1:0".parse().unwrap(),
+            reaped: false,
+        };
+        assert!(
+            std::path::Path::new(&format!("/proc/{pid}")).exists(),
+            "child should be alive before drop"
+        );
+        drop(worker);
+        // kill + wait are synchronous in Drop, so the pid is gone (not a
+        // zombie: wait() reaped it, so /proc/<pid> no longer exists).
+        assert!(
+            !std::path::Path::new(&format!("/proc/{pid}")).exists(),
+            "dropped worker leaked child pid {pid}"
+        );
+    }
 
     #[test]
     fn ready_handshake_parses() {

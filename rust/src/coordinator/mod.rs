@@ -9,15 +9,23 @@
 //! [`distributed`] runs the same pipeline with each client's wire
 //! endpoint hosted by a spawned party-worker OS process.
 //! [`run_pipeline`] remains as a thin wrapper for callers that manage
-//! their own [`crate::net::Meter`].
+//! their own [`crate::net::Meter`]. [`serve`] is the multi-session
+//! serving plane: a [`ServeCoordinator`] hosts many concurrent sessions
+//! over one shared wire (phases namespaced `session/<id>/<phase>`), with
+//! a TCP control protocol behind the `treecss serve` subcommand.
 
 pub mod distributed;
 pub mod pipeline;
+pub mod serve;
 pub mod session;
 
 pub use distributed::{run_distributed, Cluster};
 pub use pipeline::{
     run_pipeline, Backend, Downstream, FrameworkVariant, MpsiTopology, PipelineConfig,
     PipelineReport,
+};
+pub use serve::{
+    ControlClient, ControlReply, ControlRequest, ReportSummary, ServeConfig, ServeCoordinator,
+    ServeDaemon, ServeWire, SessionOutcome, SessionScopedTransport, SessionSpec, SessionStatus,
 };
 pub use session::{Pipeline, Session, SessionBuilder, TransportKind};

@@ -69,6 +69,19 @@ impl FrameworkVariant {
         }
     }
 
+    /// Parse a variant name, case-insensitive (`treecss`, `STARALL`, …).
+    /// The CLI and the serve control protocol both route through here.
+    pub fn from_name(name: &str) -> Result<FrameworkVariant> {
+        FrameworkVariant::ALL
+            .into_iter()
+            .find(|v| v.name().eq_ignore_ascii_case(name))
+            .ok_or_else(|| {
+                crate::Error::Config(format!(
+                    "unknown variant {name:?} (want one of starall|treeall|starcss|treecss)"
+                ))
+            })
+    }
+
     pub fn topology(&self) -> MpsiTopology {
         match self {
             FrameworkVariant::StarAll | FrameworkVariant::StarCss => MpsiTopology::Star,

@@ -1,0 +1,1262 @@
+//! Serving plane: one process, many concurrent pipeline sessions.
+//!
+//! A [`ServeCoordinator`] admits sessions described by a [`SessionSpec`],
+//! queues them in a registry, and runs them on a small pool of worker
+//! threads — all sessions sharing ONE wire [`Transport`]. Isolation comes
+//! from phase namespacing: each session's traffic travels under
+//! `session/<id>/<phase>`, rewritten below the metering layer by
+//! [`SessionScopedTransport`], so per-session `Meter` accounting (and hence
+//! every number in the session's report) stays byte-identical to running
+//! the same seed alone in its own process. The scoping wrapper also
+//! enforces a bounded per-session in-flight budget: a slow or stalled
+//! session blocks (then errs) only its own senders, never its siblings.
+//!
+//! Party churn is a session-local event. A party dropping mid-phase (recv
+//! timeout), a protocol `Err`, or even a panic inside a session marks that
+//! one session `Failed` and releases the worker; sibling sessions and the
+//! process itself are untouched.
+//!
+//! [`ServeDaemon`] exposes the coordinator over TCP via a tiny
+//! length-prefixed control protocol (submit / status / result / shutdown)
+//! served by the event-driven [`Reactor`] — the `treecss serve` subcommand
+//! is a thin shell around it, and [`ControlClient`] is the matching
+//! blocking client.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::data::synth::PaperDataset;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::net::cost::NetConfig;
+use crate::net::meter::Meter;
+use crate::net::reactor::{write_frame_retrying, FrameSink, Reactor, ReactorConfig};
+use crate::net::tcp::lock_clean;
+use crate::net::transport::{ChannelTransport, Envelope, Transport};
+use crate::net::{PartyId, ReactorTcpTransport};
+use crate::psi::rsa_psi::RsaPsiConfig;
+use crate::psi::TpsiProtocol;
+use crate::util::codec::{Decoder, Encoder};
+use crate::util::rng::Rng;
+
+use super::pipeline::{Downstream, FrameworkVariant, PipelineReport};
+use super::session::{Pipeline, Session};
+use super::Backend;
+
+/// A shared wire every session's scoped traffic travels over.
+pub type SharedWire = Arc<dyn Transport + Send + Sync>;
+
+// ---------------------------------------------------------------------------
+// Session specification
+// ---------------------------------------------------------------------------
+
+/// Everything needed to deterministically materialize one pipeline session:
+/// the dataset recipe and the full pipeline configuration. Two runs of the
+/// same spec — serially, concurrently, in different processes — produce
+/// byte-identical reports.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionSpec {
+    pub dataset: String,
+    pub scale: f64,
+    pub variant: String,
+    pub model: String,
+    pub seed: u64,
+    pub clients: usize,
+    pub epochs: usize,
+    pub lr: f32,
+    pub threads: usize,
+    pub rsa_bits: usize,
+    pub he_bits: usize,
+    pub overlap: f64,
+    pub clusters: usize,
+    pub knn_k: usize,
+}
+
+impl Default for SessionSpec {
+    fn default() -> Self {
+        SessionSpec {
+            dataset: "RI".into(),
+            scale: 0.05,
+            variant: "treecss".into(),
+            model: "lr".into(),
+            seed: 2024,
+            clients: 3,
+            epochs: 100,
+            lr: 0.05,
+            threads: 1,
+            rsa_bits: 512,
+            he_bits: 512,
+            overlap: 1.0,
+            clusters: 8,
+            knn_k: 5,
+        }
+    }
+}
+
+impl SessionSpec {
+    fn encode_into(&self, e: &mut Encoder) {
+        e.str(&self.dataset)
+            .f64(self.scale)
+            .str(&self.variant)
+            .str(&self.model)
+            .u64(self.seed)
+            .u32(self.clients as u32)
+            .u32(self.epochs as u32)
+            .f32(self.lr)
+            .u32(self.threads as u32)
+            .u32(self.rsa_bits as u32)
+            .u32(self.he_bits as u32)
+            .f64(self.overlap)
+            .u32(self.clusters as u32)
+            .u32(self.knn_k as u32);
+    }
+
+    fn decode_from(d: &mut Decoder) -> Result<SessionSpec> {
+        let err = |e: crate::util::codec::DecodeError| Error::Net(format!("session spec: {e}"));
+        Ok(SessionSpec {
+            dataset: d.str().map_err(err)?,
+            scale: d.f64().map_err(err)?,
+            variant: d.str().map_err(err)?,
+            model: d.str().map_err(err)?,
+            seed: d.u64().map_err(err)?,
+            clients: d.u32().map_err(err)? as usize,
+            epochs: d.u32().map_err(err)? as usize,
+            lr: d.f32().map_err(err)?,
+            threads: d.u32().map_err(err)? as usize,
+            rsa_bits: d.u32().map_err(err)? as usize,
+            he_bits: d.u32().map_err(err)? as usize,
+            overlap: d.f64().map_err(err)?,
+            clusters: d.u32().map_err(err)? as usize,
+            knn_k: d.u32().map_err(err)? as usize,
+        })
+    }
+
+    /// Reject specs that could never run (unknown names, zero parties) or
+    /// that exceed the coordinator's hosting limits, *before* admission.
+    pub fn validate(&self, cfg: &ServeConfig) -> Result<()> {
+        self.paper_dataset()?;
+        FrameworkVariant::from_name(&self.variant)?;
+        Downstream::from_flag(&self.model, self.knn_k)?;
+        if self.clients == 0 {
+            return Err(Error::Config("session spec: clients must be >= 1".into()));
+        }
+        if cfg.max_clients > 0 && self.clients > cfg.max_clients {
+            return Err(Error::Config(format!(
+                "session spec: {} clients exceeds this coordinator's --max-clients {}",
+                self.clients, cfg.max_clients
+            )));
+        }
+        Ok(())
+    }
+
+    fn paper_dataset(&self) -> Result<PaperDataset> {
+        PaperDataset::ALL
+            .into_iter()
+            .find(|d| d.name().eq_ignore_ascii_case(&self.dataset))
+            .ok_or_else(|| {
+                Error::Config(format!("session spec: unknown dataset {:?}", self.dataset))
+            })
+    }
+
+    /// Deterministically build the session and its train/test split. The
+    /// dataset recipe mirrors `treecss run` exactly: seed the RNG, generate,
+    /// standardize, 70/30 split. The backend is pinned to `Native` so a
+    /// serving daemon never depends on compiled XLA artifacts.
+    pub fn materialize(&self) -> Result<(Session, Dataset, Dataset)> {
+        let ds_kind = self.paper_dataset()?;
+        let variant = FrameworkVariant::from_name(&self.variant)?;
+        let downstream = Downstream::from_flag(&self.model, self.knn_k)?;
+        let mut rng = Rng::new(self.seed);
+        let mut ds = ds_kind.generate(self.scale, &mut rng);
+        ds.standardize();
+        let (tr, te) = ds.split(0.7, &mut rng);
+        let session = Pipeline::builder(variant)
+            .downstream(downstream)
+            .clients(self.clients)
+            .seed(self.seed)
+            .overlap(self.overlap)
+            .clusters_per_client(self.clusters)
+            .lr(self.lr)
+            .epochs(self.epochs)
+            .threads(self.threads)
+            .protocol(TpsiProtocol::Rsa(RsaPsiConfig {
+                modulus_bits: self.rsa_bits,
+                domain: "treecss-serve".into(),
+            }))
+            .he_bits(self.he_bits)
+            .net(NetConfig::lan_10gbps())
+            .backend(Backend::Native)
+            .build();
+        Ok((session, tr, te))
+    }
+
+    /// Run this spec alone on a private wire — the serial baseline the
+    /// concurrent path is compared against.
+    pub fn run_serial(&self, id: u64) -> Result<ReportSummary> {
+        let (session, tr, te) = self.materialize()?;
+        let wire = ChannelTransport::new();
+        let report = session.run_over(&tr, &te, &wire)?;
+        Ok(ReportSummary::collect(id, &report, session.meter()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Report summary (the byte-comparable session result)
+// ---------------------------------------------------------------------------
+
+/// One meter edge, stringly-keyed for the wire. Ordering follows
+/// [`Meter::edges`], which is guaranteed sorted.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EdgeSummary {
+    pub from: String,
+    pub to: String,
+    pub phase: String,
+    pub bytes: u64,
+    pub messages: u64,
+    /// `f64::to_bits` of the edge's simulated transfer seconds — stored as
+    /// bits so equality is exact.
+    pub sim_s_bits: u64,
+}
+
+/// The byte-comparable essence of a [`PipelineReport`] plus the per-edge
+/// meter dump. Floats are stored as IEEE-754 bits so "byte-identical to a
+/// serial run" is `==`, with no epsilon anywhere. Wall-clock fields are
+/// deliberately absent: they are the only legitimately nondeterministic
+/// part of a report.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReportSummary {
+    pub id: u64,
+    pub variant: String,
+    pub n_aligned: u64,
+    pub train_size: u64,
+    /// `f64::to_bits` of the quality metric (accuracy or MSE).
+    pub quality_bits: u64,
+    pub intersection: Vec<u64>,
+    pub coreset_indices: Vec<u64>,
+    pub coreset_weights: Vec<f32>,
+    /// `f64::to_bits` of each epoch loss.
+    pub loss_bits: Vec<u64>,
+    pub total_bytes: u64,
+    pub edges: Vec<EdgeSummary>,
+}
+
+impl ReportSummary {
+    /// Extract the deterministic core of a finished pipeline run.
+    pub fn collect(id: u64, report: &PipelineReport, meter: &Meter) -> ReportSummary {
+        let (coreset_indices, coreset_weights) = match &report.coreset {
+            Some(c) => (c.indices.iter().map(|&i| i as u64).collect(), c.weights.clone()),
+            None => (Vec::new(), Vec::new()),
+        };
+        let loss_bits = report
+            .train
+            .as_ref()
+            .map(|t| t.epoch_losses.iter().map(|l| l.to_bits()).collect())
+            .unwrap_or_default();
+        let edges = meter
+            .edges()
+            .into_iter()
+            .map(|((from, to, phase), s)| EdgeSummary {
+                from: from.to_string(),
+                to: to.to_string(),
+                phase,
+                bytes: s.bytes,
+                messages: s.messages,
+                sim_s_bits: s.sim_s.to_bits(),
+            })
+            .collect();
+        ReportSummary {
+            id,
+            variant: report.variant.name().to_string(),
+            n_aligned: report.n_aligned as u64,
+            train_size: report.train_size as u64,
+            quality_bits: report.quality.to_bits(),
+            intersection: report.align.intersection.clone(),
+            coreset_indices,
+            coreset_weights,
+            loss_bits,
+            total_bytes: report.total_bytes,
+            edges,
+        }
+    }
+
+    /// The quality metric as a float again.
+    pub fn quality(&self) -> f64 {
+        f64::from_bits(self.quality_bits)
+    }
+
+    fn encode_into(&self, e: &mut Encoder) {
+        e.u64(self.id)
+            .str(&self.variant)
+            .u64(self.n_aligned)
+            .u64(self.train_size)
+            .u64(self.quality_bits)
+            .u64_slice(&self.intersection)
+            .u64_slice(&self.coreset_indices)
+            .f32_slice(&self.coreset_weights)
+            .u64_slice(&self.loss_bits)
+            .u64(self.total_bytes)
+            .u32(self.edges.len() as u32);
+        for edge in &self.edges {
+            e.str(&edge.from)
+                .str(&edge.to)
+                .str(&edge.phase)
+                .u64(edge.bytes)
+                .u64(edge.messages)
+                .u64(edge.sim_s_bits);
+        }
+    }
+
+    fn decode_from(d: &mut Decoder) -> Result<ReportSummary> {
+        let err = |e: crate::util::codec::DecodeError| Error::Net(format!("report summary: {e}"));
+        let id = d.u64().map_err(err)?;
+        let variant = d.str().map_err(err)?;
+        let n_aligned = d.u64().map_err(err)?;
+        let train_size = d.u64().map_err(err)?;
+        let quality_bits = d.u64().map_err(err)?;
+        let intersection = d.u64_slice().map_err(err)?;
+        let coreset_indices = d.u64_slice().map_err(err)?;
+        let coreset_weights = d.f32_slice().map_err(err)?;
+        let loss_bits = d.u64_slice().map_err(err)?;
+        let total_bytes = d.u64().map_err(err)?;
+        let n_edges = d.u32().map_err(err)? as usize;
+        let mut edges = Vec::with_capacity(n_edges.min(4096));
+        for _ in 0..n_edges {
+            edges.push(EdgeSummary {
+                from: d.str().map_err(err)?,
+                to: d.str().map_err(err)?,
+                phase: d.str().map_err(err)?,
+                bytes: d.u64().map_err(err)?,
+                messages: d.u64().map_err(err)?,
+                sim_s_bits: d.u64().map_err(err)?,
+            });
+        }
+        Ok(ReportSummary {
+            id,
+            variant,
+            n_aligned,
+            train_size,
+            quality_bits,
+            intersection,
+            coreset_indices,
+            coreset_weights,
+            loss_bits,
+            total_bytes,
+            edges,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Session-scoped transport: namespacing + backpressure
+// ---------------------------------------------------------------------------
+
+/// Wraps a shared wire for one session: every phase is rewritten to
+/// `session/<id>/<phase>` on send and expected under that prefix on recv,
+/// so any number of sessions can share one [`Transport`] without key
+/// collisions. Because [`Session::run_over`] layers its metering *above*
+/// this wrapper, the session's meter still sees the bare phase names —
+/// per-edge accounting is byte-identical to an unscoped run.
+///
+/// The wrapper also carries the session's in-flight budget: at most
+/// `budget` envelopes may be sent-but-not-received at once. A sender over
+/// budget blocks until the session drains or `wait` elapses, then gets an
+/// `Err` — backpressure is session-local, so one firehosing or stalled
+/// session cannot starve the shared wire's siblings.
+pub struct SessionScopedTransport {
+    inner: SharedWire,
+    prefix: String,
+    budget: usize,
+    wait: Duration,
+    inflight: Mutex<usize>,
+    drained: Condvar,
+}
+
+impl SessionScopedTransport {
+    pub fn new(inner: SharedWire, id: u64, budget: usize, wait: Duration) -> Self {
+        SessionScopedTransport {
+            inner,
+            prefix: format!("session/{id}/"),
+            budget: budget.max(1),
+            wait,
+            inflight: Mutex::new(0),
+            drained: Condvar::new(),
+        }
+    }
+
+    /// The `session/<id>/` namespace this wrapper stamps on the wire.
+    pub fn prefix(&self) -> &str {
+        &self.prefix
+    }
+}
+
+impl Transport for SessionScopedTransport {
+    fn send(&self, env: Envelope) -> Result<f64> {
+        {
+            let mut n = lock_clean(&self.inflight);
+            let deadline = Instant::now() + self.wait;
+            while *n >= self.budget {
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(Error::Net(format!(
+                        "serve backpressure: session in-flight budget {} exhausted for {} \
+                         (receiver too slow or gone)",
+                        self.budget, self.prefix
+                    )));
+                }
+                let (g, _) = self
+                    .drained
+                    .wait_timeout(n, deadline - now)
+                    .unwrap_or_else(|e| e.into_inner());
+                n = g;
+            }
+            *n += 1;
+        }
+        let wire_bytes = env.wire_bytes();
+        let scoped = format!("{}{}", self.prefix, env.phase);
+        let res = self
+            .inner
+            .send(Envelope::sized(env.from, env.to, &scoped, env.payload, wire_bytes));
+        if res.is_err() {
+            let mut n = lock_clean(&self.inflight);
+            *n = n.saturating_sub(1);
+            self.drained.notify_all();
+        }
+        res
+    }
+
+    fn recv(&self, at: PartyId, from: PartyId, phase: &str) -> Result<Envelope> {
+        let scoped = format!("{}{}", self.prefix, phase);
+        let env = self.inner.recv(at, from, &scoped)?;
+        {
+            let mut n = lock_clean(&self.inflight);
+            *n = n.saturating_sub(1);
+            self.drained.notify_all();
+        }
+        let wire_bytes = env.wire_bytes();
+        Ok(Envelope::sized(env.from, env.to, phase, env.payload, wire_bytes))
+    }
+
+    /// This session's own in-flight count — NOT the shared wire's. The
+    /// pipeline's drained-mailbox exit check must not observe sibling
+    /// sessions' traffic.
+    fn pending(&self) -> usize {
+        *lock_clean(&self.inflight)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator: registry + worker pool
+// ---------------------------------------------------------------------------
+
+/// Coordinator tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Worker threads running sessions (each runs one session at a time).
+    pub workers: usize,
+    /// Admission cap: maximum queued + running sessions. Submits beyond it
+    /// are rejected (never silently dropped).
+    pub max_sessions: usize,
+    /// Per-session in-flight envelope budget (backpressure bound).
+    pub mailbox_budget: usize,
+    /// How long an over-budget sender blocks before erring.
+    pub backpressure_wait: Duration,
+    /// Largest `clients` a spec may request; 0 = unlimited (in-process
+    /// channel wire only — the TCP wire hosts a fixed party roster).
+    pub max_clients: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 4,
+            max_sessions: 64,
+            mailbox_budget: 4096,
+            backpressure_wait: Duration::from_secs(10),
+            max_clients: 0,
+        }
+    }
+}
+
+/// Coarse lifecycle state reported over the control protocol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionStatus {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+impl SessionStatus {
+    fn tag(self) -> u8 {
+        match self {
+            SessionStatus::Queued => 0,
+            SessionStatus::Running => 1,
+            SessionStatus::Done => 2,
+            SessionStatus::Failed => 3,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<SessionStatus> {
+        Ok(match t {
+            0 => SessionStatus::Queued,
+            1 => SessionStatus::Running,
+            2 => SessionStatus::Done,
+            3 => SessionStatus::Failed,
+            _ => return Err(Error::Net(format!("session status: bad tag {t}"))),
+        })
+    }
+}
+
+/// Result poll: the session is still going, finished, or failed.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SessionOutcome {
+    Pending,
+    Done(Box<ReportSummary>),
+    Failed(String),
+}
+
+enum SessionState {
+    Queued,
+    Running,
+    Done(Box<ReportSummary>),
+    Failed(String),
+}
+
+impl SessionState {
+    fn status(&self) -> SessionStatus {
+        match self {
+            SessionState::Queued => SessionStatus::Queued,
+            SessionState::Running => SessionStatus::Running,
+            SessionState::Done(_) => SessionStatus::Done,
+            SessionState::Failed(_) => SessionStatus::Failed,
+        }
+    }
+}
+
+struct Entry {
+    spec: SessionSpec,
+    state: SessionState,
+}
+
+struct Registry {
+    next_id: u64,
+    queue: VecDeque<u64>,
+    sessions: BTreeMap<u64, Entry>,
+}
+
+struct ServeInner {
+    cfg: ServeConfig,
+    wire: SharedWire,
+    state: Mutex<Registry>,
+    work: Condvar,
+    done: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Multi-session registry + worker pool over one shared wire. See the
+/// module docs for the isolation model.
+pub struct ServeCoordinator {
+    inner: Arc<ServeInner>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl ServeCoordinator {
+    /// Coordinator over a private in-process channel wire.
+    pub fn new(cfg: ServeConfig) -> ServeCoordinator {
+        ServeCoordinator::with_wire(cfg, Arc::new(ChannelTransport::new()))
+    }
+
+    /// Coordinator over a caller-provided wire — how the TCP daemon (and
+    /// the churn tests, which inject a [`crate::net::FaultTransport`])
+    /// plug in.
+    pub fn with_wire(cfg: ServeConfig, wire: SharedWire) -> ServeCoordinator {
+        let inner = Arc::new(ServeInner {
+            cfg,
+            wire,
+            state: Mutex::new(Registry {
+                next_id: 0,
+                queue: VecDeque::new(),
+                sessions: BTreeMap::new(),
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let mut handles = Vec::new();
+        for w in 0..cfg.workers.max(1) {
+            let inner = Arc::clone(&inner);
+            let handle = std::thread::Builder::new()
+                .name(format!("treecss-serve-{w}"))
+                .spawn(move || worker_loop(&inner))
+                .expect("spawn serve worker");
+            handles.push(handle);
+        }
+        ServeCoordinator { inner, workers: Mutex::new(handles) }
+    }
+
+    /// Validate, admit, and queue a session. Returns its id (ids are
+    /// assigned 1, 2, 3, … in submit order).
+    pub fn submit(&self, spec: SessionSpec) -> Result<u64> {
+        if self.inner.shutdown.load(Ordering::SeqCst) {
+            return Err(Error::Net("serve: coordinator is shut down".into()));
+        }
+        spec.validate(&self.inner.cfg)?;
+        let mut reg = lock_clean(&self.inner.state);
+        let active = reg
+            .sessions
+            .values()
+            .filter(|e| matches!(e.state, SessionState::Queued | SessionState::Running))
+            .count();
+        if active >= self.inner.cfg.max_sessions {
+            return Err(Error::Net(format!(
+                "serve admission: {active} active sessions at --max-sessions {}",
+                self.inner.cfg.max_sessions
+            )));
+        }
+        reg.next_id += 1;
+        let id = reg.next_id;
+        reg.sessions.insert(id, Entry { spec, state: SessionState::Queued });
+        reg.queue.push_back(id);
+        drop(reg);
+        self.inner.work.notify_one();
+        Ok(id)
+    }
+
+    /// Coarse state of a session, `None` for unknown ids.
+    pub fn status(&self, id: u64) -> Option<SessionStatus> {
+        lock_clean(&self.inner.state).sessions.get(&id).map(|e| e.state.status())
+    }
+
+    /// Non-blocking result poll.
+    pub fn outcome(&self, id: u64) -> Result<SessionOutcome> {
+        let reg = lock_clean(&self.inner.state);
+        match reg.sessions.get(&id) {
+            None => Err(Error::Config(format!("serve: unknown session id {id}"))),
+            Some(e) => Ok(match &e.state {
+                SessionState::Done(s) => SessionOutcome::Done(s.clone()),
+                SessionState::Failed(msg) => SessionOutcome::Failed(msg.clone()),
+                _ => SessionOutcome::Pending,
+            }),
+        }
+    }
+
+    /// Block until the session finishes (or `timeout`). A failed session
+    /// surfaces its error here — and only here; siblings are unaffected.
+    pub fn wait(&self, id: u64, timeout: Duration) -> Result<ReportSummary> {
+        let deadline = Instant::now() + timeout;
+        let mut reg = lock_clean(&self.inner.state);
+        loop {
+            match reg.sessions.get(&id) {
+                None => return Err(Error::Config(format!("serve: unknown session id {id}"))),
+                Some(e) => match &e.state {
+                    SessionState::Done(s) => return Ok((**s).clone()),
+                    SessionState::Failed(msg) => {
+                        return Err(Error::Runtime(format!("serve: session {id} failed: {msg}")));
+                    }
+                    _ => {}
+                },
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(Error::Net(format!("serve: timed out waiting for session {id}")));
+            }
+            // Cap each wait so shutdown and missed notifies are noticed.
+            let step = (deadline - now).min(Duration::from_millis(200));
+            let (g, _) = self
+                .inner
+                .done
+                .wait_timeout(reg, step)
+                .unwrap_or_else(|e| e.into_inner());
+            reg = g;
+        }
+    }
+
+    /// Stop accepting work, let running sessions finish, join the workers.
+    /// Sessions still `Queued` are abandoned in that state. Idempotent;
+    /// also invoked by `Drop`.
+    pub fn shutdown(&self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.work.notify_all();
+        self.inner.done.notify_all();
+        let mut ws = lock_clean(&self.workers);
+        for h in ws.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServeCoordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(inner: &ServeInner) {
+    loop {
+        let (id, spec) = {
+            let mut reg = lock_clean(&inner.state);
+            loop {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(id) = reg.queue.pop_front() {
+                    let entry = reg.sessions.get_mut(&id).expect("queued id is registered");
+                    entry.state = SessionState::Running;
+                    break (id, entry.spec.clone());
+                }
+                let (g, _) = inner
+                    .work
+                    .wait_timeout(reg, Duration::from_millis(200))
+                    .unwrap_or_else(|e| e.into_inner());
+                reg = g;
+            }
+        };
+        // Churn isolation: Err OR panic inside the session marks only this
+        // session Failed; the worker and its siblings keep going.
+        let outcome = catch_unwind(AssertUnwindSafe(|| run_one(inner, id, &spec)));
+        let state = match outcome {
+            Ok(Ok(summary)) => SessionState::Done(Box::new(summary)),
+            Ok(Err(e)) => SessionState::Failed(e.to_string()),
+            Err(_) => SessionState::Failed("session panicked".into()),
+        };
+        {
+            let mut reg = lock_clean(&inner.state);
+            if let Some(entry) = reg.sessions.get_mut(&id) {
+                entry.state = state;
+            }
+        }
+        inner.done.notify_all();
+    }
+}
+
+fn run_one(inner: &ServeInner, id: u64, spec: &SessionSpec) -> Result<ReportSummary> {
+    let (session, tr, te) = spec.materialize()?;
+    let scoped = SessionScopedTransport::new(
+        Arc::clone(&inner.wire),
+        id,
+        inner.cfg.mailbox_budget,
+        inner.cfg.backpressure_wait,
+    );
+    let report = session.run_over(&tr, &te, &scoped)?;
+    Ok(ReportSummary::collect(id, &report, session.meter()))
+}
+
+// ---------------------------------------------------------------------------
+// Control protocol
+// ---------------------------------------------------------------------------
+
+/// Client → daemon control frames.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ControlRequest {
+    Submit(SessionSpec),
+    Status(u64),
+    Result(u64),
+    Shutdown,
+}
+
+impl ControlRequest {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        match self {
+            ControlRequest::Submit(spec) => {
+                e.u8(1);
+                spec.encode_into(&mut e);
+            }
+            ControlRequest::Status(id) => {
+                e.u8(2).u64(*id);
+            }
+            ControlRequest::Result(id) => {
+                e.u8(3).u64(*id);
+            }
+            ControlRequest::Shutdown => {
+                e.u8(4);
+            }
+        }
+        e.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ControlRequest> {
+        let err = |e: crate::util::codec::DecodeError| Error::Net(format!("control request: {e}"));
+        let mut d = Decoder::new(buf);
+        let req = match d.u8().map_err(err)? {
+            1 => ControlRequest::Submit(SessionSpec::decode_from(&mut d)?),
+            2 => ControlRequest::Status(d.u64().map_err(err)?),
+            3 => ControlRequest::Result(d.u64().map_err(err)?),
+            4 => ControlRequest::Shutdown,
+            t => return Err(Error::Net(format!("control request: bad tag {t}"))),
+        };
+        d.finish().map_err(err)?;
+        Ok(req)
+    }
+}
+
+/// Daemon → client control frames.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ControlReply {
+    Submitted(u64),
+    Status(SessionStatus),
+    Pending,
+    Done(Box<ReportSummary>),
+    Failed(String),
+    Error(String),
+    Bye,
+}
+
+impl ControlReply {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        match self {
+            ControlReply::Submitted(id) => {
+                e.u8(10).u64(*id);
+            }
+            ControlReply::Status(s) => {
+                e.u8(11).u8(s.tag());
+            }
+            ControlReply::Pending => {
+                e.u8(12);
+            }
+            ControlReply::Done(summary) => {
+                e.u8(13);
+                summary.encode_into(&mut e);
+            }
+            ControlReply::Failed(msg) => {
+                e.u8(14).str(msg);
+            }
+            ControlReply::Error(msg) => {
+                e.u8(15).str(msg);
+            }
+            ControlReply::Bye => {
+                e.u8(16);
+            }
+        }
+        e.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ControlReply> {
+        let err = |e: crate::util::codec::DecodeError| Error::Net(format!("control reply: {e}"));
+        let mut d = Decoder::new(buf);
+        let reply = match d.u8().map_err(err)? {
+            10 => ControlReply::Submitted(d.u64().map_err(err)?),
+            11 => ControlReply::Status(SessionStatus::from_tag(d.u8().map_err(err)?)?),
+            12 => ControlReply::Pending,
+            13 => ControlReply::Done(Box::new(ReportSummary::decode_from(&mut d)?)),
+            14 => ControlReply::Failed(d.str().map_err(err)?),
+            15 => ControlReply::Error(d.str().map_err(err)?),
+            16 => ControlReply::Bye,
+            t => return Err(Error::Net(format!("control reply: bad tag {t}"))),
+        };
+        d.finish().map_err(err)?;
+        Ok(reply)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Daemon + client
+// ---------------------------------------------------------------------------
+
+/// Which wire concurrent sessions share inside the daemon.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeWire {
+    /// In-process channel wire (fastest; the default for embedded use).
+    Channel,
+    /// Real localhost TCP through the event-driven reactor — every scoped
+    /// envelope crosses the kernel TCP stack.
+    Tcp,
+}
+
+impl ServeWire {
+    pub fn from_name(name: &str) -> Result<ServeWire> {
+        match name.to_ascii_lowercase().as_str() {
+            "channel" => Ok(ServeWire::Channel),
+            "tcp" => Ok(ServeWire::Tcp),
+            _ => Err(Error::Config(format!(
+                "unknown serve wire {name:?} (want channel|tcp)"
+            ))),
+        }
+    }
+}
+
+/// The `treecss serve` daemon: a [`ServeCoordinator`] whose control
+/// protocol is served over TCP by the [`Reactor`] — the same single loop
+/// thread that (under [`ServeWire::Tcp`]) also carries all session
+/// traffic. Control frames are handled without ever blocking the loop:
+/// `Result` polls return `Pending` instead of waiting.
+pub struct ServeDaemon {
+    coord: Arc<ServeCoordinator>,
+    reactor: Arc<Reactor>,
+    control_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+}
+
+impl ServeDaemon {
+    /// Bind the control listener on `listen` (e.g. `127.0.0.1:0`) and start
+    /// serving. With [`ServeWire::Tcp`] the shared wire hosts the party
+    /// roster for up to `cfg.max_clients` clients (min 1) on the same
+    /// reactor.
+    pub fn start(cfg: ServeConfig, wire: ServeWire, listen: &str) -> Result<ServeDaemon> {
+        let reactor = Arc::new(Reactor::new(ReactorConfig::default())?);
+        let shared: SharedWire = match wire {
+            ServeWire::Channel => Arc::new(ChannelTransport::new()),
+            ServeWire::Tcp => Arc::new(
+                ReactorTcpTransport::builder()
+                    .reactor(Arc::clone(&reactor))
+                    .hosts(crate::parties::roster(cfg.max_clients.max(1)))
+                    .build()?,
+            ),
+        };
+        let coord = Arc::new(ServeCoordinator::with_wire(cfg, shared));
+        let listener = TcpListener::bind(listen)
+            .map_err(|e| Error::Net(format!("serve: bind control listener {listen}: {e}")))?;
+        let control_addr = listener
+            .local_addr()
+            .map_err(|e| Error::Net(format!("serve: control local_addr: {e}")))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let sink_coord = Arc::clone(&coord);
+        let sink_stop = Arc::clone(&stop);
+        let sink: FrameSink = Arc::new(move |frame: Vec<u8>, stream: &mut TcpStream| {
+            handle_control_frame(&sink_coord, &sink_stop, &frame, stream)
+        });
+        reactor.register(listener, sink)?;
+        Ok(ServeDaemon { coord, reactor, control_addr, stop })
+    }
+
+    /// Where control clients connect.
+    pub fn control_addr(&self) -> SocketAddr {
+        self.control_addr
+    }
+
+    /// Direct (in-process) access to the coordinator.
+    pub fn coordinator(&self) -> &Arc<ServeCoordinator> {
+        &self.coord
+    }
+
+    /// True once a client sent `Shutdown`. The daemon's owner polls this
+    /// and then calls [`ServeDaemon::shutdown`] — stopping is never done on
+    /// the reactor thread itself.
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Finish running sessions, join the workers, stop the reactor loop.
+    /// The explicit `reactor.stop()` is what breaks the sink→coordinator→
+    /// wire→reactor `Arc` cycle: joining the loop drops the control sink.
+    pub fn shutdown(self) {
+        self.coord.shutdown();
+        self.reactor.stop();
+    }
+}
+
+fn handle_control_frame(
+    coord: &ServeCoordinator,
+    stop: &AtomicBool,
+    frame: &[u8],
+    stream: &mut TcpStream,
+) -> bool {
+    let (reply, keep) = match ControlRequest::decode(frame) {
+        Err(e) => (ControlReply::Error(format!("bad control frame: {e}")), false),
+        Ok(ControlRequest::Submit(spec)) => match coord.submit(spec) {
+            Ok(id) => (ControlReply::Submitted(id), true),
+            Err(e) => (ControlReply::Error(e.to_string()), true),
+        },
+        Ok(ControlRequest::Status(id)) => match coord.status(id) {
+            Some(s) => (ControlReply::Status(s), true),
+            None => (ControlReply::Error(format!("unknown session id {id}")), true),
+        },
+        Ok(ControlRequest::Result(id)) => match coord.outcome(id) {
+            Ok(SessionOutcome::Pending) => (ControlReply::Pending, true),
+            Ok(SessionOutcome::Done(s)) => (ControlReply::Done(s), true),
+            Ok(SessionOutcome::Failed(msg)) => (ControlReply::Failed(msg), true),
+            Err(e) => (ControlReply::Error(e.to_string()), true),
+        },
+        Ok(ControlRequest::Shutdown) => {
+            stop.store(true, Ordering::SeqCst);
+            (ControlReply::Bye, false)
+        }
+    };
+    let wrote =
+        write_frame_retrying(stream, &reply.encode(), Instant::now() + Duration::from_secs(10));
+    wrote && keep
+}
+
+/// Blocking client for the daemon's control protocol: one request/reply
+/// frame pair per call over a persistent connection.
+pub struct ControlClient {
+    stream: TcpStream,
+}
+
+impl ControlClient {
+    pub fn connect(addr: SocketAddr) -> Result<ControlClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::Net(format!("serve control: connect {addr}: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .map_err(|e| Error::Net(format!("serve control: set timeout: {e}")))?;
+        Ok(ControlClient { stream })
+    }
+
+    fn call(&mut self, req: &ControlRequest) -> Result<ControlReply> {
+        let body = req.encode();
+        let mut frame = Vec::with_capacity(8 + body.len());
+        frame.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        frame.extend_from_slice(&body);
+        self.stream
+            .write_all(&frame)
+            .and_then(|()| self.stream.flush())
+            .map_err(|e| Error::Net(format!("serve control: send: {e}")))?;
+        let mut len = [0u8; 8];
+        self.stream
+            .read_exact(&mut len)
+            .map_err(|e| Error::Net(format!("serve control: recv: {e}")))?;
+        let n = u64::from_le_bytes(len);
+        if n > 256 * 1024 * 1024 {
+            return Err(Error::Net(format!("serve control: oversized reply ({n} bytes)")));
+        }
+        let mut buf = vec![0u8; n as usize];
+        self.stream
+            .read_exact(&mut buf)
+            .map_err(|e| Error::Net(format!("serve control: recv body: {e}")))?;
+        ControlReply::decode(&buf)
+    }
+
+    /// Submit a spec; returns the assigned session id.
+    pub fn submit(&mut self, spec: &SessionSpec) -> Result<u64> {
+        match self.call(&ControlRequest::Submit(spec.clone()))? {
+            ControlReply::Submitted(id) => Ok(id),
+            other => Err(unexpected_reply("submit", &other)),
+        }
+    }
+
+    /// Coarse state of a session.
+    pub fn status(&mut self, id: u64) -> Result<SessionStatus> {
+        match self.call(&ControlRequest::Status(id))? {
+            ControlReply::Status(s) => Ok(s),
+            other => Err(unexpected_reply("status", &other)),
+        }
+    }
+
+    /// Non-blocking result poll (the daemon never blocks on this either).
+    pub fn result(&mut self, id: u64) -> Result<SessionOutcome> {
+        match self.call(&ControlRequest::Result(id))? {
+            ControlReply::Pending => Ok(SessionOutcome::Pending),
+            ControlReply::Done(s) => Ok(SessionOutcome::Done(s)),
+            ControlReply::Failed(msg) => Ok(SessionOutcome::Failed(msg)),
+            other => Err(unexpected_reply("result", &other)),
+        }
+    }
+
+    /// Poll `result` until the session finishes, fails, or `timeout`.
+    pub fn await_result(&mut self, id: u64, timeout: Duration) -> Result<ReportSummary> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match self.result(id)? {
+                SessionOutcome::Done(s) => return Ok(*s),
+                SessionOutcome::Failed(msg) => {
+                    return Err(Error::Runtime(format!("serve: session {id} failed: {msg}")));
+                }
+                SessionOutcome::Pending => {
+                    if Instant::now() >= deadline {
+                        return Err(Error::Net(format!(
+                            "serve control: timed out waiting for session {id}"
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+            }
+        }
+    }
+
+    /// Ask the daemon to stop (it finishes running sessions first).
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.call(&ControlRequest::Shutdown)? {
+            ControlReply::Bye => Ok(()),
+            other => Err(unexpected_reply("shutdown", &other)),
+        }
+    }
+}
+
+fn unexpected_reply(what: &str, reply: &ControlReply) -> Error {
+    match reply {
+        ControlReply::Error(msg) => Error::Net(format!("serve control {what}: {msg}")),
+        other => Error::Net(format!("serve control {what}: unexpected reply {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec(seed: u64) -> SessionSpec {
+        SessionSpec {
+            scale: 0.012,
+            seed,
+            epochs: 15,
+            rsa_bits: 256,
+            he_bits: 256,
+            ..SessionSpec::default()
+        }
+    }
+
+    #[test]
+    fn spec_codec_roundtrip() {
+        let spec = tiny_spec(77);
+        let mut e = Encoder::new();
+        spec.encode_into(&mut e);
+        let buf = e.finish();
+        let mut d = Decoder::new(&buf);
+        let back = SessionSpec::decode_from(&mut d).unwrap();
+        d.finish().unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn control_codec_roundtrips() {
+        let reqs = [
+            ControlRequest::Submit(tiny_spec(5)),
+            ControlRequest::Status(9),
+            ControlRequest::Result(12),
+            ControlRequest::Shutdown,
+        ];
+        for req in &reqs {
+            assert_eq!(&ControlRequest::decode(&req.encode()).unwrap(), req);
+        }
+        let summary = ReportSummary {
+            id: 3,
+            variant: "TREECSS".into(),
+            n_aligned: 10,
+            train_size: 6,
+            quality_bits: 0.75f64.to_bits(),
+            intersection: vec![1, 2, 3],
+            coreset_indices: vec![0, 2],
+            coreset_weights: vec![1.5, 2.0],
+            loss_bits: vec![0.5f64.to_bits()],
+            total_bytes: 1234,
+            edges: vec![EdgeSummary {
+                from: "client0".into(),
+                to: "agg".into(),
+                phase: "train/fwd".into(),
+                bytes: 100,
+                messages: 2,
+                sim_s_bits: 0.001f64.to_bits(),
+            }],
+        };
+        let replies = [
+            ControlReply::Submitted(4),
+            ControlReply::Status(SessionStatus::Running),
+            ControlReply::Pending,
+            ControlReply::Done(Box::new(summary)),
+            ControlReply::Failed("boom".into()),
+            ControlReply::Error("nope".into()),
+            ControlReply::Bye,
+        ];
+        for reply in &replies {
+            assert_eq!(&ControlReply::decode(&reply.encode()).unwrap(), reply);
+        }
+    }
+
+    #[test]
+    fn bad_control_tags_err() {
+        assert!(ControlRequest::decode(&[99]).is_err());
+        assert!(ControlReply::decode(&[99]).is_err());
+        assert!(ControlRequest::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn scoped_transports_isolate_sessions_on_one_wire() {
+        let wire: SharedWire = Arc::new(ChannelTransport::with_timeout(Duration::from_millis(200)));
+        let s1 = SessionScopedTransport::new(Arc::clone(&wire), 1, 64, Duration::from_secs(1));
+        let s2 = SessionScopedTransport::new(Arc::clone(&wire), 2, 64, Duration::from_secs(1));
+        let a = PartyId::Client(0);
+        let b = PartyId::Client(1);
+        s1.send(Envelope::new(a, b, "ph", vec![1])).unwrap();
+        s2.send(Envelope::new(a, b, "ph", vec![2])).unwrap();
+        // Same (from, to, phase) key, different sessions: each scoped view
+        // sees only its own envelope.
+        let got2 = s2.recv(b, a, "ph").unwrap();
+        assert_eq!(got2.payload, vec![2]);
+        assert_eq!(got2.phase, "ph", "prefix must be stripped on recv");
+        let got1 = s1.recv(b, a, "ph").unwrap();
+        assert_eq!(got1.payload, vec![1]);
+        assert_eq!(s1.pending(), 0);
+        assert_eq!(s2.pending(), 0);
+        // Nothing left for either session.
+        assert!(s1.recv(b, a, "ph").is_err());
+    }
+
+    #[test]
+    fn backpressure_blocks_then_errs_per_session() {
+        let wire: SharedWire = Arc::new(ChannelTransport::new());
+        let s = SessionScopedTransport::new(Arc::clone(&wire), 1, 2, Duration::from_millis(50));
+        let a = PartyId::Client(0);
+        let b = PartyId::Client(1);
+        s.send(Envelope::new(a, b, "p", vec![0])).unwrap();
+        s.send(Envelope::new(a, b, "p", vec![1])).unwrap();
+        let err = s.send(Envelope::new(a, b, "p", vec![2])).unwrap_err();
+        assert!(err.to_string().contains("backpressure"), "got: {err}");
+        // A sibling session on the same wire is not throttled.
+        let sib = SessionScopedTransport::new(Arc::clone(&wire), 2, 2, Duration::from_millis(50));
+        sib.send(Envelope::new(a, b, "p", vec![9])).unwrap();
+        // Draining frees budget again.
+        s.recv(b, a, "p").unwrap();
+        s.send(Envelope::new(a, b, "p", vec![2])).unwrap();
+        assert_eq!(s.pending(), 2);
+    }
+
+    #[test]
+    fn one_served_session_matches_serial() {
+        let spec = tiny_spec(41);
+        let serial = spec.run_serial(1).unwrap();
+        let coord = ServeCoordinator::new(ServeConfig {
+            workers: 2,
+            ..ServeConfig::default()
+        });
+        let id = coord.submit(spec).unwrap();
+        assert_eq!(id, 1);
+        let got = coord.wait(id, Duration::from_secs(300)).unwrap();
+        assert_eq!(got, serial);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn admission_cap_rejects_deterministically() {
+        let coord = ServeCoordinator::new(ServeConfig {
+            workers: 1,
+            max_sessions: 0,
+            ..ServeConfig::default()
+        });
+        let err = coord.submit(tiny_spec(1)).unwrap_err();
+        assert!(err.to_string().contains("admission"), "got: {err}");
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_at_submit() {
+        let coord = ServeCoordinator::new(ServeConfig { workers: 1, ..ServeConfig::default() });
+        let mut bad = tiny_spec(1);
+        bad.variant = "nope".into();
+        assert!(coord.submit(bad).is_err());
+        let mut bad = tiny_spec(1);
+        bad.dataset = "XX".into();
+        assert!(coord.submit(bad).is_err());
+        let mut bad = tiny_spec(1);
+        bad.clients = 0;
+        assert!(coord.submit(bad).is_err());
+        let capped = ServeConfig { workers: 1, max_clients: 2, ..ServeConfig::default() };
+        let coord2 = ServeCoordinator::new(capped);
+        let mut big = tiny_spec(1);
+        big.clients = 3;
+        assert!(coord2.submit(big).is_err());
+    }
+
+    #[test]
+    fn unknown_ids_surface_cleanly() {
+        let coord = ServeCoordinator::new(ServeConfig { workers: 1, ..ServeConfig::default() });
+        assert!(coord.status(42).is_none());
+        assert!(coord.outcome(42).is_err());
+        assert!(coord.wait(42, Duration::from_millis(10)).is_err());
+    }
+}

@@ -5,12 +5,15 @@
 //!              synthetic dataset. `--variant treecss|treeall|starcss|starall`
 //!   mpsi     — multi-party PSI only, comparing topologies.
 //!   coreset  — Cluster-Coreset only, reporting reduction + weights.
+//!   serve    — multi-session coordinator: host N concurrent pipeline
+//!              sessions in one process behind a TCP control protocol.
 //!   info     — artifact/runtime diagnostics.
 //!   bench-check — validate BENCH_*.json artifacts (provenance contract).
 //!
 //! Examples:
 //!   treecss run --dataset RI --scale 0.1 --model mlp --variant treecss
 //!   treecss mpsi --clients 10 --n 2000 --protocol ot --topology tree
+//!   treecss serve --sessions 4 --wire tcp --verify
 //!   treecss info
 
 use std::process::ExitCode;
@@ -18,7 +21,8 @@ use std::sync::Arc;
 
 use treecss::config::Cli;
 use treecss::coordinator::{
-    distributed, Backend, Downstream, FrameworkVariant, Pipeline, TransportKind,
+    distributed, Backend, ControlClient, Downstream, FrameworkVariant, Pipeline, ReportSummary,
+    ServeConfig, ServeDaemon, ServeWire, SessionSpec, TransportKind,
 };
 use treecss::coreset::cluster_coreset;
 use treecss::data::synth::{self, PaperDataset};
@@ -51,6 +55,7 @@ fn real_main() -> Result<()> {
         "run" => cmd_run(&cli),
         "mpsi" => cmd_mpsi(&cli),
         "coreset" => cmd_coreset(&cli),
+        "serve" => cmd_serve(&cli),
         "info" => cmd_info(),
         "bench-check" => cmd_bench_check(&cli),
         // Hidden: the child half of `run --distributed` (self-exec'd).
@@ -69,7 +74,7 @@ fn real_main() -> Result<()> {
 const HELP: &str = "\
 treecss — TreeCSS vertical federated learning framework
 
-USAGE: treecss <run|mpsi|coreset|info|bench-check> [--options]
+USAGE: treecss <run|mpsi|coreset|serve|info|bench-check> [--options]
 
 run options (builds a Pipeline::builder(..) session over a metered
 transport; parties exchange every protocol message as wire envelopes):
@@ -106,6 +111,32 @@ mpsi options:
 coreset options:
   --dataset ... --scale ... --clusters <k> --threads <n> --no-reweight
 
+serve options (multi-session coordinator: hosts concurrent pipeline
+sessions in one process, every phase namespaced session/<id>/<phase>
+over ONE shared wire, driven by a submit/status/result TCP control
+protocol on an event-driven reactor — prints `SERVE <addr>` once ready):
+  --listen <addr>               control listener (default 127.0.0.1:0)
+  --sessions <n>                smoke/demo mode: submit n seeded sessions
+                                (seed, seed+1, ...), await them all
+                                concurrently, then shut down; 0 = daemon
+                                mode, serving until stdin closes or a
+                                control Shutdown arrives (default 0)
+  --workers <n>                 session worker threads (default 4)
+  --wire channel|tcp            the shared session wire (default tcp:
+                                session envelopes cross real localhost
+                                sockets through the reactor)
+  --max-sessions <n>            admission cap, queued+running (default 64)
+  --max-clients <n>             largest per-session client count the tcp
+                                wire hosts (default 8)
+  --mailbox-budget <n>          per-session in-flight envelope budget —
+                                the backpressure bound (default 4096)
+  --verify                      with --sessions: also run every spec
+                                serially and fail unless the served
+                                reports are byte-identical
+  plus the run dataset/pipeline flags as the session template:
+  --dataset --scale --model --variant --clients --seed --epochs --lr
+  --threads --rsa-bits --he-bits --overlap --clusters --k
+
 bench-check usage:
   treecss bench-check BENCH_*.json    fail unless every artifact honours
                                       the provenance contract (measured
@@ -127,13 +158,7 @@ fn cmd_run(cli: &Cli) -> Result<()> {
     let scale: f64 = cli.opt_parse("scale", 0.05)?;
     let seed: u64 = cli.opt_parse("seed", 2024)?;
     let model = cli.opt_or("model", "lr");
-    let variant = match cli.opt_or("variant", "treecss").to_lowercase().as_str() {
-        "treecss" => FrameworkVariant::TreeCss,
-        "treeall" => FrameworkVariant::TreeAll,
-        "starcss" => FrameworkVariant::StarCss,
-        "starall" => FrameworkVariant::StarAll,
-        v => return Err(treecss::Error::Config(format!("unknown variant {v:?}"))),
-    };
+    let variant = FrameworkVariant::from_name(&cli.opt_or("variant", "treecss"))?;
     let downstream = Downstream::from_flag(&model, cli.opt_parse("k", 5)?)?;
 
     let mut rng = Rng::new(seed);
@@ -322,6 +347,140 @@ fn cmd_coreset(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    use std::io::Write as _;
+
+    let sessions: usize = cli.opt_parse("sessions", 0)?;
+    let wire = ServeWire::from_name(&cli.opt_or("wire", "tcp"))?;
+    let listen = cli.opt_or("listen", "127.0.0.1:0");
+    let cfg = ServeConfig {
+        workers: cli.opt_parse("workers", 4)?,
+        max_sessions: cli.opt_parse("max-sessions", 64)?,
+        mailbox_budget: cli.opt_parse("mailbox-budget", 4096)?,
+        max_clients: cli.opt_parse("max-clients", 8)?,
+        ..ServeConfig::default()
+    };
+    // The session template every submitted spec starts from.
+    let spec = SessionSpec {
+        dataset: cli.opt_or("dataset", "RI"),
+        scale: cli.opt_parse("scale", 0.05)?,
+        variant: cli.opt_or("variant", "treecss"),
+        model: cli.opt_or("model", "lr"),
+        seed: cli.opt_parse("seed", 2024)?,
+        clients: cli.opt_parse("clients", 3)?,
+        epochs: cli.opt_parse("epochs", 100)?,
+        lr: cli.opt_parse("lr", 0.05)?,
+        threads: cli.opt_parse("threads", 1)?,
+        rsa_bits: cli.opt_parse("rsa-bits", 512)?,
+        he_bits: cli.opt_parse("he-bits", 512)?,
+        overlap: cli.opt_parse("overlap", 1.0)?,
+        clusters: cli.opt_parse("clusters", 8)?,
+        knn_k: cli.opt_parse("k", 5)?,
+    };
+
+    let daemon = ServeDaemon::start(cfg, wire, &listen)?;
+    println!("SERVE {}", daemon.control_addr());
+    std::io::stdout().flush()?;
+
+    if sessions == 0 {
+        // Daemon mode: serve until stdin closes (same lifecycle discipline
+        // as party-worker) or a control-protocol Shutdown arrives.
+        let stdin_closed = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let flag = Arc::clone(&stdin_closed);
+        std::thread::spawn(move || {
+            let stdin = std::io::stdin();
+            let mut line = String::new();
+            loop {
+                line.clear();
+                match stdin.read_line(&mut line) {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => {
+                        if line.trim() == "SHUTDOWN" {
+                            break;
+                        }
+                    }
+                }
+            }
+            flag.store(true, std::sync::atomic::Ordering::SeqCst);
+        });
+        while !daemon.stopped() && !stdin_closed.load(std::sync::atomic::Ordering::SeqCst) {
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        }
+        daemon.shutdown();
+        return Ok(());
+    }
+
+    // Smoke/demo mode: submit all sessions up front over the control
+    // protocol (so they genuinely run concurrently), then await each on its
+    // own control connection.
+    let addr = daemon.control_addr();
+    let verify = cli.flag("verify");
+    let mut client = ControlClient::connect(addr)?;
+    let mut submitted: Vec<(u64, SessionSpec)> = Vec::with_capacity(sessions);
+    for i in 0..sessions {
+        let mut s = spec.clone();
+        s.seed = spec.seed.wrapping_add(i as u64);
+        let id = client.submit(&s)?;
+        submitted.push((id, s));
+    }
+    let results: Vec<treecss::Result<(u64, ReportSummary)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = submitted
+            .iter()
+            .map(|(id, _)| {
+                let id = *id;
+                scope.spawn(move || {
+                    let mut c = ControlClient::connect(addr)?;
+                    let summary =
+                        c.await_result(id, std::time::Duration::from_secs(3600))?;
+                    Ok((id, summary))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("serve await thread panicked"))
+            .collect()
+    });
+
+    let mut failed = false;
+    for (result, (_, s)) in results.iter().zip(&submitted) {
+        match result {
+            Ok((id, summary)) => {
+                println!(
+                    "session {id}: {} seed {} quality {:.4}, {} on wire",
+                    summary.variant,
+                    s.seed,
+                    summary.quality(),
+                    bench::fmt_bytes(summary.total_bytes)
+                );
+                if verify {
+                    let serial = s.run_serial(*id)?;
+                    if &serial != summary {
+                        failed = true;
+                        eprintln!("session {id}: MISMATCH vs serial run of the same seed");
+                    }
+                }
+            }
+            Err(e) => {
+                failed = true;
+                eprintln!("session failed: {e}");
+            }
+        }
+    }
+    client.shutdown()?;
+    daemon.shutdown();
+    if failed {
+        return Err(treecss::Error::Runtime(
+            "serve: session failure or serial mismatch".into(),
+        ));
+    }
+    println!(
+        "serve: {sessions} session(s) ok{}",
+        if verify { " (byte-identical to serial runs)" } else { "" }
+    );
+    Ok(())
+}
+
 fn cmd_bench_check(cli: &Cli) -> Result<()> {
     if cli.positionals.is_empty() {
         let usage = "bench-check: no artifact paths (try: treecss bench-check BENCH_*.json)";
@@ -366,5 +525,10 @@ fn cmd_info() -> Result<()> {
             println!("smoke    : top_mse_step OK (loss {loss:.4})");
         }
     }
+    println!(
+        "serving  : `treecss serve` — event-driven multi-session coordinator \
+         (--sessions --workers --wire --listen --max-sessions --max-clients \
+         --mailbox-budget --verify; run `treecss help` for details)"
+    );
     Ok(())
 }

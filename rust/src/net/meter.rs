@@ -118,6 +118,11 @@ impl Meter {
     }
 
     /// Per-edge dump for reports.
+    ///
+    /// Entries are guaranteed sorted ascending by `(from, to, phase)` — the
+    /// `BTreeMap` iteration order — regardless of charge order or which
+    /// thread charged. Multi-session reports and the conformance tests
+    /// compare these dumps byte-for-byte without re-sorting.
     pub fn edges(&self) -> Vec<((PartyId, PartyId, String), EdgeStats)> {
         let g = self.inner.lock().unwrap();
         g.edges.iter().map(|(k, v)| (k.clone(), *v)).collect()
@@ -166,6 +171,34 @@ mod tests {
         m.charge(PartyId::Client(0), PartyId::Client(1), "p", 9);
         m.reset();
         assert_eq!(m.total_bytes(""), 0);
+    }
+
+    #[test]
+    fn edges_dump_is_sorted_regardless_of_charge_order() {
+        let m = Meter::default();
+        // Deliberately scrambled charge order across parties and phases.
+        m.charge(PartyId::KeyServer, PartyId::Client(0), "keys/dist", 3);
+        m.charge(PartyId::Client(3), PartyId::Aggregator, "train/fwd", 8);
+        m.charge(PartyId::Client(0), PartyId::Client(1), "psi/round1", 5);
+        m.charge(PartyId::Aggregator, PartyId::LabelOwner, "train/loss", 2);
+        m.charge(PartyId::Client(0), PartyId::Client(1), "psi/round0", 4);
+        m.charge(PartyId::Client(1), PartyId::Aggregator, "train/fwd", 6);
+
+        let keys: Vec<_> = m.edges().into_iter().map(|(k, _)| k).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted, "edges() must come out pre-sorted");
+        assert_eq!(keys.len(), 6);
+        // Spot-check the global ordering: clients before agg/label/keys,
+        // and phases ordered within an edge.
+        assert_eq!(
+            keys[0],
+            (PartyId::Client(0), PartyId::Client(1), "psi/round0".to_string())
+        );
+        assert_eq!(
+            keys[1],
+            (PartyId::Client(0), PartyId::Client(1), "psi/round1".to_string())
+        );
     }
 
     #[test]

@@ -12,8 +12,12 @@
 //! party sends/receives and (b) converts bytes to *simulated transfer
 //! time* under a configurable latency/bandwidth model;
 //! [`FaultTransport`] middleware corrupts matching sends so tests can
-//! prove protocols fail loudly. All cryptography still executes for real,
-//! so wall-clock numbers reflect the true compute cost. DESIGN.md
+//! prove protocols fail loudly. The serving plane adds [`reactor`]: an
+//! event-driven wire core ([`Reactor`] + [`ReactorTcpTransport`]) that
+//! multiplexes every listener and accepted connection on one readiness
+//! loop, replacing thread-per-connection for `treecss serve`. All
+//! cryptography still executes for real, so wall-clock numbers reflect
+//! the true compute cost. DESIGN.md
 //! documents why the in-process substitution preserves the paper's
 //! measurements (they are dominated by bytes × rounds and crypto compute)
 //! and how the TCP transport and the distributed process model slot in.
@@ -22,11 +26,16 @@ pub mod cost;
 pub mod fault;
 pub mod meter;
 pub mod msg;
+pub mod reactor;
 pub mod tcp;
 pub mod transport;
 
 pub use cost::NetConfig;
 pub use fault::{Fault, FaultTransport};
 pub use meter::{Meter, PartyId};
+pub use reactor::{
+    ConnPool, FrameSink, Reactor, ReactorConfig, ReactorStats, ReactorTcpTransport,
+    ReactorTcpTransportBuilder,
+};
 pub use tcp::{TcpTransport, TcpTransportBuilder, TcpTransportConfig};
 pub use transport::{ChannelTransport, Endpoint, Envelope, MeteredTransport, Transport};

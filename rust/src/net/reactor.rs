@@ -1,0 +1,762 @@
+//! Event-driven wire core for the serving plane.
+//!
+//! The classic [`TcpTransport`](crate::net::TcpTransport) dedicates one OS
+//! thread to every accepted connection. That is fine for a single pipeline
+//! with a handful of parties, but a serving daemon hosting dozens of
+//! concurrent sessions would burn a thread per socket doing mostly nothing.
+//!
+//! [`Reactor`] replaces that model for the serve path: every listener and
+//! every accepted connection is nonblocking, and a single named thread scans
+//! them in a readiness loop (accept → read → frame-decode → deliver). New
+//! listeners are registered at runtime with a [`FrameSink`] callback that
+//! receives each complete length-prefixed frame together with the stream it
+//! arrived on (so request/reply protocols can answer inline). The loop parks
+//! briefly when no socket made progress, so an idle daemon costs ~zero CPU.
+//!
+//! On top of the reactor sit two reusable pieces:
+//!
+//! * [`ConnPool`] — a per-(peer, lane) pool of outbound connections with the
+//!   same probe-and-redial semantics as `TcpTransport`'s send path. Lanes are
+//!   chosen by hashing `(from, to, phase)`, so the per-key FIFO ordering the
+//!   [`Transport`] contract requires is preserved while unrelated traffic can
+//!   use distinct sockets.
+//! * [`ReactorTcpTransport`] — a full [`Transport`] whose receive side is fed
+//!   by reactor-delivered frames into shared in-process mailboxes and whose send
+//!   side goes through a [`ConnPool`]. It is wire-compatible with
+//!   `TcpTransport` (same envelope framing), so either end of a connection
+//!   can be the classic or the reactor transport.
+//!
+//! The readiness loop is a portable nonblocking scan-poll (std has no epoll
+//! binding and this crate takes no dependencies); an epoll/kqueue poller
+//! could slot behind the same registration API without touching callers.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::net::meter::PartyId;
+use crate::net::tcp::{
+    decode_envelope, encode_envelope, lock_clean, send_frame_reconnecting, TcpTransportConfig,
+};
+use crate::net::transport::{Envelope, Mailboxes, Transport};
+
+/// Callback invoked by the reactor loop for every complete frame received on
+/// a connection accepted from a registered listener.
+///
+/// The second argument is the stream the frame arrived on; a sink may write a
+/// reply to it (the stream is nonblocking — retry `WouldBlock` writes).
+/// Returning `false` tells the reactor to close the connection.
+pub type FrameSink = Arc<dyn Fn(Vec<u8>, &mut TcpStream) -> bool + Send + Sync>;
+
+/// Tuning knobs for the readiness loop.
+#[derive(Clone, Copy, Debug)]
+pub struct ReactorConfig {
+    /// Hard cap on a single frame's declared length; larger claims kill the
+    /// connection (hostile-length posture, mirrors `TcpTransportConfig`).
+    pub max_frame_bytes: u64,
+    /// How long the loop parks when a full scan made no progress.
+    pub idle_sleep: Duration,
+    /// Per-connection per-tick read budget, so one firehose connection cannot
+    /// starve its siblings within a scan.
+    pub max_read_per_conn: usize,
+}
+
+impl Default for ReactorConfig {
+    fn default() -> Self {
+        ReactorConfig {
+            max_frame_bytes: 256 * 1024 * 1024,
+            idle_sleep: Duration::from_millis(1),
+            max_read_per_conn: 1024 * 1024,
+        }
+    }
+}
+
+/// Counters exported by [`Reactor::stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReactorStats {
+    pub connections_accepted: u64,
+    pub frames_delivered: u64,
+    pub connections_killed: u64,
+}
+
+struct Registration {
+    listener: TcpListener,
+    sink: FrameSink,
+}
+
+struct InboundConn {
+    stream: TcpStream,
+    sink: FrameSink,
+    buf: Vec<u8>,
+}
+
+struct ReactorShared {
+    cfg: ReactorConfig,
+    shutdown: AtomicBool,
+    pending: Mutex<Vec<Registration>>,
+    accepted: AtomicU64,
+    frames: AtomicU64,
+    killed: AtomicU64,
+}
+
+/// Single-threaded event loop multiplexing any number of listeners and their
+/// accepted connections. See the module docs for the model.
+pub struct Reactor {
+    shared: Arc<ReactorShared>,
+    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    loop_thread: std::thread::Thread,
+}
+
+impl Reactor {
+    /// Spawn the readiness loop on a dedicated named thread.
+    pub fn new(cfg: ReactorConfig) -> Result<Reactor> {
+        let shared = Arc::new(ReactorShared {
+            cfg,
+            shutdown: AtomicBool::new(false),
+            pending: Mutex::new(Vec::new()),
+            accepted: AtomicU64::new(0),
+            frames: AtomicU64::new(0),
+            killed: AtomicU64::new(0),
+        });
+        let loop_shared = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name("treecss-reactor".into())
+            .spawn(move || event_loop(loop_shared))
+            .map_err(|e| Error::Net(format!("reactor: spawn loop thread: {e}")))?;
+        let loop_thread = handle.thread().clone();
+        Ok(Reactor { shared, thread: Mutex::new(Some(handle)), loop_thread })
+    }
+
+    /// Hand a listener to the loop. Every connection accepted from it feeds
+    /// complete frames to `sink`.
+    pub fn register(&self, listener: TcpListener, sink: FrameSink) -> Result<()> {
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Net(format!("reactor: set_nonblocking on listener: {e}")))?;
+        lock_clean(&self.shared.pending).push(Registration { listener, sink });
+        // Wake the loop if it is parked so registration takes effect promptly.
+        self.loop_thread.unpark();
+        Ok(())
+    }
+
+    /// Snapshot of loop counters (accepted / delivered / killed).
+    pub fn stats(&self) -> ReactorStats {
+        ReactorStats {
+            connections_accepted: self.shared.accepted.load(Ordering::Relaxed),
+            frames_delivered: self.shared.frames.load(Ordering::Relaxed),
+            connections_killed: self.shared.killed.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop the loop and join its thread, closing every listener and
+    /// connection (and dropping their sinks). Safe to call more than once;
+    /// also invoked by `Drop`. Callable through a shared `Arc<Reactor>`,
+    /// which matters when sinks themselves hold `Arc`s back to the owner of
+    /// the reactor — an explicit `stop` is the only way to break that cycle.
+    /// Must not be called from inside a sink (the loop cannot join itself).
+    pub fn stop(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.loop_thread.unpark();
+        if let Some(h) = lock_clean(&self.thread).take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+enum PumpOutcome {
+    Progress,
+    Idle,
+    Closed,
+    Killed,
+}
+
+fn event_loop(shared: Arc<ReactorShared>) {
+    let mut listeners: Vec<Registration> = Vec::new();
+    let mut conns: Vec<InboundConn> = Vec::new();
+    let mut scratch = vec![0u8; 64 * 1024];
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            // Dropping listeners and conns here releases the ports.
+            return;
+        }
+        let mut progress = false;
+
+        // Adopt listeners registered since the last tick.
+        {
+            let mut pending = lock_clean(&shared.pending);
+            if !pending.is_empty() {
+                listeners.append(&mut pending);
+                progress = true;
+            }
+        }
+
+        // Accept every connection that is ready right now.
+        for reg in &listeners {
+            loop {
+                match reg.listener.accept() {
+                    Ok((stream, _)) => {
+                        let _ = stream.set_nonblocking(true);
+                        let _ = stream.set_nodelay(true);
+                        shared.accepted.fetch_add(1, Ordering::Relaxed);
+                        conns.push(InboundConn {
+                            stream,
+                            sink: Arc::clone(&reg.sink),
+                            buf: Vec::new(),
+                        });
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => break,
+                }
+            }
+        }
+
+        // Pump each connection: read what is available, deliver whole frames.
+        let mut i = 0;
+        while i < conns.len() {
+            match pump_conn(&shared, &mut conns[i], &mut scratch) {
+                PumpOutcome::Progress => {
+                    progress = true;
+                    i += 1;
+                }
+                PumpOutcome::Idle => i += 1,
+                PumpOutcome::Closed => {
+                    conns.swap_remove(i);
+                    progress = true;
+                }
+                PumpOutcome::Killed => {
+                    shared.killed.fetch_add(1, Ordering::Relaxed);
+                    conns.swap_remove(i);
+                    progress = true;
+                }
+            }
+        }
+
+        if !progress {
+            std::thread::park_timeout(shared.cfg.idle_sleep);
+        }
+    }
+}
+
+fn pump_conn(
+    shared: &ReactorShared,
+    conn: &mut InboundConn,
+    scratch: &mut [u8],
+) -> PumpOutcome {
+    let mut read_total = 0usize;
+    let mut made_progress = false;
+    loop {
+        if read_total >= shared.cfg.max_read_per_conn {
+            break;
+        }
+        match conn.stream.read(scratch) {
+            Ok(0) => return PumpOutcome::Closed,
+            Ok(n) => {
+                conn.buf.extend_from_slice(&scratch[..n]);
+                read_total += n;
+                made_progress = true;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return PumpOutcome::Closed,
+        }
+    }
+
+    // Deliver every complete frame buffered so far.
+    loop {
+        if conn.buf.len() < 8 {
+            break;
+        }
+        let mut len_bytes = [0u8; 8];
+        len_bytes.copy_from_slice(&conn.buf[..8]);
+        let len = u64::from_le_bytes(len_bytes);
+        if len > shared.cfg.max_frame_bytes {
+            return PumpOutcome::Killed;
+        }
+        let len = len as usize;
+        if conn.buf.len() < 8 + len {
+            break;
+        }
+        let frame = conn.buf[8..8 + len].to_vec();
+        conn.buf.drain(..8 + len);
+        shared.frames.fetch_add(1, Ordering::Relaxed);
+        made_progress = true;
+        if !(conn.sink)(frame, &mut conn.stream) {
+            return PumpOutcome::Killed;
+        }
+    }
+
+    if made_progress {
+        PumpOutcome::Progress
+    } else {
+        PumpOutcome::Idle
+    }
+}
+
+/// Write a length-prefixed frame on a (possibly nonblocking) stream, retrying
+/// `WouldBlock` with short sleeps until `deadline`. Returns `false` on any
+/// other error or on deadline expiry.
+///
+/// This is what a [`FrameSink`] uses to answer on the connection it was
+/// handed: the stream is nonblocking because the reactor owns it, so a plain
+/// `write_all` could spuriously fail on a full socket buffer.
+pub(crate) fn write_frame_retrying(
+    stream: &mut TcpStream,
+    body: &[u8],
+    deadline: Instant,
+) -> bool {
+    let mut frame = Vec::with_capacity(8 + body.len());
+    frame.extend_from_slice(&(body.len() as u64).to_le_bytes());
+    frame.extend_from_slice(body);
+    let mut off = 0usize;
+    while off < frame.len() {
+        match stream.write(&frame[off..]) {
+            Ok(0) => return false,
+            Ok(n) => off += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return false;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    stream.flush().is_ok()
+}
+
+type ConnSlot = Arc<Mutex<Option<TcpStream>>>;
+
+/// Outbound connection pool: one lazily-dialed, probe-and-redial connection
+/// per `(peer address, lane)`. Lane selection is the caller's business; see
+/// [`ConnPool::lane_for`] for the deterministic `(from, to, phase)` hash the
+/// transport uses so per-key ordering survives pooling.
+pub struct ConnPool {
+    cfg: TcpTransportConfig,
+    lanes: usize,
+    conns: Mutex<HashMap<(SocketAddr, usize), ConnSlot>>,
+}
+
+impl ConnPool {
+    pub fn new(cfg: TcpTransportConfig, lanes: usize) -> ConnPool {
+        ConnPool { cfg, lanes: lanes.max(1), conns: Mutex::new(HashMap::new()) }
+    }
+
+    /// Deterministic lane for a message key. Same `(from, to, phase)` always
+    /// maps to the same lane, so the per-sender-per-phase FIFO the
+    /// [`Transport`] contract promises is preserved across pooled sockets.
+    pub fn lane_for(&self, from: PartyId, to: PartyId, phase: &str) -> usize {
+        // FNV-1a over the display form; cheap and stable across runs.
+        let key = format!("{from}|{to}|{phase}");
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in key.as_bytes() {
+            h ^= u64::from(*b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        (h % self.lanes as u64) as usize
+    }
+
+    /// Send one framed body to `addr` on `lane`, dialing or redialing as
+    /// needed (same reconnect semantics as `TcpTransport`).
+    pub fn send_to(&self, addr: SocketAddr, lane: usize, body: &[u8]) -> Result<()> {
+        let slot = {
+            let mut map = lock_clean(&self.conns);
+            Arc::clone(map.entry((addr, lane % self.lanes)).or_insert_with(|| {
+                Arc::new(Mutex::new(None))
+            }))
+        };
+        let mut guard = lock_clean(&slot);
+        send_frame_reconnecting(&mut guard, addr, &self.cfg, body)
+    }
+}
+
+/// Builder for [`ReactorTcpTransport`].
+pub struct ReactorTcpTransportBuilder {
+    cfg: TcpTransportConfig,
+    lanes: usize,
+    hosts: Vec<PartyId>,
+    peers: Vec<(PartyId, SocketAddr)>,
+    reactor: Option<Arc<Reactor>>,
+}
+
+impl ReactorTcpTransportBuilder {
+    /// Override the wire config (timeouts, frame cap, dial policy).
+    pub fn with_config(mut self, cfg: TcpTransportConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Number of outbound lanes per peer (default 4).
+    pub fn lanes(mut self, lanes: usize) -> Self {
+        self.lanes = lanes.max(1);
+        self
+    }
+
+    /// Host `party` locally: bind a listener whose frames are decoded into
+    /// the shared mailboxes.
+    pub fn host(mut self, party: PartyId) -> Self {
+        self.hosts.push(party);
+        self
+    }
+
+    /// Host every party in the iterator.
+    pub fn hosts<I: IntoIterator<Item = PartyId>>(mut self, parties: I) -> Self {
+        self.hosts.extend(parties);
+        self
+    }
+
+    /// Route sends addressed to `party` to `addr`.
+    pub fn peer(mut self, party: PartyId, addr: SocketAddr) -> Self {
+        self.peers.push((party, addr));
+        self
+    }
+
+    /// Share an existing reactor instead of spawning a private one (the serve
+    /// daemon registers its control listener on the same loop).
+    pub fn reactor(mut self, reactor: Arc<Reactor>) -> Self {
+        self.reactor = Some(reactor);
+        self
+    }
+
+    pub fn build(self) -> Result<ReactorTcpTransport> {
+        let reactor = match self.reactor {
+            Some(r) => r,
+            None => Arc::new(Reactor::new(ReactorConfig {
+                max_frame_bytes: self.cfg.max_frame_bytes,
+                ..ReactorConfig::default()
+            })?),
+        };
+        let mail = Arc::new(Mailboxes::new());
+        let mut local_addrs = HashMap::new();
+        for party in &self.hosts {
+            let listener = TcpListener::bind(("127.0.0.1", 0))
+                .map_err(|e| Error::Net(format!("reactor transport: bind for {party}: {e}")))?;
+            let addr = listener
+                .local_addr()
+                .map_err(|e| Error::Net(format!("reactor transport: local_addr: {e}")))?;
+            let sink_mail = Arc::clone(&mail);
+            let sink: FrameSink = Arc::new(move |frame: Vec<u8>, _stream: &mut TcpStream| {
+                match decode_envelope(&frame) {
+                    Ok(env) => {
+                        sink_mail.push(env);
+                        true
+                    }
+                    Err(_) => false,
+                }
+            });
+            reactor.register(listener, sink)?;
+            local_addrs.insert(*party, addr);
+        }
+        let mut peers: HashMap<PartyId, SocketAddr> = HashMap::new();
+        // Hosted parties are reachable at their own listener (loopback send).
+        for (p, a) in &local_addrs {
+            peers.insert(*p, *a);
+        }
+        for (p, a) in self.peers {
+            peers.insert(p, a);
+        }
+        Ok(ReactorTcpTransport {
+            reactor,
+            mail,
+            pool: ConnPool::new(self.cfg, self.lanes),
+            cfg: self.cfg,
+            peers: Mutex::new(peers),
+            local_addrs,
+        })
+    }
+}
+
+/// TCP [`Transport`] backed by the [`Reactor`]: all hosted parties' inbound
+/// traffic is served by the single loop thread, and outbound traffic goes
+/// through a [`ConnPool`]. Wire-compatible with `TcpTransport`.
+pub struct ReactorTcpTransport {
+    reactor: Arc<Reactor>,
+    mail: Arc<Mailboxes>,
+    pool: ConnPool,
+    cfg: TcpTransportConfig,
+    peers: Mutex<HashMap<PartyId, SocketAddr>>,
+    local_addrs: HashMap<PartyId, SocketAddr>,
+}
+
+impl ReactorTcpTransport {
+    pub fn builder() -> ReactorTcpTransportBuilder {
+        ReactorTcpTransportBuilder {
+            cfg: TcpTransportConfig::default(),
+            lanes: 4,
+            hosts: Vec::new(),
+            peers: Vec::new(),
+            reactor: None,
+        }
+    }
+
+    /// Convenience: host every party in `parties` in this process on its own
+    /// private reactor.
+    pub fn hosting<I: IntoIterator<Item = PartyId>>(parties: I) -> Result<ReactorTcpTransport> {
+        ReactorTcpTransport::builder().hosts(parties).build()
+    }
+
+    /// Listener address for a hosted party.
+    pub fn local_addr(&self, party: PartyId) -> Option<SocketAddr> {
+        self.local_addrs.get(&party).copied()
+    }
+
+    /// Register (or re-route) a remote peer after construction.
+    pub fn add_peer(&self, party: PartyId, addr: SocketAddr) {
+        lock_clean(&self.peers).insert(party, addr);
+    }
+
+    /// The reactor driving this transport's inbound side.
+    pub fn reactor(&self) -> &Arc<Reactor> {
+        &self.reactor
+    }
+}
+
+impl Transport for ReactorTcpTransport {
+    fn send(&self, env: Envelope) -> Result<f64> {
+        let addr = lock_clean(&self.peers).get(&env.to).copied().ok_or_else(|| {
+            Error::Net(format!("reactor transport: no route to {} (unknown peer)", env.to))
+        })?;
+        let lane = self.pool.lane_for(env.from, env.to, &env.phase);
+        let body = encode_envelope(&env);
+        self.pool.send_to(addr, lane, &body)?;
+        Ok(0.0)
+    }
+
+    fn recv(&self, at: PartyId, from: PartyId, phase: &str) -> Result<Envelope> {
+        if !self.local_addrs.contains_key(&at) {
+            return Err(Error::Net(format!(
+                "reactor transport: recv at {at}: party not hosted by this process"
+            )));
+        }
+        self.mail.pop(at, from, phase, self.cfg.recv_timeout)
+    }
+
+    fn pending(&self) -> usize {
+        self.mail.pending()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn send_raw(addr: SocketAddr, frames: &[&[u8]]) {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        for body in frames {
+            let mut f = Vec::with_capacity(8 + body.len());
+            f.extend_from_slice(&(body.len() as u64).to_le_bytes());
+            f.extend_from_slice(body);
+            s.write_all(&f).expect("write frame");
+        }
+        s.flush().expect("flush");
+    }
+
+    fn wait_until<F: Fn() -> bool>(cond: F, what: &str) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !cond() {
+            if Instant::now() > deadline {
+                panic!("timed out waiting for {what}");
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn delivers_frames_to_sink() {
+        let reactor = Reactor::new(ReactorConfig::default()).unwrap();
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (tx, rx) = mpsc::channel::<Vec<u8>>();
+        let tx = Mutex::new(tx);
+        let sink: FrameSink = Arc::new(move |frame, _stream: &mut TcpStream| {
+            lock_clean(&tx).send(frame).is_ok()
+        });
+        reactor.register(listener, sink).unwrap();
+
+        send_raw(addr, &[b"hello", b"", b"worlds"]);
+        let got: Vec<Vec<u8>> = (0..3)
+            .map(|_| rx.recv_timeout(Duration::from_secs(10)).unwrap())
+            .collect();
+        assert_eq!(got, vec![b"hello".to_vec(), Vec::new(), b"worlds".to_vec()]);
+        assert_eq!(reactor.stats().frames_delivered, 3);
+        assert_eq!(reactor.stats().connections_accepted, 1);
+    }
+
+    #[test]
+    fn hostile_length_kills_connection() {
+        let reactor = Reactor::new(ReactorConfig {
+            max_frame_bytes: 1024,
+            ..ReactorConfig::default()
+        })
+        .unwrap();
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let sink: FrameSink = Arc::new(|_frame, _stream: &mut TcpStream| true);
+        reactor.register(listener, sink).unwrap();
+
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&u64::MAX.to_le_bytes()).unwrap();
+        s.flush().unwrap();
+        wait_until(|| reactor.stats().connections_killed == 1, "hostile conn kill");
+        assert_eq!(reactor.stats().frames_delivered, 0);
+    }
+
+    #[test]
+    fn sink_false_kills_connection() {
+        let reactor = Reactor::new(ReactorConfig::default()).unwrap();
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let sink: FrameSink = Arc::new(|frame: Vec<u8>, _stream: &mut TcpStream| frame != b"die");
+        reactor.register(listener, sink).unwrap();
+
+        send_raw(addr, &[b"ok", b"die"]);
+        wait_until(|| reactor.stats().connections_killed == 1, "sink-false kill");
+        assert_eq!(reactor.stats().frames_delivered, 2);
+    }
+
+    #[test]
+    fn sink_can_reply_on_stream() {
+        let reactor = Reactor::new(ReactorConfig::default()).unwrap();
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let sink: FrameSink = Arc::new(|frame: Vec<u8>, stream: &mut TcpStream| {
+            let mut reply = b"echo:".to_vec();
+            reply.extend_from_slice(&frame);
+            write_frame_retrying(stream, &reply, Instant::now() + Duration::from_secs(5))
+        });
+        reactor.register(listener, sink).unwrap();
+
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let body = b"ping";
+        let mut f = Vec::new();
+        f.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        f.extend_from_slice(body);
+        s.write_all(&f).unwrap();
+        s.flush().unwrap();
+
+        let mut len = [0u8; 8];
+        s.read_exact(&mut len).unwrap();
+        let n = u64::from_le_bytes(len) as usize;
+        let mut reply = vec![0u8; n];
+        s.read_exact(&mut reply).unwrap();
+        assert_eq!(reply, b"echo:ping");
+    }
+
+    #[test]
+    fn many_connections_one_thread() {
+        let reactor = Reactor::new(ReactorConfig::default()).unwrap();
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (tx, rx) = mpsc::channel::<Vec<u8>>();
+        let tx = Mutex::new(tx);
+        let sink: FrameSink = Arc::new(move |frame, _stream: &mut TcpStream| {
+            lock_clean(&tx).send(frame).is_ok()
+        });
+        reactor.register(listener, sink).unwrap();
+
+        let streams: Vec<TcpStream> = (0..8)
+            .map(|i| {
+                let mut s = TcpStream::connect(addr).unwrap();
+                let body = format!("conn-{i}");
+                let mut f = Vec::new();
+                f.extend_from_slice(&(body.len() as u64).to_le_bytes());
+                f.extend_from_slice(body.as_bytes());
+                s.write_all(&f).unwrap();
+                s.flush().unwrap();
+                s
+            })
+            .collect();
+
+        let mut got: Vec<String> = (0..8)
+            .map(|_| {
+                String::from_utf8(rx.recv_timeout(Duration::from_secs(10)).unwrap()).unwrap()
+            })
+            .collect();
+        got.sort();
+        let want: Vec<String> = (0..8).map(|i| format!("conn-{i}")).collect();
+        assert_eq!(got, want);
+        assert_eq!(reactor.stats().connections_accepted, 8);
+        drop(streams);
+    }
+
+    #[test]
+    fn drop_joins_loop_and_releases_port() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        {
+            let reactor = Reactor::new(ReactorConfig::default()).unwrap();
+            let sink: FrameSink = Arc::new(|_f, _s: &mut TcpStream| true);
+            reactor.register(listener, sink).unwrap();
+            // Make sure the loop adopted the listener before dropping.
+            send_raw(addr, &[b"x"]);
+            wait_until(|| reactor.stats().frames_delivered == 1, "adoption");
+        }
+        // Loop is joined; the port must be bindable again.
+        let rebound = TcpListener::bind(addr);
+        assert!(rebound.is_ok(), "port not released after reactor drop");
+    }
+
+    #[test]
+    fn lane_for_is_deterministic_and_in_range() {
+        let pool = ConnPool::new(TcpTransportConfig::default(), 4);
+        let a = pool.lane_for(PartyId::Client(0), PartyId::Aggregator, "train/fwd");
+        let b = pool.lane_for(PartyId::Client(0), PartyId::Aggregator, "train/fwd");
+        assert_eq!(a, b);
+        assert!(a < 4);
+    }
+
+    #[test]
+    fn transport_send_recv_roundtrip() {
+        let t = ReactorTcpTransport::hosting([PartyId::Client(0), PartyId::Client(1)]).unwrap();
+        t.send(Envelope::new(
+            PartyId::Client(0),
+            PartyId::Client(1),
+            "phase/a",
+            vec![1, 2, 3],
+        ))
+        .unwrap();
+        let env = t.recv(PartyId::Client(1), PartyId::Client(0), "phase/a").unwrap();
+        assert_eq!(env.payload, vec![1, 2, 3]);
+        assert_eq!(env.from, PartyId::Client(0));
+        assert_eq!(t.pending(), 0);
+    }
+
+    #[test]
+    fn transport_preserves_per_key_order() {
+        let t = ReactorTcpTransport::hosting([PartyId::Client(0), PartyId::Client(1)]).unwrap();
+        for i in 0..32u8 {
+            t.send(Envelope::new(
+                PartyId::Client(0),
+                PartyId::Client(1),
+                "seq",
+                vec![i],
+            ))
+            .unwrap();
+        }
+        for i in 0..32u8 {
+            let env = t.recv(PartyId::Client(1), PartyId::Client(0), "seq").unwrap();
+            assert_eq!(env.payload, vec![i], "out of order at {i}");
+        }
+    }
+
+    #[test]
+    fn recv_unhosted_party_errs() {
+        let t = ReactorTcpTransport::hosting([PartyId::Client(0)]).unwrap();
+        let err = t.recv(PartyId::Aggregator, PartyId::Client(0), "x").unwrap_err();
+        assert!(err.to_string().contains("not hosted"), "got: {err}");
+    }
+}

@@ -85,7 +85,7 @@ impl Default for TcpTransportConfig {
 
 /// Wire form of one frame body: routing header + payload, all through the
 /// bounds-checked codec.
-fn encode_envelope(env: &Envelope) -> Vec<u8> {
+pub(crate) fn encode_envelope(env: &Envelope) -> Vec<u8> {
     let mut e = Encoder::with_capacity(env.payload.len() + 64);
     encode_party(&mut e, env.from);
     encode_party(&mut e, env.to);
@@ -95,7 +95,7 @@ fn encode_envelope(env: &Envelope) -> Vec<u8> {
     e.finish()
 }
 
-fn decode_envelope(buf: &[u8]) -> Result<Envelope> {
+pub(crate) fn decode_envelope(buf: &[u8]) -> Result<Envelope> {
     let mut d = Decoder::new(buf);
     let err = |e: crate::util::codec::DecodeError| Error::Net(format!("tcp frame: {e}"));
     let from = decode_party(&mut d)?;
@@ -142,7 +142,7 @@ fn decode_party(d: &mut Decoder) -> Result<PartyId> {
 /// is valid at any instant a panic could unwind past it, so one panicked
 /// worker thread must not cascade into panics on unrelated sends/recvs —
 /// faults stay `Err`-never-panic, matching the FaultTransport contract.
-fn lock_clean<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+pub(crate) fn lock_clean<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
@@ -179,7 +179,7 @@ fn conn_is_stale(stream: &TcpStream) -> bool {
 /// connection has gone stale or the write fails. A peer restart between
 /// two sends must not lose the in-flight envelope when a fresh dial would
 /// deliver it; only a failure on the fresh connection surfaces as `Err`.
-fn send_frame_reconnecting(
+pub(crate) fn send_frame_reconnecting(
     slot: &mut Option<TcpStream>,
     addr: SocketAddr,
     cfg: &TcpTransportConfig,

@@ -1,0 +1,160 @@
+//! Serving-plane equivalence suite.
+//!
+//! The contract under test: N seeded sessions run *concurrently* through
+//! the serve coordinator — sharing one wire, phases namespaced
+//! `session/<id>/<phase>` — produce reports byte-identical to the same
+//! seeds run serially on private wires. "Byte-identical" is literal:
+//! intersections, coreset indices/weights, the full loss series, quality
+//! bits, and the per-edge meter dump are compared with `==`, floats as
+//! IEEE-754 bits. Also covered: churn isolation (a party drop mid-phase
+//! fails that one session while its siblings complete) and the TCP
+//! control protocol end-to-end against a live daemon.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use treecss::coordinator::{
+    ControlClient, ReportSummary, ServeConfig, ServeCoordinator, ServeDaemon, ServeWire,
+    SessionSpec, SessionStatus,
+};
+use treecss::net::{ChannelTransport, Fault, FaultTransport, Transport};
+
+const WAIT: Duration = Duration::from_secs(300);
+
+fn tiny_spec(seed: u64, variant: &str) -> SessionSpec {
+    SessionSpec {
+        dataset: "RI".into(),
+        scale: 0.012,
+        variant: variant.into(),
+        seed,
+        epochs: 15,
+        rsa_bits: 256,
+        he_bits: 256,
+        threads: 1,
+        ..SessionSpec::default()
+    }
+}
+
+fn serve_cfg(workers: usize) -> ServeConfig {
+    ServeConfig { workers, ..ServeConfig::default() }
+}
+
+/// Eight concurrent seeded sessions (all four framework variants, distinct
+/// seeds) through one coordinator — byte-identical to serial runs, at 1
+/// and at 4 worker threads.
+#[test]
+fn eight_concurrent_sessions_match_serial_at_1_and_4_workers() {
+    let variants = ["treecss", "treeall", "starcss", "starall"];
+    let specs: Vec<SessionSpec> = (0..8)
+        .map(|i| tiny_spec(100 + i as u64, variants[i % variants.len()]))
+        .collect();
+
+    // Serial ground truth, ids 1..=8 (the coordinator assigns ids in
+    // submit order, so the pairing below is exact).
+    let serial: Vec<ReportSummary> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| s.run_serial(i as u64 + 1).unwrap())
+        .collect();
+
+    for workers in [1usize, 4] {
+        let coord = ServeCoordinator::new(serve_cfg(workers));
+        let ids: Vec<u64> = specs.iter().map(|s| coord.submit(s.clone()).unwrap()).collect();
+        assert_eq!(ids, (1..=8).collect::<Vec<u64>>(), "ids are submit-ordered");
+        for (id, want) in ids.iter().zip(&serial) {
+            let got = coord.wait(*id, WAIT).unwrap();
+            assert_eq!(
+                &got, want,
+                "workers={workers} session {id}: concurrent run diverged from serial"
+            );
+        }
+        coord.shutdown();
+    }
+}
+
+/// Churn isolation: one session's party "drops" mid-training (its frames
+/// vanish from the shared wire) — that session errs; the sessions running
+/// beside it on the same wire still finish byte-identical to serial.
+#[test]
+fn party_drop_mid_phase_fails_only_that_session() {
+    let specs: Vec<SessionSpec> =
+        (0..3).map(|i| tiny_spec(300 + i as u64, "treecss")).collect();
+    let serial_1 = specs[0].run_serial(1).unwrap();
+    let serial_3 = specs[2].run_serial(3).unwrap();
+
+    // The shared wire swallows every train-phase frame of session 2 only.
+    // The short recv timeout is what turns the silent drop into the
+    // session's "party gone" error.
+    let wire: Arc<dyn Transport + Send + Sync> = Arc::new(
+        FaultTransport::new(
+            ChannelTransport::with_timeout(Duration::from_secs(2)),
+            Fault::Drop,
+        )
+        .on_phase_prefix("session/2/train/"),
+    );
+    let coord = ServeCoordinator::with_wire(serve_cfg(3), wire);
+    let ids: Vec<u64> = specs.iter().map(|s| coord.submit(s.clone()).unwrap()).collect();
+    assert_eq!(ids, vec![1, 2, 3]);
+
+    let err = coord.wait(2, WAIT).unwrap_err();
+    assert!(err.to_string().contains("failed"), "session 2 must fail, got: {err}");
+    assert_eq!(coord.status(2), Some(SessionStatus::Failed));
+
+    // Siblings on the SAME wire are untouched — and still exact.
+    assert_eq!(coord.wait(1, WAIT).unwrap(), serial_1);
+    assert_eq!(coord.wait(3, WAIT).unwrap(), serial_3);
+    coord.shutdown();
+}
+
+/// The TCP control protocol end-to-end: a live daemon (reactor-served
+/// control listener + reactor TCP session wire), two sessions submitted
+/// over one connection, awaited concurrently on separate connections,
+/// verified byte-identical to serial, then a clean protocol shutdown.
+#[test]
+fn control_protocol_end_to_end_over_tcp() {
+    let cfg = ServeConfig { workers: 2, max_clients: 4, ..ServeConfig::default() };
+    let daemon = ServeDaemon::start(cfg, ServeWire::Tcp, "127.0.0.1:0").unwrap();
+    let addr = daemon.control_addr();
+
+    let specs = [tiny_spec(500, "treecss"), tiny_spec(501, "starcss")];
+    let serial: Vec<ReportSummary> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| s.run_serial(i as u64 + 1).unwrap())
+        .collect();
+
+    let mut client = ControlClient::connect(addr).unwrap();
+    let ids: Vec<u64> = specs.iter().map(|s| client.submit(s).unwrap()).collect();
+    assert_eq!(ids, vec![1, 2]);
+
+    // Status is answerable while sessions run (never a hang: the daemon's
+    // result poll is non-blocking by construction).
+    let st = client.status(1).unwrap();
+    assert!(
+        matches!(st, SessionStatus::Queued | SessionStatus::Running | SessionStatus::Done),
+        "unexpected status {st:?}"
+    );
+
+    let results: Vec<ReportSummary> = std::thread::scope(|scope| {
+        let handles: Vec<_> = ids
+            .iter()
+            .map(|&id| {
+                scope.spawn(move || {
+                    let mut c = ControlClient::connect(addr).unwrap();
+                    c.await_result(id, WAIT).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (got, want) in results.iter().zip(&serial) {
+        assert_eq!(got, want, "served-over-TCP report diverged from serial");
+    }
+
+    assert_eq!(client.status(1).unwrap(), SessionStatus::Done);
+    assert!(client.status(99).is_err(), "unknown id is a protocol error");
+
+    client.shutdown().unwrap();
+    assert!(daemon.stopped(), "control Shutdown must raise the stop flag");
+    daemon.shutdown();
+}

@@ -1,8 +1,9 @@
 //! Transport conformance suite: one behavioral contract, every wire.
 //!
 //! The harness functions take `&dyn Transport` and are instantiated for
-//! both [`ChannelTransport`] (in-process mailboxes) and [`TcpTransport`]
-//! (real localhost sockets, one listener per party): per-(sender, phase)
+//! [`ChannelTransport`] (in-process mailboxes), [`TcpTransport`] (real
+//! localhost sockets, one listener per party), and [`ReactorTcpTransport`]
+//! (the serving plane's event-driven wire core): per-(sender, phase)
 //! FIFO ordering, cross-phase isolation, concurrent pair exchange, and
 //! `wire_bytes` accounting through [`MeteredTransport`] must be
 //! indistinguishable. On top of the wire contract, the cross-transport
@@ -18,7 +19,8 @@ use treecss::coordinator::{Backend, Downstream, FrameworkVariant, Pipeline, Tran
 use treecss::data::synth::PaperDataset;
 use treecss::net::{
     ChannelTransport, Envelope, Fault, FaultTransport, Meter, MeteredTransport, NetConfig,
-    PartyId, TcpTransport, TcpTransportBuilder, TcpTransportConfig, Transport,
+    PartyId, ReactorTcpTransport, TcpTransport, TcpTransportBuilder, TcpTransportConfig,
+    Transport,
 };
 use treecss::psi::common::HeContext;
 use treecss::psi::rsa_psi::{self, RsaPsiConfig};
@@ -35,6 +37,10 @@ const C: PartyId = PartyId::Client(2);
 
 fn fresh_tcp() -> TcpTransport {
     TcpTransport::hosting((0..16).map(PartyId::Client)).unwrap()
+}
+
+fn fresh_reactor() -> ReactorTcpTransport {
+    ReactorTcpTransport::hosting((0..16).map(PartyId::Client)).unwrap()
 }
 
 // ---- the wire contract, generic over &dyn Transport ------------------------
@@ -135,11 +141,33 @@ fn tcp_concurrent_pairs() {
 }
 
 #[test]
+fn reactor_ordering() {
+    let t = fresh_reactor();
+    ordering_per_sender_and_phase(&t);
+}
+
+#[test]
+fn reactor_phase_isolation() {
+    let t = fresh_reactor();
+    cross_phase_isolation(&t);
+}
+
+#[test]
+fn reactor_concurrent_pairs() {
+    // 8 pairs, 16 parties, one single-threaded readiness loop underneath.
+    let t = fresh_reactor();
+    concurrent_pair_exchange(&t);
+}
+
+#[test]
 fn wire_accounting_identical_across_transports() {
     let channel = metered_accounting(&ChannelTransport::new());
     let tcp_net = fresh_tcp();
     let tcp = metered_accounting(&tcp_net);
+    let reactor_net = fresh_reactor();
+    let reactor = metered_accounting(&reactor_net);
     assert_eq!(channel, tcp);
+    assert_eq!(channel, reactor, "reactor transport must meter like the others");
     // Sized envelopes charge their declared framing, not just payload.
     assert_eq!(channel.1, 100 + 4096);
 }
