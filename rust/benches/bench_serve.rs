@@ -9,6 +9,12 @@
 //! of the measurement, not an afterthought: a serving plane that is
 //! fast but divergent is wrong.
 //!
+//! The `backend` column pits the reactor's two readiness backends
+//! against each other on the TCP wire (`scan` — the portable
+//! nonblocking sweep — vs `epoll` where the Linux shim exists) at 1, 4,
+//! and 64 concurrent sessions, so the epoll win is measured rather than
+//! modelled.
+//!
 //!     cargo bench --bench bench_serve [-- --full]
 //!
 //! `TREECSS_BENCH_REPS` sets repetitions per cell (default 1; the wall
@@ -19,8 +25,11 @@
 //! the 1-session wall (sessions overlap on the shared wire; the crypto
 //! plane is the shared bottleneck, so the win is concurrency, not a 4×
 //! speedup), and the `serve` rows track the `serial` baseline per
-//! session within scheduling noise. The channel and tcp wires carry the
-//! same reports — the wire is swappable, the protocol traffic is not.
+//! session within scheduling noise. The channel and tcp wires — and the
+//! scan and epoll backends — carry the same reports; the wire and the
+//! readiness mechanism are swappable, the protocol traffic is not. The
+//! backend gap widens with the session count: a scan tick touches every
+//! connection, an epoll tick only the ready ones.
 
 use std::time::Instant;
 
@@ -28,20 +37,25 @@ use treecss::bench::{fmt_secs, JsonReport, Table};
 use treecss::coordinator::{
     ControlClient, ReportSummary, ServeConfig, ServeDaemon, ServeWire, SessionSpec,
 };
+use treecss::net::{poll, BackendChoice, ReactorConfig};
 
 fn bench_reps() -> usize {
     treecss::bench::reps_from_env(1)
 }
 
-fn spec_for(seed: u64, full: bool) -> SessionSpec {
+fn spec_for(seed: u64, n: usize, full: bool) -> SessionSpec {
+    // The 64-session point shrinks per-session work so the cell measures
+    // multiplexing across a fleet, not 64× the crypto plane.
+    let heavy = full && n <= 4;
+    let micro = n >= 64;
     SessionSpec {
         dataset: "RI".into(),
-        scale: if full { 0.03 } else { 0.012 },
+        scale: if heavy { 0.03 } else if micro { 0.01 } else { 0.012 },
         variant: "treecss".into(),
         seed,
-        epochs: if full { 60 } else { 15 },
-        rsa_bits: if full { 512 } else { 256 },
-        he_bits: if full { 512 } else { 256 },
+        epochs: if heavy { 60 } else if micro { 6 } else { 15 },
+        rsa_bits: if heavy { 512 } else { 256 },
+        he_bits: if heavy { 512 } else { 256 },
         threads: 1,
         ..SessionSpec::default()
     }
@@ -52,29 +66,39 @@ fn spec_for(seed: u64, full: bool) -> SessionSpec {
 fn run_serial_baseline(n: usize, full: bool) -> (Vec<ReportSummary>, f64) {
     let t0 = Instant::now();
     let serial: Vec<ReportSummary> = (0..n)
-        .map(|i| spec_for(1_000 + i as u64, full).run_serial(i as u64 + 1).expect("serial run"))
+        .map(|i| {
+            spec_for(1_000 + i as u64, n, full).run_serial(i as u64 + 1).expect("serial run")
+        })
         .collect();
     (serial, t0.elapsed().as_secs_f64())
 }
 
-/// One served measurement: a fresh daemon, `n` sessions submitted over
-/// one control connection, all results awaited. Returns (wall, all
-/// reports byte-identical to `serial`).
+/// One served measurement: a fresh daemon on the given wire + readiness
+/// backend, `n` sessions submitted over one control connection, all
+/// results awaited. Returns (wall, all reports byte-identical to
+/// `serial`).
 fn run_served(
     n: usize,
     full: bool,
     wire: ServeWire,
+    backend: BackendChoice,
     workers: usize,
     serial: &[ReportSummary],
 ) -> (f64, bool) {
-    let cfg = ServeConfig { workers, max_clients: 4, ..ServeConfig::default() };
+    let cfg = ServeConfig {
+        workers,
+        max_clients: 4,
+        max_sessions: n.max(64),
+        reactor: ReactorConfig { backend, ..ReactorConfig::default() },
+        ..ServeConfig::default()
+    };
     let daemon = ServeDaemon::start(cfg, wire, "127.0.0.1:0").expect("start daemon");
     let addr = daemon.control_addr();
 
     let t0 = Instant::now();
     let mut client = ControlClient::connect(addr).expect("connect control");
     let ids: Vec<u64> = (0..n)
-        .map(|i| client.submit(&spec_for(1_000 + i as u64, full)).expect("submit"))
+        .map(|i| client.submit(&spec_for(1_000 + i as u64, n, full)).expect("submit"))
         .collect();
     let results: Vec<ReportSummary> = ids
         .iter()
@@ -93,7 +117,7 @@ fn run_served(
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
     let reps = bench_reps();
-    let session_counts: [usize; 2] = [1, 4];
+    let session_counts: [usize; 3] = [1, 4, 64];
     const WORKERS: usize = 4;
 
     let mut report = JsonReport::new("bench_serve");
@@ -105,18 +129,24 @@ fn main() {
         .config("dataset", "RI")
         .config("variant", "treecss")
         .config(
+            "backends",
+            if poll::supported() { vec!["scan", "epoll"] } else { vec!["scan"] },
+        )
+        .config(
             "provenance",
             format!(
                 "measured: cargo bench --bench bench_serve, reps={reps}; serve rows \
                  run through a live ServeDaemon (TCP control protocol, sessions \
-                 multiplexed on one wire), serial rows are the same seeds on \
-                 private wires; the identical column asserts byte-equality"
+                 multiplexed on one wire) with the stated reactor readiness \
+                 backend, serial rows are the same seeds on private wires; the \
+                 identical column asserts byte-equality; the 64-session point \
+                 uses a reduced per-session spec"
             ),
         );
 
     let mut table = Table::new(
-        "Serving plane — N concurrent sessions vs serial, 4 workers",
-        &["sessions", "mode", "wire", "workers", "wall", "wall/session", "identical"],
+        "Serving plane — N concurrent sessions vs serial, 4 workers, scan vs epoll",
+        &["sessions", "mode", "wire", "backend", "workers", "wall", "wall/session", "identical"],
     );
 
     for &n in &session_counts {
@@ -125,16 +155,28 @@ fn main() {
             n.to_string(),
             "serial".into(),
             "-".into(),
+            "-".into(),
             "1".into(),
             fmt_secs(serial_wall),
             fmt_secs(serial_wall / n as f64),
             "-".into(),
         ]);
-        for (wire_name, wire) in [("channel", ServeWire::Channel), ("tcp", ServeWire::Tcp)] {
+        let mut cells: Vec<(&str, ServeWire, BackendChoice)> = vec![
+            ("channel", ServeWire::Channel, BackendChoice::Scan),
+            ("tcp", ServeWire::Tcp, BackendChoice::Scan),
+        ];
+        if poll::supported() {
+            cells.push(("tcp", ServeWire::Tcp, BackendChoice::Epoll));
+        }
+        for (wire_name, wire, backend) in cells {
+            let backend_name = match backend {
+                BackendChoice::Epoll => "epoll",
+                _ => "scan",
+            };
             let mut wall_sum = 0.0;
             let mut all_identical = true;
             for _ in 0..reps {
-                let (wall, identical) = run_served(n, full, wire, WORKERS, &serial);
+                let (wall, identical) = run_served(n, full, wire, backend, WORKERS, &serial);
                 wall_sum += wall;
                 all_identical &= identical;
             }
@@ -143,12 +185,13 @@ fn main() {
                 n.to_string(),
                 "serve".into(),
                 wire_name.into(),
+                backend_name.into(),
                 WORKERS.to_string(),
                 fmt_secs(wall),
                 fmt_secs(wall / n as f64),
                 all_identical.to_string(),
             ]);
-            eprintln!("  done sessions={n} wire={wire_name}");
+            eprintln!("  done sessions={n} wire={wire_name} backend={backend_name}");
         }
     }
 

@@ -35,7 +35,7 @@ use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::net::cost::NetConfig;
 use crate::net::meter::Meter;
-use crate::net::reactor::{write_frame_retrying, FrameSink, Reactor, ReactorConfig};
+use crate::net::reactor::{FrameSink, Reactor, ReactorConfig, Replies};
 use crate::net::tcp::lock_clean;
 use crate::net::transport::{ChannelTransport, Envelope, Transport};
 use crate::net::{PartyId, ReactorTcpTransport};
@@ -468,6 +468,9 @@ pub struct ServeConfig {
     /// Largest `clients` a spec may request; 0 = unlimited (in-process
     /// channel wire only — the TCP wire hosts a fixed party roster).
     pub max_clients: usize,
+    /// Reactor tuning for the daemon's loop (readiness backend, frame cap,
+    /// outbound buffer cap).
+    pub reactor: ReactorConfig,
 }
 
 impl Default for ServeConfig {
@@ -478,6 +481,7 @@ impl Default for ServeConfig {
             mailbox_budget: 4096,
             backpressure_wait: Duration::from_secs(10),
             max_clients: 0,
+            reactor: ReactorConfig::default(),
         }
     }
 }
@@ -899,7 +903,7 @@ impl ServeDaemon {
     /// roster for up to `cfg.max_clients` clients (min 1) on the same
     /// reactor.
     pub fn start(cfg: ServeConfig, wire: ServeWire, listen: &str) -> Result<ServeDaemon> {
-        let reactor = Arc::new(Reactor::new(ReactorConfig::default())?);
+        let reactor = Arc::new(Reactor::new(cfg.reactor)?);
         let shared: SharedWire = match wire {
             ServeWire::Channel => Arc::new(ChannelTransport::new()),
             ServeWire::Tcp => Arc::new(
@@ -918,8 +922,8 @@ impl ServeDaemon {
         let stop = Arc::new(AtomicBool::new(false));
         let sink_coord = Arc::clone(&coord);
         let sink_stop = Arc::clone(&stop);
-        let sink: FrameSink = Arc::new(move |frame: Vec<u8>, stream: &mut TcpStream| {
-            handle_control_frame(&sink_coord, &sink_stop, &frame, stream)
+        let sink: FrameSink = Arc::new(move |frame: Vec<u8>, replies: &mut Replies<'_>| {
+            handle_control_frame(&sink_coord, &sink_stop, &frame, replies)
         });
         reactor.register(listener, sink)?;
         Ok(ServeDaemon { coord, reactor, control_addr, stop })
@@ -955,7 +959,7 @@ fn handle_control_frame(
     coord: &ServeCoordinator,
     stop: &AtomicBool,
     frame: &[u8],
-    stream: &mut TcpStream,
+    replies: &mut Replies<'_>,
 ) -> bool {
     let (reply, keep) = match ControlRequest::decode(frame) {
         Err(e) => (ControlReply::Error(format!("bad control frame: {e}")), false),
@@ -978,9 +982,11 @@ fn handle_control_frame(
             (ControlReply::Bye, false)
         }
     };
-    let wrote =
-        write_frame_retrying(stream, &reply.encode(), Instant::now() + Duration::from_secs(10));
-    wrote && keep
+    // The reply goes into the connection's outbound buffer; the reactor
+    // drains it on write-readiness, so a stalled control reader can never
+    // stall the loop (and a `Bye` still flushes before the close).
+    replies.push(&reply.encode());
+    keep
 }
 
 /// Blocking client for the daemon's control protocol: one request/reply

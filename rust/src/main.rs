@@ -28,7 +28,9 @@ use treecss::coreset::cluster_coreset;
 use treecss::data::synth::{self, PaperDataset};
 use treecss::data::VerticalPartition;
 use treecss::ml::kmeans::ParAssign;
-use treecss::net::{ChannelTransport, Meter, MeteredTransport, NetConfig};
+use treecss::net::{
+    BackendChoice, ChannelTransport, Meter, MeteredTransport, NetConfig, ReactorConfig,
+};
 use treecss::psi::common::HeContext;
 use treecss::psi::rsa_psi::RsaPsiConfig;
 use treecss::psi::sched::Pairing;
@@ -130,6 +132,10 @@ protocol on an event-driven reactor — prints `SERVE <addr>` once ready):
                                 wire hosts (default 8)
   --mailbox-budget <n>          per-session in-flight envelope budget —
                                 the backpressure bound (default 4096)
+  --reactor-backend auto|epoll|scan
+                                readiness backend for the reactor loop
+                                (default auto: TREECSS_REACTOR_BACKEND if
+                                set, else epoll on Linux, else scan-poll)
   --verify                      with --sessions: also run every spec
                                 serially and fail unless the served
                                 reports are byte-identical
@@ -353,11 +359,16 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let sessions: usize = cli.opt_parse("sessions", 0)?;
     let wire = ServeWire::from_name(&cli.opt_or("wire", "tcp"))?;
     let listen = cli.opt_or("listen", "127.0.0.1:0");
+    let reactor = ReactorConfig {
+        backend: BackendChoice::from_name(&cli.opt_or("reactor-backend", "auto"))?,
+        ..ReactorConfig::default()
+    };
     let cfg = ServeConfig {
         workers: cli.opt_parse("workers", 4)?,
         max_sessions: cli.opt_parse("max-sessions", 64)?,
         mailbox_budget: cli.opt_parse("mailbox-budget", 4096)?,
         max_clients: cli.opt_parse("max-clients", 8)?,
+        reactor,
         ..ServeConfig::default()
     };
     // The session template every submitted spec starts from.

@@ -15,7 +15,9 @@
 //! prove protocols fail loudly. The serving plane adds [`reactor`]: an
 //! event-driven wire core ([`Reactor`] + [`ReactorTcpTransport`]) that
 //! multiplexes every listener and accepted connection on one readiness
-//! loop, replacing thread-per-connection for `treecss serve`. All
+//! loop (Linux epoll via the dependency-free raw-syscall shim in
+//! [`poll`], scan-poll elsewhere), replacing thread-per-connection for
+//! `treecss serve`. All
 //! cryptography still executes for real, so wall-clock numbers reflect
 //! the true compute cost. DESIGN.md
 //! documents why the in-process substitution preserves the paper's
@@ -26,6 +28,7 @@ pub mod cost;
 pub mod fault;
 pub mod meter;
 pub mod msg;
+pub mod poll;
 pub mod reactor;
 pub mod tcp;
 pub mod transport;
@@ -34,8 +37,8 @@ pub use cost::NetConfig;
 pub use fault::{Fault, FaultTransport};
 pub use meter::{Meter, PartyId};
 pub use reactor::{
-    ConnPool, FrameSink, Reactor, ReactorConfig, ReactorStats, ReactorTcpTransport,
-    ReactorTcpTransportBuilder,
+    BackendChoice, ConnPool, FrameSink, Reactor, ReactorConfig, ReactorStats, ReactorTcpTransport,
+    ReactorTcpTransportBuilder, Replies,
 };
 pub use tcp::{TcpTransport, TcpTransportBuilder, TcpTransportConfig};
 pub use transport::{ChannelTransport, Endpoint, Envelope, MeteredTransport, Transport};

@@ -1,0 +1,367 @@
+//! Dependency-free Linux epoll shim for the reactor's OS readiness backend.
+//!
+//! The crate takes no dependencies, and `std` exposes no readiness API, so
+//! this module speaks to the kernel directly: `epoll_create1` / `epoll_ctl`
+//! / `epoll_pwait` / `eventfd2` through the C library's variadic `syscall()`
+//! entry point (which `std` already links — no `libc` crate involved).
+//! Syscall numbers are pinned per architecture; only the four calls the
+//! reactor needs are wrapped, each behind a safe RAII type.
+//!
+//! On platforms without the shim ([`supported`] returns `false`) the types
+//! still exist so [`crate::net::reactor`] compiles unchanged, but every
+//! constructor returns an "epoll unsupported" error and the reactor's
+//! backend resolution falls back to (or insists on, if epoll was explicitly
+//! requested) the portable scan-poll.
+//!
+//! `epoll_pwait` is used instead of `epoll_wait` because aarch64 has no
+//! `epoll_wait` syscall at all; with a null sigmask the two are identical.
+
+/// Readiness flags (identical to the kernel's `EPOLL*` constants).
+pub const EPOLLIN: u32 = 0x001;
+/// Write-readiness: the socket's send buffer has room again.
+pub const EPOLLOUT: u32 = 0x004;
+/// Error condition (always reported; no need to register interest).
+pub const EPOLLERR: u32 = 0x008;
+/// Hang-up (always reported; no need to register interest).
+pub const EPOLLHUP: u32 = 0x010;
+/// Peer shut down its write side.
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+/// One readiness record, layout-compatible with the kernel's
+/// `struct epoll_event`. x86_64 packs it to 12 bytes; every other
+/// architecture uses natural alignment (16 bytes).
+#[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+#[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpollEvent {
+    /// `EPOLL*` flag bitmask.
+    pub events: u32,
+    /// Caller-chosen token identifying the registered fd.
+    pub data: u64,
+}
+
+/// True when this build carries a real epoll shim (Linux on an
+/// architecture whose syscall numbers are pinned below).
+pub const fn supported() -> bool {
+    cfg!(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod imp {
+    use super::EpollEvent;
+    use std::ffi::{c_int, c_long};
+    use std::io;
+
+    extern "C" {
+        /// The C library's variadic syscall entry point; sets `errno`,
+        /// which `io::Error::last_os_error()` reads back.
+        fn syscall(num: c_long, ...) -> c_long;
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    mod nr {
+        use std::ffi::c_long;
+        pub const EPOLL_CTL: c_long = 233;
+        pub const EPOLL_PWAIT: c_long = 281;
+        pub const EPOLL_CREATE1: c_long = 291;
+        pub const EVENTFD2: c_long = 290;
+        pub const CLOSE: c_long = 3;
+        pub const READ: c_long = 0;
+        pub const WRITE: c_long = 1;
+        pub const SHUTDOWN: c_long = 48;
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    mod nr {
+        use std::ffi::c_long;
+        pub const EPOLL_CTL: c_long = 21;
+        pub const EPOLL_PWAIT: c_long = 22;
+        pub const EPOLL_CREATE1: c_long = 20;
+        pub const EVENTFD2: c_long = 19;
+        pub const CLOSE: c_long = 57;
+        pub const READ: c_long = 63;
+        pub const WRITE: c_long = 64;
+        pub const SHUTDOWN: c_long = 210;
+    }
+
+    const EPOLL_CLOEXEC: c_int = 0o2000000;
+    const EFD_CLOEXEC: c_int = 0o2000000;
+    const EFD_NONBLOCK: c_int = 0o4000;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    const SHUT_RD: c_int = 0;
+
+    fn check(ret: c_long) -> io::Result<c_long> {
+        if ret < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(ret)
+        }
+    }
+
+    /// An epoll instance. Closed (and thereby fully deregistered) on drop.
+    #[derive(Debug)]
+    pub struct Epoll {
+        fd: c_int,
+    }
+
+    impl Epoll {
+        /// `epoll_create1(EPOLL_CLOEXEC)`.
+        pub fn new() -> io::Result<Epoll> {
+            let fd = check(unsafe { syscall(nr::EPOLL_CREATE1, EPOLL_CLOEXEC) })?;
+            Ok(Epoll { fd: fd as c_int })
+        }
+
+        fn ctl(&self, op: c_int, fd: i32, events: u32, token: u64) -> io::Result<()> {
+            let mut ev = EpollEvent { events, data: token };
+            let evp: *mut EpollEvent =
+                if op == EPOLL_CTL_DEL { std::ptr::null_mut() } else { &mut ev };
+            check(unsafe { syscall(nr::EPOLL_CTL, self.fd, op, fd as c_int, evp) })?;
+            Ok(())
+        }
+
+        /// Register `fd` for `events`, reported under `token`.
+        pub fn add(&self, fd: i32, events: u32, token: u64) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, events, token)
+        }
+
+        /// Change an existing registration's interest set.
+        pub fn modify(&self, fd: i32, events: u32, token: u64) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, events, token)
+        }
+
+        /// Remove a registration (idempotent from the caller's view: a
+        /// missing fd is reported as an error the reactor ignores).
+        pub fn del(&self, fd: i32) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+        }
+
+        /// Block up to `timeout_ms` for readiness; fills `events` and
+        /// returns how many records are valid. `EINTR` surfaces as `Ok(0)`
+        /// — the reactor just takes another lap.
+        pub fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+            let ret = unsafe {
+                syscall(
+                    nr::EPOLL_PWAIT,
+                    self.fd,
+                    events.as_mut_ptr(),
+                    events.len() as c_int,
+                    timeout_ms as c_int,
+                    std::ptr::null::<u8>(),
+                    0usize,
+                )
+            };
+            if ret < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    return Ok(0);
+                }
+                return Err(err);
+            }
+            Ok(ret as usize)
+        }
+    }
+
+    impl Drop for Epoll {
+        fn drop(&mut self) {
+            unsafe {
+                let _ = syscall(nr::CLOSE, self.fd);
+            }
+        }
+    }
+
+    /// A nonblocking `eventfd` the reactor's epoll set watches so other
+    /// threads ([`crate::net::reactor::Reactor::register`], `stop`) can
+    /// interrupt a blocked `epoll_pwait`.
+    #[derive(Debug)]
+    pub struct EventFd {
+        fd: c_int,
+    }
+
+    impl EventFd {
+        /// `eventfd2(0, EFD_CLOEXEC | EFD_NONBLOCK)`.
+        pub fn new() -> io::Result<EventFd> {
+            let fd = check(unsafe { syscall(nr::EVENTFD2, 0, EFD_CLOEXEC | EFD_NONBLOCK) })?;
+            Ok(EventFd { fd: fd as c_int })
+        }
+
+        /// The fd to register in an [`Epoll`] set (with `EPOLLIN`).
+        pub fn raw_fd(&self) -> i32 {
+            self.fd
+        }
+
+        /// Make the fd readable, waking a blocked `wait`. Best-effort: a
+        /// counter already at its max still leaves the fd readable.
+        pub fn ring(&self) {
+            let one: u64 = 1;
+            unsafe {
+                let _ = syscall(nr::WRITE, self.fd, &one as *const u64, 8usize);
+            }
+        }
+
+        /// Consume pending wakeups so level-triggered epoll re-arms.
+        pub fn drain(&self) {
+            let mut buf: u64 = 0;
+            unsafe {
+                let _ = syscall(nr::READ, self.fd, &mut buf as *mut u64, 8usize);
+            }
+        }
+    }
+
+    impl Drop for EventFd {
+        fn drop(&mut self) {
+            unsafe {
+                let _ = syscall(nr::CLOSE, self.fd);
+            }
+        }
+    }
+
+    /// `shutdown(fd, SHUT_RD)` — on a *listening* socket this makes every
+    /// subsequent `accept` fail with `EINVAL` without closing the fd, which
+    /// is exactly the "listener died under the reactor" shape the
+    /// dead-listener tests need to produce deterministically.
+    pub fn shutdown_read(fd: i32) -> io::Result<()> {
+        check(unsafe { syscall(nr::SHUTDOWN, fd as c_int, SHUT_RD) })?;
+        Ok(())
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod imp {
+    use super::EpollEvent;
+    use std::io;
+
+    fn unsupported() -> io::Error {
+        io::Error::new(io::ErrorKind::Unsupported, "epoll unsupported on this platform")
+    }
+
+    /// Stub epoll handle: never constructible on this platform.
+    #[derive(Debug)]
+    pub struct Epoll {}
+
+    impl Epoll {
+        pub fn new() -> io::Result<Epoll> {
+            Err(unsupported())
+        }
+
+        pub fn add(&self, _fd: i32, _events: u32, _token: u64) -> io::Result<()> {
+            Err(unsupported())
+        }
+
+        pub fn modify(&self, _fd: i32, _events: u32, _token: u64) -> io::Result<()> {
+            Err(unsupported())
+        }
+
+        pub fn del(&self, _fd: i32) -> io::Result<()> {
+            Err(unsupported())
+        }
+
+        pub fn wait(&self, _events: &mut [EpollEvent], _timeout_ms: i32) -> io::Result<usize> {
+            Err(unsupported())
+        }
+    }
+
+    /// Stub wakeup fd: never constructible on this platform.
+    #[derive(Debug)]
+    pub struct EventFd {}
+
+    impl EventFd {
+        pub fn new() -> io::Result<EventFd> {
+            Err(unsupported())
+        }
+
+        pub fn raw_fd(&self) -> i32 {
+            -1
+        }
+
+        pub fn ring(&self) {}
+
+        pub fn drain(&self) {}
+    }
+
+    /// See the Linux implementation; here it only reports "unsupported".
+    pub fn shutdown_read(_fd: i32) -> io::Result<()> {
+        Err(unsupported())
+    }
+}
+
+pub use imp::{shutdown_read, Epoll, EventFd};
+
+#[cfg(all(test, target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn epoll_event_layout_matches_kernel() {
+        // x86_64 packs the struct to 12 bytes; everything else pads to 16.
+        if cfg!(target_arch = "x86_64") {
+            assert_eq!(std::mem::size_of::<EpollEvent>(), 12);
+        } else {
+            assert_eq!(std::mem::size_of::<EpollEvent>(), 16);
+        }
+    }
+
+    #[test]
+    fn eventfd_rings_and_drains_through_epoll() {
+        let ep = Epoll::new().unwrap();
+        let efd = EventFd::new().unwrap();
+        ep.add(efd.raw_fd(), EPOLLIN, 7).unwrap();
+
+        let mut events = [EpollEvent::default(); 4];
+        // Nothing pending: a zero-timeout wait returns no events.
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+
+        efd.ring();
+        let n = ep.wait(&mut events, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!({ events[0].data }, 7);
+        assert_ne!({ events[0].events } & EPOLLIN, 0);
+
+        // Draining re-arms the level-triggered registration.
+        efd.drain();
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn socket_readability_and_writability_are_reported() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let mut client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (served, _) = listener.accept().unwrap();
+        served.set_nonblocking(true).unwrap();
+
+        let ep = Epoll::new().unwrap();
+        ep.add(served.as_raw_fd(), EPOLLIN | EPOLLOUT, 42).unwrap();
+
+        // An idle socket with room to write reports EPOLLOUT only.
+        let mut events = [EpollEvent::default(); 4];
+        let n = ep.wait(&mut events, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert_ne!({ events[0].events } & EPOLLOUT, 0);
+        assert_eq!({ events[0].events } & EPOLLIN, 0);
+
+        client.write_all(b"ping").unwrap();
+        client.flush().unwrap();
+        let n = ep.wait(&mut events, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert_ne!({ events[0].events } & EPOLLIN, 0, "bytes pending must report EPOLLIN");
+
+        // Interest can be narrowed; the fd can be removed.
+        ep.modify(served.as_raw_fd(), EPOLLIN, 42).unwrap();
+        ep.del(served.as_raw_fd()).unwrap();
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn shutdown_read_makes_accept_fail_without_closing_the_fd() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        listener.set_nonblocking(true).unwrap();
+        shutdown_read(listener.as_raw_fd()).unwrap();
+        let err = listener.accept().unwrap_err();
+        assert_ne!(err.kind(), std::io::ErrorKind::WouldBlock, "accept must fail hard: {err}");
+        // The fd is still open — dropping the listener is the only close.
+    }
+}

@@ -6,12 +6,33 @@
 //! concurrent sessions would burn a thread per socket doing mostly nothing.
 //!
 //! [`Reactor`] replaces that model for the serve path: every listener and
-//! every accepted connection is nonblocking, and a single named thread scans
-//! them in a readiness loop (accept → read → frame-decode → deliver). New
-//! listeners are registered at runtime with a [`FrameSink`] callback that
-//! receives each complete length-prefixed frame together with the stream it
-//! arrived on (so request/reply protocols can answer inline). The loop parks
-//! briefly when no socket made progress, so an idle daemon costs ~zero CPU.
+//! every accepted connection is nonblocking, and a single named thread
+//! drives them in a readiness loop (accept → read → frame-decode → deliver
+//! → flush replies). New listeners are registered at runtime with a
+//! [`FrameSink`] callback that receives each complete length-prefixed frame
+//! together with a [`Replies`] queue (so request/reply protocols can answer
+//! inline — replies land in a per-connection outbound buffer the loop
+//! drains as the socket accepts bytes, never blocking the loop on one slow
+//! reader).
+//!
+//! Two readiness backends sit behind the same registration API:
+//!
+//! * **epoll** (Linux) — the OS readiness backend, via the dependency-free
+//!   raw-syscall shim in [`crate::net::poll`]. The loop blocks in
+//!   `epoll_pwait` until a socket is actually readable (or writable, for
+//!   connections with buffered replies — `EPOLLOUT` interest is armed only
+//!   while the outbound buffer is non-empty), woken by an `eventfd` for
+//!   registrations and shutdown. Idle cost is a genuine block, and a tick
+//!   touches only the connections the kernel reported.
+//! * **scan** — the portable fallback: a nonblocking scan-poll over every
+//!   listener and connection, parking briefly when a full sweep made no
+//!   progress. Same delivery semantics, O(connections) per tick.
+//!
+//! Selection is runtime: [`ReactorConfig::backend`] picks explicitly, and
+//! the default [`BackendChoice::Auto`] honors `TREECSS_REACTOR_BACKEND=
+//! epoll|scan` and otherwise uses epoll wherever the shim exists. Both
+//! backends pass the same conformance and equivalence suites — the backend
+//! is a performance choice, never a semantic one.
 //!
 //! On top of the reactor sit two reusable pieces:
 //!
@@ -25,10 +46,6 @@
 //!   side goes through a [`ConnPool`]. It is wire-compatible with
 //!   `TcpTransport` (same envelope framing), so either end of a connection
 //!   can be the classic or the reactor transport.
-//!
-//! The readiness loop is a portable nonblocking scan-poll (std has no epoll
-//! binding and this crate takes no dependencies); an epoll/kqueue poller
-//! could slot behind the same registration API without touching callers.
 
 use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
@@ -39,18 +56,64 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::net::meter::PartyId;
+use crate::net::poll;
 use crate::net::tcp::{
     decode_envelope, encode_envelope, lock_clean, send_frame_reconnecting, TcpTransportConfig,
 };
 use crate::net::transport::{Envelope, Mailboxes, Transport};
 
+/// Reply queue handed to a [`FrameSink`]: frames pushed here are appended
+/// (length-prefixed) to the connection's outbound buffer and written by the
+/// reactor loop as the socket accepts bytes. A sink therefore never blocks
+/// the loop waiting on a slow or stalled reader — that connection's replies
+/// just sit in its own buffer while every other connection keeps moving.
+pub struct Replies<'a> {
+    out: &'a mut Vec<u8>,
+}
+
+impl Replies<'_> {
+    /// Queue one length-prefixed reply frame on this connection.
+    pub fn push(&mut self, body: &[u8]) {
+        self.out.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        self.out.extend_from_slice(body);
+    }
+}
+
 /// Callback invoked by the reactor loop for every complete frame received on
 /// a connection accepted from a registered listener.
 ///
-/// The second argument is the stream the frame arrived on; a sink may write a
-/// reply to it (the stream is nonblocking — retry `WouldBlock` writes).
-/// Returning `false` tells the reactor to close the connection.
-pub type FrameSink = Arc<dyn Fn(Vec<u8>, &mut TcpStream) -> bool + Send + Sync>;
+/// Replies pushed into the [`Replies`] queue are delivered asynchronously by
+/// the loop (flushed before the connection closes, even when the sink asks
+/// for the close). Returning `false` tells the reactor to close the
+/// connection once its queued replies have drained.
+pub type FrameSink = Arc<dyn Fn(Vec<u8>, &mut Replies<'_>) -> bool + Send + Sync>;
+
+/// Which readiness backend drives the loop.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// `TREECSS_REACTOR_BACKEND` if set (`epoll`/`scan`/`auto`), otherwise
+    /// epoll wherever [`poll::supported`], otherwise scan.
+    #[default]
+    Auto,
+    /// The portable nonblocking scan-poll.
+    Scan,
+    /// The Linux epoll shim; [`Reactor::new`] errs where unsupported.
+    Epoll,
+}
+
+impl BackendChoice {
+    /// Parse a CLI/env spelling.
+    pub fn from_name(name: &str) -> Result<BackendChoice> {
+        match name.to_ascii_lowercase().as_str() {
+            "auto" => Ok(BackendChoice::Auto),
+            "scan" => Ok(BackendChoice::Scan),
+            "epoll" => Ok(BackendChoice::Epoll),
+            _ => Err(Error::Config(format!(
+                "unknown reactor backend {name:?} (want auto|epoll|scan)"
+            ))),
+        }
+    }
+}
 
 /// Tuning knobs for the readiness loop.
 #[derive(Clone, Copy, Debug)]
@@ -58,11 +121,17 @@ pub struct ReactorConfig {
     /// Hard cap on a single frame's declared length; larger claims kill the
     /// connection (hostile-length posture, mirrors `TcpTransportConfig`).
     pub max_frame_bytes: u64,
-    /// How long the loop parks when a full scan made no progress.
+    /// How long the scan backend parks when a full sweep made no progress
+    /// (the epoll backend blocks in the kernel instead).
     pub idle_sleep: Duration,
     /// Per-connection per-tick read budget, so one firehose connection cannot
     /// starve its siblings within a scan.
     pub max_read_per_conn: usize,
+    /// Cap on a connection's buffered-but-unwritten reply bytes; a reader
+    /// stalled past this is killed instead of growing the buffer forever.
+    pub max_outbound_bytes: usize,
+    /// Readiness backend selection (see [`BackendChoice`]).
+    pub backend: BackendChoice,
 }
 
 impl Default for ReactorConfig {
@@ -71,6 +140,8 @@ impl Default for ReactorConfig {
             max_frame_bytes: 256 * 1024 * 1024,
             idle_sleep: Duration::from_millis(1),
             max_read_per_conn: 1024 * 1024,
+            max_outbound_bytes: 64 * 1024 * 1024,
+            backend: BackendChoice::Auto,
         }
     }
 }
@@ -81,7 +152,21 @@ pub struct ReactorStats {
     pub connections_accepted: u64,
     pub frames_delivered: u64,
     pub connections_killed: u64,
+    /// Listeners deregistered after a fatal `accept` error (the listener fd
+    /// died under the loop); without deregistration a dead listener would be
+    /// rescanned every tick forever.
+    pub listeners_dead: u64,
 }
+
+/// How long a closing connection may linger flushing its last replies
+/// before the loop gives up on the unread bytes and drops it.
+const CLOSE_LINGER: Duration = Duration::from_secs(10);
+
+/// epoll backend: how long one `epoll_pwait` may block. Registrations and
+/// shutdown interrupt it via the eventfd; this bound only paces the
+/// close-linger sweep.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+const EPOLL_WAIT_MS: i32 = 250;
 
 struct Registration {
     listener: TcpListener,
@@ -91,44 +176,245 @@ struct Registration {
 struct InboundConn {
     stream: TcpStream,
     sink: FrameSink,
+    /// Inbound bytes not yet assembled into a complete frame.
     buf: Vec<u8>,
+    /// Outbound (reply) bytes not yet accepted by the socket.
+    out: Vec<u8>,
+    /// How much of `out` has already been written.
+    out_off: usize,
+    /// Reading is over (EOF, sink veto); drop once `out` drains.
+    closing: bool,
+    close_deadline: Option<Instant>,
+    /// epoll backend: the currently armed interest set.
+    armed: u32,
+}
+
+/// What the loop should do with a connection after servicing it.
+enum Fate {
+    Keep,
+    Remove,
+}
+
+impl InboundConn {
+    fn new(stream: TcpStream, sink: FrameSink) -> InboundConn {
+        InboundConn {
+            stream,
+            sink,
+            buf: Vec::new(),
+            out: Vec::new(),
+            out_off: 0,
+            closing: false,
+            close_deadline: None,
+            armed: poll::EPOLLIN,
+        }
+    }
+
+    fn begin_close(&mut self) {
+        if !self.closing {
+            self.closing = true;
+            self.close_deadline = Some(Instant::now() + CLOSE_LINGER);
+        }
+    }
+
+    fn out_pending(&self) -> usize {
+        self.out.len() - self.out_off
+    }
+
+    /// Read whatever is available (respecting the per-tick budget) into
+    /// `buf`. Returns `(made_progress, reached_eof_or_error)`.
+    fn fill(&mut self, cfg: &ReactorConfig, scratch: &mut [u8]) -> (bool, bool) {
+        let mut read_total = 0usize;
+        let mut progress = false;
+        loop {
+            if read_total >= cfg.max_read_per_conn {
+                return (progress, false);
+            }
+            match self.stream.read(scratch) {
+                Ok(0) => return (progress, true),
+                Ok(n) => {
+                    self.buf.extend_from_slice(&scratch[..n]);
+                    read_total += n;
+                    progress = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return (progress, false),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return (progress, true),
+            }
+        }
+    }
+
+    /// Deliver every complete frame buffered so far. Returns
+    /// `(made_progress, fatal)` where `fatal` means the connection must die
+    /// immediately (hostile length) or drain-then-die (sink veto) — either
+    /// way `closing`/counters are already handled here.
+    fn deliver(&mut self, shared: &ReactorShared) -> (bool, bool) {
+        let mut progress = false;
+        loop {
+            if self.buf.len() < 8 {
+                return (progress, false);
+            }
+            let mut len_bytes = [0u8; 8];
+            len_bytes.copy_from_slice(&self.buf[..8]);
+            let len = u64::from_le_bytes(len_bytes);
+            if len > shared.cfg.max_frame_bytes {
+                shared.killed.fetch_add(1, Ordering::Relaxed);
+                return (true, true);
+            }
+            let len = len as usize;
+            if self.buf.len() < 8 + len {
+                return (progress, false);
+            }
+            let frame = self.buf[8..8 + len].to_vec();
+            self.buf.drain(..8 + len);
+            shared.frames.fetch_add(1, Ordering::Relaxed);
+            progress = true;
+            let keep = {
+                let mut replies = Replies { out: &mut self.out };
+                (self.sink)(frame, &mut replies)
+            };
+            if !keep {
+                // Sink veto: the connection is killed, but its queued
+                // replies (a protocol goodbye, an error frame) still flush
+                // before the socket closes.
+                shared.killed.fetch_add(1, Ordering::Relaxed);
+                self.begin_close();
+                return (true, true);
+            }
+        }
+    }
+
+    /// Write as much buffered reply data as the socket accepts. Returns
+    /// `(made_progress, write_side_dead)`.
+    fn flush(&mut self) -> (bool, bool) {
+        let mut progress = false;
+        while self.out_off < self.out.len() {
+            match self.stream.write(&self.out[self.out_off..]) {
+                Ok(0) => return (progress, true),
+                Ok(n) => {
+                    self.out_off += n;
+                    progress = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return (progress, false),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return (progress, true),
+            }
+        }
+        if self.out_off > 0 {
+            self.out.clear();
+            self.out_off = 0;
+            let _ = self.stream.flush();
+        }
+        (progress, false)
+    }
 }
 
 struct ReactorShared {
     cfg: ReactorConfig,
     shutdown: AtomicBool,
     pending: Mutex<Vec<Registration>>,
+    /// epoll backend: rung by `register`/`stop` to interrupt `epoll_pwait`.
+    wake: Option<poll::EventFd>,
     accepted: AtomicU64,
     frames: AtomicU64,
     killed: AtomicU64,
+    listeners_dead: AtomicU64,
 }
 
 /// Single-threaded event loop multiplexing any number of listeners and their
-/// accepted connections. See the module docs for the model.
+/// accepted connections. See the module docs for the model and the two
+/// readiness backends.
 pub struct Reactor {
     shared: Arc<ReactorShared>,
     thread: Mutex<Option<std::thread::JoinHandle<()>>>,
     loop_thread: std::thread::Thread,
+    backend: &'static str,
+}
+
+/// Outcome of backend selection, before trying to construct the epoll set.
+struct ResolvedBackend {
+    use_epoll: bool,
+    /// Epoll was demanded (config or env), so a construction failure is an
+    /// error instead of a silent fallback to scan.
+    explicit: bool,
+}
+
+fn resolve_backend(choice: BackendChoice, env: Option<&str>) -> Result<ResolvedBackend> {
+    let wanted = match choice {
+        BackendChoice::Scan => Some(false),
+        BackendChoice::Epoll => Some(true),
+        BackendChoice::Auto => match env.map(|v| v.trim().to_ascii_lowercase()) {
+            None => None,
+            Some(v) => match v.as_str() {
+                "" | "auto" => None,
+                "scan" => Some(false),
+                "epoll" => Some(true),
+                other => {
+                    return Err(Error::Config(format!(
+                        "TREECSS_REACTOR_BACKEND={other:?} (want epoll|scan|auto)"
+                    )))
+                }
+            },
+        },
+    };
+    match wanted {
+        Some(true) if !poll::supported() => Err(Error::Config(
+            "reactor: epoll backend requested but this platform has no epoll shim".into(),
+        )),
+        Some(use_epoll) => Ok(ResolvedBackend { use_epoll, explicit: true }),
+        None => Ok(ResolvedBackend { use_epoll: poll::supported(), explicit: false }),
+    }
 }
 
 impl Reactor {
-    /// Spawn the readiness loop on a dedicated named thread.
+    /// Spawn the readiness loop on a dedicated named thread, resolving and
+    /// (for epoll) constructing the backend first so selection errors
+    /// surface here, not asynchronously.
     pub fn new(cfg: ReactorConfig) -> Result<Reactor> {
+        let env = std::env::var("TREECSS_REACTOR_BACKEND").ok();
+        let resolved = resolve_backend(cfg.backend, env.as_deref())?;
+        let mut epoll: Option<poll::Epoll> = None;
+        let mut wake: Option<poll::EventFd> = None;
+        let mut backend = "scan";
+        if resolved.use_epoll {
+            match (poll::Epoll::new(), poll::EventFd::new()) {
+                (Ok(ep), Ok(w)) => {
+                    epoll = Some(ep);
+                    wake = Some(w);
+                    backend = "epoll";
+                }
+                (ep_res, w_res) if resolved.explicit => {
+                    let why = ep_res
+                        .err()
+                        .or_else(|| w_res.err())
+                        .map(|e| e.to_string())
+                        .unwrap_or_else(|| "unknown".into());
+                    return Err(Error::Net(format!("reactor: epoll backend init: {why}")));
+                }
+                _ => {}
+            }
+        }
         let shared = Arc::new(ReactorShared {
             cfg,
             shutdown: AtomicBool::new(false),
             pending: Mutex::new(Vec::new()),
+            wake,
             accepted: AtomicU64::new(0),
             frames: AtomicU64::new(0),
             killed: AtomicU64::new(0),
+            listeners_dead: AtomicU64::new(0),
         });
         let loop_shared = Arc::clone(&shared);
         let handle = std::thread::Builder::new()
             .name("treecss-reactor".into())
-            .spawn(move || event_loop(loop_shared))
+            .spawn(move || event_loop(loop_shared, epoll))
             .map_err(|e| Error::Net(format!("reactor: spawn loop thread: {e}")))?;
         let loop_thread = handle.thread().clone();
-        Ok(Reactor { shared, thread: Mutex::new(Some(handle)), loop_thread })
+        Ok(Reactor { shared, thread: Mutex::new(Some(handle)), loop_thread, backend })
+    }
+
+    /// Which readiness backend the loop runs on (`"epoll"` or `"scan"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend
     }
 
     /// Hand a listener to the loop. Every connection accepted from it feeds
@@ -138,17 +424,23 @@ impl Reactor {
             .set_nonblocking(true)
             .map_err(|e| Error::Net(format!("reactor: set_nonblocking on listener: {e}")))?;
         lock_clean(&self.shared.pending).push(Registration { listener, sink });
-        // Wake the loop if it is parked so registration takes effect promptly.
+        // Wake the loop if it is parked (scan) or blocked in the kernel
+        // (epoll) so registration takes effect promptly.
         self.loop_thread.unpark();
+        if let Some(w) = &self.shared.wake {
+            w.ring();
+        }
         Ok(())
     }
 
-    /// Snapshot of loop counters (accepted / delivered / killed).
+    /// Snapshot of loop counters (accepted / delivered / killed / dead
+    /// listeners).
     pub fn stats(&self) -> ReactorStats {
         ReactorStats {
             connections_accepted: self.shared.accepted.load(Ordering::Relaxed),
             frames_delivered: self.shared.frames.load(Ordering::Relaxed),
             connections_killed: self.shared.killed.load(Ordering::Relaxed),
+            listeners_dead: self.shared.listeners_dead.load(Ordering::Relaxed),
         }
     }
 
@@ -161,6 +453,9 @@ impl Reactor {
     pub fn stop(&self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.loop_thread.unpark();
+        if let Some(w) = &self.shared.wake {
+            w.ring();
+        }
         if let Some(h) = lock_clean(&self.thread).take() {
             let _ = h.join();
         }
@@ -173,14 +468,92 @@ impl Drop for Reactor {
     }
 }
 
-enum PumpOutcome {
-    Progress,
-    Idle,
-    Closed,
-    Killed,
+// ---------------------------------------------------------------------------
+// The readiness loops
+// ---------------------------------------------------------------------------
+
+fn event_loop(shared: Arc<ReactorShared>, epoll: Option<poll::Epoll>) {
+    match epoll {
+        None => scan_loop(&shared),
+        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        Some(ep) => epoll_loop(&shared, &ep),
+        #[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+        Some(_) => unreachable!("epoll backend cannot be constructed on this platform"),
+    }
 }
 
-fn event_loop(shared: Arc<ReactorShared>) {
+/// Accept everything ready on one listener right now. Returns the accepted
+/// streams and whether the listener is dead (fatal `accept` error — e.g. a
+/// closed or shut-down fd) and must be deregistered rather than rescanned
+/// forever.
+fn accept_ready(shared: &ReactorShared, reg: &Registration) -> (Vec<TcpStream>, bool) {
+    let mut streams = Vec::new();
+    let dead = loop {
+        match reg.listener.accept() {
+            Ok((stream, _)) => {
+                let _ = stream.set_nonblocking(true);
+                let _ = stream.set_nodelay(true);
+                shared.accepted.fetch_add(1, Ordering::Relaxed);
+                streams.push(stream);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break false,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if e.kind() == ErrorKind::ConnectionAborted => continue,
+            Err(_) => break true,
+        }
+    };
+    (streams, dead)
+}
+
+/// One full service pass over a connection: read + deliver (unless it is
+/// already closing), then flush queued replies, then decide its fate.
+/// Shared verbatim by both backends, so delivery semantics cannot diverge.
+fn service_conn(
+    shared: &ReactorShared,
+    conn: &mut InboundConn,
+    scratch: &mut [u8],
+) -> (bool, Fate) {
+    let mut progress = false;
+    if !conn.closing {
+        let (read_progress, eof) = conn.fill(&shared.cfg, scratch);
+        progress |= read_progress;
+        // Deliver complete frames *before* honoring EOF: a peer that writes
+        // a full frame and immediately closes must not lose it.
+        let (deliver_progress, fatal) = conn.deliver(shared);
+        progress |= deliver_progress;
+        if fatal && !conn.closing {
+            // Hostile length: die now, replies and all.
+            return (true, Fate::Remove);
+        }
+        if eof {
+            conn.begin_close();
+            progress = true;
+        }
+    }
+    let (flush_progress, dead) = conn.flush();
+    progress |= flush_progress;
+    if dead {
+        return (progress, Fate::Remove);
+    }
+    if conn.out_pending() > shared.cfg.max_outbound_bytes {
+        // Reader stalled past the buffer cap: kill rather than balloon.
+        shared.killed.fetch_add(1, Ordering::Relaxed);
+        return (progress, Fate::Remove);
+    }
+    if conn.closing {
+        if conn.out_pending() == 0 {
+            return (progress, Fate::Remove);
+        }
+        if conn.close_deadline.is_some_and(|d| Instant::now() >= d) {
+            return (progress, Fate::Remove);
+        }
+    }
+    (progress, Fate::Keep)
+}
+
+/// Portable backend: nonblocking sweep over every listener and connection,
+/// parking when a sweep made no progress.
+fn scan_loop(shared: &ReactorShared) {
     let mut listeners: Vec<Registration> = Vec::new();
     let mut conns: Vec<InboundConn> = Vec::new();
     let mut scratch = vec![0u8; 64 * 1024];
@@ -200,43 +573,32 @@ fn event_loop(shared: Arc<ReactorShared>) {
             }
         }
 
-        // Accept every connection that is ready right now.
-        for reg in &listeners {
-            loop {
-                match reg.listener.accept() {
-                    Ok((stream, _)) => {
-                        let _ = stream.set_nonblocking(true);
-                        let _ = stream.set_nodelay(true);
-                        shared.accepted.fetch_add(1, Ordering::Relaxed);
-                        conns.push(InboundConn {
-                            stream,
-                            sink: Arc::clone(&reg.sink),
-                            buf: Vec::new(),
-                        });
-                        progress = true;
-                    }
-                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
-                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-                    Err(_) => break,
-                }
+        // Accept every connection that is ready right now; deregister dead
+        // listeners instead of rescanning them forever.
+        let mut li = 0;
+        while li < listeners.len() {
+            let (streams, dead) = accept_ready(shared, &listeners[li]);
+            progress |= !streams.is_empty();
+            for stream in streams {
+                conns.push(InboundConn::new(stream, Arc::clone(&listeners[li].sink)));
+            }
+            if dead {
+                listeners.swap_remove(li);
+                shared.listeners_dead.fetch_add(1, Ordering::Relaxed);
+                progress = true;
+            } else {
+                li += 1;
             }
         }
 
-        // Pump each connection: read what is available, deliver whole frames.
+        // Pump each connection: read, deliver whole frames, flush replies.
         let mut i = 0;
         while i < conns.len() {
-            match pump_conn(&shared, &mut conns[i], &mut scratch) {
-                PumpOutcome::Progress => {
-                    progress = true;
-                    i += 1;
-                }
-                PumpOutcome::Idle => i += 1,
-                PumpOutcome::Closed => {
-                    conns.swap_remove(i);
-                    progress = true;
-                }
-                PumpOutcome::Killed => {
-                    shared.killed.fetch_add(1, Ordering::Relaxed);
+            let (conn_progress, fate) = service_conn(shared, &mut conns[i], &mut scratch);
+            progress |= conn_progress;
+            match fate {
+                Fate::Keep => i += 1,
+                Fate::Remove => {
                     conns.swap_remove(i);
                     progress = true;
                 }
@@ -249,93 +611,134 @@ fn event_loop(shared: Arc<ReactorShared>) {
     }
 }
 
-fn pump_conn(
-    shared: &ReactorShared,
-    conn: &mut InboundConn,
-    scratch: &mut [u8],
-) -> PumpOutcome {
-    let mut read_total = 0usize;
-    let mut made_progress = false;
+/// OS readiness backend: block in `epoll_pwait` until the kernel reports
+/// sockets ready, then service exactly those. Registrations and `stop`
+/// interrupt the wait through the shared eventfd.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn epoll_loop(shared: &ReactorShared, ep: &poll::Epoll) {
+    use std::collections::BTreeMap;
+    use std::os::unix::io::AsRawFd;
+
+    const WAKE_TOKEN: u64 = u64::MAX;
+    if let Some(w) = &shared.wake {
+        let _ = ep.add(w.raw_fd(), poll::EPOLLIN, WAKE_TOKEN);
+    }
+    let mut listeners: BTreeMap<u64, Registration> = BTreeMap::new();
+    let mut conns: BTreeMap<u64, InboundConn> = BTreeMap::new();
+    let mut next_token = 0u64;
+    let mut scratch = vec![0u8; 64 * 1024];
+    let mut events = vec![poll::EpollEvent::default(); 256];
+    let mut fired: Vec<(u64, u32)> = Vec::new();
     loop {
-        if read_total >= shared.cfg.max_read_per_conn {
-            break;
+        if shared.shutdown.load(Ordering::SeqCst) {
+            // Dropping the maps closes every fd (the kernel deregisters
+            // closed fds from the epoll set automatically).
+            return;
         }
-        match conn.stream.read(scratch) {
-            Ok(0) => return PumpOutcome::Closed,
-            Ok(n) => {
-                conn.buf.extend_from_slice(&scratch[..n]);
-                read_total += n;
-                made_progress = true;
-            }
-            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
-            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-            Err(_) => return PumpOutcome::Closed,
-        }
-    }
 
-    // Deliver every complete frame buffered so far.
-    loop {
-        if conn.buf.len() < 8 {
-            break;
-        }
-        let mut len_bytes = [0u8; 8];
-        len_bytes.copy_from_slice(&conn.buf[..8]);
-        let len = u64::from_le_bytes(len_bytes);
-        if len > shared.cfg.max_frame_bytes {
-            return PumpOutcome::Killed;
-        }
-        let len = len as usize;
-        if conn.buf.len() < 8 + len {
-            break;
-        }
-        let frame = conn.buf[8..8 + len].to_vec();
-        conn.buf.drain(..8 + len);
-        shared.frames.fetch_add(1, Ordering::Relaxed);
-        made_progress = true;
-        if !(conn.sink)(frame, &mut conn.stream) {
-            return PumpOutcome::Killed;
-        }
-    }
-
-    if made_progress {
-        PumpOutcome::Progress
-    } else {
-        PumpOutcome::Idle
-    }
-}
-
-/// Write a length-prefixed frame on a (possibly nonblocking) stream, retrying
-/// `WouldBlock` with short sleeps until `deadline`. Returns `false` on any
-/// other error or on deadline expiry.
-///
-/// This is what a [`FrameSink`] uses to answer on the connection it was
-/// handed: the stream is nonblocking because the reactor owns it, so a plain
-/// `write_all` could spuriously fail on a full socket buffer.
-pub(crate) fn write_frame_retrying(
-    stream: &mut TcpStream,
-    body: &[u8],
-    deadline: Instant,
-) -> bool {
-    let mut frame = Vec::with_capacity(8 + body.len());
-    frame.extend_from_slice(&(body.len() as u64).to_le_bytes());
-    frame.extend_from_slice(body);
-    let mut off = 0usize;
-    while off < frame.len() {
-        match stream.write(&frame[off..]) {
-            Ok(0) => return false,
-            Ok(n) => off += n,
-            Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                if Instant::now() >= deadline {
-                    return false;
+        // Adopt listeners registered since the last wakeup.
+        {
+            let mut pending = lock_clean(&shared.pending);
+            for reg in pending.drain(..) {
+                let token = next_token;
+                next_token += 1;
+                match ep.add(reg.listener.as_raw_fd(), poll::EPOLLIN, token) {
+                    Ok(()) => {
+                        listeners.insert(token, reg);
+                    }
+                    Err(_) => {
+                        // Unarmable fd: dead on arrival.
+                        shared.listeners_dead.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
-                std::thread::sleep(Duration::from_millis(1));
             }
-            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-            Err(_) => return false,
+        }
+
+        let n = match ep.wait(&mut events, EPOLL_WAIT_MS) {
+            Ok(n) => n,
+            Err(_) => {
+                // Catastrophic epoll failure; don't spin the core.
+                std::thread::park_timeout(Duration::from_millis(10));
+                0
+            }
+        };
+        fired.clear();
+        fired.extend(events[..n].iter().map(|e| (e.data, e.events)));
+
+        for &(token, _evs) in &fired {
+            if token == WAKE_TOKEN {
+                if let Some(w) = &shared.wake {
+                    w.drain();
+                }
+                continue;
+            }
+            if let Some(reg) = listeners.get(&token) {
+                let (streams, dead) = accept_ready(shared, reg);
+                for stream in streams {
+                    let conn_token = next_token;
+                    next_token += 1;
+                    if ep.add(stream.as_raw_fd(), poll::EPOLLIN, conn_token).is_ok() {
+                        conns.insert(
+                            conn_token,
+                            InboundConn::new(stream, Arc::clone(&reg.sink)),
+                        );
+                    }
+                }
+                if dead {
+                    // Dropping the registration closes the fd, which also
+                    // removes it from the epoll set.
+                    listeners.remove(&token);
+                    shared.listeners_dead.fetch_add(1, Ordering::Relaxed);
+                }
+            } else if let Some(conn) = conns.get_mut(&token) {
+                let (_, fate) = service_conn(shared, conn, &mut scratch);
+                match fate {
+                    Fate::Remove => {
+                        conns.remove(&token);
+                    }
+                    Fate::Keep => {
+                        // Arm write interest exactly while replies are
+                        // queued (level-triggered EPOLLOUT would otherwise
+                        // fire on every wait).
+                        let want = if conn.closing {
+                            poll::EPOLLOUT
+                        } else if conn.out_pending() > 0 {
+                            poll::EPOLLIN | poll::EPOLLOUT
+                        } else {
+                            poll::EPOLLIN
+                        };
+                        if want != conn.armed {
+                            if ep.modify(conn.stream.as_raw_fd(), want, token).is_ok() {
+                                conn.armed = want;
+                            } else {
+                                conns.remove(&token);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Close-linger sweep: a closing connection whose peer never reads
+        // gets no events, so expire deadlines on the wait cadence.
+        let expired: Vec<u64> = conns
+            .iter()
+            .filter(|(_, c)| {
+                c.closing
+                    && (c.out_pending() == 0
+                        || c.close_deadline.is_some_and(|d| Instant::now() >= d))
+            })
+            .map(|(t, _)| *t)
+            .collect();
+        for token in expired {
+            conns.remove(&token);
         }
     }
-    stream.flush().is_ok()
 }
+
+// ---------------------------------------------------------------------------
+// Outbound pooling + the reactor-backed transport
+// ---------------------------------------------------------------------------
 
 type ConnSlot = Arc<Mutex<Option<TcpStream>>>;
 
@@ -349,6 +752,20 @@ pub struct ConnPool {
     conns: Mutex<HashMap<(SocketAddr, usize), ConnSlot>>,
 }
 
+/// FNV-1a over whatever is `write!`n into it — hashing `Display` output
+/// without materializing a `String` on the send hot path.
+struct FnvWriter(u64);
+
+impl std::fmt::Write for FnvWriter {
+    fn write_str(&mut self, s: &str) -> std::fmt::Result {
+        for &b in s.as_bytes() {
+            self.0 ^= u64::from(b);
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        Ok(())
+    }
+}
+
 impl ConnPool {
     pub fn new(cfg: TcpTransportConfig, lanes: usize) -> ConnPool {
         ConnPool { cfg, lanes: lanes.max(1), conns: Mutex::new(HashMap::new()) }
@@ -358,14 +775,13 @@ impl ConnPool {
     /// maps to the same lane, so the per-sender-per-phase FIFO the
     /// [`Transport`] contract promises is preserved across pooled sockets.
     pub fn lane_for(&self, from: PartyId, to: PartyId, phase: &str) -> usize {
-        // FNV-1a over the display form; cheap and stable across runs.
-        let key = format!("{from}|{to}|{phase}");
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in key.as_bytes() {
-            h ^= u64::from(*b);
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-        (h % self.lanes as u64) as usize
+        use std::fmt::Write as _;
+        // FNV-1a fed the display form `from|to|phase` directly — the exact
+        // bytes the old `format!`-based implementation hashed, with zero
+        // allocation per send.
+        let mut h = FnvWriter(0xcbf2_9ce4_8422_2325);
+        let _ = write!(h, "{from}|{to}|{phase}");
+        (h.0 % self.lanes as u64) as usize
     }
 
     /// Send one framed body to `addr` on `lane`, dialing or redialing as
@@ -447,7 +863,7 @@ impl ReactorTcpTransportBuilder {
                 .local_addr()
                 .map_err(|e| Error::Net(format!("reactor transport: local_addr: {e}")))?;
             let sink_mail = Arc::clone(&mail);
-            let sink: FrameSink = Arc::new(move |frame: Vec<u8>, _stream: &mut TcpStream| {
+            let sink: FrameSink = Arc::new(move |frame: Vec<u8>, _replies: &mut Replies<'_>| {
                 match decode_envelope(&frame) {
                     Ok(env) => {
                         sink_mail.push(env);
@@ -553,6 +969,21 @@ mod tests {
     use super::*;
     use std::sync::mpsc;
 
+    /// Both backends constructible on this host: always the scan-poll, plus
+    /// epoll wherever the shim exists. Every loop-behavior test runs over
+    /// this set so the backends cannot drift apart.
+    fn backends() -> Vec<BackendChoice> {
+        if poll::supported() {
+            vec![BackendChoice::Scan, BackendChoice::Epoll]
+        } else {
+            vec![BackendChoice::Scan]
+        }
+    }
+
+    fn reactor_with(backend: BackendChoice) -> Reactor {
+        Reactor::new(ReactorConfig { backend, ..ReactorConfig::default() }).unwrap()
+    }
+
     fn send_raw(addr: SocketAddr, frames: &[&[u8]]) {
         let mut s = TcpStream::connect(addr).expect("connect");
         for body in frames {
@@ -562,6 +993,13 @@ mod tests {
             s.write_all(&f).expect("write frame");
         }
         s.flush().expect("flush");
+    }
+
+    fn frame(body: &[u8]) -> Vec<u8> {
+        let mut f = Vec::with_capacity(8 + body.len());
+        f.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        f.extend_from_slice(body);
+        f
     }
 
     fn wait_until<F: Fn() -> bool>(cond: F, what: &str) {
@@ -575,85 +1013,336 @@ mod tests {
     }
 
     #[test]
-    fn delivers_frames_to_sink() {
-        let reactor = Reactor::new(ReactorConfig::default()).unwrap();
-        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
-        let addr = listener.local_addr().unwrap();
-        let (tx, rx) = mpsc::channel::<Vec<u8>>();
-        let tx = Mutex::new(tx);
-        let sink: FrameSink = Arc::new(move |frame, _stream: &mut TcpStream| {
-            lock_clean(&tx).send(frame).is_ok()
-        });
-        reactor.register(listener, sink).unwrap();
+    fn backend_resolution_rules() {
+        // Explicit config wins regardless of platform support for scan.
+        assert!(!resolve_backend(BackendChoice::Scan, Some("epoll")).unwrap().use_epoll);
+        // Env steers Auto.
+        assert!(!resolve_backend(BackendChoice::Auto, Some("scan")).unwrap().use_epoll);
+        assert_eq!(
+            resolve_backend(BackendChoice::Auto, None).unwrap().use_epoll,
+            poll::supported()
+        );
+        assert_eq!(
+            resolve_backend(BackendChoice::Auto, Some("auto")).unwrap().use_epoll,
+            poll::supported()
+        );
+        // Garbage env is a loud error, not a silent fallback.
+        assert!(resolve_backend(BackendChoice::Auto, Some("iocp")).is_err());
+        if poll::supported() {
+            let r = resolve_backend(BackendChoice::Epoll, None).unwrap();
+            assert!(r.use_epoll && r.explicit);
+            assert!(resolve_backend(BackendChoice::Auto, Some("epoll")).unwrap().use_epoll);
+        } else {
+            assert!(resolve_backend(BackendChoice::Epoll, None).is_err());
+            assert!(resolve_backend(BackendChoice::Auto, Some("epoll")).is_err());
+        }
+        assert!(BackendChoice::from_name("EPOLL").is_ok());
+        assert!(BackendChoice::from_name("kqueue").is_err());
+    }
 
-        send_raw(addr, &[b"hello", b"", b"worlds"]);
-        let got: Vec<Vec<u8>> = (0..3)
-            .map(|_| rx.recv_timeout(Duration::from_secs(10)).unwrap())
-            .collect();
-        assert_eq!(got, vec![b"hello".to_vec(), Vec::new(), b"worlds".to_vec()]);
-        assert_eq!(reactor.stats().frames_delivered, 3);
-        assert_eq!(reactor.stats().connections_accepted, 1);
+    #[test]
+    fn delivers_frames_to_sink_on_every_backend() {
+        for backend in backends() {
+            let reactor = reactor_with(backend);
+            let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            let addr = listener.local_addr().unwrap();
+            let (tx, rx) = mpsc::channel::<Vec<u8>>();
+            let tx = Mutex::new(tx);
+            let sink: FrameSink = Arc::new(move |frame, _replies: &mut Replies<'_>| {
+                lock_clean(&tx).send(frame).is_ok()
+            });
+            reactor.register(listener, sink).unwrap();
+
+            send_raw(addr, &[b"hello", b"", b"worlds"]);
+            let got: Vec<Vec<u8>> = (0..3)
+                .map(|_| rx.recv_timeout(Duration::from_secs(10)).unwrap())
+                .collect();
+            assert_eq!(got, vec![b"hello".to_vec(), Vec::new(), b"worlds".to_vec()]);
+            assert_eq!(reactor.stats().frames_delivered, 3, "{backend:?}");
+            assert_eq!(reactor.stats().connections_accepted, 1, "{backend:?}");
+        }
+    }
+
+    #[test]
+    fn explicit_backend_is_reported() {
+        assert_eq!(reactor_with(BackendChoice::Scan).backend_name(), "scan");
+        if poll::supported() {
+            assert_eq!(reactor_with(BackendChoice::Epoll).backend_name(), "epoll");
+        } else {
+            assert!(Reactor::new(ReactorConfig {
+                backend: BackendChoice::Epoll,
+                ..ReactorConfig::default()
+            })
+            .is_err());
+        }
+    }
+
+    /// Regression (frame loss on EOF): a peer that writes one complete
+    /// frame and immediately closes must still have that frame delivered.
+    /// The old pump honored `read() == Ok(0)` before draining buffered
+    /// frames, so data+EOF arriving in one tick lost the frame. The
+    /// connection sits fully written-and-closed in the listener backlog
+    /// *before* the reactor ever sees it, making the single-tick
+    /// data+EOF read deterministic.
+    #[test]
+    fn complete_frame_before_eof_is_not_lost() {
+        for backend in backends() {
+            let reactor = reactor_with(backend);
+            let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            let addr = listener.local_addr().unwrap();
+
+            // Write-then-close while nobody is accepting yet.
+            send_raw(addr, &[b"last words", b"and more"]);
+            // (send_raw drops the stream: FIN is queued behind the data.)
+            std::thread::sleep(Duration::from_millis(50));
+
+            let (tx, rx) = mpsc::channel::<Vec<u8>>();
+            let tx = Mutex::new(tx);
+            let sink: FrameSink = Arc::new(move |frame, _replies: &mut Replies<'_>| {
+                lock_clean(&tx).send(frame).is_ok()
+            });
+            reactor.register(listener, sink).unwrap();
+
+            let got = rx.recv_timeout(Duration::from_secs(10)).unwrap_or_else(|_| {
+                panic!("{backend:?}: frame written before close was lost on EOF")
+            });
+            assert_eq!(got, b"last words".to_vec());
+            let got = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(got, b"and more".to_vec());
+        }
+    }
+
+    /// Regression (immortal dead listeners): a listener whose `accept`
+    /// fails hard is deregistered and counted, and the loop keeps serving
+    /// its healthy siblings.
+    #[test]
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    fn dead_listener_is_deregistered_not_rescanned() {
+        use std::os::unix::io::AsRawFd;
+        for backend in backends() {
+            let reactor = reactor_with(backend);
+            let dead = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            // Pre-kill the listener fd: `shutdown(SHUT_RD)` on a listening
+            // socket makes every accept fail with EINVAL while keeping the
+            // fd open (no double-close hazard).
+            poll::shutdown_read(dead.as_raw_fd()).unwrap();
+            let sink: FrameSink = Arc::new(|_f, _r: &mut Replies<'_>| true);
+            reactor.register(dead, sink).unwrap();
+            wait_until(
+                || reactor.stats().listeners_dead == 1,
+                &format!("{backend:?}: dead listener deregistration"),
+            );
+
+            // A healthy listener registered after the dead one still works.
+            let alive = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            let addr = alive.local_addr().unwrap();
+            let (tx, rx) = mpsc::channel::<Vec<u8>>();
+            let tx = Mutex::new(tx);
+            let sink: FrameSink = Arc::new(move |frame, _r: &mut Replies<'_>| {
+                lock_clean(&tx).send(frame).is_ok()
+            });
+            reactor.register(alive, sink).unwrap();
+            send_raw(addr, &[b"still here"]);
+            assert_eq!(
+                rx.recv_timeout(Duration::from_secs(10)).unwrap(),
+                b"still here".to_vec()
+            );
+            assert_eq!(reactor.stats().listeners_dead, 1, "{backend:?}");
+        }
     }
 
     #[test]
     fn hostile_length_kills_connection() {
-        let reactor = Reactor::new(ReactorConfig {
-            max_frame_bytes: 1024,
-            ..ReactorConfig::default()
-        })
-        .unwrap();
-        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
-        let addr = listener.local_addr().unwrap();
-        let sink: FrameSink = Arc::new(|_frame, _stream: &mut TcpStream| true);
-        reactor.register(listener, sink).unwrap();
+        for backend in backends() {
+            let reactor = Reactor::new(ReactorConfig {
+                max_frame_bytes: 1024,
+                backend,
+                ..ReactorConfig::default()
+            })
+            .unwrap();
+            let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            let addr = listener.local_addr().unwrap();
+            let sink: FrameSink = Arc::new(|_frame, _replies: &mut Replies<'_>| true);
+            reactor.register(listener, sink).unwrap();
 
-        let mut s = TcpStream::connect(addr).unwrap();
-        s.write_all(&u64::MAX.to_le_bytes()).unwrap();
-        s.flush().unwrap();
-        wait_until(|| reactor.stats().connections_killed == 1, "hostile conn kill");
-        assert_eq!(reactor.stats().frames_delivered, 0);
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&u64::MAX.to_le_bytes()).unwrap();
+            s.flush().unwrap();
+            wait_until(
+                || reactor.stats().connections_killed == 1,
+                &format!("{backend:?}: hostile conn kill"),
+            );
+            assert_eq!(reactor.stats().frames_delivered, 0, "{backend:?}");
+        }
     }
 
     #[test]
     fn sink_false_kills_connection() {
-        let reactor = Reactor::new(ReactorConfig::default()).unwrap();
-        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
-        let addr = listener.local_addr().unwrap();
-        let sink: FrameSink = Arc::new(|frame: Vec<u8>, _stream: &mut TcpStream| frame != b"die");
-        reactor.register(listener, sink).unwrap();
+        for backend in backends() {
+            let reactor = reactor_with(backend);
+            let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            let addr = listener.local_addr().unwrap();
+            let sink: FrameSink =
+                Arc::new(|frame: Vec<u8>, _replies: &mut Replies<'_>| frame != b"die");
+            reactor.register(listener, sink).unwrap();
 
-        send_raw(addr, &[b"ok", b"die"]);
-        wait_until(|| reactor.stats().connections_killed == 1, "sink-false kill");
-        assert_eq!(reactor.stats().frames_delivered, 2);
+            send_raw(addr, &[b"ok", b"die"]);
+            wait_until(
+                || reactor.stats().connections_killed == 1,
+                &format!("{backend:?}: sink-false kill"),
+            );
+            assert_eq!(reactor.stats().frames_delivered, 2, "{backend:?}");
+        }
     }
 
-    #[test]
-    fn sink_can_reply_on_stream() {
-        let reactor = Reactor::new(ReactorConfig::default()).unwrap();
-        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
-        let addr = listener.local_addr().unwrap();
-        let sink: FrameSink = Arc::new(|frame: Vec<u8>, stream: &mut TcpStream| {
-            let mut reply = b"echo:".to_vec();
-            reply.extend_from_slice(&frame);
-            write_frame_retrying(stream, &reply, Instant::now() + Duration::from_secs(5))
-        });
-        reactor.register(listener, sink).unwrap();
-
-        let mut s = TcpStream::connect(addr).unwrap();
-        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
-        let body = b"ping";
-        let mut f = Vec::new();
-        f.extend_from_slice(&(body.len() as u64).to_le_bytes());
-        f.extend_from_slice(body);
-        s.write_all(&f).unwrap();
-        s.flush().unwrap();
-
+    fn read_reply(s: &mut TcpStream) -> Vec<u8> {
         let mut len = [0u8; 8];
         s.read_exact(&mut len).unwrap();
         let n = u64::from_le_bytes(len) as usize;
         let mut reply = vec![0u8; n];
         s.read_exact(&mut reply).unwrap();
-        assert_eq!(reply, b"echo:ping");
+        reply
+    }
+
+    #[test]
+    fn sink_replies_are_flushed_to_the_peer() {
+        for backend in backends() {
+            let reactor = reactor_with(backend);
+            let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            let addr = listener.local_addr().unwrap();
+            let sink: FrameSink = Arc::new(|frame: Vec<u8>, replies: &mut Replies<'_>| {
+                let mut reply = b"echo:".to_vec();
+                reply.extend_from_slice(&frame);
+                replies.push(&reply);
+                true
+            });
+            reactor.register(listener, sink).unwrap();
+
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            s.write_all(&frame(b"ping")).unwrap();
+            s.flush().unwrap();
+            assert_eq!(read_reply(&mut s), b"echo:ping", "{backend:?}");
+        }
+    }
+
+    /// A sink that replies and then vetoes the connection: the reply must
+    /// still reach the peer before the close (the control protocol's `Bye`
+    /// depends on exactly this write-then-close ordering).
+    #[test]
+    fn veto_flushes_queued_replies_before_closing() {
+        for backend in backends() {
+            let reactor = reactor_with(backend);
+            let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            let addr = listener.local_addr().unwrap();
+            let sink: FrameSink = Arc::new(|_frame: Vec<u8>, replies: &mut Replies<'_>| {
+                replies.push(b"bye");
+                false
+            });
+            reactor.register(listener, sink).unwrap();
+
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            s.write_all(&frame(b"shutdown")).unwrap();
+            s.flush().unwrap();
+            assert_eq!(read_reply(&mut s), b"bye", "{backend:?}");
+            // ... and then the connection actually closes.
+            let mut one = [0u8; 1];
+            let got = s.read(&mut one);
+            let closed = matches!(got, Ok(0))
+                || matches!(&got, Err(e) if e.kind() == ErrorKind::ConnectionReset);
+            assert!(closed, "{backend:?}: connection must close after the flushed veto: {got:?}");
+            assert_eq!(reactor.stats().connections_killed, 1, "{backend:?}");
+        }
+    }
+
+    /// Head-of-line regression: one connection whose peer never reads its
+    /// (large) replies must not delay frame delivery on a sibling
+    /// connection. The old sink wrote replies synchronously on the loop
+    /// thread with up-to-10s retry sleeps; buffered outbound makes the
+    /// stall invisible to siblings.
+    #[test]
+    fn stalled_reply_reader_does_not_delay_siblings() {
+        for backend in backends() {
+            let reactor = reactor_with(backend);
+
+            // Listener 1: every frame provokes a 256 KiB reply.
+            let big = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            let big_addr = big.local_addr().unwrap();
+            let sink: FrameSink = Arc::new(|_f: Vec<u8>, replies: &mut Replies<'_>| {
+                replies.push(&vec![0xAB; 256 * 1024]);
+                true
+            });
+            reactor.register(big, sink).unwrap();
+
+            // Listener 2: plain delivery to a channel.
+            let side = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            let side_addr = side.local_addr().unwrap();
+            let (tx, rx) = mpsc::channel::<Vec<u8>>();
+            let tx = Mutex::new(tx);
+            let sink: FrameSink = Arc::new(move |frame, _r: &mut Replies<'_>| {
+                lock_clean(&tx).send(frame).is_ok()
+            });
+            reactor.register(side, sink).unwrap();
+
+            // The stalled reader: requests 64 big replies (16 MiB total —
+            // far beyond any socket buffer) and never reads one byte.
+            let mut stalled = TcpStream::connect(big_addr).unwrap();
+            for _ in 0..64 {
+                stalled.write_all(&frame(b"gimme")).unwrap();
+            }
+            stalled.flush().unwrap();
+            wait_until(
+                || reactor.stats().frames_delivered >= 64,
+                &format!("{backend:?}: stalled conn's requests delivered"),
+            );
+
+            // An unrelated session's frame must arrive promptly — not after
+            // the stalled connection's replies somehow drain.
+            let t0 = Instant::now();
+            send_raw(side_addr, &[b"unrelated"]);
+            let got = rx.recv_timeout(Duration::from_secs(5)).unwrap_or_else(|_| {
+                panic!("{backend:?}: sibling frame stuck behind a stalled reply reader")
+            });
+            assert_eq!(got, b"unrelated".to_vec());
+            assert!(
+                t0.elapsed() < Duration::from_secs(2),
+                "{backend:?}: sibling delivery took {:?}",
+                t0.elapsed()
+            );
+            drop(stalled);
+        }
+    }
+
+    /// A reader stalled past the outbound-buffer cap is killed instead of
+    /// growing the buffer without bound.
+    #[test]
+    fn outbound_overflow_kills_the_stalled_connection() {
+        for backend in backends() {
+            let reactor = Reactor::new(ReactorConfig {
+                max_outbound_bytes: 512 * 1024,
+                backend,
+                ..ReactorConfig::default()
+            })
+            .unwrap();
+            let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            let addr = listener.local_addr().unwrap();
+            let sink: FrameSink = Arc::new(|_f: Vec<u8>, replies: &mut Replies<'_>| {
+                replies.push(&vec![0xCD; 256 * 1024]);
+                true
+            });
+            reactor.register(listener, sink).unwrap();
+
+            let mut s = TcpStream::connect(addr).unwrap();
+            for _ in 0..64 {
+                s.write_all(&frame(b"more")).unwrap();
+            }
+            s.flush().unwrap();
+            wait_until(
+                || reactor.stats().connections_killed == 1,
+                &format!("{backend:?}: outbound overflow kill"),
+            );
+        }
     }
 
     #[test]
@@ -663,7 +1352,7 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let (tx, rx) = mpsc::channel::<Vec<u8>>();
         let tx = Mutex::new(tx);
-        let sink: FrameSink = Arc::new(move |frame, _stream: &mut TcpStream| {
+        let sink: FrameSink = Arc::new(move |frame, _replies: &mut Replies<'_>| {
             lock_clean(&tx).send(frame).is_ok()
         });
         reactor.register(listener, sink).unwrap();
@@ -672,10 +1361,7 @@ mod tests {
             .map(|i| {
                 let mut s = TcpStream::connect(addr).unwrap();
                 let body = format!("conn-{i}");
-                let mut f = Vec::new();
-                f.extend_from_slice(&(body.len() as u64).to_le_bytes());
-                f.extend_from_slice(body.as_bytes());
-                s.write_all(&f).unwrap();
+                s.write_all(&frame(body.as_bytes())).unwrap();
                 s.flush().unwrap();
                 s
             })
@@ -695,19 +1381,33 @@ mod tests {
 
     #[test]
     fn drop_joins_loop_and_releases_port() {
-        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
-        let addr = listener.local_addr().unwrap();
-        {
-            let reactor = Reactor::new(ReactorConfig::default()).unwrap();
-            let sink: FrameSink = Arc::new(|_f, _s: &mut TcpStream| true);
-            reactor.register(listener, sink).unwrap();
-            // Make sure the loop adopted the listener before dropping.
-            send_raw(addr, &[b"x"]);
-            wait_until(|| reactor.stats().frames_delivered == 1, "adoption");
+        for backend in backends() {
+            let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            let addr = listener.local_addr().unwrap();
+            {
+                let reactor = reactor_with(backend);
+                let sink: FrameSink = Arc::new(|_f, _r: &mut Replies<'_>| true);
+                reactor.register(listener, sink).unwrap();
+                // Make sure the loop adopted the listener before dropping.
+                send_raw(addr, &[b"x"]);
+                wait_until(|| reactor.stats().frames_delivered == 1, "adoption");
+            }
+            // Loop is joined; the port must be bindable again.
+            let rebound = TcpListener::bind(addr);
+            assert!(rebound.is_ok(), "{backend:?}: port not released after reactor drop");
         }
-        // Loop is joined; the port must be bindable again.
-        let rebound = TcpListener::bind(addr);
-        assert!(rebound.is_ok(), "port not released after reactor drop");
+    }
+
+    /// Reference implementation of the pre-optimization lane hash: FNV-1a
+    /// over the materialized `format!("{from}|{to}|{phase}")` string.
+    fn lane_reference(from: PartyId, to: PartyId, phase: &str, lanes: usize) -> usize {
+        let key = format!("{from}|{to}|{phase}");
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in key.as_bytes() {
+            h ^= u64::from(*b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        (h % lanes as u64) as usize
     }
 
     #[test]
@@ -717,6 +1417,28 @@ mod tests {
         let b = pool.lane_for(PartyId::Client(0), PartyId::Aggregator, "train/fwd");
         assert_eq!(a, b);
         assert!(a < 4);
+    }
+
+    /// The allocation-free hasher must assign every key the lane the old
+    /// `format!`-based implementation did — lane choice is load-bearing
+    /// (per-key FIFO rides lane stability), so it is pinned, not merely
+    /// self-consistent.
+    #[test]
+    fn lane_for_matches_the_formatting_reference() {
+        for lanes in [1usize, 2, 4, 7, 16] {
+            let pool = ConnPool::new(TcpTransportConfig::default(), lanes);
+            for from in [PartyId::Client(0), PartyId::Client(31), PartyId::KeyServer] {
+                for to in [PartyId::Aggregator, PartyId::LabelOwner, PartyId::Client(2)] {
+                    for phase in ["", "psi/round0", "train/fwd", "session/17/keys/dist"] {
+                        assert_eq!(
+                            pool.lane_for(from, to, phase),
+                            lane_reference(from, to, phase, lanes),
+                            "lane drifted for ({from}, {to}, {phase:?}) at {lanes} lanes"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

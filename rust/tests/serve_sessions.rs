@@ -7,8 +7,10 @@
 //! intersections, coreset indices/weights, the full loss series, quality
 //! bits, and the per-edge meter dump are compared with `==`, floats as
 //! IEEE-754 bits. Also covered: churn isolation (a party drop mid-phase
-//! fails that one session while its siblings complete) and the TCP
-//! control protocol end-to-end against a live daemon.
+//! fails that one session while its siblings complete), the TCP control
+//! protocol end-to-end against a live daemon, and a 64-session fleet over
+//! the reactor TCP wire under *both* readiness backends (scan and epoll)
+//! plus an `#[ignore]`d 256-session stress target.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -17,7 +19,9 @@ use treecss::coordinator::{
     ControlClient, ReportSummary, ServeConfig, ServeCoordinator, ServeDaemon, ServeWire,
     SessionSpec, SessionStatus,
 };
-use treecss::net::{ChannelTransport, Fault, FaultTransport, Transport};
+use treecss::net::{
+    poll, BackendChoice, ChannelTransport, Fault, FaultTransport, ReactorConfig, Transport,
+};
 
 const WAIT: Duration = Duration::from_secs(300);
 
@@ -157,4 +161,79 @@ fn control_protocol_end_to_end_over_tcp() {
     client.shutdown().unwrap();
     assert!(daemon.stopped(), "control Shutdown must raise the stop flag");
     daemon.shutdown();
+}
+
+/// Smaller per-session work than `tiny_spec` so a 64-session fleet stays
+/// CI-friendly; still runs the full pipeline (PSI + coreset + training).
+fn fleet_spec(seed: u64) -> SessionSpec {
+    SessionSpec {
+        dataset: "RI".into(),
+        scale: 0.01,
+        variant: "treecss".into(),
+        seed,
+        epochs: 6,
+        rsa_bits: 256,
+        he_bits: 256,
+        threads: 1,
+        ..SessionSpec::default()
+    }
+}
+
+/// `sessions` concurrent sessions through a live daemon on the reactor TCP
+/// wire, pinned to `backend` — every report byte-identical to its seed's
+/// serial run. Eight distinct seeds cycle across the fleet; the serial
+/// ground truth is computed once per seed with id 0 and served ids are
+/// zeroed before comparing (the id is the only legitimately differing
+/// field).
+fn fleet_matches_serial(backend: BackendChoice, sessions: usize, workers: usize) {
+    let distinct: Vec<SessionSpec> = (0..8).map(|i| fleet_spec(900 + i as u64)).collect();
+    let serial: Vec<ReportSummary> = distinct.iter().map(|s| s.run_serial(0).unwrap()).collect();
+
+    let cfg = ServeConfig {
+        workers,
+        max_sessions: sessions,
+        max_clients: 4,
+        reactor: ReactorConfig { backend, ..ReactorConfig::default() },
+        ..ServeConfig::default()
+    };
+    let daemon = ServeDaemon::start(cfg, ServeWire::Tcp, "127.0.0.1:0").unwrap();
+    let coord = Arc::clone(daemon.coordinator());
+    let ids: Vec<(u64, usize)> = (0..sessions)
+        .map(|i| {
+            let which = i % distinct.len();
+            (coord.submit(distinct[which].clone()).unwrap(), which)
+        })
+        .collect();
+    for (id, which) in &ids {
+        let mut got = coord.wait(*id, WAIT).unwrap();
+        got.id = 0;
+        assert_eq!(
+            &got, &serial[*which],
+            "{backend:?}: session {id} (seed {}) diverged from serial",
+            distinct[*which].seed
+        );
+    }
+    daemon.shutdown();
+}
+
+#[test]
+fn sixty_four_sessions_scan_backend_match_serial() {
+    fleet_matches_serial(BackendChoice::Scan, 64, 8);
+}
+
+#[test]
+fn sixty_four_sessions_epoll_backend_match_serial() {
+    if !poll::supported() {
+        return;
+    }
+    fleet_matches_serial(BackendChoice::Epoll, 64, 8);
+}
+
+/// The hundreds-of-sessions stress target from the roadmap. Minutes of
+/// wall clock, so opt-in: `cargo test -- --ignored`.
+#[test]
+#[ignore = "256-session stress target; run with --ignored"]
+fn two_hundred_fifty_six_sessions_stress() {
+    let backend = if poll::supported() { BackendChoice::Epoll } else { BackendChoice::Scan };
+    fleet_matches_serial(backend, 256, 8);
 }

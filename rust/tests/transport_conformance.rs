@@ -13,14 +13,15 @@
 //! surface `Err` — never a hang or a panic — when frames are dropped,
 //! duplicated, or truncated.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use treecss::coordinator::{Backend, Downstream, FrameworkVariant, Pipeline, TransportKind};
 use treecss::data::synth::PaperDataset;
 use treecss::net::{
-    ChannelTransport, Envelope, Fault, FaultTransport, Meter, MeteredTransport, NetConfig,
-    PartyId, ReactorTcpTransport, TcpTransport, TcpTransportBuilder, TcpTransportConfig,
-    Transport,
+    poll, BackendChoice, ChannelTransport, Envelope, Fault, FaultTransport, Meter,
+    MeteredTransport, NetConfig, PartyId, Reactor, ReactorConfig, ReactorTcpTransport,
+    TcpTransport, TcpTransportBuilder, TcpTransportConfig, Transport,
 };
 use treecss::psi::common::HeContext;
 use treecss::psi::rsa_psi::{self, RsaPsiConfig};
@@ -39,8 +40,21 @@ fn fresh_tcp() -> TcpTransport {
     TcpTransport::hosting((0..16).map(PartyId::Client)).unwrap()
 }
 
+/// Reactor transport pinned to an explicit readiness backend (the backend
+/// is set via config, not env, so parallel test binaries can't race on
+/// `TREECSS_REACTOR_BACKEND`).
+fn fresh_reactor_with(backend: BackendChoice) -> ReactorTcpTransport {
+    let reactor =
+        Arc::new(Reactor::new(ReactorConfig { backend, ..ReactorConfig::default() }).unwrap());
+    ReactorTcpTransport::builder()
+        .reactor(reactor)
+        .hosts((0..16).map(PartyId::Client))
+        .build()
+        .unwrap()
+}
+
 fn fresh_reactor() -> ReactorTcpTransport {
-    ReactorTcpTransport::hosting((0..16).map(PartyId::Client)).unwrap()
+    fresh_reactor_with(BackendChoice::Scan)
 }
 
 // ---- the wire contract, generic over &dyn Transport ------------------------
@@ -160,6 +174,33 @@ fn reactor_concurrent_pairs() {
 }
 
 #[test]
+fn reactor_epoll_ordering() {
+    if !poll::supported() {
+        return;
+    }
+    let t = fresh_reactor_with(BackendChoice::Epoll);
+    ordering_per_sender_and_phase(&t);
+}
+
+#[test]
+fn reactor_epoll_phase_isolation() {
+    if !poll::supported() {
+        return;
+    }
+    let t = fresh_reactor_with(BackendChoice::Epoll);
+    cross_phase_isolation(&t);
+}
+
+#[test]
+fn reactor_epoll_concurrent_pairs() {
+    if !poll::supported() {
+        return;
+    }
+    let t = fresh_reactor_with(BackendChoice::Epoll);
+    concurrent_pair_exchange(&t);
+}
+
+#[test]
 fn wire_accounting_identical_across_transports() {
     let channel = metered_accounting(&ChannelTransport::new());
     let tcp_net = fresh_tcp();
@@ -168,6 +209,11 @@ fn wire_accounting_identical_across_transports() {
     let reactor = metered_accounting(&reactor_net);
     assert_eq!(channel, tcp);
     assert_eq!(channel, reactor, "reactor transport must meter like the others");
+    if poll::supported() {
+        let epoll_net = fresh_reactor_with(BackendChoice::Epoll);
+        let epoll = metered_accounting(&epoll_net);
+        assert_eq!(channel, epoll, "epoll backend must meter like the others");
+    }
     // Sized envelopes charge their declared framing, not just payload.
     assert_eq!(channel.1, 100 + 4096);
 }
