@@ -15,6 +15,13 @@
 //! and 64 concurrent sessions, so the epoll win is measured rather than
 //! modelled.
 //!
+//! The churn table re-runs the 8-session fleet under a pinned
+//! [`ChaosSchedule`] — seeded Retryable connection kills plus harmless
+//! micro-delays — with supervised checkpointed retries, next to the same
+//! fleet fault-free: the sessions/sec delta is the measured cost of
+//! recovery, and the `identical` column proves recovery changes nothing
+//! but the wall-clock.
+//!
 //!     cargo bench --bench bench_serve [-- --full]
 //!
 //! `TREECSS_BENCH_REPS` sets repetitions per cell (default 1; the wall
@@ -31,13 +38,14 @@
 //! backend gap widens with the session count: a scan tick touches every
 //! connection, an epoll tick only the ready ones.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use treecss::bench::{fmt_secs, JsonReport, Table};
 use treecss::coordinator::{
-    ControlClient, ReportSummary, ServeConfig, ServeDaemon, ServeWire, SessionSpec,
+    ControlClient, ReportSummary, RetryPolicy, ServeConfig, ServeDaemon, ServeWire, SessionSpec,
 };
-use treecss::net::{poll, BackendChoice, ReactorConfig};
+use treecss::net::{poll, BackendChoice, ChaosSchedule, ReactorConfig};
+use treecss::util::backoff::BackoffConfig;
 
 fn bench_reps() -> usize {
     treecss::bench::reps_from_env(1)
@@ -83,6 +91,7 @@ fn run_served(
     wire: ServeWire,
     backend: BackendChoice,
     workers: usize,
+    churn: Option<(ChaosSchedule, RetryPolicy)>,
     serial: &[ReportSummary],
 ) -> (f64, bool) {
     let cfg = ServeConfig {
@@ -90,6 +99,7 @@ fn run_served(
         max_clients: 4,
         max_sessions: n.max(64),
         reactor: ReactorConfig { backend, ..ReactorConfig::default() },
+        chaos: churn.map(|(schedule, _)| schedule),
         ..ServeConfig::default()
     };
     let daemon = ServeDaemon::start(cfg, wire, "127.0.0.1:0").expect("start daemon");
@@ -98,7 +108,13 @@ fn run_served(
     let t0 = Instant::now();
     let mut client = ControlClient::connect(addr).expect("connect control");
     let ids: Vec<u64> = (0..n)
-        .map(|i| client.submit(&spec_for(1_000 + i as u64, n, full)).expect("submit"))
+        .map(|i| {
+            let mut spec = spec_for(1_000 + i as u64, n, full);
+            if let Some((_, retry)) = churn {
+                spec.retry = retry;
+            }
+            client.submit(&spec).expect("submit")
+        })
         .collect();
     let results: Vec<ReportSummary> = ids
         .iter()
@@ -140,7 +156,11 @@ fn main() {
                  multiplexed on one wire) with the stated reactor readiness \
                  backend, serial rows are the same seeds on private wires; the \
                  identical column asserts byte-equality; the 64-session point \
-                 uses a reduced per-session spec"
+                 uses a reduced per-session spec; the churn table re-runs the \
+                 8-session fleet under a pinned ChaosSchedule (seeded \
+                 connection kills + micro-delays) with supervised retries, so \
+                 its sessions/sec delta vs the chaos-off row is measured \
+                 recovery overhead"
             ),
         );
 
@@ -176,7 +196,8 @@ fn main() {
             let mut wall_sum = 0.0;
             let mut all_identical = true;
             for _ in 0..reps {
-                let (wall, identical) = run_served(n, full, wire, backend, WORKERS, &serial);
+                let (wall, identical) =
+                    run_served(n, full, wire, backend, WORKERS, None, &serial);
                 wall_sum += wall;
                 all_identical &= identical;
             }
@@ -197,6 +218,64 @@ fn main() {
 
     table.print();
     report.table(&table);
+
+    // Churn: the same 8-session fleet with a seeded chaos schedule on the
+    // shared wire (Retryable connection kills the supervisor absorbs via
+    // checkpointed retries, plus harmless micro-delays) vs fault-free.
+    // The sessions/sec gap IS the recovery overhead; `identical` proves
+    // the recovered fleet still reproduces the serial bytes.
+    let churn_retry = RetryPolicy {
+        max_attempts: 10,
+        backoff: BackoffConfig {
+            base: Duration::from_millis(1),
+            cap: Duration::from_millis(8),
+            max_attempts: 10,
+            seed: 11,
+        },
+        deadline: Duration::from_secs(2),
+    };
+    let chaos = ChaosSchedule {
+        seed: 0xC0FFEE,
+        flaky_every: 1000,
+        delay_every: 40,
+        delay: Duration::from_micros(100),
+    };
+    let mut churn_table = Table::new(
+        "Churn — 8 sessions, seeded chaos schedule (kills + delays) vs fault-free",
+        &["sessions", "wire", "chaos", "wall", "sessions/sec", "identical"],
+    );
+    let churn_n = 8;
+    let (churn_serial, _) = run_serial_baseline(churn_n, false);
+    for (label, churn) in [("off", None), ("on", Some((chaos, churn_retry)))] {
+        let mut wall_sum = 0.0;
+        let mut all_identical = true;
+        for _ in 0..reps {
+            let (wall, identical) = run_served(
+                churn_n,
+                false,
+                ServeWire::Tcp,
+                BackendChoice::Scan,
+                WORKERS,
+                churn,
+                &churn_serial,
+            );
+            wall_sum += wall;
+            all_identical &= identical;
+        }
+        let wall = wall_sum / reps as f64;
+        churn_table.row(vec![
+            churn_n.to_string(),
+            "tcp".into(),
+            label.into(),
+            fmt_secs(wall),
+            format!("{:.2}", churn_n as f64 / wall),
+            all_identical.to_string(),
+        ]);
+        eprintln!("  done churn chaos={label}");
+    }
+    churn_table.print();
+    report.table(&churn_table);
+
     match report.write_at_workspace_root() {
         Ok(path) => eprintln!("wrote {}", path.display()),
         Err(e) => eprintln!("[warn] could not write bench JSON: {e}"),

@@ -22,14 +22,22 @@
 //! Lifecycle: children exit when the coordinator closes their stdin (so a
 //! crashed coordinator cannot leak workers), and
 //! [`Cluster::shutdown`] waits for every child and propagates non-zero
-//! exit states.
+//! exit states. While a run is live each worker also heartbeats: it
+//! prints `BEAT` on stdout every [`HeartbeatConfig::interval`], a reader
+//! thread in the coordinator stamps the arrival, and
+//! [`Cluster::sweep`] reaps any worker silent past the grace budget and
+//! respawns it — re-routing its party to the replacement's listener via
+//! `add_peer`, so the newcomer rejoins before the next phase barrier's
+//! redial.
 //!
 //! [`TcpTransportBuilder::forward_to`]: crate::net::TcpTransportBuilder::forward_to
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::SocketAddr;
 use std::process::{Child, Command, Stdio};
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::config::Cli;
 use crate::data::Dataset;
@@ -38,6 +46,59 @@ use crate::net::{PartyId, TcpTransport, TcpTransportBuilder, TcpTransportConfig}
 
 use super::pipeline::PipelineReport;
 use super::session::Session;
+
+/// Heartbeat discipline for the worker cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HeartbeatConfig {
+    /// How often each worker prints `BEAT` on stdout. Zero disables
+    /// heartbeating entirely (no reader threads, no sweeps).
+    pub interval: Duration,
+    /// How many intervals of silence mark a worker missed.
+    pub grace: u32,
+}
+
+impl Default for HeartbeatConfig {
+    fn default() -> Self {
+        HeartbeatConfig { interval: Duration::from_millis(500), grace: 4 }
+    }
+}
+
+impl HeartbeatConfig {
+    pub fn enabled(&self) -> bool {
+        !self.interval.is_zero()
+    }
+
+    /// The silence budget: a worker quiet for longer is presumed dead.
+    pub fn miss_after(&self) -> Duration {
+        self.interval * self.grace.max(1)
+    }
+}
+
+/// Stamp `beat` on every `BEAT` line until the stream ends — the reader
+/// thread body, factored over any `BufRead` so tests can drive it with a
+/// cursor instead of a child process.
+fn pump_beats(r: impl BufRead, beat: &Mutex<Instant>) {
+    for line in r.lines() {
+        match line {
+            Ok(l) if l.trim() == "BEAT" => {
+                *beat.lock().unwrap_or_else(|e| e.into_inner()) = Instant::now();
+            }
+            Ok(_) => {}
+            Err(_) => break,
+        }
+    }
+}
+
+/// Which workers are overdue, by index. Pure over caller-supplied
+/// timestamps, so the reap decision is unit-testable with a fake clock.
+fn missed_workers(last_beats: &[Instant], now: Instant, miss_after: Duration) -> Vec<usize> {
+    last_beats
+        .iter()
+        .enumerate()
+        .filter(|(_, &t)| now.saturating_duration_since(t) > miss_after)
+        .map(|(i, _)| i)
+        .collect()
+}
 
 /// One spawned party-worker child: the OS process hosting a client's
 /// listener.
@@ -52,6 +113,10 @@ pub struct Worker {
     party: PartyId,
     addr: SocketAddr,
     reaped: bool,
+    /// Stamped by the reader thread on every `BEAT` line.
+    beat: Arc<Mutex<Instant>>,
+    /// The stdout-draining reader thread (present iff heartbeats are on).
+    reader: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Worker {
@@ -63,6 +128,11 @@ impl Worker {
     pub fn addr(&self) -> SocketAddr {
         self.addr
     }
+
+    /// When the worker last heartbeat (spawn time until the first `BEAT`).
+    pub fn last_beat(&self) -> Instant {
+        *self.beat.lock().unwrap_or_else(|e| e.into_inner())
+    }
 }
 
 impl Drop for Worker {
@@ -71,65 +141,126 @@ impl Drop for Worker {
             let _ = self.child.kill();
             let _ = self.child.wait();
         }
+        // The child is dead either way, so its stdout pipe has hit EOF and
+        // the reader exits promptly.
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
     }
+}
+
+/// Self-exec one party-worker child and complete its `READY` handshake.
+fn spawn_worker(
+    c: usize,
+    forward: SocketAddr,
+    recv_timeout: Duration,
+    hb: HeartbeatConfig,
+) -> Result<Worker> {
+    let exe = std::env::current_exe()?;
+    let mut child = Command::new(&exe)
+        .arg("party-worker")
+        .arg("--client")
+        .arg(c.to_string())
+        .arg("--forward")
+        .arg(forward.to_string())
+        .arg("--timeout-ms")
+        .arg(recv_timeout.as_millis().to_string())
+        .arg("--heartbeat-ms")
+        .arg(hb.interval.as_millis().to_string())
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .spawn()?;
+    let stdout = child.stdout.take().expect("stdout was piped");
+    // Wrap in the kill-on-drop guard *before* the fallible handshake:
+    // any `?` below — including the read_line — reaps this child.
+    let mut worker = Worker {
+        child,
+        party: PartyId::Client(c as u32),
+        addr: "127.0.0.1:0".parse().expect("literal addr"),
+        reaped: false,
+        beat: Arc::new(Mutex::new(Instant::now())),
+        reader: None,
+    };
+    let mut rd = BufReader::new(stdout);
+    let mut line = String::new();
+    rd.read_line(&mut line)?;
+    match parse_ready(&line) {
+        Some(a) => worker.addr = a,
+        None => {
+            return Err(Error::Net(format!("party-worker {c}: bad handshake {line:?}")));
+        }
+    }
+    if hb.enabled() {
+        // Keep draining stdout for the child's whole life: the stamps
+        // feed [`Cluster::sweep`], and an unread pipe would eventually
+        // block the child's beat writes.
+        let beat = Arc::clone(&worker.beat);
+        worker.reader = Some(
+            std::thread::Builder::new()
+                .name(format!("treecss-beat-{c}"))
+                .spawn(move || pump_beats(rd, &beat))
+                .map_err(|e| Error::Runtime(format!("spawn beat reader: {e}")))?,
+        );
+        // The handshake counts as the first beat.
+        *worker.beat.lock().unwrap_or_else(|e| e.into_inner()) = Instant::now();
+    }
+    Ok(worker)
 }
 
 /// A set of spawned party-worker processes, one per client.
 pub struct Cluster {
     workers: Vec<Worker>,
+    forward: SocketAddr,
+    recv_timeout: Duration,
+    hb: HeartbeatConfig,
 }
 
 impl Cluster {
     /// Self-exec `n_clients` party-worker children and collect their
     /// bound addresses. `forward_to` is the coordinator hub listener every
     /// worker relays its frames to; `recv_timeout` is forwarded so the
-    /// whole cluster shares one deadline discipline.
+    /// whole cluster shares one deadline discipline; `hb` is the
+    /// heartbeat discipline every child follows (an error mid-loop reaps
+    /// every already-spawned sibling via the `workers` unwind).
     pub fn spawn(
         n_clients: usize,
         forward_to: SocketAddr,
         recv_timeout: Duration,
+        hb: HeartbeatConfig,
     ) -> Result<Cluster> {
-        let exe = std::env::current_exe()?;
         let mut workers = Vec::with_capacity(n_clients);
         for c in 0..n_clients {
-            let mut child = Command::new(&exe)
-                .arg("party-worker")
-                .arg("--client")
-                .arg(c.to_string())
-                .arg("--forward")
-                .arg(forward_to.to_string())
-                .arg("--timeout-ms")
-                .arg(recv_timeout.as_millis().to_string())
-                .stdin(Stdio::piped())
-                .stdout(Stdio::piped())
-                .spawn()?;
-            let stdout = child.stdout.take().expect("stdout was piped");
-            // Wrap in the kill-on-drop guard *before* the fallible handshake:
-            // any `?` below — including the read_line — reaps this child and,
-            // via `workers` unwinding, every previously spawned sibling.
-            let mut worker = Worker {
-                child,
-                party: PartyId::Client(c as u32),
-                addr: "127.0.0.1:0".parse().expect("literal addr"),
-                reaped: false,
-            };
-            let mut line = String::new();
-            BufReader::new(stdout).read_line(&mut line)?;
-            match parse_ready(&line) {
-                Some(a) => worker.addr = a,
-                None => {
-                    return Err(Error::Net(format!(
-                        "party-worker {c}: bad handshake {line:?}"
-                    )));
-                }
-            }
-            workers.push(worker);
+            workers.push(spawn_worker(c, forward_to, recv_timeout, hb)?);
         }
-        Ok(Cluster { workers })
+        Ok(Cluster { workers, forward: forward_to, recv_timeout, hb })
     }
 
     pub fn workers(&self) -> &[Worker] {
         &self.workers
+    }
+
+    /// Reap and respawn every worker whose heartbeat went silent past
+    /// [`HeartbeatConfig::miss_after`], re-routing its party to the
+    /// replacement's listener so it rejoins before the next phase
+    /// barrier's redial. Returns the respawned parties. No-op when
+    /// heartbeats are disabled.
+    pub fn sweep(&mut self, net: &TcpTransport) -> Result<Vec<PartyId>> {
+        if !self.hb.enabled() {
+            return Ok(Vec::new());
+        }
+        let lasts: Vec<Instant> = self.workers.iter().map(Worker::last_beat).collect();
+        let missed = missed_workers(&lasts, Instant::now(), self.hb.miss_after());
+        let mut respawned = Vec::new();
+        for i in missed {
+            let PartyId::Client(c) = self.workers[i].party else { continue };
+            let replacement = spawn_worker(c as usize, self.forward, self.recv_timeout, self.hb)?;
+            net.add_peer(replacement.party, replacement.addr);
+            respawned.push(replacement.party);
+            // Replacing drops the old worker: kill-on-drop reaps the
+            // silent child (if it is somehow still alive).
+            self.workers[i] = replacement;
+        }
+        Ok(respawned)
     }
 
     /// Register every worker's listener as a peer of the coordinator's
@@ -195,12 +326,30 @@ pub fn run_distributed(
         .host(PartyId::KeyServer)
         .build()?;
     let hub = net.local_addr(PartyId::Aggregator).expect("aggregator hosted");
-    let cluster = Cluster::spawn(session.config().n_clients, hub, cfg.recv_timeout)?;
+    let hb = HeartbeatConfig::default();
+    let cluster = Cluster::spawn(session.config().n_clients, hub, cfg.transport.deadline, hb)?;
     cluster.register_peers(&net);
-    let report = session.run_over(train, test, &net);
+    // Monitor thread: sweep missed heartbeats while the pipeline runs, so
+    // a crashed worker is respawned and rejoins at the next redial
+    // instead of stalling the run until the recv deadline.
+    let cluster = Mutex::new(cluster);
+    let stop = AtomicBool::new(false);
+    let report = std::thread::scope(|s| {
+        let monitor = s.spawn(|| {
+            while !stop.load(Ordering::SeqCst) {
+                std::thread::sleep(hb.interval.max(Duration::from_millis(50)));
+                let mut c = cluster.lock().unwrap_or_else(|e| e.into_inner());
+                let _ = c.sweep(&net);
+            }
+        });
+        let report = session.run_over(train, test, &net);
+        stop.store(true, Ordering::SeqCst);
+        let _ = monitor.join();
+        report
+    });
     // Tear the cluster down even when the run failed, then surface the
     // first error.
-    let shut = cluster.shutdown();
+    let shut = cluster.into_inner().unwrap_or_else(|e| e.into_inner()).shutdown();
     let report = report?;
     shut?;
     Ok(report)
@@ -221,7 +370,9 @@ pub fn serve_party_worker(cli: &Cli) -> Result<()> {
     };
     let timeout_ms: u64 = cli.opt_parse("timeout-ms", 30_000u64)?;
     let cfg = TcpTransportConfig {
-        recv_timeout: Duration::from_millis(timeout_ms),
+        transport: crate::net::TransportConfig {
+            deadline: Duration::from_millis(timeout_ms),
+        },
         ..Default::default()
     };
     let net = TcpTransportBuilder::with_config(cfg)
@@ -231,6 +382,25 @@ pub fn serve_party_worker(cli: &Cli) -> Result<()> {
     let addr = net.local_addr(PartyId::Client(client)).expect("client hosted");
     println!("READY {addr}");
     std::io::stdout().flush()?;
+
+    // Heartbeat: prove liveness on stdout so the coordinator's sweep can
+    // tell a wedged worker from a busy one. Write errors (coordinator
+    // gone) just stop the beats — stdin EOF below ends the process.
+    let heartbeat_ms: u64 = cli.opt_parse("heartbeat-ms", 0u64)?;
+    let stop_beat = Arc::new(AtomicBool::new(false));
+    let beater = (heartbeat_ms > 0).then(|| {
+        let stop = Arc::clone(&stop_beat);
+        let interval = Duration::from_millis(heartbeat_ms);
+        std::thread::spawn(move || {
+            let mut out = std::io::stdout();
+            while !stop.load(Ordering::SeqCst) {
+                if writeln!(out, "BEAT").and_then(|()| out.flush()).is_err() {
+                    break;
+                }
+                std::thread::sleep(interval);
+            }
+        })
+    });
 
     // Serve frames until the coordinator closes our stdin (or asks
     // explicitly) — the transport's listener threads do the actual work.
@@ -244,6 +414,10 @@ pub fn serve_party_worker(cli: &Cli) -> Result<()> {
         if line.trim() == "SHUTDOWN" {
             break;
         }
+    }
+    stop_beat.store(true, Ordering::SeqCst);
+    if let Some(h) = beater {
+        let _ = h.join();
     }
     drop(net);
     Ok(())
@@ -269,6 +443,8 @@ mod tests {
             party: PartyId::Client(0),
             addr: "127.0.0.1:0".parse().unwrap(),
             reaped: false,
+            beat: Arc::new(Mutex::new(Instant::now())),
+            reader: None,
         };
         assert!(
             std::path::Path::new(&format!("/proc/{pid}")).exists(),
@@ -281,6 +457,46 @@ mod tests {
             !std::path::Path::new(&format!("/proc/{pid}")).exists(),
             "dropped worker leaked child pid {pid}"
         );
+    }
+
+    /// The reap decision over fake timestamps: only workers silent past
+    /// the grace budget are flagged, in index order.
+    #[test]
+    fn heartbeat_miss_decision_with_fake_clock() {
+        let hb = HeartbeatConfig { interval: Duration::from_millis(100), grace: 3 };
+        assert!(hb.enabled());
+        assert_eq!(hb.miss_after(), Duration::from_millis(300));
+        let t0 = Instant::now();
+        let beats = [
+            t0,                                  // silent 601 ms → missed
+            t0 + Duration::from_millis(250),     // silent 351 ms → missed
+            t0 + Duration::from_millis(600),     // silent 1 ms   → alive
+        ];
+        let now = t0 + Duration::from_millis(601);
+        assert_eq!(missed_workers(&beats, now, hb.miss_after()), vec![0, 1]);
+        // Exactly at the budget is still alive; disabled config never
+        // sweeps at all.
+        assert_eq!(missed_workers(&[t0], t0 + hb.miss_after(), hb.miss_after()), Vec::<usize>::new());
+        assert!(!HeartbeatConfig { interval: Duration::ZERO, grace: 3 }.enabled());
+    }
+
+    /// `BEAT` lines stamp the shared clock; other lines are ignored and
+    /// EOF ends the pump.
+    #[test]
+    fn beat_pump_stamps_on_beat_lines() {
+        let past = Instant::now()
+            .checked_sub(Duration::from_secs(10))
+            .unwrap_or_else(Instant::now);
+        let beat = Mutex::new(past);
+        let before = Instant::now();
+        pump_beats(std::io::Cursor::new("noise\nBEAT\nmore noise\n"), &beat);
+        assert!(
+            *beat.lock().unwrap() >= before,
+            "a BEAT line must stamp the clock"
+        );
+        let stamped = *beat.lock().unwrap();
+        pump_beats(std::io::Cursor::new("no beats here\n"), &beat);
+        assert_eq!(*beat.lock().unwrap(), stamped, "non-BEAT lines must not stamp");
     }
 
     #[test]

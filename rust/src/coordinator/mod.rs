@@ -19,13 +19,14 @@ pub mod pipeline;
 pub mod serve;
 pub mod session;
 
-pub use distributed::{run_distributed, Cluster};
+pub use distributed::{run_distributed, Cluster, HeartbeatConfig};
 pub use pipeline::{
-    run_pipeline, Backend, Downstream, FrameworkVariant, MpsiTopology, PipelineConfig,
-    PipelineReport,
+    run_pipeline, Backend, CommittedPhase, Downstream, FrameworkVariant, MpsiTopology,
+    PipelineConfig, PipelineReport, SessionCheckpoint,
 };
 pub use serve::{
-    ControlClient, ControlReply, ControlRequest, ReportSummary, ServeConfig, ServeCoordinator,
-    ServeDaemon, ServeWire, SessionOutcome, SessionScopedTransport, SessionSpec, SessionStatus,
+    ControlClient, ControlReply, ControlRequest, ReportSummary, RetryPolicy, ServeConfig,
+    ServeCoordinator, ServeDaemon, ServeStats, ServeWire, SessionOutcome, SessionProgress,
+    SessionScopedTransport, SessionSpec, SessionStatus,
 };
 pub use session::{Pipeline, Session, SessionBuilder, TransportKind};

@@ -22,8 +22,10 @@ use crate::data::{Dataset, Matrix};
 use crate::error::Result;
 use crate::ml::kmeans::{AssignBackend, ParAssign};
 use crate::ml::knn::{self, Knn, PairwiseBackend, ParPairwise};
-use crate::net::{ChannelTransport, Meter, MeteredTransport};
+use crate::net::meter::EdgeStats;
+use crate::net::{ChannelTransport, Meter, MeteredTransport, PartyId};
 use crate::parties::{deal_with_overlap, KeyServerNode};
+use crate::util::codec::{DecodeError, Decoder, Encoder};
 use crate::psi::sched::Pairing;
 use crate::psi::tree::{run_tree, TreeMpsiConfig};
 use crate::psi::{path::run_path, star::run_star, MpsiReport, TpsiProtocol};
@@ -264,6 +266,205 @@ impl PipelineReport {
     }
 }
 
+/// The last phase boundary a retried session run committed.
+///
+/// The pipeline's phases commit in order `align → coreset → train`;
+/// training has no checkpoint of its own — its completion *is* the
+/// session result. A resume from `Coresetted` replays neither alignment
+/// nor clustering; a resume from `Aligned` replays clustering only.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommittedPhase {
+    Aligned,
+    Coresetted,
+}
+
+impl CommittedPhase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CommittedPhase::Aligned => "aligned",
+            CommittedPhase::Coresetted => "coresetted",
+        }
+    }
+}
+
+/// Everything a retried attempt needs to re-run from a committed phase
+/// boundary and still produce a byte-identical [`PipelineReport`]: the
+/// seeded RNG stream position, the committed phase outputs, and the
+/// meter's per-edge totals at the boundary (restored before the retry so
+/// a torn attempt's partial traffic cannot pollute the accounting).
+///
+/// The supervisor round-trips checkpoints through [`Self::encode`] /
+/// [`Self::decode`] between attempts — the stored form is the
+/// bounds-checked wire codec, never a live object graph.
+#[derive(Clone, Debug)]
+pub struct SessionCheckpoint {
+    pub phase: CommittedPhase,
+    pub rng_state: [u64; 4],
+    /// Caller-meter total at pipeline entry (the attempt-1 value; later
+    /// attempts must not re-baseline against their own restored meter).
+    pub bytes_before: u64,
+    pub sim_keys: f64,
+    pub intersection: Vec<u64>,
+    pub align_wall_s: f64,
+    pub align_sim_s: f64,
+    pub align_total_bytes: u64,
+    pub coreset: Option<CoresetResult>,
+    pub meter: Vec<((PartyId, PartyId, String), EdgeStats)>,
+}
+
+fn encode_ckpt_party(e: &mut Encoder, p: PartyId) {
+    match p {
+        PartyId::Client(c) => {
+            e.u8(0).u32(c);
+        }
+        PartyId::Aggregator => {
+            e.u8(1);
+        }
+        PartyId::LabelOwner => {
+            e.u8(2);
+        }
+        PartyId::KeyServer => {
+            e.u8(3);
+        }
+    }
+}
+
+fn decode_ckpt_party(d: &mut Decoder) -> std::result::Result<PartyId, DecodeError> {
+    Ok(match d.u8()? {
+        0 => PartyId::Client(d.u32()?),
+        1 => PartyId::Aggregator,
+        2 => PartyId::LabelOwner,
+        3 => PartyId::KeyServer,
+        _ => return Err(DecodeError("checkpoint: bad party tag")),
+    })
+}
+
+impl SessionCheckpoint {
+    const VERSION: u8 = 1;
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::with_capacity(64 + self.intersection.len() * 8);
+        e.u8(Self::VERSION);
+        e.u8(match self.phase {
+            CommittedPhase::Aligned => 1,
+            CommittedPhase::Coresetted => 2,
+        });
+        e.u64_slice(&self.rng_state);
+        e.u64(self.bytes_before);
+        e.f64(self.sim_keys);
+        e.u64_slice(&self.intersection);
+        e.f64(self.align_wall_s);
+        e.f64(self.align_sim_s);
+        e.u64(self.align_total_bytes);
+        match &self.coreset {
+            None => {
+                e.u8(0);
+            }
+            Some(cs) => {
+                e.u8(1);
+                let idx: Vec<u64> = cs.indices.iter().map(|&i| i as u64).collect();
+                e.u64_slice(&idx);
+                e.f32_slice(&cs.weights);
+                e.u64(cs.distinct_cts as u64);
+                e.f64(cs.wall_s);
+                e.f64(cs.sim_s);
+                e.u64(cs.bytes);
+            }
+        }
+        e.u32(self.meter.len() as u32);
+        for ((from, to, phase), st) in &self.meter {
+            encode_ckpt_party(&mut e, *from);
+            encode_ckpt_party(&mut e, *to);
+            e.str(phase);
+            e.u64(st.bytes);
+            e.u64(st.messages);
+            e.f64(st.sim_s);
+        }
+        e.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<SessionCheckpoint> {
+        let err = |e: DecodeError| crate::Error::Runtime(format!("session checkpoint: {e}"));
+        let mut d = Decoder::new(buf);
+        let version = d.u8().map_err(err)?;
+        if version != Self::VERSION {
+            return Err(crate::Error::Runtime(format!(
+                "session checkpoint: unsupported version {version}"
+            )));
+        }
+        let phase = match d.u8().map_err(err)? {
+            1 => CommittedPhase::Aligned,
+            2 => CommittedPhase::Coresetted,
+            t => {
+                return Err(crate::Error::Runtime(format!(
+                    "session checkpoint: bad phase tag {t}"
+                )));
+            }
+        };
+        let state_vec = d.u64_slice().map_err(err)?;
+        let rng_state: [u64; 4] = state_vec
+            .try_into()
+            .map_err(|_| crate::Error::Runtime("session checkpoint: bad rng state".into()))?;
+        let bytes_before = d.u64().map_err(err)?;
+        let sim_keys = d.f64().map_err(err)?;
+        let intersection = d.u64_slice().map_err(err)?;
+        let align_wall_s = d.f64().map_err(err)?;
+        let align_sim_s = d.f64().map_err(err)?;
+        let align_total_bytes = d.u64().map_err(err)?;
+        let coreset = match d.u8().map_err(err)? {
+            0 => None,
+            _ => {
+                let indices: Vec<usize> =
+                    d.u64_slice().map_err(err)?.into_iter().map(|i| i as usize).collect();
+                let weights = d.f32_slice().map_err(err)?;
+                let distinct_cts = d.u64().map_err(err)? as usize;
+                let wall_s = d.f64().map_err(err)?;
+                let sim_s = d.f64().map_err(err)?;
+                let bytes = d.u64().map_err(err)?;
+                Some(CoresetResult { indices, weights, distinct_cts, wall_s, sim_s, bytes })
+            }
+        };
+        let n_edges = d.u32().map_err(err)? as usize;
+        let mut meter = Vec::with_capacity(n_edges);
+        for _ in 0..n_edges {
+            let from = decode_ckpt_party(&mut d).map_err(err)?;
+            let to = decode_ckpt_party(&mut d).map_err(err)?;
+            let phase = d.str().map_err(err)?;
+            let bytes = d.u64().map_err(err)?;
+            let messages = d.u64().map_err(err)?;
+            let sim_s = d.f64().map_err(err)?;
+            meter.push(((from, to, phase), EdgeStats { bytes, messages, sim_s }));
+        }
+        d.finish().map_err(err)?;
+        Ok(SessionCheckpoint {
+            phase,
+            rng_state,
+            bytes_before,
+            sim_keys,
+            intersection,
+            align_wall_s,
+            align_sim_s,
+            align_total_bytes,
+            coreset,
+            meter,
+        })
+    }
+
+    /// Reconstruct the alignment report the checkpointed attempt
+    /// committed. Round detail is not retained (it feeds no comparison
+    /// surface); the intersection, simulated time, and byte totals are
+    /// exact.
+    pub(crate) fn align_report(&self) -> MpsiReport {
+        MpsiReport {
+            intersection: self.intersection.clone(),
+            rounds: Vec::new(),
+            wall_s: self.align_wall_s,
+            sim_s: self.align_sim_s,
+            total_bytes: self.align_total_bytes,
+        }
+    }
+}
+
 /// Run the full lifecycle on a train/test split, charging the caller's
 /// meter. Thin wrapper: builds the in-process wire and delegates to the
 /// transport-based pipeline. Prefer the builder API
@@ -291,10 +492,39 @@ pub(crate) fn run_over_transport(
     net: &dyn crate::net::Transport,
     meter: &Meter,
 ) -> Result<PipelineReport> {
+    run_resumable(train_ds, test_ds, cfg, backend, net, meter, None, &mut |_| {})
+}
+
+/// The resumable pipeline: the supervisor's retry currency.
+///
+/// `resume` re-enters the lifecycle at a committed phase boundary — the
+/// party layout and key server are recomputed bit-identically from the
+/// seed (pure functions of the RNG stream), committed phase outputs
+/// stand in for the live protocols, and not a single alignment/coreset
+/// byte is re-sent. `commit` fires with a fresh [`SessionCheckpoint`] as
+/// each boundary completes live, capturing the RNG stream position, the
+/// phase outputs, and the meter's per-edge totals at that instant.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_resumable(
+    train_ds: &Dataset,
+    test_ds: &Dataset,
+    cfg: &PipelineConfig,
+    backend: &Backend,
+    net: &dyn crate::net::Transport,
+    meter: &Meter,
+    resume: Option<&SessionCheckpoint>,
+    commit: &mut dyn FnMut(SessionCheckpoint),
+) -> Result<PipelineReport> {
     let sw = crate::util::timer::Stopwatch::start();
     // Report per-run traffic even when the caller's meter already holds
-    // earlier runs (a Session's meter accumulates until reset).
-    let bytes_before = meter.total_bytes("");
+    // earlier runs (a Session's meter accumulates until reset). A resumed
+    // attempt keeps the first attempt's baseline: its own meter was just
+    // restored to the boundary snapshot, which already includes this
+    // run's pre-boundary traffic.
+    let bytes_before = match resume {
+        Some(ck) => ck.bytes_before,
+        None => meter.total_bytes(""),
+    };
     let mut rng = Rng::new(cfg.seed);
     let m = cfg.n_clients;
     if !(0.0..=1.0).contains(&cfg.overlap) {
@@ -306,36 +536,66 @@ pub(crate) fn run_over_transport(
     let par = Parallel::auto(cfg.threads);
 
     // ---- parties ----------------------------------------------------------
+    // Recomputed deterministically on every attempt: the deal and the key
+    // server consume the seeded RNG stream alone, so a resumed attempt
+    // reconstructs the same parties without touching the wire.
     let (clients, label_owner) = deal_with_overlap(train_ds, m, cfg.overlap, &mut rng);
     let key_server = KeyServerNode::new(&mut rng, cfg.he_bits);
     let he = key_server.he();
 
-    // HE public-key distribution travels (and is metered) like any other
-    // message; every client rebuilds the key from its grant.
-    let sim_keys = key_server.distribute_keys(net, m, "keys/dist")?;
-    for c in &clients {
-        let pk = c.receive_he_key(net, "keys/dist")?;
-        if pk.n != he.pk.n {
-            return Err(crate::Error::Net("HE key grant mismatch".into()));
-        }
-    }
+    let (sim_keys, align) = match resume {
+        None => {
+            // HE public-key distribution travels (and is metered) like any
+            // other message; every client rebuilds the key from its grant.
+            let sim_keys = key_server.distribute_keys(net, m, "keys/dist")?;
+            for c in &clients {
+                let pk = c.receive_he_key(net, "keys/dist")?;
+                if pk.n != he.pk.n {
+                    return Err(crate::Error::Net("HE key grant mismatch".into()));
+                }
+            }
 
-    // ---- phase 1: alignment (MPSI over the clients' indicator sets) -------
-    let sets: Vec<Vec<u64>> = clients.iter().map(|c| c.ids.clone()).collect();
-    let align = match cfg.variant.topology() {
-        MpsiTopology::Tree => {
-            let tcfg = TreeMpsiConfig {
-                protocol: cfg.protocol.clone(),
-                pairing: cfg.pairing,
-                seed: cfg.seed,
+            // ---- phase 1: alignment (MPSI over the clients' sets) ---------
+            let sets: Vec<Vec<u64>> = clients.iter().map(|c| c.ids.clone()).collect();
+            let align = match cfg.variant.topology() {
+                MpsiTopology::Tree => {
+                    let tcfg = TreeMpsiConfig {
+                        protocol: cfg.protocol.clone(),
+                        pairing: cfg.pairing,
+                        seed: cfg.seed,
+                    };
+                    run_tree(&sets, &tcfg, net, par, he)?
+                }
+                MpsiTopology::Star => run_star(&sets, &cfg.protocol, 0, cfg.seed, net, par, he)?,
+                MpsiTopology::Path => run_path(&sets, &cfg.protocol, cfg.seed, net, par, he)?,
             };
-            run_tree(&sets, &tcfg, net, par, he)?
+            (sim_keys, align)
         }
-        MpsiTopology::Star => run_star(&sets, &cfg.protocol, 0, cfg.seed, net, par, he)?,
-        MpsiTopology::Path => run_path(&sets, &cfg.protocol, cfg.seed, net, par, he)?,
+        Some(ck) => {
+            // Committed outputs stand in for key distribution + alignment;
+            // pin the RNG to the recorded stream position (identical to
+            // the recomputed state — the checkpoint guards against drift).
+            rng = Rng::from_state(ck.rng_state);
+            (ck.sim_keys, ck.align_report())
+        }
     };
     let aligned = align.intersection.clone();
     let n_aligned = aligned.len();
+
+    if resume.is_none() {
+        commit(SessionCheckpoint {
+            phase: CommittedPhase::Aligned,
+            rng_state: rng.state(),
+            bytes_before,
+            sim_keys,
+            intersection: aligned.clone(),
+            align_wall_s: align.wall_s,
+            align_sim_s: align.sim_s,
+            align_total_bytes: align.total_bytes,
+            coreset: None,
+            meter: meter.snapshot(),
+        });
+    }
 
     // Aligned views.
     let slices: Vec<Matrix> = clients
@@ -346,27 +606,37 @@ pub(crate) fn run_over_transport(
 
     // ---- phase 2: coreset (CSS variants) -----------------------------------
     let phases = backend.phases(par);
+    let resumed_coreset: Option<CoresetResult> = match resume {
+        Some(ck) if ck.phase == CommittedPhase::Coresetted => ck.coreset.clone(),
+        _ => None,
+    };
     let (coreset, train_slices, train_y, train_w) = if cfg.variant.uses_coreset() {
-        // Split the budget between the per-party fan-out and the assignment
-        // kernel inside each fit, so the two parallel levels compose to
-        // ~cfg.threads workers instead of multiplying (oversubscription).
-        // PipelineConfig::threads is the single knob on this path: it
-        // deliberately overrides any caller-set cfg.coreset.threads.
-        let outer = par.threads().min(m.max(1));
-        let inner = Parallel::new(par.threads() / outer);
-        let ab = backend.assign_backend(inner);
-        let dyn_ab = DynAssign(ab.as_ref());
-        let mut ccfg = cfg.coreset.clone();
-        ccfg.threads = outer;
-        let cs = cluster_coreset::run(
-            &slices,
-            &y,
-            train_ds.task.is_classification(),
-            &ccfg,
-            &dyn_ab,
-            net,
-            he,
-        )?;
+        let cs = match resumed_coreset {
+            Some(cs) => cs,
+            None => {
+                // Split the budget between the per-party fan-out and the
+                // assignment kernel inside each fit, so the two parallel
+                // levels compose to ~cfg.threads workers instead of
+                // multiplying (oversubscription). PipelineConfig::threads
+                // is the single knob on this path: it deliberately
+                // overrides any caller-set cfg.coreset.threads.
+                let outer = par.threads().min(m.max(1));
+                let inner = Parallel::new(par.threads() / outer);
+                let ab = backend.assign_backend(inner);
+                let dyn_ab = DynAssign(ab.as_ref());
+                let mut ccfg = cfg.coreset.clone();
+                ccfg.threads = outer;
+                cluster_coreset::run(
+                    &slices,
+                    &y,
+                    train_ds.task.is_classification(),
+                    &ccfg,
+                    &dyn_ab,
+                    net,
+                    he,
+                )?
+            }
+        };
         let sl: Vec<Matrix> = slices.iter().map(|s| s.select_rows(&cs.indices)).collect();
         let sy: Vec<f32> = cs.indices.iter().map(|&i| y[i]).collect();
         let wts = cs.weights.clone();
@@ -376,6 +646,25 @@ pub(crate) fn run_over_transport(
         (None, slices.clone(), y.clone(), w)
     };
     let train_size = train_y.len();
+
+    // Coreset boundary committed: a retry of the training phase replays
+    // neither alignment nor clustering. (No-coreset variants commit too —
+    // the boundary marks "training may begin", not "a coreset exists".)
+    match resume {
+        Some(ck) if ck.phase == CommittedPhase::Coresetted => {}
+        _ => commit(SessionCheckpoint {
+            phase: CommittedPhase::Coresetted,
+            rng_state: rng.state(),
+            bytes_before,
+            sim_keys,
+            intersection: aligned.clone(),
+            align_wall_s: align.wall_s,
+            align_sim_s: align.sim_s,
+            align_total_bytes: align.total_bytes,
+            coreset: coreset.clone(),
+            meter: meter.snapshot(),
+        }),
+    }
 
     // ---- phase 3: downstream ------------------------------------------------
     // Test-side party views (aligned trivially: test ids are shared).
@@ -612,6 +901,125 @@ mod tests {
                 assert_eq!(rep.train_size, rep.n_aligned);
             }
             assert!(rep.quality > 0.8, "{}: quality {}", variant.name(), rep.quality);
+        }
+    }
+
+    #[test]
+    fn checkpoint_codec_roundtrips_every_field() {
+        let ck = SessionCheckpoint {
+            phase: CommittedPhase::Coresetted,
+            rng_state: [1, u64::MAX, 3, 0xDEAD_BEEF],
+            bytes_before: 42,
+            sim_keys: 0.125,
+            intersection: vec![7, 9, 11, 4096],
+            align_wall_s: 1.5,
+            align_sim_s: 0.25,
+            align_total_bytes: 9001,
+            coreset: Some(CoresetResult {
+                indices: vec![0, 3, 5],
+                weights: vec![1.0, 2.5, 0.5],
+                distinct_cts: 2,
+                wall_s: 0.75,
+                sim_s: 0.0625,
+                bytes: 1234,
+            }),
+            meter: vec![
+                (
+                    (crate::net::PartyId::Client(2), crate::net::PartyId::Aggregator, "a/b".into()),
+                    crate::net::meter::EdgeStats { bytes: 10, messages: 2, sim_s: 0.5 },
+                ),
+                (
+                    (crate::net::PartyId::KeyServer, crate::net::PartyId::LabelOwner, "k".into()),
+                    crate::net::meter::EdgeStats { bytes: 7, messages: 1, sim_s: 0.0 },
+                ),
+            ],
+        };
+        let got = SessionCheckpoint::decode(&ck.encode()).unwrap();
+        assert_eq!(got.phase, ck.phase);
+        assert_eq!(got.rng_state, ck.rng_state);
+        assert_eq!(got.bytes_before, ck.bytes_before);
+        assert_eq!(got.sim_keys.to_bits(), ck.sim_keys.to_bits());
+        assert_eq!(got.intersection, ck.intersection);
+        assert_eq!(got.align_total_bytes, ck.align_total_bytes);
+        let (a, b) = (got.coreset.as_ref().unwrap(), ck.coreset.as_ref().unwrap());
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.weights, b.weights);
+        assert_eq!(a.distinct_cts, b.distinct_cts);
+        assert_eq!(a.bytes, b.bytes);
+        assert_eq!(got.meter.len(), ck.meter.len());
+        for ((ka, ea), (kb, eb)) in got.meter.iter().zip(&ck.meter) {
+            assert_eq!(ka, kb);
+            assert_eq!(ea.bytes, eb.bytes);
+            assert_eq!(ea.messages, eb.messages);
+            assert_eq!(ea.sim_s.to_bits(), eb.sim_s.to_bits());
+        }
+
+        // Hostile input still errors instead of panicking.
+        assert!(SessionCheckpoint::decode(&[]).is_err());
+        assert!(SessionCheckpoint::decode(&[9]).is_err());
+    }
+
+    #[test]
+    fn resumed_attempts_reproduce_the_serial_report_bytewise() {
+        // The supervisor's contract: an attempt resumed from either phase
+        // boundary — fresh wire, meter restored to the boundary snapshot —
+        // must land on the exact bytes of the uninterrupted run.
+        let mut rng = Rng::new(9);
+        let ds = PaperDataset::Ri.generate(0.02, &mut rng);
+        let (tr, te) = ds.split(0.7, &mut rng);
+        let cfg = fast_cfg(FrameworkVariant::TreeCss, Downstream::Train(ModelKind::Lr));
+
+        let meter = Meter::new(NetConfig::lan_10gbps());
+        let base = run_pipeline(&tr, &te, &cfg, &Backend::Native, &meter).unwrap();
+        let base_edges = meter.edges();
+
+        // Capture both phase-boundary checkpoints, codec'd like the
+        // supervisor stores them.
+        let meter2 = Meter::new(NetConfig::lan_10gbps());
+        let net2 = MeteredTransport::new(ChannelTransport::new(), &meter2);
+        let mut blobs: Vec<Vec<u8>> = Vec::new();
+        run_resumable(&tr, &te, &cfg, &Backend::Native, &net2, &meter2, None, &mut |c| {
+            blobs.push(c.encode())
+        })
+        .unwrap();
+        assert_eq!(blobs.len(), 2, "align + coreset boundaries commit");
+
+        for blob in &blobs {
+            let ck = SessionCheckpoint::decode(blob).unwrap();
+            let meter3 = Meter::new(NetConfig::lan_10gbps());
+            meter3.restore(&ck.meter);
+            let net3 = MeteredTransport::new(ChannelTransport::new(), &meter3);
+            let rep = run_resumable(
+                &tr,
+                &te,
+                &cfg,
+                &Backend::Native,
+                &net3,
+                &meter3,
+                Some(&ck),
+                &mut |_| {},
+            )
+            .unwrap();
+            assert_eq!(rep.align.intersection, base.align.intersection);
+            assert_eq!(
+                rep.coreset.as_ref().unwrap().indices,
+                base.coreset.as_ref().unwrap().indices
+            );
+            assert_eq!(
+                rep.coreset.as_ref().unwrap().weights,
+                base.coreset.as_ref().unwrap().weights
+            );
+            assert_eq!(rep.quality.to_bits(), base.quality.to_bits());
+            assert_eq!(rep.sim_s.to_bits(), base.sim_s.to_bits());
+            assert_eq!(rep.total_bytes, base.total_bytes);
+            let edges = meter3.edges();
+            assert_eq!(edges.len(), base_edges.len());
+            for ((ka, ea), (kb, eb)) in edges.iter().zip(&base_edges) {
+                assert_eq!(ka, kb);
+                assert_eq!(ea.bytes, eb.bytes, "bytes on edge {ka:?}");
+                assert_eq!(ea.messages, eb.messages, "messages on edge {ka:?}");
+                assert_eq!(ea.sim_s.to_bits(), eb.sim_s.to_bits(), "sim_s on edge {ka:?}");
+            }
         }
     }
 

@@ -11,10 +11,20 @@
 //! enforces a bounded per-session in-flight budget: a slow or stalled
 //! session blocks (then errs) only its own senders, never its siblings.
 //!
-//! Party churn is a session-local event. A party dropping mid-phase (recv
-//! timeout), a protocol `Err`, or even a panic inside a session marks that
-//! one session `Failed` and releases the worker; sibling sessions and the
-//! process itself are untouched.
+//! Party churn is a session-local event — and, when the failure is
+//! `Retryable`, a *recoverable* one. Each session carries a
+//! [`RetryPolicy`]; the worker running it acts as its supervisor: on a
+//! Retryable failure (recv deadline, killed connection, worker crash
+//! before a phase commit) it tears the attempt's scoped wire down, sweeps
+//! the session's stale envelopes off the shared wire, sleeps a jittered
+//! backoff delay, and re-runs from the last committed phase boundary via
+//! the codec'd [`SessionCheckpoint`] the previous attempt left behind —
+//! with the session's meter rewound to the boundary so the retried
+//! report stays byte-identical to a fault-free serial run. `Fatal`
+//! failures (hostile frames, shape mismatches, backpressure kills) and
+//! panics skip all of that: the session fails on the spot with zero
+//! retries. Either way siblings and the process itself are untouched;
+//! [`ServeStats`] counts completions, failures, retries, and give-ups.
 //!
 //! [`ServeDaemon`] exposes the coordinator over TCP via a tiny
 //! length-prefixed control protocol (submit / status / result / shutdown)
@@ -26,7 +36,7 @@ use std::collections::{BTreeMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -38,13 +48,16 @@ use crate::net::meter::Meter;
 use crate::net::reactor::{FrameSink, Reactor, ReactorConfig, Replies};
 use crate::net::tcp::lock_clean;
 use crate::net::transport::{ChannelTransport, Envelope, Transport};
-use crate::net::{PartyId, ReactorTcpTransport};
+use crate::net::{ChaosSchedule, ChaosTransport, PartyId, ReactorTcpTransport};
 use crate::psi::rsa_psi::RsaPsiConfig;
 use crate::psi::TpsiProtocol;
+use crate::util::backoff::{Backoff, BackoffConfig};
 use crate::util::codec::{Decoder, Encoder};
 use crate::util::rng::Rng;
 
-use super::pipeline::{Downstream, FrameworkVariant, PipelineReport};
+use super::pipeline::{
+    CommittedPhase, Downstream, FrameworkVariant, PipelineReport, SessionCheckpoint,
+};
 use super::session::{Pipeline, Session};
 use super::Backend;
 
@@ -54,6 +67,39 @@ pub type SharedWire = Arc<dyn Transport + Send + Sync>;
 // ---------------------------------------------------------------------------
 // Session specification
 // ---------------------------------------------------------------------------
+
+/// Supervision policy a session carries through admission: how many times
+/// a `Retryable` failure may be re-attempted, how the supervisor sleeps
+/// between attempts, and the per-recv deadline every scoped receive in
+/// the session enforces. `Fatal` failures ignore all of it — they fail
+/// the session on whatever attempt they strike, with zero retries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Retries after the initial attempt (0 = never retry).
+    pub max_attempts: u32,
+    /// Between-attempt sleep schedule — capped, jittered, seeded, so the
+    /// supervisor's waits are as reproducible as everything else.
+    pub backoff: BackoffConfig,
+    /// Deadline for every scoped receive: a party gone quiet surfaces as
+    /// a `Retryable` timeout after this long instead of the shared wire's
+    /// default.
+    pub deadline: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 2,
+            backoff: BackoffConfig {
+                base: Duration::from_millis(25),
+                cap: Duration::from_millis(500),
+                max_attempts: 2,
+                seed: 0x5e55_10f7,
+            },
+            deadline: Duration::from_secs(30),
+        }
+    }
+}
 
 /// Everything needed to deterministically materialize one pipeline session:
 /// the dataset recipe and the full pipeline configuration. Two runs of the
@@ -75,6 +121,8 @@ pub struct SessionSpec {
     pub overlap: f64,
     pub clusters: usize,
     pub knn_k: usize,
+    /// How the supervisor treats this session's Retryable failures.
+    pub retry: RetryPolicy,
 }
 
 impl Default for SessionSpec {
@@ -94,6 +142,7 @@ impl Default for SessionSpec {
             overlap: 1.0,
             clusters: 8,
             knn_k: 5,
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -113,7 +162,13 @@ impl SessionSpec {
             .u32(self.he_bits as u32)
             .f64(self.overlap)
             .u32(self.clusters as u32)
-            .u32(self.knn_k as u32);
+            .u32(self.knn_k as u32)
+            .u32(self.retry.max_attempts)
+            .u64(self.retry.backoff.base.as_nanos() as u64)
+            .u64(self.retry.backoff.cap.as_nanos() as u64)
+            .u32(self.retry.backoff.max_attempts)
+            .u64(self.retry.backoff.seed)
+            .u64(self.retry.deadline.as_nanos() as u64);
     }
 
     fn decode_from(d: &mut Decoder) -> Result<SessionSpec> {
@@ -133,6 +188,16 @@ impl SessionSpec {
             overlap: d.f64().map_err(err)?,
             clusters: d.u32().map_err(err)? as usize,
             knn_k: d.u32().map_err(err)? as usize,
+            retry: RetryPolicy {
+                max_attempts: d.u32().map_err(err)?,
+                backoff: BackoffConfig {
+                    base: Duration::from_nanos(d.u64().map_err(err)?),
+                    cap: Duration::from_nanos(d.u64().map_err(err)?),
+                    max_attempts: d.u32().map_err(err)?,
+                    seed: d.u64().map_err(err)?,
+                },
+                deadline: Duration::from_nanos(d.u64().map_err(err)?),
+            },
         })
     }
 
@@ -372,25 +437,62 @@ pub struct SessionScopedTransport {
     prefix: String,
     budget: usize,
     wait: Duration,
+    deadline: Option<Duration>,
     inflight: Mutex<usize>,
     drained: Condvar,
 }
 
 impl SessionScopedTransport {
     pub fn new(inner: SharedWire, id: u64, budget: usize, wait: Duration) -> Self {
+        SessionScopedTransport::for_attempt(inner, id, 0, budget, wait)
+    }
+
+    /// Scoped wire for supervision attempt `attempt` (0 = the first run).
+    /// Attempt 0 keeps the canonical `session/<id>/` namespace —
+    /// byte-path-identical to an unsupervised run — while retries claim
+    /// `session/<id>/r<attempt>/`, so a frame lingering from a torn-down
+    /// attempt can never be mistaken for the new attempt's traffic. The
+    /// supervisor's sweep of `session/<id>/` still covers every attempt.
+    pub fn for_attempt(
+        inner: SharedWire,
+        id: u64,
+        attempt: u32,
+        budget: usize,
+        wait: Duration,
+    ) -> Self {
+        let prefix = if attempt == 0 {
+            format!("session/{id}/")
+        } else {
+            format!("session/{id}/r{attempt}/")
+        };
         SessionScopedTransport {
             inner,
-            prefix: format!("session/{id}/"),
+            prefix,
             budget: budget.max(1),
             wait,
+            deadline: None,
             inflight: Mutex::new(0),
             drained: Condvar::new(),
         }
     }
 
-    /// The `session/<id>/` namespace this wrapper stamps on the wire.
+    /// Bound every scoped receive by `deadline` (the session's
+    /// [`RetryPolicy::deadline`]) instead of the shared wire's default, so
+    /// a vanished party turns into a `Retryable` timeout on schedule.
+    pub fn with_recv_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// The `session/<id>/…` namespace this wrapper stamps on the wire.
     pub fn prefix(&self) -> &str {
         &self.prefix
+    }
+
+    fn note_received(&self) {
+        let mut n = lock_clean(&self.inflight);
+        *n = n.saturating_sub(1);
+        self.drained.notify_all();
     }
 }
 
@@ -422,21 +524,33 @@ impl Transport for SessionScopedTransport {
             .inner
             .send(Envelope::sized(env.from, env.to, &scoped, env.payload, wire_bytes));
         if res.is_err() {
-            let mut n = lock_clean(&self.inflight);
-            *n = n.saturating_sub(1);
-            self.drained.notify_all();
+            self.note_received();
         }
         res
     }
 
     fn recv(&self, at: PartyId, from: PartyId, phase: &str) -> Result<Envelope> {
         let scoped = format!("{}{}", self.prefix, phase);
-        let env = self.inner.recv(at, from, &scoped)?;
-        {
-            let mut n = lock_clean(&self.inflight);
-            *n = n.saturating_sub(1);
-            self.drained.notify_all();
-        }
+        let env = match self.deadline {
+            Some(d) => self.inner.recv_deadline(at, from, &scoped, d)?,
+            None => self.inner.recv(at, from, &scoped)?,
+        };
+        self.note_received();
+        let wire_bytes = env.wire_bytes();
+        Ok(Envelope::sized(env.from, env.to, phase, env.payload, wire_bytes))
+    }
+
+    /// An explicit caller deadline wins over the session policy's.
+    fn recv_deadline(
+        &self,
+        at: PartyId,
+        from: PartyId,
+        phase: &str,
+        deadline: Duration,
+    ) -> Result<Envelope> {
+        let scoped = format!("{}{}", self.prefix, phase);
+        let env = self.inner.recv_deadline(at, from, &scoped, deadline)?;
+        self.note_received();
         let wire_bytes = env.wire_bytes();
         Ok(Envelope::sized(env.from, env.to, phase, env.payload, wire_bytes))
     }
@@ -471,6 +585,11 @@ pub struct ServeConfig {
     /// Reactor tuning for the daemon's loop (readiness backend, frame cap,
     /// outbound buffer cap).
     pub reactor: ReactorConfig,
+    /// Deterministic chaos injection (`treecss serve --chaos <seed>`):
+    /// when set, the shared wire is wrapped in a [`ChaosTransport`] driven
+    /// by this schedule, so every session's traffic — and the supervisor's
+    /// recovery from it — is exercised under seeded faults.
+    pub chaos: Option<ChaosSchedule>,
 }
 
 impl Default for ServeConfig {
@@ -482,8 +601,32 @@ impl Default for ServeConfig {
             backpressure_wait: Duration::from_secs(10),
             max_clients: 0,
             reactor: ReactorConfig::default(),
+            chaos: None,
         }
     }
+}
+
+/// Monotonic supervision counters — snapshot via
+/// [`ServeCoordinator::stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Sessions that reached `Done` (on any attempt).
+    pub completed: u64,
+    /// Sessions that ended `Failed` (fatal fault, exhausted retries, or
+    /// panic).
+    pub failed: u64,
+    /// Retryable failures that were re-attempted.
+    pub retries: u64,
+    /// Sessions whose retry schedule ran dry.
+    pub gave_up: u64,
+}
+
+#[derive(Default)]
+struct StatsCells {
+    completed: AtomicU64,
+    failed: AtomicU64,
+    retries: AtomicU64,
+    gave_up: AtomicU64,
 }
 
 /// Coarse lifecycle state reported over the control protocol.
@@ -542,9 +685,23 @@ impl SessionState {
     }
 }
 
+/// Fine-grained progress reported over the control protocol: the coarse
+/// status plus which supervision attempt is running and the pipeline
+/// phase it has reached (`"align"`, `"coreset"`, or `"train"`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SessionProgress {
+    pub status: SessionStatus,
+    /// 0-based attempt counter; anything above 0 means the supervisor
+    /// retried.
+    pub attempt: u32,
+    pub phase: String,
+}
+
 struct Entry {
     spec: SessionSpec,
     state: SessionState,
+    attempt: u32,
+    phase: &'static str,
 }
 
 struct Registry {
@@ -560,6 +717,7 @@ struct ServeInner {
     work: Condvar,
     done: Condvar,
     shutdown: AtomicBool,
+    stats: StatsCells,
 }
 
 /// Multi-session registry + worker pool over one shared wire. See the
@@ -579,6 +737,12 @@ impl ServeCoordinator {
     /// the churn tests, which inject a [`crate::net::FaultTransport`])
     /// plug in.
     pub fn with_wire(cfg: ServeConfig, wire: SharedWire) -> ServeCoordinator {
+        // Chaos is injected below every session's scoping wrapper, so the
+        // schedule's sequence numbering spans ALL sessions on the wire.
+        let wire: SharedWire = match cfg.chaos {
+            Some(schedule) => Arc::new(ChaosTransport::new(wire, schedule)),
+            None => wire,
+        };
         let inner = Arc::new(ServeInner {
             cfg,
             wire,
@@ -590,6 +754,7 @@ impl ServeCoordinator {
             work: Condvar::new(),
             done: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            stats: StatsCells::default(),
         });
         let mut handles = Vec::new();
         for w in 0..cfg.workers.max(1) {
@@ -624,7 +789,10 @@ impl ServeCoordinator {
         }
         reg.next_id += 1;
         let id = reg.next_id;
-        reg.sessions.insert(id, Entry { spec, state: SessionState::Queued });
+        reg.sessions.insert(
+            id,
+            Entry { spec, state: SessionState::Queued, attempt: 0, phase: "align" },
+        );
         reg.queue.push_back(id);
         drop(reg);
         self.inner.work.notify_one();
@@ -634,6 +802,28 @@ impl ServeCoordinator {
     /// Coarse state of a session, `None` for unknown ids.
     pub fn status(&self, id: u64) -> Option<SessionStatus> {
         lock_clean(&self.inner.state).sessions.get(&id).map(|e| e.state.status())
+    }
+
+    /// Fine-grained progress (status + supervision attempt + pipeline
+    /// phase), `None` for unknown ids.
+    pub fn progress(&self, id: u64) -> Option<SessionProgress> {
+        lock_clean(&self.inner.state).sessions.get(&id).map(|e| SessionProgress {
+            status: e.state.status(),
+            attempt: e.attempt,
+            phase: e.phase.to_string(),
+        })
+    }
+
+    /// Supervision counters so far (monotonic across the coordinator's
+    /// lifetime).
+    pub fn stats(&self) -> ServeStats {
+        let s = &self.inner.stats;
+        ServeStats {
+            completed: s.completed.load(Ordering::SeqCst),
+            failed: s.failed.load(Ordering::SeqCst),
+            retries: s.retries.load(Ordering::SeqCst),
+            gave_up: s.gave_up.load(Ordering::SeqCst),
+        }
     }
 
     /// Non-blocking result poll.
@@ -724,9 +914,18 @@ fn worker_loop(inner: &ServeInner) {
         // session Failed; the worker and its siblings keep going.
         let outcome = catch_unwind(AssertUnwindSafe(|| run_one(inner, id, &spec)));
         let state = match outcome {
-            Ok(Ok(summary)) => SessionState::Done(Box::new(summary)),
-            Ok(Err(e)) => SessionState::Failed(e.to_string()),
-            Err(_) => SessionState::Failed("session panicked".into()),
+            Ok(Ok(summary)) => {
+                inner.stats.completed.fetch_add(1, Ordering::SeqCst);
+                SessionState::Done(Box::new(summary))
+            }
+            Ok(Err(e)) => {
+                inner.stats.failed.fetch_add(1, Ordering::SeqCst);
+                SessionState::Failed(e.to_string())
+            }
+            Err(_) => {
+                inner.stats.failed.fetch_add(1, Ordering::SeqCst);
+                SessionState::Failed("session panicked".into())
+            }
         };
         {
             let mut reg = lock_clean(&inner.state);
@@ -738,15 +937,113 @@ fn worker_loop(inner: &ServeInner) {
     }
 }
 
+fn set_attempt(inner: &ServeInner, id: u64, attempt: u32) {
+    let mut reg = lock_clean(&inner.state);
+    if let Some(e) = reg.sessions.get_mut(&id) {
+        e.attempt = attempt;
+    }
+}
+
+fn set_phase(inner: &ServeInner, id: u64, phase: &'static str) {
+    let mut reg = lock_clean(&inner.state);
+    if let Some(e) = reg.sessions.get_mut(&id) {
+        e.phase = phase;
+    }
+}
+
+/// The per-session supervisor: run attempts until success, a `Fatal`
+/// error, or the retry schedule runs dry. After a failed-but-`Retryable`
+/// attempt the scoped wire is already torn down (dropped with the
+/// attempt); the supervisor sweeps the session's stale envelopes off the
+/// shared wire, sleeps the next jittered backoff delay, and re-runs from
+/// the last committed phase boundary via the codec'd
+/// [`SessionCheckpoint`] the attempt left behind.
 fn run_one(inner: &ServeInner, id: u64, spec: &SessionSpec) -> Result<ReportSummary> {
+    let policy = spec.retry;
+    let mut backoff = Backoff::new(BackoffConfig {
+        max_attempts: policy.max_attempts,
+        ..policy.backoff
+    });
+    // Trailing slash: sweeps `session/<id>/…` and `session/<id>/r<n>/…`
+    // without ever touching a sibling like `session/<id>0/…`.
+    let sweep_prefix = format!("session/{id}/");
+    let mut ckpt: Option<Vec<u8>> = None;
+    loop {
+        let attempt = backoff.attempt();
+        set_attempt(inner, id, attempt);
+        match run_attempt(inner, id, spec, policy, attempt, &mut ckpt) {
+            Ok(summary) => return Ok(summary),
+            Err(e) if e.is_retryable() => {
+                inner.wire.drain_prefix(&sweep_prefix);
+                match backoff.next_delay() {
+                    Some(delay) => {
+                        inner.stats.retries.fetch_add(1, Ordering::SeqCst);
+                        std::thread::sleep(delay);
+                    }
+                    None => {
+                        inner.stats.gave_up.fetch_add(1, Ordering::SeqCst);
+                        return Err(Error::Runtime(format!(
+                            "serve: session {id} gave up after {} attempts: {e}",
+                            attempt + 1
+                        )));
+                    }
+                }
+            }
+            Err(e) => {
+                // Fatal: no retry, but still sweep the dead session's
+                // in-flight envelopes so they can't rot on the shared wire.
+                inner.wire.drain_prefix(&sweep_prefix);
+                return Err(e);
+            }
+        }
+    }
+}
+
+/// One supervised attempt: materialize the session fresh (setup is
+/// recomputed deterministically from the seed), rewind its meter to the
+/// checkpoint boundary when resuming, and run over an attempt-scoped,
+/// deadline-bounded wire. The commit callback persists each completed
+/// phase boundary as a codec'd blob so the next attempt (if any) skips
+/// the phases that already committed.
+fn run_attempt(
+    inner: &ServeInner,
+    id: u64,
+    spec: &SessionSpec,
+    policy: RetryPolicy,
+    attempt: u32,
+    ckpt: &mut Option<Vec<u8>>,
+) -> Result<ReportSummary> {
     let (session, tr, te) = spec.materialize()?;
-    let scoped = SessionScopedTransport::new(
+    let resume = match ckpt.as_deref() {
+        Some(blob) => Some(SessionCheckpoint::decode(blob)?),
+        None => None,
+    };
+    if let Some(ck) = &resume {
+        // The torn-down attempt may have charged traffic past the
+        // boundary; rewind this fresh meter to the committed totals so
+        // per-edge accounting stays byte-identical to a serial run.
+        session.meter().restore(&ck.meter);
+    }
+    let scoped = SessionScopedTransport::for_attempt(
         Arc::clone(&inner.wire),
         id,
+        attempt,
         inner.cfg.mailbox_budget,
         inner.cfg.backpressure_wait,
-    );
-    let report = session.run_over(&tr, &te, &scoped)?;
+    )
+    .with_recv_deadline(policy.deadline);
+    let mut commit = |ck: SessionCheckpoint| {
+        set_phase(
+            inner,
+            id,
+            match ck.phase {
+                CommittedPhase::Aligned => "coreset",
+                CommittedPhase::Coresetted => "train",
+            },
+        );
+        *ckpt = Some(ck.encode());
+    };
+    let report = session.run_over_resumable(&tr, &te, &scoped, resume.as_ref(), &mut commit)?;
     Ok(ReportSummary::collect(id, &report, session.meter()))
 }
 
@@ -803,7 +1100,7 @@ impl ControlRequest {
 #[derive(Clone, Debug, PartialEq)]
 pub enum ControlReply {
     Submitted(u64),
-    Status(SessionStatus),
+    Status(SessionProgress),
     Pending,
     Done(Box<ReportSummary>),
     Failed(String),
@@ -818,8 +1115,8 @@ impl ControlReply {
             ControlReply::Submitted(id) => {
                 e.u8(10).u64(*id);
             }
-            ControlReply::Status(s) => {
-                e.u8(11).u8(s.tag());
+            ControlReply::Status(p) => {
+                e.u8(11).u8(p.status.tag()).u32(p.attempt).str(&p.phase);
             }
             ControlReply::Pending => {
                 e.u8(12);
@@ -846,7 +1143,11 @@ impl ControlReply {
         let mut d = Decoder::new(buf);
         let reply = match d.u8().map_err(err)? {
             10 => ControlReply::Submitted(d.u64().map_err(err)?),
-            11 => ControlReply::Status(SessionStatus::from_tag(d.u8().map_err(err)?)?),
+            11 => ControlReply::Status(SessionProgress {
+                status: SessionStatus::from_tag(d.u8().map_err(err)?)?,
+                attempt: d.u32().map_err(err)?,
+                phase: d.str().map_err(err)?,
+            }),
             12 => ControlReply::Pending,
             13 => ControlReply::Done(Box::new(ReportSummary::decode_from(&mut d)?)),
             14 => ControlReply::Failed(d.str().map_err(err)?),
@@ -967,8 +1268,8 @@ fn handle_control_frame(
             Ok(id) => (ControlReply::Submitted(id), true),
             Err(e) => (ControlReply::Error(e.to_string()), true),
         },
-        Ok(ControlRequest::Status(id)) => match coord.status(id) {
-            Some(s) => (ControlReply::Status(s), true),
+        Ok(ControlRequest::Status(id)) => match coord.progress(id) {
+            Some(p) => (ControlReply::Status(p), true),
             None => (ControlReply::Error(format!("unknown session id {id}")), true),
         },
         Ok(ControlRequest::Result(id)) => match coord.outcome(id) {
@@ -1006,6 +1307,11 @@ impl ControlClient {
         Ok(ControlClient { stream })
     }
 
+    /// One request/reply frame pair. Transport-level failures — the
+    /// daemon dying mid-reply (reset, EOF, read timeout) or a failed send
+    /// — are classified `Retryable`: the caller may redial and re-issue.
+    /// A reply that arrives but is hostile (oversized, undecodable) stays
+    /// `Fatal`.
     fn call(&mut self, req: &ControlRequest) -> Result<ControlReply> {
         let body = req.encode();
         let mut frame = Vec::with_capacity(8 + body.len());
@@ -1014,11 +1320,11 @@ impl ControlClient {
         self.stream
             .write_all(&frame)
             .and_then(|()| self.stream.flush())
-            .map_err(|e| Error::Net(format!("serve control: send: {e}")))?;
+            .map_err(|e| Error::Net(format!("serve control: send: {e}")).retryable())?;
         let mut len = [0u8; 8];
         self.stream
             .read_exact(&mut len)
-            .map_err(|e| Error::Net(format!("serve control: recv: {e}")))?;
+            .map_err(|e| Error::Net(format!("serve control: recv: {e}")).retryable())?;
         let n = u64::from_le_bytes(len);
         if n > 256 * 1024 * 1024 {
             return Err(Error::Net(format!("serve control: oversized reply ({n} bytes)")));
@@ -1026,7 +1332,7 @@ impl ControlClient {
         let mut buf = vec![0u8; n as usize];
         self.stream
             .read_exact(&mut buf)
-            .map_err(|e| Error::Net(format!("serve control: recv body: {e}")))?;
+            .map_err(|e| Error::Net(format!("serve control: recv body: {e}")).retryable())?;
         ControlReply::decode(&buf)
     }
 
@@ -1040,8 +1346,13 @@ impl ControlClient {
 
     /// Coarse state of a session.
     pub fn status(&mut self, id: u64) -> Result<SessionStatus> {
+        Ok(self.progress(id)?.status)
+    }
+
+    /// Fine-grained progress: status plus supervision attempt and phase.
+    pub fn progress(&mut self, id: u64) -> Result<SessionProgress> {
         match self.call(&ControlRequest::Status(id))? {
-            ControlReply::Status(s) => Ok(s),
+            ControlReply::Status(p) => Ok(p),
             other => Err(unexpected_reply("status", &other)),
         }
     }
@@ -1096,6 +1407,7 @@ fn unexpected_reply(what: &str, reply: &ControlReply) -> Error {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::net::{Fault, FaultTransport};
 
     fn tiny_spec(seed: u64) -> SessionSpec {
         SessionSpec {
@@ -1110,7 +1422,18 @@ mod tests {
 
     #[test]
     fn spec_codec_roundtrip() {
-        let spec = tiny_spec(77);
+        let mut spec = tiny_spec(77);
+        // A non-default policy must ride the wire too.
+        spec.retry = RetryPolicy {
+            max_attempts: 7,
+            backoff: BackoffConfig {
+                base: Duration::from_millis(3),
+                cap: Duration::from_millis(90),
+                max_attempts: 7,
+                seed: 0xabcd,
+            },
+            deadline: Duration::from_secs(5),
+        };
         let mut e = Encoder::new();
         spec.encode_into(&mut e);
         let buf = e.finish();
@@ -1153,7 +1476,11 @@ mod tests {
         };
         let replies = [
             ControlReply::Submitted(4),
-            ControlReply::Status(SessionStatus::Running),
+            ControlReply::Status(SessionProgress {
+                status: SessionStatus::Running,
+                attempt: 1,
+                phase: "train".into(),
+            }),
             ControlReply::Pending,
             ControlReply::Done(Box::new(summary)),
             ControlReply::Failed("boom".into()),
@@ -1262,7 +1589,148 @@ mod tests {
     fn unknown_ids_surface_cleanly() {
         let coord = ServeCoordinator::new(ServeConfig { workers: 1, ..ServeConfig::default() });
         assert!(coord.status(42).is_none());
+        assert!(coord.progress(42).is_none());
         assert!(coord.outcome(42).is_err());
         assert!(coord.wait(42, Duration::from_millis(10)).is_err());
+    }
+
+    /// A quick-fail retry policy for supervisor tests: short recv
+    /// deadlines so a faulted attempt dies in seconds, millisecond
+    /// backoff so the retry starts immediately.
+    fn fast_retry(max_attempts: u32) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts,
+            backoff: BackoffConfig {
+                base: Duration::from_millis(1),
+                cap: Duration::from_millis(4),
+                max_attempts,
+                seed: 11,
+            },
+            deadline: Duration::from_secs(2),
+        }
+    }
+
+    /// The tentpole's recovery contract: kill every attempt-0 train-phase
+    /// send retryably. Align and coreset commit their checkpoints, train
+    /// dies, and the retry — whose `session/1/r1/…` namespace escapes the
+    /// fault's prefix — resumes from the coreset boundary and completes
+    /// with a report byte-identical to the fault-free serial run.
+    #[test]
+    fn supervisor_retries_flaky_train_and_matches_serial() {
+        let mut spec = tiny_spec(61);
+        spec.retry = fast_retry(3);
+        let serial = spec.run_serial(1).unwrap();
+        let wire = FaultTransport::new(
+            ChannelTransport::with_timeout(Duration::from_millis(500)),
+            Fault::FlakyConn,
+        )
+        .on_phase_prefix("session/1/train/");
+        let coord = ServeCoordinator::with_wire(
+            ServeConfig { workers: 1, ..ServeConfig::default() },
+            Arc::new(wire),
+        );
+        let id = coord.submit(spec).unwrap();
+        let got = coord.wait(id, Duration::from_secs(300)).unwrap();
+        assert_eq!(got, serial, "retried session must be byte-identical to serial");
+        let stats = coord.stats();
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.gave_up, 0);
+        assert!(stats.retries >= 1, "the flaky train phase must force a retry");
+        let p = coord.progress(id).unwrap();
+        assert_eq!(p.status, SessionStatus::Done);
+        assert!(p.attempt >= 1, "progress must expose the retry attempt");
+        assert_eq!(p.phase, "train");
+        coord.shutdown();
+    }
+
+    /// A `Fatal` fault (truncated frame → hostile decode) fails the
+    /// session on the spot: zero retries, zero give-ups, and the sibling
+    /// session on the same wire is untouched.
+    #[test]
+    fn fatal_fault_fails_fast_with_zero_retries() {
+        let mut bad = tiny_spec(29);
+        bad.retry = fast_retry(3);
+        let mut good = tiny_spec(61);
+        good.retry = fast_retry(3);
+        let serial = good.run_serial(2).unwrap();
+        // train_over interleaves all roles in one thread, so the first
+        // truncated tensor surfaces its decode error deterministically.
+        let wire = FaultTransport::new(
+            ChannelTransport::with_timeout(Duration::from_millis(500)),
+            Fault::Truncate,
+        )
+        .on_phase_prefix("session/1/train/");
+        let coord = ServeCoordinator::with_wire(
+            ServeConfig { workers: 1, ..ServeConfig::default() },
+            Arc::new(wire),
+        );
+        let id_bad = coord.submit(bad).unwrap();
+        let id_good = coord.submit(good).unwrap();
+        let err = coord.wait(id_bad, Duration::from_secs(300)).unwrap_err();
+        assert!(err.to_string().contains("failed"), "got: {err}");
+        let got = coord.wait(id_good, Duration::from_secs(300)).unwrap();
+        assert_eq!(got, serial, "sibling session must be unaffected");
+        let stats = coord.stats();
+        assert_eq!(stats.retries, 0, "a Fatal failure must never be retried");
+        assert_eq!(stats.gave_up, 0);
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.completed, 1);
+        coord.shutdown();
+    }
+
+    /// When every attempt dies retryably the schedule runs dry: the
+    /// session fails with a give-up error naming the attempt count, and
+    /// `retries`/`gave_up` book the exact schedule.
+    #[test]
+    fn exhausted_retries_give_up_deterministically() {
+        let mut spec = tiny_spec(33);
+        spec.retry = fast_retry(2);
+        // No attempt suffix escapes an all-attempts prefix: align traffic
+        // under `session/1/` AND `session/1/r<n>/` all matches, so every
+        // attempt dies at its first send.
+        let wire = FaultTransport::new(
+            ChannelTransport::with_timeout(Duration::from_millis(500)),
+            Fault::FlakyConn,
+        )
+        .on_phase_prefix("session/1/");
+        let coord = ServeCoordinator::with_wire(
+            ServeConfig { workers: 1, ..ServeConfig::default() },
+            Arc::new(wire),
+        );
+        let id = coord.submit(spec).unwrap();
+        let err = coord.wait(id, Duration::from_secs(120)).unwrap_err();
+        assert!(err.to_string().contains("gave up after 3 attempts"), "got: {err}");
+        let stats = coord.stats();
+        assert_eq!(stats.retries, 2, "max_attempts=2 → exactly two re-runs");
+        assert_eq!(stats.gave_up, 1);
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.completed, 0);
+        coord.shutdown();
+    }
+
+    /// `ServeConfig::chaos` wraps the shared wire: a kill-heavy schedule
+    /// injects faults (visible via the wrapped transport's counters in
+    /// other tests) yet the supervised session still matches serial.
+    #[test]
+    fn chaos_config_wraps_wire_and_sessions_still_match_serial() {
+        let mut spec = tiny_spec(47);
+        spec.retry = fast_retry(6);
+        let serial = spec.run_serial(1).unwrap();
+        let coord = ServeCoordinator::new(ServeConfig {
+            workers: 1,
+            chaos: Some(ChaosSchedule {
+                seed: 7,
+                flaky_every: 400,
+                delay_every: 50,
+                delay: Duration::from_micros(200),
+            }),
+            ..ServeConfig::default()
+        });
+        let id = coord.submit(spec).unwrap();
+        let got = coord.wait(id, Duration::from_secs(300)).unwrap();
+        assert_eq!(got, serial, "chaos-ridden session must still match serial");
+        assert_eq!(coord.stats().completed, 1);
+        coord.shutdown();
     }
 }

@@ -41,7 +41,8 @@ use crate::psi::TpsiProtocol;
 use crate::splitnn::trainer::{ModelKind, TrainConfig};
 
 use super::pipeline::{
-    run_over_transport, Backend, Downstream, FrameworkVariant, PipelineConfig, PipelineReport,
+    run_over_transport, run_resumable, Backend, Downstream, FrameworkVariant, PipelineConfig,
+    PipelineReport, SessionCheckpoint,
 };
 
 /// Which wire a [`Session`] builds for its runs.
@@ -256,6 +257,23 @@ impl Session {
     ) -> Result<PipelineReport> {
         let metered = MeteredTransport::new(net, &self.meter);
         run_over_transport(train, test, &self.cfg, &self.backend, &metered, &self.meter)
+    }
+
+    /// Resumable form of [`Session::run_over`] — the serving supervisor's
+    /// retry currency. `resume` re-enters the lifecycle at a committed
+    /// phase boundary (the caller restores the meter from the checkpoint
+    /// first); `commit` receives a [`SessionCheckpoint`] as each boundary
+    /// completes live. Accounting is identical to [`Session::run_over`].
+    pub(crate) fn run_over_resumable(
+        &self,
+        train: &Dataset,
+        test: &Dataset,
+        net: &dyn Transport,
+        resume: Option<&SessionCheckpoint>,
+        commit: &mut dyn FnMut(SessionCheckpoint),
+    ) -> Result<PipelineReport> {
+        let metered = MeteredTransport::new(net, &self.meter);
+        run_resumable(train, test, &self.cfg, &self.backend, &metered, &self.meter, resume, commit)
     }
 
     /// The session's byte/time accounting (per-edge, per-phase).

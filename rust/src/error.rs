@@ -1,6 +1,25 @@
-//! Crate-wide error type.
+//! Crate-wide error type and the retryability taxonomy.
+//!
+//! Every [`Error`] is classified [`ErrorClass::Retryable`] (a transient
+//! fault a supervisor may retry: stale connection, recv deadline, worker
+//! crash before a phase commit) or [`ErrorClass::Fatal`] (a correctness
+//! fault retrying cannot fix: hostile/undecodable frame, shape mismatch,
+//! backpressure kill). The default is `Fatal` — retryability is opt-in at
+//! the site that *knows* the failure is transient, via
+//! [`Error::retryable`], which wraps the error without erasing its
+//! message. Supervisors branch on [`Error::class`].
 
 use thiserror::Error;
+
+/// Retry-or-give-up classification of an [`Error`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorClass {
+    /// Transient: a supervisor may tear down and retry.
+    Retryable,
+    /// Permanent: retrying would reproduce the same failure (or hide a
+    /// correctness bug); fail fast instead.
+    Fatal,
+}
 
 /// Unified error for every TreeCSS subsystem.
 #[derive(Error, Debug)]
@@ -39,6 +58,37 @@ pub enum Error {
 
     #[error("io: {0}")]
     Io(#[from] std::io::Error),
+
+    /// A transient failure a supervisor may retry. The wrapped error keeps
+    /// its original message; this variant only carries the classification.
+    #[error("retryable: {0}")]
+    Retryable(Box<Error>),
+}
+
+impl Error {
+    /// Mark this error transient. Idempotent: re-wrapping a `Retryable`
+    /// does not nest.
+    pub fn retryable(self) -> Error {
+        match self {
+            Error::Retryable(_) => self,
+            other => Error::Retryable(Box::new(other)),
+        }
+    }
+
+    /// The retry-or-give-up class. Everything is [`ErrorClass::Fatal`]
+    /// unless the raising site explicitly opted in via
+    /// [`Error::retryable`].
+    pub fn class(&self) -> ErrorClass {
+        match self {
+            Error::Retryable(_) => ErrorClass::Retryable,
+            _ => ErrorClass::Fatal,
+        }
+    }
+
+    /// Convenience for `class() == Retryable`.
+    pub fn is_retryable(&self) -> bool {
+        self.class() == ErrorClass::Retryable
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -49,3 +99,30 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_class_is_fatal() {
+        assert_eq!(Error::Net("x".into()).class(), ErrorClass::Fatal);
+        assert_eq!(Error::Data("shape".into()).class(), ErrorClass::Fatal);
+        assert!(!Error::Config("y".into()).is_retryable());
+    }
+
+    #[test]
+    fn retryable_wraps_once_and_keeps_message() {
+        let e = Error::Net("recv timeout at agg".into()).retryable();
+        assert_eq!(e.class(), ErrorClass::Retryable);
+        assert!(e.to_string().contains("recv timeout at agg"), "{e}");
+        // Idempotent: no Retryable(Retryable(..)) nesting.
+        let again = e.retryable();
+        match &again {
+            Error::Retryable(inner) => {
+                assert!(!matches!(**inner, Error::Retryable(_)), "nested wrap")
+            }
+            other => panic!("expected Retryable, got {other:?}"),
+        }
+    }
+}

@@ -22,14 +22,15 @@ use std::sync::Arc;
 use treecss::config::Cli;
 use treecss::coordinator::{
     distributed, Backend, ControlClient, Downstream, FrameworkVariant, Pipeline, ReportSummary,
-    ServeConfig, ServeDaemon, ServeWire, SessionSpec, TransportKind,
+    RetryPolicy, ServeConfig, ServeDaemon, ServeWire, SessionSpec, TransportKind,
 };
 use treecss::coreset::cluster_coreset;
 use treecss::data::synth::{self, PaperDataset};
 use treecss::data::VerticalPartition;
 use treecss::ml::kmeans::ParAssign;
 use treecss::net::{
-    BackendChoice, ChannelTransport, Meter, MeteredTransport, NetConfig, ReactorConfig,
+    BackendChoice, ChannelTransport, ChaosSchedule, Meter, MeteredTransport, NetConfig,
+    ReactorConfig,
 };
 use treecss::psi::common::HeContext;
 use treecss::psi::rsa_psi::RsaPsiConfig;
@@ -139,6 +140,17 @@ protocol on an event-driven reactor — prints `SERVE <addr>` once ready):
   --verify                      with --sessions: also run every spec
                                 serially and fail unless the served
                                 reports are byte-identical
+  --chaos <seed>                seeded fault injection on the shared
+                                wire: deterministic connection kills and
+                                delivery delays; supervised retries must
+                                keep --verify byte-identical
+  --retry-attempts <n>          supervisor retries per session after the
+                                first attempt; retryable failures resume
+                                from the last committed phase checkpoint
+                                (default 2; 0 = fail on first error)
+  --retry-deadline-ms <ms>      per-recv deadline inside each session
+                                attempt — bounds how long a lost peer can
+                                stall a session (default 30000)
   plus the run dataset/pipeline flags as the session template:
   --dataset --scale --model --variant --clients --seed --epochs --lr
   --threads --rsa-bits --he-bits --overlap --clusters --k
@@ -149,7 +161,9 @@ bench-check usage:
                                       provenance must carry non-empty
                                       result tables; projection may not)
 
-(party-worker is internal: the child process half of --distributed.)
+(party-worker is internal: the child process half of --distributed; it
+emits BEAT heartbeat lines on stdout when spawned with --heartbeat-ms,
+and the coordinator reaps + respawns workers whose beats go silent.)
 ";
 
 fn parse_dataset(s: &str) -> Result<PaperDataset> {
@@ -363,13 +377,31 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         backend: BackendChoice::from_name(&cli.opt_or("reactor-backend", "auto"))?,
         ..ReactorConfig::default()
     };
+    let chaos = match cli.opt("chaos") {
+        Some(s) => {
+            let seed: u64 = s
+                .parse()
+                .map_err(|_| treecss::Error::Config(format!("--chaos: bad seed {s:?}")))?;
+            Some(ChaosSchedule::from_seed(seed))
+        }
+        None => None,
+    };
     let cfg = ServeConfig {
         workers: cli.opt_parse("workers", 4)?,
         max_sessions: cli.opt_parse("max-sessions", 64)?,
         mailbox_budget: cli.opt_parse("mailbox-budget", 4096)?,
         max_clients: cli.opt_parse("max-clients", 8)?,
         reactor,
+        chaos,
         ..ServeConfig::default()
+    };
+    let retry_defaults = RetryPolicy::default();
+    let retry = RetryPolicy {
+        max_attempts: cli.opt_parse("retry-attempts", retry_defaults.max_attempts)?,
+        deadline: std::time::Duration::from_millis(
+            cli.opt_parse("retry-deadline-ms", retry_defaults.deadline.as_millis() as u64)?,
+        ),
+        ..retry_defaults
     };
     // The session template every submitted spec starts from.
     let spec = SessionSpec {
@@ -387,6 +419,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         overlap: cli.opt_parse("overlap", 1.0)?,
         clusters: cli.opt_parse("clusters", 8)?,
         knn_k: cli.opt_parse("k", 5)?,
+        retry,
     };
 
     let daemon = ServeDaemon::start(cfg, wire, &listen)?;

@@ -6,10 +6,23 @@
 //! them deterministic and transport-agnostic: the same wrapper exercises
 //! [`ChannelTransport`](super::ChannelTransport) and
 //! [`TcpTransport`](super::TcpTransport) identically.
+//!
+//! Two injection drivers share the [`Fault`] vocabulary:
+//!
+//! * [`FaultTransport`] — surgical: one fault kind on one phase
+//!   prefix/destination, for targeted protocol tests.
+//! * [`ChaosTransport`] — statistical: a seeded [`ChaosSchedule`] decides
+//!   per send (by a deterministic hash of `(seed, sequence number)`)
+//!   whether to kill the connection, delay delivery, or pass the envelope
+//!   through. This is what `treecss serve --chaos <seed>` wraps the shared
+//!   session wire with, so supervisor retry paths are exercised under
+//!   reproducible-rate faults.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 
 use super::meter::PartyId;
 use super::transport::{Envelope, Transport};
@@ -25,6 +38,19 @@ pub enum Fault {
     /// The payload arrives cut in half — the codec's truncation checks
     /// turn it into a decode `Err` at the receiver.
     Truncate,
+    /// Delivery is stalled for the duration, content unchanged — a slow
+    /// link. The only fault that is *equivalence-safe* by construction:
+    /// the bytes, order, and metering are untouched.
+    Delay(Duration),
+    /// The envelope is held back and delivered after the *next* matching
+    /// send (the two swap places). Reordering within one
+    /// `(from, to, phase)` mailbox key corrupts protocol state; across
+    /// keys it is a reordering the mailbox demux already absorbs.
+    Reorder,
+    /// The connection dies under the send: the envelope is lost and the
+    /// sender sees a *Retryable* error — the k-th-connection-killed fault
+    /// of the chaos schedule.
+    FlakyConn,
 }
 
 /// Transport middleware injecting one kind of [`Fault`] into every send
@@ -37,6 +63,9 @@ pub struct FaultTransport<T: Transport> {
     to: Option<PartyId>,
     skip: AtomicU64,
     injected: AtomicU64,
+    /// [`Fault::Reorder`] holding slot: the envelope waiting to swap with
+    /// the next matching send.
+    held: Mutex<Option<Envelope>>,
 }
 
 impl<T: Transport> FaultTransport<T> {
@@ -51,6 +80,7 @@ impl<T: Transport> FaultTransport<T> {
             to: None,
             skip: AtomicU64::new(0),
             injected: AtomicU64::new(0),
+            held: Mutex::new(None),
         }
     }
 
@@ -111,6 +141,25 @@ impl<T: Transport> Transport for FaultTransport<T> {
                 payload.truncate(payload.len() / 2);
                 self.inner.send(Envelope::new(env.from, env.to, &env.phase, payload))
             }
+            Fault::Delay(d) => {
+                std::thread::sleep(d);
+                self.inner.send(env)
+            }
+            Fault::Reorder => {
+                // Swap with the held envelope: the previous matching send
+                // (if any) goes out *after* this one.
+                let prev = {
+                    let mut held = self.held.lock().unwrap_or_else(|e| e.into_inner());
+                    held.replace(env)
+                };
+                match prev {
+                    Some(older) => self.inner.send(older),
+                    None => Ok(0.0),
+                }
+            }
+            Fault::FlakyConn => {
+                Err(Error::Net("fault: connection killed under send".into()).retryable())
+            }
         }
     }
 
@@ -118,8 +167,173 @@ impl<T: Transport> Transport for FaultTransport<T> {
         self.inner.recv(at, from, phase)
     }
 
+    fn recv_deadline(
+        &self,
+        at: PartyId,
+        from: PartyId,
+        phase: &str,
+        deadline: Duration,
+    ) -> Result<Envelope> {
+        self.inner.recv_deadline(at, from, phase, deadline)
+    }
+
+    fn pending(&self) -> usize {
+        // A held Reorder envelope is undelivered traffic: the leak check
+        // at session exit must see it.
+        let held = usize::from(
+            self.held.lock().unwrap_or_else(|e| e.into_inner()).is_some(),
+        );
+        self.inner.pending() + held
+    }
+
+    fn drain_prefix(&self, prefix: &str) -> usize {
+        let mut dropped = self.inner.drain_prefix(prefix);
+        let mut held = self.held.lock().unwrap_or_else(|e| e.into_inner());
+        if held.as_ref().is_some_and(|env| env.phase.starts_with(prefix)) {
+            *held = None;
+            dropped += 1;
+        }
+        dropped
+    }
+}
+
+/// Seeded, rate-based fault plan for [`ChaosTransport`].
+///
+/// Every send is numbered by an atomic sequence counter; the schedule
+/// hashes `(seed, sequence)` with SplitMix64 and maps the hash onto the
+/// configured rates. The *plan* is a pure function — `decide(n)` always
+/// answers the same for the same `(seed, n)` — so a chaos run is
+/// reproducible up to thread interleaving of the sequence numbers, and
+/// the wire-format of a schedule is just its four numbers (see
+/// `treecss serve --chaos`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChaosSchedule {
+    /// Hash seed; same seed, same plan.
+    pub seed: u64,
+    /// Roughly one in `flaky_every` sends dies with a Retryable
+    /// connection-kill ([`Fault::FlakyConn`]); 0 disables.
+    pub flaky_every: u64,
+    /// Roughly one in `delay_every` sends is stalled by `delay`
+    /// ([`Fault::Delay`]); 0 disables.
+    pub delay_every: u64,
+    /// Stall applied to delayed sends.
+    pub delay: Duration,
+}
+
+impl ChaosSchedule {
+    /// The default `--chaos <seed>` plan: gentle rates tuned so a
+    /// supervised session fleet always finishes within its retry budget
+    /// (kills are rare; delays are frequent but harmless) while retries
+    /// are still exercised on most multi-session runs.
+    pub fn from_seed(seed: u64) -> ChaosSchedule {
+        ChaosSchedule {
+            seed,
+            flaky_every: 1500,
+            delay_every: 40,
+            delay: Duration::from_millis(1),
+        }
+    }
+
+    /// The fault (if any) for send number `n`. Pure: the same `(seed, n)`
+    /// always produces the same answer.
+    pub fn decide(&self, n: u64) -> Option<Fault> {
+        let mut z = self.seed ^ n.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        if self.flaky_every > 0 && z % self.flaky_every == 0 {
+            return Some(Fault::FlakyConn);
+        }
+        if self.delay_every > 0 && (z >> 32) % self.delay_every == 0 {
+            return Some(Fault::Delay(self.delay));
+        }
+        None
+    }
+}
+
+/// Statistical fault middleware: applies a [`ChaosSchedule`] to every
+/// send crossing it. Receives pass through untouched — chaos lives on the
+/// send side, where a lost envelope surfaces at the receiver as a recv
+/// deadline (Retryable) and a killed connection surfaces at the sender
+/// (Retryable), both of which a supervisor recovers from.
+pub struct ChaosTransport<T: Transport> {
+    inner: T,
+    schedule: ChaosSchedule,
+    seq: AtomicU64,
+    killed: AtomicU64,
+    delayed: AtomicU64,
+}
+
+impl<T: Transport> ChaosTransport<T> {
+    pub fn new(inner: T, schedule: ChaosSchedule) -> Self {
+        ChaosTransport {
+            inner,
+            schedule,
+            seq: AtomicU64::new(0),
+            killed: AtomicU64::new(0),
+            delayed: AtomicU64::new(0),
+        }
+    }
+
+    /// Connection kills injected so far.
+    pub fn killed(&self) -> u64 {
+        self.killed.load(Ordering::SeqCst)
+    }
+
+    /// Delays injected so far.
+    pub fn delayed(&self) -> u64 {
+        self.delayed.load(Ordering::SeqCst)
+    }
+
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T: Transport> Transport for ChaosTransport<T> {
+    fn send(&self, env: Envelope) -> Result<f64> {
+        let n = self.seq.fetch_add(1, Ordering::SeqCst);
+        match self.schedule.decide(n) {
+            Some(Fault::FlakyConn) => {
+                self.killed.fetch_add(1, Ordering::SeqCst);
+                Err(Error::Net(format!(
+                    "chaos: connection killed under send #{n} (phase {:?})",
+                    env.phase
+                ))
+                .retryable())
+            }
+            Some(Fault::Delay(d)) => {
+                self.delayed.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(d);
+                self.inner.send(env)
+            }
+            // The seeded schedule only emits FlakyConn/Delay — the two
+            // kinds that cannot silently corrupt a session. Anything else
+            // passes through.
+            _ => self.inner.send(env),
+        }
+    }
+
+    fn recv(&self, at: PartyId, from: PartyId, phase: &str) -> Result<Envelope> {
+        self.inner.recv(at, from, phase)
+    }
+
+    fn recv_deadline(
+        &self,
+        at: PartyId,
+        from: PartyId,
+        phase: &str,
+        deadline: Duration,
+    ) -> Result<Envelope> {
+        self.inner.recv_deadline(at, from, phase, deadline)
+    }
+
     fn pending(&self) -> usize {
         self.inner.pending()
+    }
+
+    fn drain_prefix(&self, prefix: &str) -> usize {
+        self.inner.drain_prefix(prefix)
     }
 }
 
@@ -159,6 +373,105 @@ mod tests {
         let t = FaultTransport::new(ChannelTransport::new(), Fault::Truncate);
         t.send(Envelope::new(A, B, "p", vec![1, 2, 3, 4])).unwrap();
         assert_eq!(t.recv(B, A, "p").unwrap().payload, vec![1, 2]);
+    }
+
+    #[test]
+    fn delay_stalls_but_delivers_unchanged() {
+        let t = FaultTransport::new(ChannelTransport::new(), Fault::Delay(Duration::from_millis(30)));
+        let t0 = std::time::Instant::now();
+        t.send(Envelope::new(A, B, "p", vec![1, 2, 3])).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(30), "send must stall");
+        assert_eq!(t.recv(B, A, "p").unwrap().payload, vec![1, 2, 3], "content untouched");
+        assert_eq!(t.pending(), 0);
+    }
+
+    #[test]
+    fn reorder_swaps_consecutive_matching_sends() {
+        let t = FaultTransport::new(
+            ChannelTransport::with_timeout(Duration::from_millis(10)),
+            Fault::Reorder,
+        );
+        t.send(Envelope::new(A, B, "p", vec![1])).unwrap();
+        // First matching send is held: undelivered traffic the leak check
+        // must see.
+        assert_eq!(t.pending(), 1, "held envelope counts as pending");
+        t.send(Envelope::new(A, B, "p", vec![2])).unwrap();
+        // [2] went out, [1] is now held in its place.
+        assert_eq!(t.recv(B, A, "p").unwrap().payload, vec![2]);
+        t.send(Envelope::new(A, B, "p", vec![3])).unwrap();
+        assert_eq!(t.recv(B, A, "p").unwrap().payload, vec![1]);
+        // Draining the prefix clears the held slot too.
+        assert_eq!(t.drain_prefix("p"), 1, "held [3] drained");
+        assert_eq!(t.pending(), 0);
+    }
+
+    #[test]
+    fn flaky_conn_errs_retryably_and_loses_the_envelope() {
+        let t = FaultTransport::new(
+            ChannelTransport::with_timeout(Duration::from_millis(10)),
+            Fault::FlakyConn,
+        )
+        .on_phase_prefix("train/");
+        let err = t.send(Envelope::new(A, B, "train/fwd", vec![1])).unwrap_err();
+        assert!(err.is_retryable(), "connection kill must be Retryable: {err}");
+        assert_eq!(t.pending(), 0, "the envelope is lost, not queued");
+        // Non-matching phases are untouched.
+        t.send(Envelope::new(A, B, "keys/dist", vec![2])).unwrap();
+        assert_eq!(t.recv(B, A, "keys/dist").unwrap().payload, vec![2]);
+    }
+
+    #[test]
+    fn chaos_schedule_is_deterministic_and_rate_bounded() {
+        let s = ChaosSchedule::from_seed(1234);
+        let again = ChaosSchedule::from_seed(1234);
+        let mut kills = 0u64;
+        let mut delays = 0u64;
+        for n in 0..100_000u64 {
+            let d = s.decide(n);
+            assert_eq!(d, again.decide(n), "decide must be pure at n={n}");
+            match d {
+                Some(Fault::FlakyConn) => kills += 1,
+                Some(Fault::Delay(_)) => delays += 1,
+                Some(other) => panic!("schedule emitted unexpected fault {other:?}"),
+                None => {}
+            }
+        }
+        // ~1/1500 kills and ~1/40 delays over 100k sends, with wide slack.
+        assert!((20..=200).contains(&kills), "kill count off the rate: {kills}");
+        assert!((1_500..=4_000).contains(&delays), "delay count off the rate: {delays}");
+
+        let other = ChaosSchedule::from_seed(99);
+        let diverges = (0..10_000).any(|n| other.decide(n) != s.decide(n));
+        assert!(diverges, "different seeds must give different plans");
+    }
+
+    #[test]
+    fn chaos_transport_kills_by_plan_and_counts() {
+        // An every-send kill plan: every send dies Retryable and nothing
+        // reaches the wire.
+        let always = ChaosSchedule {
+            seed: 0,
+            flaky_every: 1,
+            delay_every: 0,
+            delay: Duration::ZERO,
+        };
+        let t = ChaosTransport::new(
+            ChannelTransport::with_timeout(Duration::from_millis(10)),
+            always,
+        );
+        for i in 0..3u8 {
+            let err = t.send(Envelope::new(A, B, "p", vec![i])).unwrap_err();
+            assert!(err.is_retryable(), "{err}");
+        }
+        assert_eq!(t.killed(), 3);
+        assert_eq!(t.pending(), 0);
+
+        // A never-fault plan passes everything through.
+        let never = ChaosSchedule { seed: 0, flaky_every: 0, delay_every: 0, delay: Duration::ZERO };
+        let t = ChaosTransport::new(ChannelTransport::new(), never);
+        t.send(Envelope::new(A, B, "p", vec![7])).unwrap();
+        assert_eq!(t.recv(B, A, "p").unwrap().payload, vec![7]);
+        assert_eq!(t.killed() + t.delayed(), 0);
     }
 
     #[test]

@@ -132,6 +132,21 @@ impl Meter {
     pub fn reset(&self) {
         self.inner.lock().unwrap().edges.clear();
     }
+
+    /// Snapshot every edge for a session checkpoint. Same shape as
+    /// [`Meter::edges`]; paired with [`Meter::restore`].
+    pub fn snapshot(&self) -> Vec<((PartyId, PartyId, String), EdgeStats)> {
+        self.edges()
+    }
+
+    /// Replace all counters with a [`Meter::snapshot`]. A retried session
+    /// restores the meter to its last committed phase boundary so the
+    /// aborted attempt's partial traffic cannot leak into the per-edge
+    /// totals (which are compared byte-for-byte against serial runs).
+    pub fn restore(&self, snap: &[((PartyId, PartyId, String), EdgeStats)]) {
+        let mut g = self.inner.lock().unwrap();
+        g.edges = snap.iter().cloned().collect();
+    }
 }
 
 impl Default for Meter {

@@ -34,11 +34,13 @@ pub mod tcp;
 pub mod transport;
 
 pub use cost::NetConfig;
-pub use fault::{Fault, FaultTransport};
+pub use fault::{ChaosSchedule, ChaosTransport, Fault, FaultTransport};
 pub use meter::{Meter, PartyId};
 pub use reactor::{
     BackendChoice, ConnPool, FrameSink, Reactor, ReactorConfig, ReactorStats, ReactorTcpTransport,
     ReactorTcpTransportBuilder, Replies,
 };
 pub use tcp::{TcpTransport, TcpTransportBuilder, TcpTransportConfig};
-pub use transport::{ChannelTransport, Endpoint, Envelope, MeteredTransport, Transport};
+pub use transport::{
+    ChannelTransport, Endpoint, Envelope, MeteredTransport, Transport, TransportConfig,
+};

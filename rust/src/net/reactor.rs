@@ -956,11 +956,30 @@ impl Transport for ReactorTcpTransport {
                 "reactor transport: recv at {at}: party not hosted by this process"
             )));
         }
-        self.mail.pop(at, from, phase, self.cfg.recv_timeout)
+        self.mail.pop(at, from, phase, self.cfg.transport.deadline)
+    }
+
+    fn recv_deadline(
+        &self,
+        at: PartyId,
+        from: PartyId,
+        phase: &str,
+        deadline: Duration,
+    ) -> Result<Envelope> {
+        if !self.local_addrs.contains_key(&at) {
+            return Err(Error::Net(format!(
+                "reactor transport: recv at {at}: party not hosted by this process"
+            )));
+        }
+        self.mail.pop(at, from, phase, deadline)
     }
 
     fn pending(&self) -> usize {
         self.mail.pending()
+    }
+
+    fn drain_prefix(&self, prefix: &str) -> usize {
+        self.mail.drain_prefix(prefix)
     }
 }
 

@@ -46,21 +46,23 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::error::{Error, Result};
+use crate::util::backoff::{self, BackoffConfig};
 use crate::util::codec::{Decoder, Encoder};
 
 use super::meter::PartyId;
-use super::transport::{Envelope, Mailboxes, Transport};
+use super::transport::{Envelope, Mailboxes, Transport, TransportConfig};
 
 /// Knobs of the socket wire.
 #[derive(Clone, Copy, Debug)]
 pub struct TcpTransportConfig {
-    /// How long `recv` waits for a frame to arrive before failing (the
-    /// same deadline discipline as `ChannelTransport`).
-    pub recv_timeout: Duration,
-    /// Dial attempts before a send gives up on an unreachable peer.
-    pub dial_attempts: u32,
-    /// Pause between dial attempts.
-    pub dial_backoff: Duration,
+    /// Shared receive policy: [`TransportConfig::deadline`] bounds how
+    /// long `recv` waits for a frame (same discipline as
+    /// `ChannelTransport`; per-phase callers override via
+    /// [`Transport::recv_deadline`]).
+    pub transport: TransportConfig,
+    /// Dial schedule: capped jittered exponential backoff, shared with
+    /// the send-path redial. Exhausting it is a *Retryable* error.
+    pub dial_backoff: BackoffConfig,
     /// Frames whose length prefix exceeds this are rejected before any
     /// allocation (hostile-length posture, applied at the frame layer).
     pub max_frame_bytes: u64,
@@ -74,9 +76,16 @@ pub struct TcpTransportConfig {
 impl Default for TcpTransportConfig {
     fn default() -> Self {
         TcpTransportConfig {
-            recv_timeout: Duration::from_secs(30),
-            dial_attempts: 40,
-            dial_backoff: Duration::from_millis(25),
+            transport: TransportConfig::default(),
+            // Comparable total wait to the old fixed 40 × 25 ms schedule,
+            // but front-loaded: early attempts are near-immediate (fast
+            // startup races), later ones pin at the cap.
+            dial_backoff: BackoffConfig {
+                base: Duration::from_millis(2),
+                cap: Duration::from_millis(100),
+                max_attempts: 24,
+                seed: 0x7ee5_d1a1,
+            },
             max_frame_bytes: 256 * 1024 * 1024,
             handler_poll: Duration::from_millis(100),
         }
@@ -194,7 +203,10 @@ pub(crate) fn send_frame_reconnecting(
         *slot = None;
     }
     let mut fresh = dial(addr, cfg)?;
-    write_frame(&mut fresh, body)?;
+    // A write failure on the *fresh* connection still means "peer gone
+    // right now", not a protocol bug — classified transient so a
+    // supervisor may respawn/retry.
+    write_frame(&mut fresh, body).map_err(|e| Error::from(e).retryable())?;
     *slot = Some(fresh);
     Ok(())
 }
@@ -219,8 +231,15 @@ impl Shared {
     /// Shares the redial-and-retransmit posture of `Transport::send`.
     fn forward_frame(&self, addr: SocketAddr, body: &[u8]) -> Result<()> {
         let mut conn = lock_clean(&self.forward_conn);
-        send_frame_reconnecting(&mut conn, addr, &self.cfg, body)
-            .map_err(|e| Error::Net(format!("tcp forward to {addr}: {e}")))
+        send_frame_reconnecting(&mut conn, addr, &self.cfg, body).map_err(|e| {
+            let retry = e.is_retryable();
+            let wrapped = Error::Net(format!("tcp forward to {addr}: {e}"));
+            if retry {
+                wrapped.retryable()
+            } else {
+                wrapped
+            }
+        })
     }
 
     /// `read_exact` in poll-sized steps: the stream carries a
@@ -269,24 +288,18 @@ impl Shared {
     }
 }
 
+/// Dial under the shared capped-jittered-backoff schedule
+/// (`util::backoff` — the one retry-delay implementation, reused by the
+/// send-path redial and the serve supervisor). An exhausted schedule is a
+/// *Retryable* error: the peer may simply not be up yet.
 fn dial(addr: SocketAddr, cfg: &TcpTransportConfig) -> Result<TcpStream> {
-    let mut last: Option<std::io::Error> = None;
-    for attempt in 0..cfg.dial_attempts.max(1) {
-        match TcpStream::connect(addr) {
-            Ok(s) => {
-                let _ = s.set_nodelay(true);
-                return Ok(s);
-            }
-            Err(e) => {
-                last = Some(e);
-                if attempt + 1 < cfg.dial_attempts.max(1) {
-                    std::thread::sleep(cfg.dial_backoff);
-                }
-            }
+    backoff::retry(cfg.dial_backoff, |_attempt| match TcpStream::connect(addr) {
+        Ok(s) => {
+            let _ = s.set_nodelay(true);
+            Ok(s)
         }
-    }
-    let why = last.map(|e| e.to_string()).unwrap_or_else(|| "no attempts".into());
-    Err(Error::Net(format!("tcp dial {addr}: {why}")))
+        Err(e) => Err(Error::Net(format!("tcp dial {addr}: {e}")).retryable()),
+    })
 }
 
 fn accept_loop(shared: Arc<Shared>, listener: TcpListener) {
@@ -485,8 +498,15 @@ impl Transport for TcpTransport {
         };
         let mut conn = lock_clean(&slot);
         let body = encode_envelope(&env);
-        send_frame_reconnecting(&mut conn, addr, &self.shared.cfg, &body)
-            .map_err(|e| Error::Net(format!("tcp send to {to} at {addr}: {e}")))?;
+        send_frame_reconnecting(&mut conn, addr, &self.shared.cfg, &body).map_err(|e| {
+            let retry = e.is_retryable();
+            let wrapped = Error::Net(format!("tcp send to {to} at {addr}: {e}"));
+            if retry {
+                wrapped.retryable()
+            } else {
+                wrapped
+            }
+        })?;
         Ok(0.0)
     }
 
@@ -502,11 +522,32 @@ impl Transport for TcpTransport {
                 "tcp: recv at {at}: party neither hosted by this process nor peered"
             )));
         }
-        self.shared.mail.pop(at, from, phase, self.shared.cfg.recv_timeout)
+        self.shared.mail.pop(at, from, phase, self.shared.cfg.transport.deadline)
+    }
+
+    fn recv_deadline(
+        &self,
+        at: PartyId,
+        from: PartyId,
+        phase: &str,
+        deadline: Duration,
+    ) -> Result<Envelope> {
+        let known =
+            self.local_addrs.contains_key(&at) || lock_clean(&self.peers).contains_key(&at);
+        if !known {
+            return Err(Error::Net(format!(
+                "tcp: recv at {at}: party neither hosted by this process nor peered"
+            )));
+        }
+        self.shared.mail.pop(at, from, phase, deadline)
     }
 
     fn pending(&self) -> usize {
         self.shared.mail.pending()
+    }
+
+    fn drain_prefix(&self, prefix: &str) -> usize {
+        self.shared.mail.drain_prefix(prefix)
     }
 }
 
@@ -651,12 +692,36 @@ mod tests {
     #[test]
     fn recv_times_out_when_nothing_is_sent() {
         let cfg = TcpTransportConfig {
-            recv_timeout: Duration::from_millis(50),
+            transport: TransportConfig { deadline: Duration::from_millis(50) },
             ..Default::default()
         };
         let t = TcpTransportBuilder::with_config(cfg).host(B).build().unwrap();
         let err = t.recv(B, A, "never").unwrap_err();
         assert!(err.to_string().contains("timeout"), "{err}");
+        assert!(err.is_retryable(), "recv deadline miss must be Retryable");
+    }
+
+    #[test]
+    fn exhausted_dial_schedule_is_a_retryable_error() {
+        // A port nothing listens on: bind to learn a free port, then close
+        // the listener before dialing.
+        let addr = {
+            let l = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            l.local_addr().unwrap()
+        };
+        let cfg = TcpTransportConfig {
+            dial_backoff: BackoffConfig {
+                base: Duration::from_micros(100),
+                cap: Duration::from_millis(1),
+                max_attempts: 3,
+                seed: 1,
+            },
+            ..Default::default()
+        };
+        let t = TcpTransportBuilder::with_config(cfg).host(A).peer(B, addr).build().unwrap();
+        let err = t.send(Envelope::new(A, B, "p", vec![1])).unwrap_err();
+        assert!(err.is_retryable(), "dial exhaustion must be Retryable: {err}");
+        assert!(err.to_string().contains("dial"), "{err}");
     }
 
     #[test]

@@ -72,6 +72,24 @@ impl Envelope {
     }
 }
 
+/// Cross-transport receive policy: how long a `recv` with no explicit
+/// deadline may block before failing. Transports embed this instead of
+/// growing ad-hoc timeout fields; callers that know their phase's budget
+/// override per call via [`Transport::recv_deadline`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransportConfig {
+    /// Default per-recv deadline. A deadline miss is a *Retryable* error
+    /// (the peer may be slow, crashed-and-respawning, or its frames lost
+    /// to a transient fault — a supervisor can re-run the phase).
+    pub deadline: Duration,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig { deadline: Duration::from_secs(30) }
+    }
+}
+
 /// A pluggable wire between parties.
 ///
 /// `send` is buffered and non-blocking (the sender's NIC queues the
@@ -87,6 +105,21 @@ pub trait Transport: Sync {
     /// `phase`, in send order.
     fn recv(&self, at: PartyId, from: PartyId, phase: &str) -> Result<Envelope>;
 
+    /// [`Transport::recv`] with an explicit per-call deadline, overriding
+    /// the transport's configured default. Mailbox-backed transports honor
+    /// it exactly; the default implementation falls back to `recv` (the
+    /// transport's own deadline still bounds the wait — never a hang).
+    fn recv_deadline(
+        &self,
+        at: PartyId,
+        from: PartyId,
+        phase: &str,
+        deadline: Duration,
+    ) -> Result<Envelope> {
+        let _ = deadline;
+        self.recv(at, from, phase)
+    }
+
     /// Envelopes accepted by this transport but not yet consumed by a
     /// `recv` — the undelivered traffic sitting in *local* mailboxes. A
     /// finished protocol must leave the wire empty; the session runner
@@ -94,6 +127,17 @@ pub trait Transport: Sync {
     /// exit into an `Err`. Middleware delegates; transports that cannot
     /// inspect their mailboxes report 0.
     fn pending(&self) -> usize {
+        0
+    }
+
+    /// Discard every queued envelope whose phase starts with `prefix`,
+    /// returning how many were dropped. The serve supervisor calls this
+    /// between attempts so a retried session starts from a clean wire
+    /// (stale frames from the aborted attempt must not be replayed into
+    /// the next one). Transports without inspectable mailboxes drop
+    /// nothing and return 0.
+    fn drain_prefix(&self, prefix: &str) -> usize {
+        let _ = prefix;
         0
     }
 }
@@ -110,8 +154,22 @@ impl<T: Transport + ?Sized> Transport for &T {
         (**self).recv(at, from, phase)
     }
 
+    fn recv_deadline(
+        &self,
+        at: PartyId,
+        from: PartyId,
+        phase: &str,
+        deadline: Duration,
+    ) -> Result<Envelope> {
+        (**self).recv_deadline(at, from, phase, deadline)
+    }
+
     fn pending(&self) -> usize {
         (**self).pending()
+    }
+
+    fn drain_prefix(&self, prefix: &str) -> usize {
+        (**self).drain_prefix(prefix)
     }
 }
 
@@ -126,8 +184,53 @@ impl<T: Transport + ?Sized> Transport for Box<T> {
         (**self).recv(at, from, phase)
     }
 
+    fn recv_deadline(
+        &self,
+        at: PartyId,
+        from: PartyId,
+        phase: &str,
+        deadline: Duration,
+    ) -> Result<Envelope> {
+        (**self).recv_deadline(at, from, phase, deadline)
+    }
+
     fn pending(&self) -> usize {
         (**self).pending()
+    }
+
+    fn drain_prefix(&self, prefix: &str) -> usize {
+        (**self).drain_prefix(prefix)
+    }
+}
+
+/// Forwarding impl for shared type-erased wires (`Arc<dyn Transport>`) —
+/// lets middleware like [`crate::net::ChaosTransport`] wrap the serving
+/// plane's shared wire by value.
+impl<T: Transport + ?Sized> Transport for std::sync::Arc<T> {
+    fn send(&self, env: Envelope) -> Result<f64> {
+        (**self).send(env)
+    }
+
+    fn recv(&self, at: PartyId, from: PartyId, phase: &str) -> Result<Envelope> {
+        (**self).recv(at, from, phase)
+    }
+
+    fn recv_deadline(
+        &self,
+        at: PartyId,
+        from: PartyId,
+        phase: &str,
+        deadline: Duration,
+    ) -> Result<Envelope> {
+        (**self).recv_deadline(at, from, phase, deadline)
+    }
+
+    fn pending(&self) -> usize {
+        (**self).pending()
+    }
+
+    fn drain_prefix(&self, prefix: &str) -> usize {
+        (**self).drain_prefix(prefix)
     }
 }
 
@@ -176,9 +279,13 @@ impl Mailboxes {
             }
             let now = std::time::Instant::now();
             if now >= deadline {
+                // Retryable: the sender may be slow, mid-respawn, or its
+                // frames lost to a transient fault — a supervisor can
+                // re-run the phase from its last checkpoint.
                 return Err(Error::Net(format!(
                     "recv timeout at {at} waiting for {from} phase {phase:?}"
-                )));
+                ))
+                .retryable());
             }
             let (guard, _timeout) =
                 self.arrived.wait_timeout(boxes, deadline - now).unwrap();
@@ -189,6 +296,23 @@ impl Mailboxes {
     pub(crate) fn pending(&self) -> usize {
         self.boxes.lock().unwrap().values().map(|q| q.len()).sum()
     }
+
+    /// Drop every queued envelope whose phase starts with `prefix`;
+    /// returns the number dropped. Empty queues are removed so the map
+    /// does not accumulate dead keys across retried sessions.
+    pub(crate) fn drain_prefix(&self, prefix: &str) -> usize {
+        let mut boxes = self.boxes.lock().unwrap();
+        let mut dropped = 0;
+        boxes.retain(|(_, _, phase), q| {
+            if phase.starts_with(prefix) {
+                dropped += q.len();
+                false
+            } else {
+                true
+            }
+        });
+        dropped
+    }
 }
 
 /// In-memory transport: FIFO mailboxes + a condvar, usable across the
@@ -197,17 +321,22 @@ impl Mailboxes {
 /// bug leaves a message unsent.
 pub struct ChannelTransport {
     mail: Mailboxes,
-    recv_timeout: Duration,
+    cfg: TransportConfig,
 }
 
 impl ChannelTransport {
     pub fn new() -> Self {
-        Self::with_timeout(Duration::from_secs(30))
+        Self::with_config(TransportConfig::default())
     }
 
     /// A transport whose `recv` fails after `timeout` without a message.
     pub fn with_timeout(timeout: Duration) -> Self {
-        ChannelTransport { mail: Mailboxes::new(), recv_timeout: timeout }
+        Self::with_config(TransportConfig { deadline: timeout })
+    }
+
+    /// A transport with an explicit receive policy.
+    pub fn with_config(cfg: TransportConfig) -> Self {
+        ChannelTransport { mail: Mailboxes::new(), cfg }
     }
 }
 
@@ -224,11 +353,25 @@ impl Transport for ChannelTransport {
     }
 
     fn recv(&self, at: PartyId, from: PartyId, phase: &str) -> Result<Envelope> {
-        self.mail.pop(at, from, phase, self.recv_timeout)
+        self.mail.pop(at, from, phase, self.cfg.deadline)
+    }
+
+    fn recv_deadline(
+        &self,
+        at: PartyId,
+        from: PartyId,
+        phase: &str,
+        deadline: Duration,
+    ) -> Result<Envelope> {
+        self.mail.pop(at, from, phase, deadline)
     }
 
     fn pending(&self) -> usize {
         self.mail.pending()
+    }
+
+    fn drain_prefix(&self, prefix: &str) -> usize {
+        self.mail.drain_prefix(prefix)
     }
 }
 
@@ -265,8 +408,22 @@ impl<T: Transport> Transport for MeteredTransport<'_, T> {
         self.inner.recv(at, from, phase)
     }
 
+    fn recv_deadline(
+        &self,
+        at: PartyId,
+        from: PartyId,
+        phase: &str,
+        deadline: Duration,
+    ) -> Result<Envelope> {
+        self.inner.recv_deadline(at, from, phase, deadline)
+    }
+
     fn pending(&self) -> usize {
         self.inner.pending()
+    }
+
+    fn drain_prefix(&self, prefix: &str) -> usize {
+        self.inner.drain_prefix(prefix)
     }
 }
 
@@ -355,6 +512,34 @@ mod tests {
         let t = ChannelTransport::with_timeout(Duration::from_millis(10));
         let err = t.recv(B, A, "never").unwrap_err();
         assert!(err.to_string().contains("timeout"), "{err}");
+        // A deadline miss is classified transient — supervisors retry it.
+        assert!(err.is_retryable(), "recv timeout must be Retryable: {err}");
+    }
+
+    #[test]
+    fn recv_deadline_overrides_configured_timeout() {
+        // Configured deadline is long; the per-call deadline is what binds.
+        let t = ChannelTransport::with_timeout(Duration::from_secs(60));
+        let t0 = std::time::Instant::now();
+        let err = t.recv_deadline(B, A, "never", Duration::from_millis(20)).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(5), "per-call deadline ignored");
+        assert!(err.is_retryable());
+        // And a queued message is returned immediately either way.
+        t.send(Envelope::new(A, B, "p", vec![4])).unwrap();
+        assert_eq!(t.recv_deadline(B, A, "p", Duration::from_millis(20)).unwrap().payload, vec![4]);
+    }
+
+    #[test]
+    fn drain_prefix_drops_only_matching_phases() {
+        let t = ChannelTransport::new();
+        t.send(Envelope::new(A, B, "session/2/train/fwd", vec![1])).unwrap();
+        t.send(Envelope::new(A, B, "session/2/train/grad", vec![2])).unwrap();
+        t.send(Envelope::new(A, B, "session/21/train/fwd", vec![3])).unwrap();
+        t.send(Envelope::new(A, B, "other", vec![4])).unwrap();
+        assert_eq!(t.drain_prefix("session/2/"), 2, "exactly session 2's frames");
+        assert_eq!(t.pending(), 2);
+        assert_eq!(t.recv(B, A, "session/21/train/fwd").unwrap().payload, vec![3]);
+        assert_eq!(t.recv(B, A, "other").unwrap().payload, vec![4]);
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! Capped, jittered exponential backoff — the one retry-delay
+//! implementation in the crate.
+//!
+//! Used by the TCP dial path (`net::tcp`), the send-side redial, and the
+//! serve supervisor's between-attempt waits, so every retry loop shares
+//! the same schedule semantics: the *raw* delay doubles from
+//! [`BackoffConfig::base`] until it pins at [`BackoffConfig::cap`], and
+//! each attempt's actual sleep is jittered deterministically (seeded, so
+//! runs are reproducible) into `[raw/2, raw]`. After
+//! [`BackoffConfig::max_attempts`] delays the schedule is exhausted and
+//! [`Backoff::next_delay`] returns `None` — the caller gives up.
+
+use std::time::Duration;
+
+/// Schedule parameters. `Copy` so configs embed it freely.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BackoffConfig {
+    /// First raw delay; doubles each attempt.
+    pub base: Duration,
+    /// Ceiling for the raw delay.
+    pub cap: Duration,
+    /// How many delays the schedule yields before giving up.
+    pub max_attempts: u32,
+    /// Jitter seed: same seed, same schedule (determinism contract).
+    pub seed: u64,
+}
+
+impl Default for BackoffConfig {
+    fn default() -> Self {
+        BackoffConfig {
+            base: Duration::from_millis(10),
+            cap: Duration::from_secs(1),
+            max_attempts: 5,
+            seed: 0,
+        }
+    }
+}
+
+impl BackoffConfig {
+    /// The raw (pre-jitter) delay for `attempt` (0-based): `base * 2^n`,
+    /// saturating, capped at `cap`. Pure, so tests can pin the schedule.
+    pub fn raw_delay(&self, attempt: u32) -> Duration {
+        let base = self.base.as_nanos() as u64;
+        let shifted = if attempt >= 63 { u64::MAX } else { base.saturating_mul(1u64 << attempt) };
+        Duration::from_nanos(shifted.min(self.cap.as_nanos() as u64))
+    }
+}
+
+/// SplitMix64 finalizer — the jitter hash. Private but exercised through
+/// the determinism tests below.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Stateful schedule iterator.
+#[derive(Clone, Debug)]
+pub struct Backoff {
+    cfg: BackoffConfig,
+    attempt: u32,
+}
+
+impl Backoff {
+    pub fn new(cfg: BackoffConfig) -> Backoff {
+        Backoff { cfg, attempt: 0 }
+    }
+
+    /// Attempts consumed so far.
+    pub fn attempt(&self) -> u32 {
+        self.attempt
+    }
+
+    /// The next jittered delay, or `None` when the schedule is exhausted.
+    /// Integer arithmetic throughout: `raw/2 + (hash mod (raw/2 + 1))`,
+    /// i.e. uniformly in `[raw/2, raw]`.
+    pub fn next_delay(&mut self) -> Option<Duration> {
+        if self.attempt >= self.cfg.max_attempts {
+            return None;
+        }
+        let raw = self.cfg.raw_delay(self.attempt).as_nanos() as u64;
+        let half = raw / 2;
+        let span = raw - half + 1;
+        let jit = mix(self.cfg.seed ^ u64::from(self.attempt).wrapping_mul(0xA076_1D64_78BD_642F));
+        let delay = half + jit % span;
+        self.attempt += 1;
+        Some(Duration::from_nanos(delay))
+    }
+}
+
+/// Run `op` under the schedule: call it for attempt 0, and after each
+/// failure sleep the next jittered delay and call it again, until the
+/// schedule is exhausted — then return the last error. This is the shared
+/// dial/redial retry loop.
+pub fn retry<T>(
+    cfg: BackoffConfig,
+    mut op: impl FnMut(u32) -> crate::error::Result<T>,
+) -> crate::error::Result<T> {
+    let mut backoff = Backoff::new(cfg);
+    loop {
+        let attempt = backoff.attempt();
+        match op(attempt) {
+            Ok(v) => return Ok(v),
+            Err(e) => match backoff.next_delay() {
+                Some(d) => std::thread::sleep(d),
+                None => return Err(e),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BackoffConfig {
+        BackoffConfig {
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(160),
+            max_attempts: 7,
+            seed: 42,
+        }
+    }
+
+    /// The capped raw schedule, pinned exactly: doubling then flat at cap.
+    #[test]
+    fn raw_schedule_is_pinned() {
+        let c = cfg();
+        let want_ms: [u64; 7] = [10, 20, 40, 80, 160, 160, 160];
+        for (n, want) in want_ms.iter().enumerate() {
+            assert_eq!(
+                c.raw_delay(n as u32),
+                Duration::from_millis(*want),
+                "attempt {n}"
+            );
+        }
+        // Saturation far past the doubling range stays at cap.
+        assert_eq!(c.raw_delay(63), Duration::from_millis(160));
+        assert_eq!(c.raw_delay(200), Duration::from_millis(160));
+    }
+
+    /// Jittered delays stay within [raw/2, raw], the schedule yields
+    /// exactly `max_attempts` delays, and the same seed reproduces the
+    /// same schedule while a different seed diverges.
+    #[test]
+    fn jitter_is_bounded_deterministic_and_exhausts() {
+        let c = cfg();
+        let mut a = Backoff::new(c);
+        let mut b = Backoff::new(c);
+        let mut delays = Vec::new();
+        for n in 0..c.max_attempts {
+            let raw = c.raw_delay(n);
+            let d = a.next_delay().expect("schedule not exhausted yet");
+            assert_eq!(b.next_delay(), Some(d), "same seed must reproduce attempt {n}");
+            assert!(d >= raw / 2 && d <= raw, "attempt {n}: {d:?} outside [{:?}, {raw:?}]", raw / 2);
+            delays.push(d);
+        }
+        assert_eq!(a.next_delay(), None, "exhausted after max_attempts");
+        assert_eq!(a.attempt(), c.max_attempts);
+
+        let mut other = Backoff::new(BackoffConfig { seed: 43, ..c });
+        let diverged = (0..c.max_attempts).any(|n| other.next_delay() != Some(delays[n as usize]));
+        assert!(diverged, "different seed should jitter differently");
+    }
+
+    /// `retry` returns the first success and stops retrying; an op that
+    /// never succeeds surfaces its last error after max_attempts+1 calls.
+    #[test]
+    fn retry_counts_attempts() {
+        let c = BackoffConfig {
+            base: Duration::from_micros(1),
+            cap: Duration::from_micros(4),
+            max_attempts: 3,
+            seed: 7,
+        };
+        let mut calls = 0;
+        let ok: crate::error::Result<u32> = retry(c, |attempt| {
+            calls += 1;
+            if attempt == 2 {
+                Ok(attempt)
+            } else {
+                Err(crate::error::Error::Net("nope".into()))
+            }
+        });
+        assert_eq!(ok.unwrap(), 2);
+        assert_eq!(calls, 3);
+
+        let mut calls = 0;
+        let err: crate::error::Result<()> = retry(c, |_| {
+            calls += 1;
+            Err(crate::error::Error::Net("always".into()))
+        });
+        assert!(err.is_err());
+        assert_eq!(calls, 4, "initial call + max_attempts retries");
+    }
+}

@@ -1,6 +1,7 @@
 //! Shared substrate utilities (all hand-rolled: the build is offline and the
 //! usual crates — rand, serde, criterion, proptest — are unavailable).
 
+pub mod backoff;
 pub mod check;
 pub mod codec;
 pub mod json;
@@ -9,6 +10,7 @@ pub mod rng;
 pub mod stats;
 pub mod timer;
 
+pub use backoff::{Backoff, BackoffConfig};
 pub use pool::{Parallel, ThreadPool};
 pub use rng::Rng;
 pub use timer::Stopwatch;

@@ -33,6 +33,18 @@ impl Rng {
         Rng::new(self.next_u64() ^ label.wrapping_mul(0xA24B_AED4_963E_E407))
     }
 
+    /// Snapshot the raw xoshiro state — the checkpoint/resume currency of
+    /// the serve supervisor. Restoring via [`Rng::from_state`] continues
+    /// the exact stream.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a [`Rng::state`] snapshot.
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     /// Next raw 64-bit value.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {

@@ -21,7 +21,7 @@ use treecss::data::synth::PaperDataset;
 use treecss::net::{
     poll, BackendChoice, ChannelTransport, Envelope, Fault, FaultTransport, Meter,
     MeteredTransport, NetConfig, PartyId, Reactor, ReactorConfig, ReactorTcpTransport,
-    TcpTransport, TcpTransportBuilder, TcpTransportConfig, Transport,
+    TcpTransport, TcpTransportBuilder, TcpTransportConfig, Transport, TransportConfig,
 };
 use treecss::psi::common::HeContext;
 use treecss::psi::rsa_psi::{self, RsaPsiConfig};
@@ -226,7 +226,7 @@ fn recv_timeout_on_both_transports() {
     assert!(err.to_string().contains("timeout"), "{err}");
 
     let cfg = TcpTransportConfig {
-        recv_timeout: Duration::from_millis(50),
+        transport: TransportConfig { deadline: Duration::from_millis(50) },
         ..Default::default()
     };
     let tcp = TcpTransportBuilder::with_config(cfg).host(B).build().unwrap();
@@ -539,7 +539,7 @@ fn session_errors_on_truncated_train_frames() {
 fn tcp_wire_with_dropped_frames_errors_too() {
     // The same fault middleware composes over the socket transport.
     let cfg = TcpTransportConfig {
-        recv_timeout: Duration::from_millis(100),
+        transport: TransportConfig { deadline: Duration::from_millis(100) },
         ..Default::default()
     };
     let tcp = TcpTransportBuilder::with_config(cfg).hosts([A, B]).build().unwrap();
