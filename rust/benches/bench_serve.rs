@@ -3,16 +3,20 @@
 //! Each cell hosts N seeded sessions behind a live [`ServeDaemon`]
 //! (control protocol over localhost TCP, sessions multiplexed on one
 //! shared wire, phases namespaced `session/<id>/<phase>`) and reports
-//! the wall-clock from first submit to last result, next to the same N
-//! seeds run serially on private wires. Every served report is checked
-//! byte-identical to its serial twin — the `identical` column is part
-//! of the measurement, not an afterthought: a serving plane that is
-//! fast but divergent is wrong.
+//! sessions/sec plus per-session completion-latency percentiles (every
+//! session is awaited on its own control connection, so the p50/p95/p99
+//! columns are real completion latencies, not a single divided wall),
+//! next to the same N seeds run serially on private wires. Every served
+//! report is checked byte-identical to its serial twin — the
+//! `identical` column is part of the measurement, not an afterthought:
+//! a serving plane that is fast but divergent is wrong.
 //!
 //! The `backend` column pits the reactor's two readiness backends
 //! against each other on the TCP wire (`scan` — the portable
 //! nonblocking sweep — vs `epoll` where the Linux shim exists) at 1, 4,
-//! and 64 concurrent sessions, so the epoll win is measured rather than
+//! and 64 concurrent sessions, and the `loops` column shards the
+//! reactor across 1 vs 2 vs 4 independent readiness loops at the
+//! 64-session point — the multi-loop win is measured rather than
 //! modelled.
 //!
 //! The churn table re-runs the 8-session fleet under a pinned
@@ -25,8 +29,11 @@
 //!     cargo bench --bench bench_serve [-- --full]
 //!
 //! `TREECSS_BENCH_REPS` sets repetitions per cell (default 1; the wall
-//! column reports the mean). Alongside the markdown, the run writes
-//! `BENCH_bench_serve.json` (config + every table, machine-readable).
+//! column reports the mean, the percentile columns pool the latencies of
+//! every rep). Alongside the markdown, the run writes
+//! `BENCH_bench_serve.json` (config + every table + raw per-cell wall
+//! samples — the samples feed `treecss bench-check --against`, the CI
+//! regression gate).
 //!
 //! Expected shape: at 4 workers the 4-session wall lands well under 4×
 //! the 1-session wall (sessions overlap on the shared wire; the crypto
@@ -35,12 +42,14 @@
 //! session within scheduling noise. The channel and tcp wires — and the
 //! scan and epoll backends — carry the same reports; the wire and the
 //! readiness mechanism are swappable, the protocol traffic is not. The
-//! backend gap widens with the session count: a scan tick touches every
-//! connection, an epoll tick only the ready ones.
+//! backend gap widens with the session count (a scan tick touches every
+//! connection, an epoll tick only the ready ones), and on a multi-core
+//! host `loops=2/4` should beat `loops=1` at 64 sessions — the point
+//! where one readiness thread saturates.
 
 use std::time::{Duration, Instant};
 
-use treecss::bench::{fmt_secs, JsonReport, Table};
+use treecss::bench::{fmt_secs, JsonReport, Sample, Table};
 use treecss::coordinator::{
     ControlClient, ReportSummary, RetryPolicy, ServeConfig, ServeDaemon, ServeWire, SessionSpec,
 };
@@ -70,35 +79,45 @@ fn spec_for(seed: u64, n: usize, full: bool) -> SessionSpec {
 }
 
 /// Serial ground truth for `n` sessions (ids 1..=n, matching the
-/// daemon's submit-order id assignment) plus its wall-clock.
-fn run_serial_baseline(n: usize, full: bool) -> (Vec<ReportSummary>, f64) {
+/// daemon's submit-order id assignment) plus its wall-clock and the
+/// per-session serial walls (the serial row's "latencies").
+fn run_serial_baseline(n: usize, full: bool) -> (Vec<ReportSummary>, f64, Vec<f64>) {
     let t0 = Instant::now();
+    let mut latencies = Vec::with_capacity(n);
     let serial: Vec<ReportSummary> = (0..n)
         .map(|i| {
-            spec_for(1_000 + i as u64, n, full).run_serial(i as u64 + 1).expect("serial run")
+            let s0 = Instant::now();
+            let rep = spec_for(1_000 + i as u64, n, full)
+                .run_serial(i as u64 + 1)
+                .expect("serial run");
+            latencies.push(s0.elapsed().as_secs_f64());
+            rep
         })
         .collect();
-    (serial, t0.elapsed().as_secs_f64())
+    (serial, t0.elapsed().as_secs_f64(), latencies)
 }
 
 /// One served measurement: a fresh daemon on the given wire + readiness
-/// backend, `n` sessions submitted over one control connection, all
-/// results awaited. Returns (wall, all reports byte-identical to
-/// `serial`).
+/// backend + loop count, `n` sessions submitted over one control
+/// connection, every result awaited on its own control connection (so
+/// completion latencies are per-session, not serialized through one
+/// socket). Returns (wall, per-session completion latencies since first
+/// submit, all reports byte-identical to `serial`).
 fn run_served(
     n: usize,
     full: bool,
     wire: ServeWire,
     backend: BackendChoice,
+    loops: usize,
     workers: usize,
     churn: Option<(ChaosSchedule, RetryPolicy)>,
     serial: &[ReportSummary],
-) -> (f64, bool) {
+) -> (f64, Vec<f64>, bool) {
     let cfg = ServeConfig {
         workers,
         max_clients: 4,
         max_sessions: n.max(64),
-        reactor: ReactorConfig { backend, ..ReactorConfig::default() },
+        reactor: ReactorConfig { backend, loops, ..ReactorConfig::default() },
         chaos: churn.map(|(schedule, _)| schedule),
         ..ServeConfig::default()
     };
@@ -116,30 +135,42 @@ fn run_served(
             client.submit(&spec).expect("submit")
         })
         .collect();
-    let results: Vec<ReportSummary> = ids
-        .iter()
-        .map(|&id| {
-            client.await_result(id, std::time::Duration::from_secs(3600)).expect("await result")
-        })
-        .collect();
+    let results: Vec<(f64, ReportSummary)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = ids
+            .iter()
+            .map(|&id| {
+                scope.spawn(move || {
+                    let mut c = ControlClient::connect(addr).expect("connect await");
+                    let summary =
+                        c.await_result(id, Duration::from_secs(3600)).expect("await result");
+                    (t0.elapsed().as_secs_f64(), summary)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("await thread panicked")).collect()
+    });
     let wall = t0.elapsed().as_secs_f64();
 
-    let identical = results.iter().zip(serial).all(|(got, want)| got == want);
+    let identical = results.iter().zip(serial).all(|((_, got), want)| got == want);
+    let latencies: Vec<f64> = results.iter().map(|(lat, _)| *lat).collect();
     let _ = client.shutdown();
     daemon.shutdown();
-    (wall, identical)
+    (wall, latencies, identical)
 }
 
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
     let reps = bench_reps();
     let session_counts: [usize; 3] = [1, 4, 64];
+    // Sharded-reactor points at the 64-session cell: 1 vs 2 vs 4 loops.
+    let loop_counts: [usize; 3] = [1, 2, 4];
     const WORKERS: usize = 4;
 
     let mut report = JsonReport::new("bench_serve");
     report
         .config("mode", if full { "full" } else { "fast" })
         .config("session_counts", session_counts.to_vec())
+        .config("loop_counts", loop_counts.to_vec())
         .config("workers", WORKERS)
         .config("reps", reps)
         .config("dataset", "RI")
@@ -154,65 +185,104 @@ fn main() {
                 "measured: cargo bench --bench bench_serve, reps={reps}; serve rows \
                  run through a live ServeDaemon (TCP control protocol, sessions \
                  multiplexed on one wire) with the stated reactor readiness \
-                 backend, serial rows are the same seeds on private wires; the \
-                 identical column asserts byte-equality; the 64-session point \
-                 uses a reduced per-session spec; the churn table re-runs the \
-                 8-session fleet under a pinned ChaosSchedule (seeded \
+                 backend and loop count, serial rows are the same seeds on \
+                 private wires; every session is awaited on its own control \
+                 connection, so p50/p95/p99 are per-session completion \
+                 latencies; the identical column asserts byte-equality; the \
+                 64-session point uses a reduced per-session spec and adds \
+                 loops=2/4 rows (the sharded reactor); the churn table re-runs \
+                 the 8-session fleet under a pinned ChaosSchedule (seeded \
                  connection kills + micro-delays) with supervised retries, so \
                  its sessions/sec delta vs the chaos-off row is measured \
-                 recovery overhead"
+                 recovery overhead; samples carry the raw per-rep walls for \
+                 the bench-check regression gate"
             ),
         );
 
-    let mut table = Table::new(
-        "Serving plane — N concurrent sessions vs serial, 4 workers, scan vs epoll",
-        &["sessions", "mode", "wire", "backend", "workers", "wall", "wall/session", "identical"],
+    let mut samples: Vec<Sample> = Vec::new();
+    let mut table = Table::with_percentiles(
+        "Serving plane — N concurrent sessions vs serial, 4 workers, scan vs epoll, 1-4 loops",
+        &[
+            "sessions",
+            "mode",
+            "wire",
+            "backend",
+            "loops",
+            "workers",
+            "wall",
+            "sessions/sec",
+            "identical",
+        ],
     );
 
     for &n in &session_counts {
-        let (serial, serial_wall) = run_serial_baseline(n, full);
-        table.row(vec![
-            n.to_string(),
-            "serial".into(),
-            "-".into(),
-            "-".into(),
-            "1".into(),
-            fmt_secs(serial_wall),
-            fmt_secs(serial_wall / n as f64),
-            "-".into(),
-        ]);
-        let mut cells: Vec<(&str, ServeWire, BackendChoice)> = vec![
-            ("channel", ServeWire::Channel, BackendChoice::Scan),
-            ("tcp", ServeWire::Tcp, BackendChoice::Scan),
+        let (serial, serial_wall, serial_lat) = run_serial_baseline(n, full);
+        samples.push(Sample::from_values(&format!("serial/n={n}"), vec![serial_wall]));
+        table.row_with_latencies(
+            vec![
+                n.to_string(),
+                "serial".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "1".into(),
+                fmt_secs(serial_wall),
+                format!("{:.2}", n as f64 / serial_wall),
+                "-".into(),
+            ],
+            &serial_lat,
+        );
+        let mut cells: Vec<(&str, ServeWire, BackendChoice, usize)> = vec![
+            ("channel", ServeWire::Channel, BackendChoice::Scan, 1),
+            ("tcp", ServeWire::Tcp, BackendChoice::Scan, 1),
         ];
         if poll::supported() {
-            cells.push(("tcp", ServeWire::Tcp, BackendChoice::Epoll));
+            cells.push(("tcp", ServeWire::Tcp, BackendChoice::Epoll, 1));
         }
-        for (wire_name, wire, backend) in cells {
+        if n >= 64 {
+            for &loops in &loop_counts[1..] {
+                cells.push(("tcp", ServeWire::Tcp, BackendChoice::Scan, loops));
+                if poll::supported() {
+                    cells.push(("tcp", ServeWire::Tcp, BackendChoice::Epoll, loops));
+                }
+            }
+        }
+        for (wire_name, wire, backend, loops) in cells {
             let backend_name = match backend {
                 BackendChoice::Epoll => "epoll",
                 _ => "scan",
             };
-            let mut wall_sum = 0.0;
+            let mut walls = Vec::with_capacity(reps);
+            let mut latencies = Vec::with_capacity(reps * n);
             let mut all_identical = true;
             for _ in 0..reps {
-                let (wall, identical) =
-                    run_served(n, full, wire, backend, WORKERS, None, &serial);
-                wall_sum += wall;
+                let (wall, lat, identical) =
+                    run_served(n, full, wire, backend, loops, WORKERS, None, &serial);
+                walls.push(wall);
+                latencies.extend(lat);
                 all_identical &= identical;
             }
-            let wall = wall_sum / reps as f64;
-            table.row(vec![
-                n.to_string(),
-                "serve".into(),
-                wire_name.into(),
-                backend_name.into(),
-                WORKERS.to_string(),
-                fmt_secs(wall),
-                fmt_secs(wall / n as f64),
-                all_identical.to_string(),
-            ]);
-            eprintln!("  done sessions={n} wire={wire_name} backend={backend_name}");
+            let name = format!("serve/n={n}/{wire_name}/{backend_name}/loops={loops}");
+            let sample = Sample::from_values(&name, walls);
+            let wall = sample.mean_s;
+            samples.push(sample);
+            table.row_with_latencies(
+                vec![
+                    n.to_string(),
+                    "serve".into(),
+                    wire_name.into(),
+                    backend_name.into(),
+                    loops.to_string(),
+                    WORKERS.to_string(),
+                    fmt_secs(wall),
+                    format!("{:.2}", n as f64 / wall),
+                    all_identical.to_string(),
+                ],
+                &latencies,
+            );
+            eprintln!(
+                "  done sessions={n} wire={wire_name} backend={backend_name} loops={loops}"
+            );
         }
     }
 
@@ -240,41 +310,50 @@ fn main() {
         delay_every: 40,
         delay: Duration::from_micros(100),
     };
-    let mut churn_table = Table::new(
+    let mut churn_table = Table::with_percentiles(
         "Churn — 8 sessions, seeded chaos schedule (kills + delays) vs fault-free",
         &["sessions", "wire", "chaos", "wall", "sessions/sec", "identical"],
     );
     let churn_n = 8;
-    let (churn_serial, _) = run_serial_baseline(churn_n, false);
+    let (churn_serial, _, _) = run_serial_baseline(churn_n, false);
     for (label, churn) in [("off", None), ("on", Some((chaos, churn_retry)))] {
-        let mut wall_sum = 0.0;
+        let mut walls = Vec::with_capacity(reps);
+        let mut latencies = Vec::with_capacity(reps * churn_n);
         let mut all_identical = true;
         for _ in 0..reps {
-            let (wall, identical) = run_served(
+            let (wall, lat, identical) = run_served(
                 churn_n,
                 false,
                 ServeWire::Tcp,
                 BackendChoice::Scan,
+                1,
                 WORKERS,
                 churn,
                 &churn_serial,
             );
-            wall_sum += wall;
+            walls.push(wall);
+            latencies.extend(lat);
             all_identical &= identical;
         }
-        let wall = wall_sum / reps as f64;
-        churn_table.row(vec![
-            churn_n.to_string(),
-            "tcp".into(),
-            label.into(),
-            fmt_secs(wall),
-            format!("{:.2}", churn_n as f64 / wall),
-            all_identical.to_string(),
-        ]);
+        let sample = Sample::from_values(&format!("churn/chaos={label}"), walls);
+        let wall = sample.mean_s;
+        samples.push(sample);
+        churn_table.row_with_latencies(
+            vec![
+                churn_n.to_string(),
+                "tcp".into(),
+                label.into(),
+                fmt_secs(wall),
+                format!("{:.2}", churn_n as f64 / wall),
+                all_identical.to_string(),
+            ],
+            &latencies,
+        );
         eprintln!("  done churn chaos={label}");
     }
     churn_table.print();
     report.table(&churn_table);
+    report.samples(&samples);
 
     match report.write_at_workspace_root() {
         Ok(path) => eprintln!("wrote {}", path.display()),

@@ -22,20 +22,46 @@ pub struct Sample {
     pub mean_s: f64,
     pub std_s: f64,
     pub reps: usize,
+    /// The raw observations (seconds) behind `mean_s`/`std_s` — kept so
+    /// percentiles can be computed and the JSON artifact carries the full
+    /// distribution, not just its first two moments.
+    pub values: Vec<f64>,
 }
 
 impl Sample {
+    /// Build a sample from raw observations (seconds), deriving
+    /// mean/std/reps.
+    pub fn from_values(name: &str, values: Vec<f64>) -> Sample {
+        Sample {
+            name: name.to_string(),
+            mean_s: stats::mean(&values),
+            std_s: stats::std_dev(&values),
+            reps: values.len(),
+            values,
+        }
+    }
+
+    /// Linear-interpolation percentile of the raw observations
+    /// (`p` in `0..=100`; 0.0 when no values were recorded).
+    pub fn percentile(&self, p: f64) -> f64 {
+        stats::percentile(&self.values, p)
+    }
+
     pub fn pretty(&self) -> String {
         format!("{}: {:.4}s ± {:.4}s (n={})", self.name, self.mean_s, self.std_s, self.reps)
     }
 
-    /// Machine-readable form: `{name, mean_s, std_s, reps}`.
+    /// Machine-readable form: `{name, mean_s, std_s, reps, values}`.
     pub fn to_json(&self) -> Json {
         let mut o = BTreeMap::new();
         o.insert("name".to_string(), Json::Str(self.name.clone()));
         o.insert("mean_s".to_string(), Json::Num(self.mean_s));
         o.insert("std_s".to_string(), Json::Num(self.std_s));
         o.insert("reps".to_string(), Json::from(self.reps));
+        o.insert(
+            "values".to_string(),
+            Json::Arr(self.values.iter().map(|v| Json::Num(*v)).collect()),
+        );
         Json::Obj(o)
     }
 }
@@ -74,12 +100,7 @@ impl Bencher {
             std::hint::black_box(f());
             times.push(sw.elapsed_secs());
         }
-        Sample {
-            name: name.to_string(),
-            mean_s: stats::mean(&times),
-            std_s: stats::std_dev(&times),
-            reps: self.reps,
-        }
+        Sample::from_values(name, times)
     }
 }
 
@@ -111,9 +132,32 @@ impl Table {
         }
     }
 
+    /// A table whose trailing columns are the standard latency percentiles
+    /// (`p50`/`p95`/`p99`); pair with [`Table::row_with_latencies`].
+    pub fn with_percentiles(title: &str, header: &[&str]) -> Self {
+        let mut h: Vec<&str> = header.to_vec();
+        h.extend_from_slice(&["p50", "p95", "p99"]);
+        Table::new(title, &h)
+    }
+
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len(), "column count");
         self.rows.push(cells);
+    }
+
+    /// Append a row to a [`Table::with_percentiles`] table: `cells` covers
+    /// the leading columns and the `p50`/`p95`/`p99` cells are computed
+    /// (linear interpolation) from the raw per-item latencies in
+    /// `latencies_s` (seconds; `-` when empty).
+    pub fn row_with_latencies(&mut self, mut cells: Vec<String>, latencies_s: &[f64]) {
+        for p in [50.0, 95.0, 99.0] {
+            cells.push(if latencies_s.is_empty() {
+                "-".to_string()
+            } else {
+                fmt_secs(stats::percentile(latencies_s, p))
+            });
+        }
+        self.row(cells);
     }
 
     /// Render GitHub-flavoured markdown.
@@ -275,6 +319,95 @@ pub fn validate_artifact(doc: &str) -> std::result::Result<(), String> {
         Err(format!(
             "{target}: provenance must start with `measured` or mention `projection`, \
              got {provenance:?}"
+        ))
+    }
+}
+
+/// Outcome of [`compare_artifacts`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum CompareOutcome {
+    /// The committed artifact is a projection placeholder — there is no
+    /// measured baseline to regress against, so the check skips cleanly.
+    SkippedProjection,
+    /// Every overlapping sample stayed within tolerance. `compared` is how
+    /// many sample names matched (0 when the artifacts share none — e.g.
+    /// after a bench was renamed — which is reported, not failed).
+    Ok { compared: usize },
+}
+
+/// Slowdowns below this absolute delta (seconds) never fail the gate:
+/// sub-5ms means are dominated by scheduler noise, not regressions.
+const COMPARE_ABS_SLACK_S: f64 = 0.005;
+
+/// Regression-gate a freshly measured `BENCH_*.json` against the last
+/// committed artifact for the same target.
+///
+/// Both documents must pass [`validate_artifact`]. A committed artifact
+/// whose provenance mentions `projection` yields
+/// [`CompareOutcome::SkippedProjection`] (placeholders have nothing to
+/// regress against). Otherwise every sample name present in both documents
+/// is compared by `mean_s`: the check fails when
+/// `fresh > committed * tolerance + 5ms` for any shared sample, listing
+/// every offender with its ratio. `tolerance` is a multiplier (e.g. `1.5`
+/// = fail on >50% slowdown); CI uses a generous one because its hosts are
+/// noisy and `reps=1`. Exercised by `treecss bench-check --against`.
+pub fn compare_artifacts(
+    fresh_doc: &str,
+    committed_doc: &str,
+    tolerance: f64,
+) -> std::result::Result<CompareOutcome, String> {
+    if tolerance.is_nan() || tolerance < 1.0 {
+        return Err(format!("tolerance must be >= 1.0, got {tolerance}"));
+    }
+    validate_artifact(fresh_doc).map_err(|e| format!("fresh artifact: {e}"))?;
+    validate_artifact(committed_doc).map_err(|e| format!("committed artifact: {e}"))?;
+    let committed = Json::parse(committed_doc).map_err(|e| e.to_string())?;
+    let provenance = committed
+        .get("config")
+        .and_then(|c| c.get("provenance"))
+        .and_then(|p| p.as_str().ok())
+        .unwrap_or_default();
+    if provenance.contains("projection") {
+        return Ok(CompareOutcome::SkippedProjection);
+    }
+    let fresh = Json::parse(fresh_doc).map_err(|e| e.to_string())?;
+    let means = |doc: &Json| -> BTreeMap<String, f64> {
+        let mut m = BTreeMap::new();
+        if let Some(samples) = doc.get("samples").and_then(|s| s.as_arr().ok()) {
+            for s in samples {
+                if let (Some(name), Some(mean)) = (
+                    s.get("name").and_then(|n| n.as_str().ok()),
+                    s.get("mean_s").and_then(|v| v.as_f64().ok()),
+                ) {
+                    m.insert(name.to_string(), mean);
+                }
+            }
+        }
+        m
+    };
+    let base = means(&committed);
+    let now = means(&fresh);
+    let mut compared = 0usize;
+    let mut regressions = Vec::new();
+    for (name, &b) in &base {
+        let Some(&f) = now.get(name) else { continue };
+        compared += 1;
+        if f > b * tolerance + COMPARE_ABS_SLACK_S {
+            regressions.push(format!(
+                "{name}: {} -> {} ({:.2}x, tolerance {tolerance:.2}x)",
+                fmt_secs(b),
+                fmt_secs(f),
+                f / b.max(1e-12)
+            ));
+        }
+    }
+    if regressions.is_empty() {
+        Ok(CompareOutcome::Ok { compared })
+    } else {
+        Err(format!(
+            "{} regression(s) above tolerance:\n  {}",
+            regressions.len(),
+            regressions.join("\n  ")
         ))
     }
 }
@@ -461,6 +594,87 @@ mod tests {
         assert!(e.contains("config.provenance"), "{e}");
         // Not JSON at all.
         assert!(validate_artifact("not json").is_err());
+    }
+
+    #[test]
+    fn sample_percentiles_and_values_roundtrip() {
+        let s = Sample::from_values("lat", vec![0.010, 0.020, 0.030, 0.040]);
+        assert_eq!(s.reps, 4);
+        assert!((s.mean_s - 0.025).abs() < 1e-12);
+        assert!((s.percentile(50.0) - 0.025).abs() < 1e-12);
+        assert!(s.percentile(99.0) <= 0.040 + 1e-12);
+        let j = Json::parse(&s.to_json().to_string()).unwrap();
+        let values = j.req("values").unwrap().as_arr().unwrap();
+        assert_eq!(values.len(), 4);
+        assert!((values[1].as_f64().unwrap() - 0.020).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_percentile_columns() {
+        let mut t = Table::with_percentiles("lat demo", &["case", "wall"]);
+        t.row_with_latencies(
+            vec!["x".into(), "1.00s".into()],
+            &[0.010, 0.020, 0.030, 0.100],
+        );
+        t.row_with_latencies(vec!["empty".into(), "-".into()], &[]);
+        let md = t.markdown();
+        assert!(md.contains("| case | wall | p50 | p95 | p99 |"), "{md}");
+        assert!(md.contains("| x | 1.00s | 25.00ms |"), "{md}");
+        assert!(md.contains("| empty | - | - | - | - |"), "{md}");
+    }
+
+    fn artifact(provenance: &str, samples: &[(&str, f64)]) -> String {
+        let mut report = JsonReport::new("cmp_demo");
+        report.config("provenance", provenance);
+        let mut t = Table::new("demo", &["a"]);
+        t.row(vec!["1".into()]);
+        report.table(&t);
+        let ss: Vec<Sample> = samples
+            .iter()
+            .map(|(name, mean)| Sample::from_values(name, vec![*mean]))
+            .collect();
+        report.samples(&ss);
+        report.to_json().to_string()
+    }
+
+    #[test]
+    fn compare_artifacts_regression_gate() {
+        let committed = artifact("measured: host A", &[("serve/64", 1.0), ("serve/1", 0.1)]);
+
+        // Within tolerance: ok, both shared samples compared.
+        let fresh = artifact("measured: host B", &[("serve/64", 1.2), ("serve/1", 0.11)]);
+        assert_eq!(
+            compare_artifacts(&fresh, &committed, 1.5).unwrap(),
+            CompareOutcome::Ok { compared: 2 }
+        );
+
+        // Above tolerance: loud failure naming the offender.
+        let slow = artifact("measured: host B", &[("serve/64", 2.0), ("serve/1", 0.1)]);
+        let e = compare_artifacts(&slow, &committed, 1.5).unwrap_err();
+        assert!(e.contains("serve/64"), "{e}");
+        assert!(!e.contains("serve/1:"), "{e}");
+
+        // Committed projection placeholder: clean skip, never a failure.
+        let projection = artifact("projection: no toolchain", &[]);
+        assert_eq!(
+            compare_artifacts(&slow, &projection, 1.5).unwrap(),
+            CompareOutcome::SkippedProjection
+        );
+
+        // Disjoint sample names (bench renamed): reported as zero compared.
+        let renamed = artifact("measured: host B", &[("other/bench", 9.9)]);
+        assert_eq!(
+            compare_artifacts(&renamed, &committed, 1.5).unwrap(),
+            CompareOutcome::Ok { compared: 0 }
+        );
+
+        // Sub-5ms means never regress (absolute slack beats the ratio).
+        let tiny_base = artifact("measured: host A", &[("tiny", 0.0001)]);
+        let tiny_now = artifact("measured: host B", &[("tiny", 0.004)]);
+        assert!(compare_artifacts(&tiny_now, &tiny_base, 1.5).is_ok());
+
+        // Nonsense tolerance is an error, not a permissive gate.
+        assert!(compare_artifacts(&fresh, &committed, 0.5).is_err());
     }
 
     #[test]

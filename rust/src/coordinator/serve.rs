@@ -1187,10 +1187,12 @@ impl ServeWire {
 }
 
 /// The `treecss serve` daemon: a [`ServeCoordinator`] whose control
-/// protocol is served over TCP by the [`Reactor`] — the same single loop
-/// thread that (under [`ServeWire::Tcp`]) also carries all session
-/// traffic. Control frames are handled without ever blocking the loop:
-/// `Result` polls return `Pending` instead of waiting.
+/// protocol is served over TCP by the [`Reactor`] — the same readiness
+/// loop set (one thread by default, sharded across
+/// `ReactorConfig::loops` threads when configured) that, under
+/// [`ServeWire::Tcp`], also carries all session traffic. Control frames
+/// are handled without ever blocking a loop: `Result` polls return
+/// `Pending` instead of waiting.
 pub struct ServeDaemon {
     coord: Arc<ServeCoordinator>,
     reactor: Arc<Reactor>,
@@ -1238,6 +1240,13 @@ impl ServeDaemon {
     /// Direct (in-process) access to the coordinator.
     pub fn coordinator(&self) -> &Arc<ServeCoordinator> {
         &self.coord
+    }
+
+    /// The reactor driving the control protocol (and, under
+    /// [`ServeWire::Tcp`], all session traffic): exposes the resolved
+    /// backend name, loop count, and per-loop counters for observability.
+    pub fn reactor(&self) -> &Arc<Reactor> {
+        &self.reactor
     }
 
     /// True once a client sent `Shutdown`. The daemon's owner polls this

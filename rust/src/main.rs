@@ -137,6 +137,12 @@ protocol on an event-driven reactor — prints `SERVE <addr>` once ready):
                                 readiness backend for the reactor loop
                                 (default auto: TREECSS_REACTOR_BACKEND if
                                 set, else epoll on Linux, else scan-poll)
+  --reactor-loops <n>           independent reactor readiness loops
+                                (threads); listeners and their accepted
+                                connections are sharded across loops by
+                                the FNV lane discipline, preserving
+                                per-(from,to,phase) FIFO order
+                                (default 1 = the classic single loop)
   --verify                      with --sessions: also run every spec
                                 serially and fail unless the served
                                 reports are byte-identical
@@ -160,6 +166,13 @@ bench-check usage:
                                       the provenance contract (measured
                                       provenance must carry non-empty
                                       result tables; projection may not)
+  treecss bench-check FRESH.json --against COMMITTED.json [--tolerance f]
+                                      regression mode: additionally fail
+                                      when any sample shared with the
+                                      committed artifact slowed past
+                                      mean * tolerance (default 3.0;
+                                      skips cleanly when the committed
+                                      artifact is projection-labelled)
 
 (party-worker is internal: the child process half of --distributed; it
 emits BEAT heartbeat lines on stdout when spawned with --heartbeat-ms,
@@ -375,6 +388,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let listen = cli.opt_or("listen", "127.0.0.1:0");
     let reactor = ReactorConfig {
         backend: BackendChoice::from_name(&cli.opt_or("reactor-backend", "auto"))?,
+        loops: cli.opt_parse("reactor-loops", 1)?,
         ..ReactorConfig::default()
     };
     let chaos = match cli.opt("chaos") {
@@ -424,6 +438,11 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
 
     let daemon = ServeDaemon::start(cfg, wire, &listen)?;
     println!("SERVE {}", daemon.control_addr());
+    println!(
+        "serve: reactor backend={} loops={}",
+        daemon.reactor().backend_name(),
+        daemon.reactor().loop_count()
+    );
     std::io::stdout().flush()?;
 
     if sessions == 0 {
@@ -530,12 +549,43 @@ fn cmd_bench_check(cli: &Cli) -> Result<()> {
         let usage = "bench-check: no artifact paths (try: treecss bench-check BENCH_*.json)";
         return Err(treecss::Error::Config(usage.into()));
     }
+    let read = |path: &str| -> Result<String> {
+        std::fs::read_to_string(path)
+            .map_err(|e| treecss::Error::Config(format!("bench-check: {path}: {e}")))
+    };
     for path in &cli.positionals {
-        let doc = std::fs::read_to_string(path)
-            .map_err(|e| treecss::Error::Config(format!("bench-check: {path}: {e}")))?;
+        let doc = read(path)?;
         bench::validate_artifact(&doc)
             .map_err(|e| treecss::Error::Config(format!("bench-check: {path}: {e}")))?;
         println!("{path}: ok");
+    }
+    // Regression mode: gate the (single) fresh artifact against the last
+    // committed measured one.
+    if let Some(committed_path) = cli.opt("against") {
+        if cli.positionals.len() != 1 {
+            return Err(treecss::Error::Config(
+                "bench-check --against compares exactly one fresh artifact".into(),
+            ));
+        }
+        let fresh_path = &cli.positionals[0];
+        let tolerance: f64 = cli.opt_parse("tolerance", 3.0)?;
+        let fresh = read(fresh_path)?;
+        let committed = read(&committed_path)?;
+        match bench::compare_artifacts(&fresh, &committed, tolerance).map_err(|e| {
+            treecss::Error::Config(format!(
+                "bench-check: {fresh_path} vs {committed_path}: {e}"
+            ))
+        })? {
+            bench::CompareOutcome::SkippedProjection => println!(
+                "{fresh_path} vs {committed_path}: skipped (committed artifact is a projection)"
+            ),
+            bench::CompareOutcome::Ok { compared: 0 } => println!(
+                "{fresh_path} vs {committed_path}: no overlapping samples (nothing gated)"
+            ),
+            bench::CompareOutcome::Ok { compared } => println!(
+                "{fresh_path} vs {committed_path}: {compared} sample(s) within {tolerance:.2}x"
+            ),
+        }
     }
     Ok(())
 }

@@ -26,6 +26,10 @@ pub const EPOLLERR: u32 = 0x008;
 pub const EPOLLHUP: u32 = 0x010;
 /// Peer shut down its write side.
 pub const EPOLLRDHUP: u32 = 0x2000;
+/// Edge-triggered delivery: an event fires on readiness *transitions*
+/// (including registration/modification of an already-ready fd), so the
+/// consumer must drain to `EAGAIN` before the next wait.
+pub const EPOLLET: u32 = 1 << 31;
 
 /// One readiness record, layout-compatible with the kernel's
 /// `struct epoll_event`. x86_64 packs it to 12 bytes; every other
@@ -68,6 +72,7 @@ mod imp {
         pub const CLOSE: c_long = 3;
         pub const READ: c_long = 0;
         pub const WRITE: c_long = 1;
+        pub const WRITEV: c_long = 20;
         pub const SHUTDOWN: c_long = 48;
     }
 
@@ -81,6 +86,7 @@ mod imp {
         pub const CLOSE: c_long = 57;
         pub const READ: c_long = 63;
         pub const WRITE: c_long = 64;
+        pub const WRITEV: c_long = 66;
         pub const SHUTDOWN: c_long = 210;
     }
 
@@ -225,6 +231,18 @@ mod imp {
         check(unsafe { syscall(nr::SHUTDOWN, fd as c_int, SHUT_RD) })?;
         Ok(())
     }
+
+    /// Vectored `writev(2)`: write every slice in `bufs` with one syscall,
+    /// returning how many bytes the fd accepted (a short write stops inside
+    /// some slice — the caller advances its buffers and retries).
+    /// `std::io::IoSlice` is guaranteed ABI-compatible with `struct iovec`,
+    /// so the slice array is passed to the kernel directly.
+    pub fn writev(fd: i32, bufs: &[io::IoSlice<'_>]) -> io::Result<usize> {
+        let n = check(unsafe {
+            syscall(nr::WRITEV, fd as c_int, bufs.as_ptr(), bufs.len() as c_int)
+        })?;
+        Ok(n as usize)
+    }
 }
 
 #[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
@@ -284,9 +302,15 @@ mod imp {
     pub fn shutdown_read(_fd: i32) -> io::Result<()> {
         Err(unsupported())
     }
+
+    /// See the Linux implementation; here it only reports "unsupported"
+    /// (the reactor's portable write path uses `Write::write_vectored`).
+    pub fn writev(_fd: i32, _bufs: &[io::IoSlice<'_>]) -> io::Result<usize> {
+        Err(unsupported())
+    }
 }
 
-pub use imp::{shutdown_read, Epoll, EventFd};
+pub use imp::{shutdown_read, writev, Epoll, EventFd};
 
 #[cfg(all(test, target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
 mod tests {
@@ -353,6 +377,77 @@ mod tests {
         ep.modify(served.as_raw_fd(), EPOLLIN, 42).unwrap();
         ep.del(served.as_raw_fd()).unwrap();
         assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn writev_writes_every_slice_in_one_call() {
+        use std::io::{IoSlice, Read};
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (mut served, _) = listener.accept().unwrap();
+
+        let parts: [&[u8]; 3] = [b"one|", b"two|", b"three"];
+        let slices: Vec<IoSlice<'_>> = parts.iter().map(|p| IoSlice::new(p)).collect();
+        let n = writev(client.as_raw_fd(), &slices).unwrap();
+        // Loopback with empty socket buffers takes a 13-byte burst whole.
+        assert_eq!(n, 13);
+        let mut got = vec![0u8; 13];
+        served.read_exact(&mut got).unwrap();
+        assert_eq!(got, b"one|two|three");
+    }
+
+    #[test]
+    fn writev_on_full_nonblocking_socket_reports_would_block() {
+        use std::io::IoSlice;
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (_served, _) = listener.accept().unwrap();
+        client.set_nonblocking(true).unwrap();
+
+        // Nobody reads: keep writing until the socket buffer fills.
+        let chunk = vec![0xEE; 256 * 1024];
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            let slices = [IoSlice::new(&chunk)];
+            match writev(client.as_raw_fd(), &slices) {
+                Ok(_) => assert!(std::time::Instant::now() < deadline, "buffer never filled"),
+                Err(e) => {
+                    assert_eq!(e.kind(), std::io::ErrorKind::WouldBlock, "got: {e}");
+                    break;
+                }
+            }
+        }
+    }
+
+    /// The edge-triggered posture the reactor relies on: registering (or
+    /// re-arming) an fd that is *already* readable still generates an
+    /// event — data that arrived entirely before `EPOLL_CTL_ADD` is not a
+    /// lost wakeup.
+    #[test]
+    fn edge_triggered_add_on_ready_fd_still_fires() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let mut client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (served, _) = listener.accept().unwrap();
+        served.set_nonblocking(true).unwrap();
+
+        // Data lands before any epoll registration exists.
+        client.write_all(b"early bird").unwrap();
+        client.flush().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+
+        let ep = Epoll::new().unwrap();
+        ep.add(served.as_raw_fd(), EPOLLIN | EPOLLET, 9).unwrap();
+        let mut events = [EpollEvent::default(); 4];
+        let n = ep.wait(&mut events, 1000).unwrap();
+        assert_eq!(n, 1, "ET add on an already-readable fd must fire");
+        assert_eq!({ events[0].data }, 9);
+
+        // Without draining, ET stays silent — no level-triggered re-fire.
+        assert_eq!(ep.wait(&mut events, 50).unwrap(), 0);
+
+        // EPOLL_CTL_MOD re-arms: the still-readable fd fires again.
+        ep.modify(served.as_raw_fd(), EPOLLIN | EPOLLET, 9).unwrap();
+        assert_eq!(ep.wait(&mut events, 1000).unwrap(), 1);
     }
 
     #[test]

@@ -6,27 +6,44 @@
 //! concurrent sessions would burn a thread per socket doing mostly nothing.
 //!
 //! [`Reactor`] replaces that model for the serve path: every listener and
-//! every accepted connection is nonblocking, and a single named thread
-//! drives them in a readiness loop (accept → read → frame-decode → deliver
-//! → flush replies). New listeners are registered at runtime with a
-//! [`FrameSink`] callback that receives each complete length-prefixed frame
-//! together with a [`Replies`] queue (so request/reply protocols can answer
-//! inline — replies land in a per-connection outbound buffer the loop
-//! drains as the socket accepts bytes, never blocking the loop on one slow
-//! reader).
+//! every accepted connection is nonblocking, and a small set of named
+//! threads ([`ReactorConfig::loops`], default 1) drive them in independent
+//! readiness loops (accept → read → frame-decode → deliver → flush
+//! replies). New listeners are registered at runtime with a [`FrameSink`]
+//! callback that receives each complete length-prefixed frame together
+//! with a [`Replies`] queue (so request/reply protocols can answer inline
+//! — replies land in a per-connection outbound buffer the loop drains as
+//! the socket accepts bytes, never blocking the loop on one slow reader).
+//!
+//! **Sharding.** With `loops > 1` each listener is assigned to one loop by
+//! the same FNV-1a discipline [`ConnPool::lane_for`] uses (hashed over the
+//! listener's bound address), and every connection accepted from it lives
+//! its whole life on that loop — its own epoll set, eventfd wake, and
+//! outbound buffers, nothing shared across loops but the counters. The
+//! [`Transport`] FIFO contract survives sharding for free: a
+//! `(from, to, phase)` key always rides one pooled socket, a socket is
+//! served by exactly one loop, and one loop never reorders a connection's
+//! frames. `loops = 1` is exactly the pre-sharding reactor.
 //!
 //! Two readiness backends sit behind the same registration API:
 //!
 //! * **epoll** (Linux) — the OS readiness backend, via the dependency-free
-//!   raw-syscall shim in [`crate::net::poll`]. The loop blocks in
-//!   `epoll_pwait` until a socket is actually readable (or writable, for
-//!   connections with buffered replies — `EPOLLOUT` interest is armed only
-//!   while the outbound buffer is non-empty), woken by an `eventfd` for
-//!   registrations and shutdown. Idle cost is a genuine block, and a tick
-//!   touches only the connections the kernel reported.
+//!   raw-syscall shim in [`crate::net::poll`]. Connections are registered
+//!   *edge-triggered* (`EPOLLET`): the loop blocks in `epoll_pwait` until
+//!   the kernel reports a readiness *transition*, then drains the socket to
+//!   `EAGAIN`. A connection that exhausts its per-tick read budget before
+//!   hitting `EAGAIN` is re-queued on the loop's ready-list and serviced
+//!   again next tick (no re-arm syscall, no lost data); `EPOLLOUT` interest
+//!   is armed only while the outbound buffer is non-empty. The eventfd wake
+//!   for registrations and shutdown stays level-triggered. Reply buffers
+//!   are flushed with vectored `writev`, so a multi-frame reply burst is
+//!   one syscall instead of one per frame.
 //! * **scan** — the portable fallback: a nonblocking scan-poll over every
 //!   listener and connection, parking briefly when a full sweep made no
-//!   progress. Same delivery semantics, O(connections) per tick.
+//!   progress. The sweep's starting offset rotates every tick, so a
+//!   firehose connection pinned at its per-tick budget cannot
+//!   systematically starve later-registered sockets. Same delivery
+//!   semantics, O(connections) per tick.
 //!
 //! Selection is runtime: [`ReactorConfig::backend`] picks explicitly, and
 //! the default [`BackendChoice::Auto`] honors `TREECSS_REACTOR_BACKEND=
@@ -47,8 +64,8 @@
 //!   `TcpTransport` (same envelope framing), so either end of a connection
 //!   can be the classic or the reactor transport.
 
-use std::collections::HashMap;
-use std::io::{ErrorKind, Read, Write};
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, IoSlice, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -68,14 +85,21 @@ use crate::net::transport::{Envelope, Mailboxes, Transport};
 /// the loop waiting on a slow or stalled reader — that connection's replies
 /// just sit in its own buffer while every other connection keeps moving.
 pub struct Replies<'a> {
-    out: &'a mut Vec<u8>,
+    /// One queued chunk per reply frame — kept separate (not coalesced into
+    /// one buffer) so the flush path can hand the whole burst to a single
+    /// vectored `writev` without re-copying the bytes.
+    out: &'a mut VecDeque<Vec<u8>>,
+    queued: &'a mut usize,
 }
 
 impl Replies<'_> {
     /// Queue one length-prefixed reply frame on this connection.
     pub fn push(&mut self, body: &[u8]) {
-        self.out.extend_from_slice(&(body.len() as u64).to_le_bytes());
-        self.out.extend_from_slice(body);
+        let mut f = Vec::with_capacity(8 + body.len());
+        f.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        f.extend_from_slice(body);
+        *self.queued += f.len();
+        self.out.push_back(f);
     }
 }
 
@@ -132,6 +156,12 @@ pub struct ReactorConfig {
     pub max_outbound_bytes: usize,
     /// Readiness backend selection (see [`BackendChoice`]).
     pub backend: BackendChoice,
+    /// Number of independent readiness loops (threads) the reactor shards
+    /// its listeners and connections across. 1 (the default) is the classic
+    /// single-loop reactor; >1 partitions listeners by FNV over their bound
+    /// address, each loop owning its own epoll set, eventfd, and outbound
+    /// buffers. Clamped to >= 1.
+    pub loops: usize,
 }
 
 impl Default for ReactorConfig {
@@ -142,6 +172,7 @@ impl Default for ReactorConfig {
             max_read_per_conn: 1024 * 1024,
             max_outbound_bytes: 64 * 1024 * 1024,
             backend: BackendChoice::Auto,
+            loops: 1,
         }
     }
 }
@@ -178,10 +209,13 @@ struct InboundConn {
     sink: FrameSink,
     /// Inbound bytes not yet assembled into a complete frame.
     buf: Vec<u8>,
-    /// Outbound (reply) bytes not yet accepted by the socket.
-    out: Vec<u8>,
-    /// How much of `out` has already been written.
+    /// Outbound (reply) chunks not yet accepted by the socket — one chunk
+    /// per reply frame, flushed as a single vectored write per pass.
+    out: VecDeque<Vec<u8>>,
+    /// How much of the *front* chunk has already been written.
     out_off: usize,
+    /// Total unwritten outbound bytes across every chunk.
+    out_len: usize,
     /// Reading is over (EOF, sink veto); drop once `out` drains.
     closing: bool,
     close_deadline: Option<Instant>,
@@ -201,8 +235,9 @@ impl InboundConn {
             stream,
             sink,
             buf: Vec::new(),
-            out: Vec::new(),
+            out: VecDeque::new(),
             out_off: 0,
+            out_len: 0,
             closing: false,
             close_deadline: None,
             armed: poll::EPOLLIN,
@@ -217,28 +252,31 @@ impl InboundConn {
     }
 
     fn out_pending(&self) -> usize {
-        self.out.len() - self.out_off
+        self.out_len
     }
 
     /// Read whatever is available (respecting the per-tick budget) into
-    /// `buf`. Returns `(made_progress, reached_eof_or_error)`.
-    fn fill(&mut self, cfg: &ReactorConfig, scratch: &mut [u8]) -> (bool, bool) {
+    /// `buf`. Returns `(made_progress, reached_eof_or_error,
+    /// budget_exhausted)` — the last flag tells an edge-triggered caller the
+    /// socket may still hold bytes even though no new edge will fire, so
+    /// the connection must be re-serviced without waiting for one.
+    fn fill(&mut self, cfg: &ReactorConfig, scratch: &mut [u8]) -> (bool, bool, bool) {
         let mut read_total = 0usize;
         let mut progress = false;
         loop {
             if read_total >= cfg.max_read_per_conn {
-                return (progress, false);
+                return (progress, false, true);
             }
             match self.stream.read(scratch) {
-                Ok(0) => return (progress, true),
+                Ok(0) => return (progress, true, false),
                 Ok(n) => {
                     self.buf.extend_from_slice(&scratch[..n]);
                     read_total += n;
                     progress = true;
                 }
-                Err(e) if e.kind() == ErrorKind::WouldBlock => return (progress, false),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return (progress, false, false),
                 Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-                Err(_) => return (progress, true),
+                Err(_) => return (progress, true, false),
             }
         }
     }
@@ -269,7 +307,7 @@ impl InboundConn {
             shared.frames.fetch_add(1, Ordering::Relaxed);
             progress = true;
             let keep = {
-                let mut replies = Replies { out: &mut self.out };
+                let mut replies = Replies { out: &mut self.out, queued: &mut self.out_len };
                 (self.sink)(frame, &mut replies)
             };
             if !keep {
@@ -283,15 +321,58 @@ impl InboundConn {
         }
     }
 
-    /// Write as much buffered reply data as the socket accepts. Returns
-    /// `(made_progress, write_side_dead)`.
+    /// One vectored write over the queued reply chunks (up to [`MAX_IOV`]
+    /// of them): the front chunk from its offset, every later chunk whole.
+    /// On Linux this is the raw `writev` syscall from [`poll`]; elsewhere
+    /// `Write::write_vectored` (which may degrade to a plain write).
+    fn write_pending(&mut self) -> std::io::Result<usize> {
+        /// Reply chunks handed to one `writev` (well under Linux's
+        /// `IOV_MAX` of 1024; a burst longer than this just takes another
+        /// pass).
+        const MAX_IOV: usize = 64;
+        let mut slices: Vec<IoSlice<'_>> = Vec::with_capacity(self.out.len().min(MAX_IOV));
+        for (i, chunk) in self.out.iter().take(MAX_IOV).enumerate() {
+            let s = if i == 0 { &chunk[self.out_off..] } else { &chunk[..] };
+            slices.push(IoSlice::new(s));
+        }
+        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            use std::os::unix::io::AsRawFd;
+            poll::writev(self.stream.as_raw_fd(), &slices)
+        }
+        #[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+        {
+            self.stream.write_vectored(&slices)
+        }
+    }
+
+    /// Retire `n` written bytes: advance the front-chunk offset and pop
+    /// fully-written chunks.
+    fn consume_out(&mut self, mut n: usize) {
+        self.out_len -= n;
+        while n > 0 {
+            let front_left = self.out.front().map_or(0, |c| c.len() - self.out_off);
+            if n >= front_left {
+                n -= front_left;
+                self.out.pop_front();
+                self.out_off = 0;
+            } else {
+                self.out_off += n;
+                n = 0;
+            }
+        }
+    }
+
+    /// Write as much buffered reply data as the socket accepts (one
+    /// vectored write per burst). Returns `(made_progress,
+    /// write_side_dead)`.
     fn flush(&mut self) -> (bool, bool) {
         let mut progress = false;
-        while self.out_off < self.out.len() {
-            match self.stream.write(&self.out[self.out_off..]) {
+        while self.out_len > 0 {
+            match self.write_pending() {
                 Ok(0) => return (progress, true),
                 Ok(n) => {
-                    self.out_off += n;
+                    self.consume_out(n);
                     progress = true;
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => return (progress, false),
@@ -299,15 +380,15 @@ impl InboundConn {
                 Err(_) => return (progress, true),
             }
         }
-        if self.out_off > 0 {
-            self.out.clear();
-            self.out_off = 0;
+        if progress {
             let _ = self.stream.flush();
         }
         (progress, false)
     }
 }
 
+/// Per-loop shared state: one instance per readiness loop, nothing but the
+/// counters ever read across loops.
 struct ReactorShared {
     cfg: ReactorConfig,
     shutdown: AtomicBool,
@@ -320,13 +401,33 @@ struct ReactorShared {
     listeners_dead: AtomicU64,
 }
 
-/// Single-threaded event loop multiplexing any number of listeners and their
-/// accepted connections. See the module docs for the model and the two
-/// readiness backends.
-pub struct Reactor {
+impl ReactorShared {
+    fn stats(&self) -> ReactorStats {
+        ReactorStats {
+            connections_accepted: self.accepted.load(Ordering::Relaxed),
+            frames_delivered: self.frames.load(Ordering::Relaxed),
+            connections_killed: self.killed.load(Ordering::Relaxed),
+            listeners_dead: self.listeners_dead.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One readiness loop: its shared state plus the thread driving it.
+struct LoopHandle {
     shared: Arc<ReactorShared>,
     thread: Mutex<Option<std::thread::JoinHandle<()>>>,
     loop_thread: std::thread::Thread,
+}
+
+/// Event loop(s) multiplexing any number of listeners and their accepted
+/// connections across [`ReactorConfig::loops`] independent readiness
+/// threads. See the module docs for the sharding model and the two
+/// readiness backends.
+pub struct Reactor {
+    loops: Vec<LoopHandle>,
+    /// Fallback listener placement when a listener has no readable bound
+    /// address to hash (round-robin keeps the loops balanced anyway).
+    next_loop: AtomicU64,
     backend: &'static str,
 }
 
@@ -366,98 +467,166 @@ fn resolve_backend(choice: BackendChoice, env: Option<&str>) -> Result<ResolvedB
 }
 
 impl Reactor {
-    /// Spawn the readiness loop on a dedicated named thread, resolving and
-    /// (for epoll) constructing the backend first so selection errors
+    /// Spawn the readiness loop(s) on dedicated named threads, resolving
+    /// and (for epoll) constructing the backend first so selection errors
     /// surface here, not asynchronously.
     pub fn new(cfg: ReactorConfig) -> Result<Reactor> {
         let env = std::env::var("TREECSS_REACTOR_BACKEND").ok();
         let resolved = resolve_backend(cfg.backend, env.as_deref())?;
-        let mut epoll: Option<poll::Epoll> = None;
-        let mut wake: Option<poll::EventFd> = None;
+        let n_loops = cfg.loops.max(1);
+
+        // Build every loop's epoll set + eventfd up front: either all loops
+        // run epoll or (under Auto, when any constructor fails) all fall
+        // back to scan — the backend is one choice, never mixed per loop.
+        let mut sets: Vec<(poll::Epoll, poll::EventFd)> = Vec::new();
         let mut backend = "scan";
         if resolved.use_epoll {
-            match (poll::Epoll::new(), poll::EventFd::new()) {
-                (Ok(ep), Ok(w)) => {
-                    epoll = Some(ep);
-                    wake = Some(w);
-                    backend = "epoll";
+            let mut ok = true;
+            for _ in 0..n_loops {
+                match (poll::Epoll::new(), poll::EventFd::new()) {
+                    (Ok(ep), Ok(w)) => sets.push((ep, w)),
+                    (ep_res, w_res) => {
+                        if resolved.explicit {
+                            let why = ep_res
+                                .err()
+                                .or_else(|| w_res.err())
+                                .map(|e| e.to_string())
+                                .unwrap_or_else(|| "unknown".into());
+                            return Err(Error::Net(format!(
+                                "reactor: epoll backend init: {why}"
+                            )));
+                        }
+                        ok = false;
+                        break;
+                    }
                 }
-                (ep_res, w_res) if resolved.explicit => {
-                    let why = ep_res
-                        .err()
-                        .or_else(|| w_res.err())
-                        .map(|e| e.to_string())
-                        .unwrap_or_else(|| "unknown".into());
-                    return Err(Error::Net(format!("reactor: epoll backend init: {why}")));
-                }
-                _ => {}
+            }
+            if ok {
+                backend = "epoll";
+            } else {
+                sets.clear();
             }
         }
-        let shared = Arc::new(ReactorShared {
-            cfg,
-            shutdown: AtomicBool::new(false),
-            pending: Mutex::new(Vec::new()),
-            wake,
-            accepted: AtomicU64::new(0),
-            frames: AtomicU64::new(0),
-            killed: AtomicU64::new(0),
-            listeners_dead: AtomicU64::new(0),
-        });
-        let loop_shared = Arc::clone(&shared);
-        let handle = std::thread::Builder::new()
-            .name("treecss-reactor".into())
-            .spawn(move || event_loop(loop_shared, epoll))
-            .map_err(|e| Error::Net(format!("reactor: spawn loop thread: {e}")))?;
-        let loop_thread = handle.thread().clone();
-        Ok(Reactor { shared, thread: Mutex::new(Some(handle)), loop_thread, backend })
+
+        let mut loops = Vec::with_capacity(n_loops);
+        for i in 0..n_loops {
+            let (epoll, wake) = if backend == "epoll" {
+                let (ep, w) = sets.remove(0);
+                (Some(ep), Some(w))
+            } else {
+                (None, None)
+            };
+            let shared = Arc::new(ReactorShared {
+                cfg,
+                shutdown: AtomicBool::new(false),
+                pending: Mutex::new(Vec::new()),
+                wake,
+                accepted: AtomicU64::new(0),
+                frames: AtomicU64::new(0),
+                killed: AtomicU64::new(0),
+                listeners_dead: AtomicU64::new(0),
+            });
+            let name = if n_loops == 1 {
+                "treecss-reactor".to_string()
+            } else {
+                format!("treecss-reactor-{i}")
+            };
+            let loop_shared = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name(name)
+                .spawn(move || event_loop(loop_shared, epoll))
+                .map_err(|e| Error::Net(format!("reactor: spawn loop thread: {e}")))?;
+            let loop_thread = handle.thread().clone();
+            loops.push(LoopHandle { shared, thread: Mutex::new(Some(handle)), loop_thread });
+        }
+        Ok(Reactor { loops, next_loop: AtomicU64::new(0), backend })
     }
 
-    /// Which readiness backend the loop runs on (`"epoll"` or `"scan"`).
+    /// Which readiness backend the loops run on (`"epoll"` or `"scan"`).
     pub fn backend_name(&self) -> &'static str {
         self.backend
     }
 
-    /// Hand a listener to the loop. Every connection accepted from it feeds
-    /// complete frames to `sink`.
+    /// How many independent readiness loops this reactor runs.
+    pub fn loop_count(&self) -> usize {
+        self.loops.len()
+    }
+
+    /// Which loop a listener bound at `addr` is sharded onto: FNV-1a over
+    /// the address's display form — the same hash discipline
+    /// [`ConnPool::lane_for`] uses for outbound lanes — modulo the loop
+    /// count. Every connection accepted from the listener then lives on
+    /// that loop, so per-connection (and therefore per-(from, to, phase))
+    /// FIFO ordering is untouched by sharding.
+    fn loop_for_addr(&self, addr: &SocketAddr) -> usize {
+        use std::fmt::Write as _;
+        let mut h = FnvWriter(0xcbf2_9ce4_8422_2325);
+        let _ = write!(h, "{addr}");
+        (h.0 % self.loops.len() as u64) as usize
+    }
+
+    /// Hand a listener to one of the loops. Every connection accepted from
+    /// it feeds complete frames to `sink`.
     pub fn register(&self, listener: TcpListener, sink: FrameSink) -> Result<()> {
         listener
             .set_nonblocking(true)
             .map_err(|e| Error::Net(format!("reactor: set_nonblocking on listener: {e}")))?;
-        lock_clean(&self.shared.pending).push(Registration { listener, sink });
-        // Wake the loop if it is parked (scan) or blocked in the kernel
-        // (epoll) so registration takes effect promptly.
-        self.loop_thread.unpark();
-        if let Some(w) = &self.shared.wake {
+        let idx = match listener.local_addr() {
+            Ok(addr) => self.loop_for_addr(&addr),
+            Err(_) => {
+                (self.next_loop.fetch_add(1, Ordering::Relaxed) % self.loops.len() as u64)
+                    as usize
+            }
+        };
+        let lp = &self.loops[idx];
+        lock_clean(&lp.shared.pending).push(Registration { listener, sink });
+        // Wake the owning loop if it is parked (scan) or blocked in the
+        // kernel (epoll) so registration takes effect promptly.
+        lp.loop_thread.unpark();
+        if let Some(w) = &lp.shared.wake {
             w.ring();
         }
         Ok(())
     }
 
-    /// Snapshot of loop counters (accepted / delivered / killed / dead
-    /// listeners).
+    /// Snapshot of counters (accepted / delivered / killed / dead
+    /// listeners), aggregated across every loop.
     pub fn stats(&self) -> ReactorStats {
-        ReactorStats {
-            connections_accepted: self.shared.accepted.load(Ordering::Relaxed),
-            frames_delivered: self.shared.frames.load(Ordering::Relaxed),
-            connections_killed: self.shared.killed.load(Ordering::Relaxed),
-            listeners_dead: self.shared.listeners_dead.load(Ordering::Relaxed),
+        let mut total = ReactorStats::default();
+        for lp in &self.loops {
+            let s = lp.shared.stats();
+            total.connections_accepted += s.connections_accepted;
+            total.frames_delivered += s.frames_delivered;
+            total.connections_killed += s.connections_killed;
+            total.listeners_dead += s.listeners_dead;
         }
+        total
     }
 
-    /// Stop the loop and join its thread, closing every listener and
+    /// Per-loop counter breakdown, one entry per readiness loop in shard
+    /// order (sums to [`Reactor::stats`]).
+    pub fn per_loop_stats(&self) -> Vec<ReactorStats> {
+        self.loops.iter().map(|lp| lp.shared.stats()).collect()
+    }
+
+    /// Stop every loop and join its thread, closing every listener and
     /// connection (and dropping their sinks). Safe to call more than once;
     /// also invoked by `Drop`. Callable through a shared `Arc<Reactor>`,
     /// which matters when sinks themselves hold `Arc`s back to the owner of
     /// the reactor — an explicit `stop` is the only way to break that cycle.
-    /// Must not be called from inside a sink (the loop cannot join itself).
+    /// Must not be called from inside a sink (a loop cannot join itself).
     pub fn stop(&self) {
-        self.shared.shutdown.store(true, Ordering::SeqCst);
-        self.loop_thread.unpark();
-        if let Some(w) = &self.shared.wake {
-            w.ring();
+        for lp in &self.loops {
+            lp.shared.shutdown.store(true, Ordering::SeqCst);
+            lp.loop_thread.unpark();
+            if let Some(w) = &lp.shared.wake {
+                w.ring();
+            }
         }
-        if let Some(h) = lock_clean(&self.thread).take() {
-            let _ = h.join();
+        for lp in &self.loops {
+            if let Some(h) = lock_clean(&lp.thread).take() {
+                let _ = h.join();
+            }
         }
     }
 }
@@ -508,22 +677,27 @@ fn accept_ready(shared: &ReactorShared, reg: &Registration) -> (Vec<TcpStream>, 
 /// One full service pass over a connection: read + deliver (unless it is
 /// already closing), then flush queued replies, then decide its fate.
 /// Shared verbatim by both backends, so delivery semantics cannot diverge.
+/// The third return is the budget-exhausted ("hot") flag: the read stopped
+/// at the per-tick budget rather than `EAGAIN`, so an edge-triggered caller
+/// must re-service this connection without waiting for a new edge.
 fn service_conn(
     shared: &ReactorShared,
     conn: &mut InboundConn,
     scratch: &mut [u8],
-) -> (bool, Fate) {
+) -> (bool, Fate, bool) {
     let mut progress = false;
+    let mut hot = false;
     if !conn.closing {
-        let (read_progress, eof) = conn.fill(&shared.cfg, scratch);
+        let (read_progress, eof, budget_exhausted) = conn.fill(&shared.cfg, scratch);
         progress |= read_progress;
+        hot = budget_exhausted;
         // Deliver complete frames *before* honoring EOF: a peer that writes
         // a full frame and immediately closes must not lose it.
         let (deliver_progress, fatal) = conn.deliver(shared);
         progress |= deliver_progress;
         if fatal && !conn.closing {
             // Hostile length: die now, replies and all.
-            return (true, Fate::Remove);
+            return (true, Fate::Remove, false);
         }
         if eof {
             conn.begin_close();
@@ -533,22 +707,22 @@ fn service_conn(
     let (flush_progress, dead) = conn.flush();
     progress |= flush_progress;
     if dead {
-        return (progress, Fate::Remove);
+        return (progress, Fate::Remove, false);
     }
     if conn.out_pending() > shared.cfg.max_outbound_bytes {
         // Reader stalled past the buffer cap: kill rather than balloon.
         shared.killed.fetch_add(1, Ordering::Relaxed);
-        return (progress, Fate::Remove);
+        return (progress, Fate::Remove, false);
     }
     if conn.closing {
         if conn.out_pending() == 0 {
-            return (progress, Fate::Remove);
+            return (progress, Fate::Remove, false);
         }
         if conn.close_deadline.is_some_and(|d| Instant::now() >= d) {
-            return (progress, Fate::Remove);
+            return (progress, Fate::Remove, false);
         }
     }
-    (progress, Fate::Keep)
+    (progress, Fate::Keep, hot)
 }
 
 /// Portable backend: nonblocking sweep over every listener and connection,
@@ -591,10 +765,19 @@ fn scan_loop(shared: &ReactorShared) {
             }
         }
 
+        // Fairness: rotate the sweep's starting point each tick, so a
+        // firehose connection pinned at its per-tick read budget cannot
+        // systematically starve the connections scanned after it.
+        if conns.len() > 1 {
+            conns.rotate_left(1);
+        }
+
         // Pump each connection: read, deliver whole frames, flush replies.
+        // (The budget-exhausted flag is irrelevant here — the next sweep
+        // revisits every connection anyway.)
         let mut i = 0;
         while i < conns.len() {
-            let (conn_progress, fate) = service_conn(shared, &mut conns[i], &mut scratch);
+            let (conn_progress, fate, _hot) = service_conn(shared, &mut conns[i], &mut scratch);
             progress |= conn_progress;
             match fate {
                 Fate::Keep => i += 1,
@@ -612,14 +795,64 @@ fn scan_loop(shared: &ReactorShared) {
 }
 
 /// OS readiness backend: block in `epoll_pwait` until the kernel reports
-/// sockets ready, then service exactly those. Registrations and `stop`
-/// interrupt the wait through the shared eventfd.
+/// readiness *transitions* (connections are registered edge-triggered),
+/// then drain exactly those sockets to `EAGAIN`. A connection that stops
+/// at its per-tick read budget instead of `EAGAIN` goes on the loop's
+/// ready-list and is serviced again next tick without waiting for a new
+/// edge (there will not be one — ET only fires on transitions).
+/// Registrations and `stop` interrupt the wait through the loop's eventfd,
+/// which stays level-triggered.
 #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
 fn epoll_loop(shared: &ReactorShared, ep: &poll::Epoll) {
     use std::collections::BTreeMap;
     use std::os::unix::io::AsRawFd;
 
     const WAKE_TOKEN: u64 = u64::MAX;
+
+    /// Service one connection token and re-arm its (edge-triggered)
+    /// interest set; budget-exhausted survivors are queued on `hot`.
+    fn service_token(
+        shared: &ReactorShared,
+        ep: &poll::Epoll,
+        conns: &mut BTreeMap<u64, InboundConn>,
+        scratch: &mut [u8],
+        hot: &mut Vec<u64>,
+        token: u64,
+    ) {
+        let Some(conn) = conns.get_mut(&token) else { return };
+        let (_, fate, budget_exhausted) = service_conn(shared, conn, scratch);
+        match fate {
+            Fate::Remove => {
+                conns.remove(&token);
+            }
+            Fate::Keep => {
+                // Arm write interest exactly while replies are queued. The
+                // interest set is edge-triggered, and EPOLL_CTL_MOD (like
+                // ADD) fires immediately when the fd is already ready — so
+                // narrowing or widening interest never loses a wakeup.
+                let want = poll::EPOLLET
+                    | if conn.closing {
+                        poll::EPOLLOUT
+                    } else if conn.out_pending() > 0 {
+                        poll::EPOLLIN | poll::EPOLLOUT
+                    } else {
+                        poll::EPOLLIN
+                    };
+                if want != conn.armed {
+                    if ep.modify(conn.stream.as_raw_fd(), want, token).is_ok() {
+                        conn.armed = want;
+                    } else {
+                        conns.remove(&token);
+                        return;
+                    }
+                }
+                if budget_exhausted && !hot.contains(&token) {
+                    hot.push(token);
+                }
+            }
+        }
+    }
+
     if let Some(w) = &shared.wake {
         let _ = ep.add(w.raw_fd(), poll::EPOLLIN, WAKE_TOKEN);
     }
@@ -629,6 +862,9 @@ fn epoll_loop(shared: &ReactorShared, ep: &poll::Epoll) {
     let mut scratch = vec![0u8; 64 * 1024];
     let mut events = vec![poll::EpollEvent::default(); 256];
     let mut fired: Vec<(u64, u32)> = Vec::new();
+    // Budget-exhausted connections carried into the next tick.
+    let mut ready: Vec<u64> = Vec::new();
+    let mut hot: Vec<u64> = Vec::new();
     loop {
         if shared.shutdown.load(Ordering::SeqCst) {
             // Dropping the maps closes every fd (the kernel deregisters
@@ -636,7 +872,9 @@ fn epoll_loop(shared: &ReactorShared, ep: &poll::Epoll) {
             return;
         }
 
-        // Adopt listeners registered since the last wakeup.
+        // Adopt listeners registered since the last wakeup. Listeners stay
+        // level-triggered: `accept_ready` drains the backlog anyway, and a
+        // level re-fire is a cheap safety net.
         {
             let mut pending = lock_clean(&shared.pending);
             for reg in pending.drain(..) {
@@ -654,7 +892,10 @@ fn epoll_loop(shared: &ReactorShared, ep: &poll::Epoll) {
             }
         }
 
-        let n = match ep.wait(&mut events, EPOLL_WAIT_MS) {
+        // With hot connections pending, poll instead of blocking: their
+        // buffered bytes will never produce another edge.
+        let timeout_ms = if ready.is_empty() { EPOLL_WAIT_MS } else { 0 };
+        let n = match ep.wait(&mut events, timeout_ms) {
             Ok(n) => n,
             Err(_) => {
                 // Catastrophic epoll failure; don't spin the core.
@@ -665,6 +906,7 @@ fn epoll_loop(shared: &ReactorShared, ep: &poll::Epoll) {
         fired.clear();
         fired.extend(events[..n].iter().map(|e| (e.data, e.events)));
 
+        hot.clear();
         for &(token, _evs) in &fired {
             if token == WAKE_TOKEN {
                 if let Some(w) = &shared.wake {
@@ -677,11 +919,14 @@ fn epoll_loop(shared: &ReactorShared, ep: &poll::Epoll) {
                 for stream in streams {
                     let conn_token = next_token;
                     next_token += 1;
-                    if ep.add(stream.as_raw_fd(), poll::EPOLLIN, conn_token).is_ok() {
-                        conns.insert(
-                            conn_token,
-                            InboundConn::new(stream, Arc::clone(&reg.sink)),
-                        );
+                    // ET registration of a socket that already holds bytes
+                    // (written before the accept) still fires: ADD reports
+                    // an fd that is ready at registration time.
+                    let interest = poll::EPOLLIN | poll::EPOLLET;
+                    if ep.add(stream.as_raw_fd(), interest, conn_token).is_ok() {
+                        let mut conn = InboundConn::new(stream, Arc::clone(&reg.sink));
+                        conn.armed = interest;
+                        conns.insert(conn_token, conn);
                     }
                 }
                 if dead {
@@ -690,34 +935,18 @@ fn epoll_loop(shared: &ReactorShared, ep: &poll::Epoll) {
                     listeners.remove(&token);
                     shared.listeners_dead.fetch_add(1, Ordering::Relaxed);
                 }
-            } else if let Some(conn) = conns.get_mut(&token) {
-                let (_, fate) = service_conn(shared, conn, &mut scratch);
-                match fate {
-                    Fate::Remove => {
-                        conns.remove(&token);
-                    }
-                    Fate::Keep => {
-                        // Arm write interest exactly while replies are
-                        // queued (level-triggered EPOLLOUT would otherwise
-                        // fire on every wait).
-                        let want = if conn.closing {
-                            poll::EPOLLOUT
-                        } else if conn.out_pending() > 0 {
-                            poll::EPOLLIN | poll::EPOLLOUT
-                        } else {
-                            poll::EPOLLIN
-                        };
-                        if want != conn.armed {
-                            if ep.modify(conn.stream.as_raw_fd(), want, token).is_ok() {
-                                conn.armed = want;
-                            } else {
-                                conns.remove(&token);
-                            }
-                        }
-                    }
-                }
+            } else {
+                service_token(shared, ep, &mut conns, &mut scratch, &mut hot, token);
             }
         }
+
+        // Drain the previous tick's budget-exhausted connections (a token
+        // may also have fired above — servicing twice is harmless, the
+        // second pass just reads `EAGAIN`).
+        for token in std::mem::take(&mut ready) {
+            service_token(shared, ep, &mut conns, &mut scratch, &mut hot, token);
+        }
+        std::mem::swap(&mut ready, &mut hot);
 
         // Close-linger sweep: a closing connection whose peer never reads
         // gets no events, so expire deadlines on the wait cadence.
@@ -1491,6 +1720,168 @@ mod tests {
         for i in 0..32u8 {
             let env = t.recv(PartyId::Client(1), PartyId::Client(0), "seq").unwrap();
             assert_eq!(env.payload, vec![i], "out of order at {i}");
+        }
+    }
+
+    /// The sharded reactor delivers across every loop and the aggregate
+    /// stats are the sum of the per-loop breakdown.
+    #[test]
+    fn sharded_loops_deliver_and_aggregate_stats() {
+        for backend in backends() {
+            let reactor =
+                Reactor::new(ReactorConfig { backend, loops: 4, ..ReactorConfig::default() })
+                    .unwrap();
+            assert_eq!(reactor.loop_count(), 4, "{backend:?}");
+            let (tx, rx) = mpsc::channel::<Vec<u8>>();
+            let tx = Mutex::new(tx);
+            let mut addrs = Vec::new();
+            for _ in 0..8 {
+                let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+                addrs.push(listener.local_addr().unwrap());
+                let tx2 = {
+                    let guard = lock_clean(&tx);
+                    guard.clone()
+                };
+                let tx2 = Mutex::new(tx2);
+                let sink: FrameSink = Arc::new(move |frame, _r: &mut Replies<'_>| {
+                    lock_clean(&tx2).send(frame).is_ok()
+                });
+                reactor.register(listener, sink).unwrap();
+            }
+            for (i, addr) in addrs.iter().enumerate() {
+                send_raw(*addr, &[format!("shard-{i}").as_bytes()]);
+            }
+            let mut got: Vec<String> = (0..8)
+                .map(|_| {
+                    String::from_utf8(rx.recv_timeout(Duration::from_secs(10)).unwrap())
+                        .unwrap()
+                })
+                .collect();
+            got.sort();
+            let want: Vec<String> = (0..8).map(|i| format!("shard-{i}")).collect();
+            assert_eq!(got, want, "{backend:?}");
+
+            let total = reactor.stats();
+            assert_eq!(total.frames_delivered, 8, "{backend:?}");
+            assert_eq!(total.connections_accepted, 8, "{backend:?}");
+            let per_loop = reactor.per_loop_stats();
+            assert_eq!(per_loop.len(), 4, "{backend:?}");
+            let summed: u64 = per_loop.iter().map(|s| s.frames_delivered).sum();
+            assert_eq!(summed, total.frames_delivered, "{backend:?}");
+        }
+    }
+
+    /// Listener→loop sharding is deterministic: the same bound address
+    /// always lands on the same loop (it is the FNV lane discipline).
+    #[test]
+    fn listener_shard_is_deterministic() {
+        let reactor =
+            Reactor::new(ReactorConfig { loops: 4, ..ReactorConfig::default() }).unwrap();
+        let addr: SocketAddr = "127.0.0.1:40123".parse().unwrap();
+        let a = reactor.loop_for_addr(&addr);
+        let b = reactor.loop_for_addr(&addr);
+        assert_eq!(a, b);
+        assert!(a < 4);
+    }
+
+    /// ET regression (lost wakeup): a frame that has fully arrived *before*
+    /// the connection's `EPOLLIN | EPOLLET` interest is armed must still be
+    /// delivered — edge-triggered registration of an already-readable fd
+    /// fires an initial event. The connection (kept open, so no EOF path
+    /// helps) sits fully written in the listener backlog before the reactor
+    /// ever sees it.
+    #[test]
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    fn et_frame_buffered_before_arm_is_delivered() {
+        let reactor = reactor_with(BackendChoice::Epoll);
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        // Connect and write a complete frame while nobody is accepting;
+        // keep the stream open so EOF-driven delivery can't mask a lost
+        // edge.
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&frame(b"before the arm")).unwrap();
+        s.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+
+        let (tx, rx) = mpsc::channel::<Vec<u8>>();
+        let tx = Mutex::new(tx);
+        let sink: FrameSink = Arc::new(move |frame, _r: &mut Replies<'_>| {
+            lock_clean(&tx).send(frame).is_ok()
+        });
+        reactor.register(listener, sink).unwrap();
+
+        let got = rx.recv_timeout(Duration::from_secs(10)).unwrap_or_else(|_| {
+            panic!("frame fully buffered before EPOLLIN|EPOLLET was armed was lost")
+        });
+        assert_eq!(got, b"before the arm".to_vec());
+
+        // And a later frame still produces a fresh edge after the drain.
+        s.write_all(&frame(b"after the arm")).unwrap();
+        s.flush().unwrap();
+        let got = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(got, b"after the arm".to_vec());
+    }
+
+    /// A connection that exhausts its per-tick read budget mid-burst is
+    /// re-queued on the ready-list and drained to completion even though no
+    /// further readiness edges arrive (all bytes were written up front).
+    #[test]
+    fn budget_exhausted_connection_still_drains() {
+        for backend in backends() {
+            let reactor = Reactor::new(ReactorConfig {
+                // Tiny per-tick budget: a 64 KiB frame takes many passes.
+                max_read_per_conn: 4 * 1024,
+                backend,
+                ..ReactorConfig::default()
+            })
+            .unwrap();
+            let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            let addr = listener.local_addr().unwrap();
+            let (tx, rx) = mpsc::channel::<Vec<u8>>();
+            let tx = Mutex::new(tx);
+            let sink: FrameSink = Arc::new(move |frame, _r: &mut Replies<'_>| {
+                lock_clean(&tx).send(frame).is_ok()
+            });
+            reactor.register(listener, sink).unwrap();
+
+            let body = vec![0x5A; 64 * 1024];
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&frame(&body)).unwrap();
+            s.flush().unwrap();
+            let got = rx.recv_timeout(Duration::from_secs(10)).unwrap_or_else(|_| {
+                panic!("{backend:?}: budget-exhausted connection never finished draining")
+            });
+            assert_eq!(got.len(), body.len(), "{backend:?}");
+            assert_eq!(got, body, "{backend:?}");
+        }
+    }
+
+    /// A sink answering one frame with a burst of replies: every reply
+    /// arrives, in order (the burst crosses the vectored flush path as
+    /// separate chunks in one writev).
+    #[test]
+    fn reply_burst_is_flushed_in_order() {
+        for backend in backends() {
+            let reactor = reactor_with(backend);
+            let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            let addr = listener.local_addr().unwrap();
+            let sink: FrameSink = Arc::new(|_frame: Vec<u8>, replies: &mut Replies<'_>| {
+                for i in 0..16u8 {
+                    replies.push(&[b'r', i]);
+                }
+                true
+            });
+            reactor.register(listener, sink).unwrap();
+
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            s.write_all(&frame(b"burst")).unwrap();
+            s.flush().unwrap();
+            for i in 0..16u8 {
+                assert_eq!(read_reply(&mut s), vec![b'r', i], "{backend:?} reply {i}");
+            }
         }
     }
 

@@ -365,6 +365,15 @@ fn fleet_spec(seed: u64) -> SessionSpec {
 /// zeroed before comparing (the id is the only legitimately differing
 /// field).
 fn fleet_matches_serial(backend: BackendChoice, sessions: usize, workers: usize) {
+    fleet_matches_serial_with_loops(backend, sessions, workers, 1);
+}
+
+fn fleet_matches_serial_with_loops(
+    backend: BackendChoice,
+    sessions: usize,
+    workers: usize,
+    loops: usize,
+) {
     let distinct: Vec<SessionSpec> = (0..8).map(|i| fleet_spec(900 + i as u64)).collect();
     let serial: Vec<ReportSummary> = distinct.iter().map(|s| s.run_serial(0).unwrap()).collect();
 
@@ -372,7 +381,7 @@ fn fleet_matches_serial(backend: BackendChoice, sessions: usize, workers: usize)
         workers,
         max_sessions: sessions,
         max_clients: 4,
-        reactor: ReactorConfig { backend, ..ReactorConfig::default() },
+        reactor: ReactorConfig { backend, loops, ..ReactorConfig::default() },
         ..ServeConfig::default()
     };
     let daemon = ServeDaemon::start(cfg, ServeWire::Tcp, "127.0.0.1:0").unwrap();
@@ -392,6 +401,14 @@ fn fleet_matches_serial(backend: BackendChoice, sessions: usize, workers: usize)
             distinct[*which].seed
         );
     }
+    if loops > 1 {
+        // The per-loop breakdown must account for the aggregate exactly.
+        let total = daemon.reactor().stats();
+        let per_loop = daemon.reactor().per_loop_stats();
+        assert_eq!(per_loop.len(), loops, "{backend:?}");
+        let summed: u64 = per_loop.iter().map(|s| s.frames_delivered).sum();
+        assert_eq!(summed, total.frames_delivered, "{backend:?}");
+    }
     daemon.shutdown();
 }
 
@@ -406,6 +423,22 @@ fn sixty_four_sessions_epoll_backend_match_serial() {
         return;
     }
     fleet_matches_serial(BackendChoice::Epoll, 64, 8);
+}
+
+/// The sharded reactor (2 readiness loops) must be invisible to results:
+/// the same 64-session fleet stays byte-identical to serial under both
+/// backends, and the per-loop stats account for the aggregate.
+#[test]
+fn sixty_four_sessions_scan_backend_two_loops_match_serial() {
+    fleet_matches_serial_with_loops(BackendChoice::Scan, 64, 8, 2);
+}
+
+#[test]
+fn sixty_four_sessions_epoll_backend_two_loops_match_serial() {
+    if !poll::supported() {
+        return;
+    }
+    fleet_matches_serial_with_loops(BackendChoice::Epoll, 64, 8, 2);
 }
 
 /// The hundreds-of-sessions stress target from the roadmap. Minutes of

@@ -57,6 +57,21 @@ fn fresh_reactor() -> ReactorTcpTransport {
     fresh_reactor_with(BackendChoice::Scan)
 }
 
+/// Sharded reactor transport: the same wire contract must hold when the
+/// 16 hosted listeners are partitioned across 2 independent readiness
+/// loops (per-(from,to,phase) FIFO rides the listener→loop assignment).
+fn fresh_reactor_sharded(backend: BackendChoice) -> ReactorTcpTransport {
+    let reactor = Arc::new(
+        Reactor::new(ReactorConfig { backend, loops: 2, ..ReactorConfig::default() }).unwrap(),
+    );
+    assert_eq!(reactor.loop_count(), 2);
+    ReactorTcpTransport::builder()
+        .reactor(reactor)
+        .hosts((0..16).map(PartyId::Client))
+        .build()
+        .unwrap()
+}
+
 // ---- the wire contract, generic over &dyn Transport ------------------------
 
 fn ordering_per_sender_and_phase(t: &dyn Transport) {
@@ -201,6 +216,52 @@ fn reactor_epoll_concurrent_pairs() {
 }
 
 #[test]
+fn reactor_sharded_ordering() {
+    let t = fresh_reactor_sharded(BackendChoice::Scan);
+    ordering_per_sender_and_phase(&t);
+}
+
+#[test]
+fn reactor_sharded_phase_isolation() {
+    let t = fresh_reactor_sharded(BackendChoice::Scan);
+    cross_phase_isolation(&t);
+}
+
+#[test]
+fn reactor_sharded_concurrent_pairs() {
+    // 8 pairs, 16 parties, two readiness loops underneath.
+    let t = fresh_reactor_sharded(BackendChoice::Scan);
+    concurrent_pair_exchange(&t);
+}
+
+#[test]
+fn reactor_sharded_epoll_ordering() {
+    if !poll::supported() {
+        return;
+    }
+    let t = fresh_reactor_sharded(BackendChoice::Epoll);
+    ordering_per_sender_and_phase(&t);
+}
+
+#[test]
+fn reactor_sharded_epoll_phase_isolation() {
+    if !poll::supported() {
+        return;
+    }
+    let t = fresh_reactor_sharded(BackendChoice::Epoll);
+    cross_phase_isolation(&t);
+}
+
+#[test]
+fn reactor_sharded_epoll_concurrent_pairs() {
+    if !poll::supported() {
+        return;
+    }
+    let t = fresh_reactor_sharded(BackendChoice::Epoll);
+    concurrent_pair_exchange(&t);
+}
+
+#[test]
 fn wire_accounting_identical_across_transports() {
     let channel = metered_accounting(&ChannelTransport::new());
     let tcp_net = fresh_tcp();
@@ -213,6 +274,15 @@ fn wire_accounting_identical_across_transports() {
         let epoll_net = fresh_reactor_with(BackendChoice::Epoll);
         let epoll = metered_accounting(&epoll_net);
         assert_eq!(channel, epoll, "epoll backend must meter like the others");
+    }
+    // Sharding must be invisible to accounting: loops=2 meters identically.
+    let sharded_net = fresh_reactor_sharded(BackendChoice::Scan);
+    let sharded = metered_accounting(&sharded_net);
+    assert_eq!(channel, sharded, "sharded reactor must meter like the others");
+    if poll::supported() {
+        let sharded_epoll_net = fresh_reactor_sharded(BackendChoice::Epoll);
+        let sharded_epoll = metered_accounting(&sharded_epoll_net);
+        assert_eq!(channel, sharded_epoll, "sharded epoll must meter like the others");
     }
     // Sized envelopes charge their declared framing, not just payload.
     assert_eq!(channel.1, 100 + 4096);
